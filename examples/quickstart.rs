@@ -1,0 +1,50 @@
+//! Quickstart: profile a black-box ML job and derive a resource limit.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! This uses the simulated Raspberry Pi 4 backend so it runs anywhere in a
+//! few milliseconds; see `e2e_stream_serving.rs` for the real PJRT path.
+
+use streamprof::coordinator::{Profiler, ProfilerConfig, ResourceAdjuster, SimulatedBackend};
+use streamprof::simulator::{node, Algo, SimulatedJob};
+use streamprof::strategies;
+
+fn main() {
+    // A "new stream-analysis job appears on a device": LSTM anomaly
+    // detection on a Raspberry Pi 4.
+    let pi4 = node("pi4").expect("registry");
+    let backend_job = SimulatedJob::new(pi4, Algo::Lstm, 42);
+    let mut backend = SimulatedBackend::new(backend_job);
+
+    // Profile it: 3 initial parallel runs, synthetic target at 5% of the
+    // cores, nested-modeling point selection, 6 profiled limitations.
+    let cfg = ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() };
+    let strategy = strategies::by_name("nms", 1).unwrap();
+    let session = Profiler::new(cfg, strategy).run(&mut backend);
+
+    println!("profiled {} limitations in {:.0}s (simulated wallclock):",
+             session.steps.len(), session.total_time);
+    for s in &session.steps {
+        println!(
+            "  step {}: {:>4.1} CPU -> {:.4} s/sample",
+            s.index, s.limit, s.mean_runtime
+        );
+    }
+    let model = session.final_model();
+    println!(
+        "\nruntime model: t(R) = {:.4}*(R*{:.3})^-{:.3} + {:.5}",
+        model.a, model.d, model.b, model.c
+    );
+
+    // Use the model: tightest CPU limit that keeps up with a 3 Hz stream.
+    let adjuster = ResourceAdjuster::new(model.clone(), 0.1, pi4.cores, 0.1);
+    let decision = adjuster.decide(1.0 / 3.0);
+    println!(
+        "\nfor a 3 Hz sensor stream: assign {:.1} CPUs \
+         (predicted {:.3} s/sample, budget {:.3} s)",
+        decision.limit, decision.predicted_runtime, decision.budget
+    );
+    assert!(decision.feasible);
+}

@@ -1,0 +1,217 @@
+"""AOT pipeline: lower every L2 step function to HLO **text** artifacts.
+
+Interchange is HLO text, not a serialized ``HloModuleProto``: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate links) rejects; the text parser
+reassigns ids and round-trips cleanly.
+
+Outputs under ``artifacts/``:
+  * ``<name>.hlo.txt``   — the lowered module (one per job variant),
+  * ``<name>.init.bin``  — f32 LE concatenation of all non-stream inputs in
+    input order (params + initial state), consumed once by the Rust runtime,
+  * ``manifest.json``    — shapes, roles, and the output->input state loop.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (idempotent; files
+are rewritten only when content changes, so `make artifacts` stays no-op
+when inputs are unchanged).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import config, model
+
+
+def to_hlo_text(fn, example_args) -> str:
+    """Lower a jittable fn to HLO text via stablehlo -> XlaComputation."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(arr):
+    return jax.ShapeDtypeStruct(arr.shape, arr.dtype)
+
+
+class Artifact:
+    """One lowered job variant: fn + ordered, role-tagged inputs/outputs."""
+
+    def __init__(self, name, fn, inputs, output_names, chunk=0):
+        # inputs: list of (name, concrete_array_or_spec, role)
+        #   role in {"param", "state", "stream"}
+        self.name = name
+        self.fn = fn
+        self.inputs = inputs
+        self.output_names = output_names
+        self.chunk = chunk
+
+    def input_index(self, name):
+        for i, (n, _, _) in enumerate(self.inputs):
+            if n == name:
+                return i
+        raise KeyError(name)
+
+    def lower(self):
+        args = [_spec(a) for (_, a, _) in self.inputs]
+        outs = jax.eval_shape(self.fn, *args)
+        text = to_hlo_text(self.fn, args)
+        out_meta = []
+        input_names = [n for (n, _, _) in self.inputs]
+        for oname, oshape in zip(self.output_names, outs):
+            entry = {
+                "name": oname,
+                "shape": list(oshape.shape),
+                "role": "state" if oname in input_names else "out",
+            }
+            if entry["role"] == "state":
+                entry["feeds"] = self.input_index(oname)
+            out_meta.append(entry)
+        in_meta = [
+            {"name": n, "shape": list(np.shape(a)), "role": role}
+            for (n, a, role) in self.inputs
+        ]
+        return text, in_meta, out_meta
+
+    def init_bytes(self):
+        """f32 LE concat of all non-stream inputs, in input order."""
+        chunks = []
+        for (_, a, role) in self.inputs:
+            if role == "stream":
+                continue
+            chunks.append(np.asarray(a, dtype=np.float32).tobytes())
+        return b"".join(chunks)
+
+
+def build_artifacts():
+    m = config.METRICS
+    arts = []
+
+    # ---- Arima -----------------------------------------------------------
+    _, ast = model.init_arima()
+    x = jnp.zeros((m,), jnp.float32)
+    arts.append(Artifact(
+        "arima", model.arima_step,
+        [("coeffs", ast["coeffs"], "state"),
+         ("window", ast["window"], "state"),
+         ("tm", ast["tm"], "state"),
+         ("x", x, "stream")],
+        ["err", "thr", "flag", "coeffs", "window", "tm"],
+    ))
+    xs = jnp.zeros((config.CHUNK, m), jnp.float32)
+    arts.append(Artifact(
+        f"arima_chunk{config.CHUNK}", model.arima_chunk,
+        [("coeffs", ast["coeffs"], "state"),
+         ("window", ast["window"], "state"),
+         ("tm", ast["tm"], "state"),
+         ("xs", xs, "stream")],
+        ["errs", "thrs", "flags", "coeffs", "window", "tm"],
+        chunk=config.CHUNK,
+    ))
+
+    # ---- Birch -----------------------------------------------------------
+    _, bst = model.init_birch()
+    arts.append(Artifact(
+        "birch", model.birch_step,
+        [("centroids", bst["centroids"], "state"),
+         ("counts", bst["counts"], "state"),
+         ("tm", bst["tm"], "state"),
+         ("x", x, "stream")],
+        ["err", "thr", "flag", "centroids", "counts", "tm"],
+    ))
+    arts.append(Artifact(
+        f"birch_chunk{config.CHUNK}", model.birch_chunk,
+        [("centroids", bst["centroids"], "state"),
+         ("counts", bst["counts"], "state"),
+         ("tm", bst["tm"], "state"),
+         ("xs", xs, "stream")],
+        ["errs", "thrs", "flags", "centroids", "counts", "tm"],
+        chunk=config.CHUNK,
+    ))
+
+    # ---- LSTM ------------------------------------------------------------
+    lp, lst = model.init_lstm()
+    lstm_inputs = (
+        [(k, lp[k], "param") for k in ["wx1", "wh1", "b1", "wx2", "wh2", "b2", "wo", "bo"]]
+        + [(k, lst[k], "state") for k in ["h1", "c1", "h2", "c2", "tm"]]
+    )
+    arts.append(Artifact(
+        "lstm", model.lstm_step,
+        lstm_inputs + [("x", x, "stream")],
+        ["err", "thr", "flag", "h1", "c1", "h2", "c2", "tm"],
+    ))
+    arts.append(Artifact(
+        f"lstm_chunk{config.CHUNK}", model.lstm_chunk,
+        lstm_inputs + [("xs", xs, "stream")],
+        ["errs", "thrs", "flags", "h1", "c1", "h2", "c2", "tm"],
+        chunk=config.CHUNK,
+    ))
+
+    # ---- LSTM batched serving variant -------------------------------------
+    bp, bstate = model.init_lstm_batched()
+    xb = jnp.zeros((config.BATCH, m), jnp.float32)
+    arts.append(Artifact(
+        f"lstm_batch{config.BATCH}", model.lstm_step_batched,
+        [(k, bp[k], "param") for k in ["wx1", "wh1", "b1", "wx2", "wh2", "b2", "wo", "bo"]]
+        + [(k, bstate[k], "state") for k in ["h1", "c1", "h2", "c2", "tm"]]
+        + [("x", xb, "stream")],
+        ["err", "thr", "flag", "h1", "c1", "h2", "c2", "tm"],
+    ))
+    return arts
+
+
+def _write_if_changed(path, data):
+    mode = "rb" if isinstance(data, bytes) else "r"
+    if os.path.exists(path):
+        with open(path, mode) as f:
+            if f.read() == data:
+                return False
+    with open(path, "wb" if isinstance(data, bytes) else "w") as f:
+        f.write(data)
+    return True
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"metrics": config.METRICS, "chunk": config.CHUNK, "artifacts": []}
+    for art in build_artifacts():
+        if only and art.name not in only:
+            continue
+        text, in_meta, out_meta = art.lower()
+        hlo_file = f"{art.name}.hlo.txt"
+        init_file = f"{art.name}.init.bin"
+        changed = _write_if_changed(os.path.join(args.out_dir, hlo_file), text)
+        _write_if_changed(os.path.join(args.out_dir, init_file), art.init_bytes())
+        manifest["artifacts"].append({
+            "name": art.name,
+            "file": hlo_file,
+            "init_file": init_file,
+            "chunk": art.chunk,
+            "inputs": in_meta,
+            "outputs": out_meta,
+        })
+        print(f"[aot] {art.name}: {len(text)} chars"
+              f" ({'updated' if changed else 'unchanged'})")
+    _write_if_changed(
+        os.path.join(args.out_dir, "manifest.json"),
+        json.dumps(manifest, indent=1),
+    )
+    print(f"[aot] manifest: {len(manifest['artifacts'])} artifacts -> {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Shared model/kernel dimensions for the IFTM workloads.
+
+These constants define the shapes baked into the AOT artifacts; the Rust
+runtime reads the concrete shapes from ``artifacts/manifest.json`` and never
+needs to import this module.
+"""
+
+# Number of monitoring metrics per sensor-stream sample (paper SIII-A.a:
+# "a dataset of 10,000 samples with 28 monitoring metrics").
+METRICS = 28
+
+# Samples per acquisition dataset (paper SIII-A.a).
+STREAM_SAMPLES = 10_000
+
+# LSTM identity-function model (2 stacked cells + linear readout).
+LSTM_HIDDEN = 32
+
+# AR(p) sliding-window order of the Arima identity function.
+AR_WINDOW = 8
+# NLMS step size for the online AR coefficient update.
+AR_MU = 0.05
+
+# Number of Birch cluster-feature centroids.
+BIRCH_K = 16
+
+# IFTM threshold model: EWMA smoothing factor and sigma multiplier.
+EWMA_ALPHA = 0.05
+SIGMA_K = 3.0
+
+# Batched serving variant (independent streams per call).
+BATCH = 8
+
+# Fused multi-sample chunk (jax.lax.scan inside one executable) used by the
+# optimized rust hot path: one PJRT call processes CHUNK stream samples.
+CHUNK = 32

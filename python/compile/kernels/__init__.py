@@ -1,0 +1,7 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO)."""
+
+from .lstm_cell import lstm_cell
+from .distance import pairwise_sqdist
+from .ewma import ewma_threshold
+
+__all__ = ["lstm_cell", "pairwise_sqdist", "ewma_threshold"]

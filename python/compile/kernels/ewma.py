@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: IFTM threshold-model update (EWMA mean/variance).
+
+The threshold model of IFTM maintains an exponentially weighted moving
+average of the identity-function error and its variance, and flags a sample
+as anomalous when the error exceeds ``mean + k * std``. The update is a tiny
+elementwise kernel but is on the per-sample hot path of every job, so it is
+fused into a single Pallas call (single VMEM block, VPU-only).
+
+State layout: ``tm = [ewma_mean, ewma_var]`` as a [2] f32 vector.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ewma_kernel(err_ref, tm_ref, alpha_ref, k_ref, tm_out_ref, thr_ref, flag_ref):
+    err = err_ref[0]
+    mean = tm_ref[0]
+    var = tm_ref[1]
+    alpha = alpha_ref[0]
+    k = k_ref[0]
+    # Threshold is computed from the *previous* state so the decision for the
+    # current sample does not depend on the sample itself (IFTM semantics).
+    thr = mean + k * jnp.sqrt(jnp.maximum(var, 1e-12))
+    flag = jnp.where(err > thr, 1.0, 0.0)
+    new_mean = (1.0 - alpha) * mean + alpha * err
+    diff = err - new_mean
+    new_var = (1.0 - alpha) * var + alpha * diff * diff
+    tm_out_ref[0] = new_mean
+    tm_out_ref[1] = new_var
+    thr_ref[0] = thr
+    flag_ref[0] = flag
+
+
+def ewma_threshold(err, tm, alpha, k):
+    """One threshold-model step.
+
+    Args:
+      err:   [1] identity-function error for this sample.
+      tm:    [2] threshold-model state (ewma mean, ewma var).
+      alpha: [1] EWMA smoothing factor.
+      k:     [1] sigma multiplier.
+
+    Returns:
+      (tm_new [2], threshold [1], anomaly_flag [1]).
+    """
+    out_shape = (
+        jax.ShapeDtypeStruct((2,), err.dtype),
+        jax.ShapeDtypeStruct((1,), err.dtype),
+        jax.ShapeDtypeStruct((1,), err.dtype),
+    )
+    return pl.pallas_call(
+        _ewma_kernel,
+        out_shape=out_shape,
+        interpret=True,
+    )(err, tm, alpha, k)

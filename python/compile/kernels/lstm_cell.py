@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: fused LSTM cell.
+
+One kernel invocation performs the full cell update for a batch:
+
+    gates = x @ Wx + h @ Wh + b            (single fused MXU-shaped matmul pair)
+    i, f, g, o = split(gates)
+    c' = sigmoid(f) * c + sigmoid(i) * tanh(g)
+    h' = sigmoid(o) * tanh(c')
+
+Everything lives in one VMEM block: for the shapes used by the IFTM LSTM job
+(B <= 32, E = 28, H = 32) the block footprint is
+
+    x[B,E] + h[B,H] + c[B,H] + Wx[E,4H] + Wh[H,4H] + b[4H] + 2 out[B,H]
+    ~= (32*28 + 3*32*32 + 28*128 + 32*128 + 128 + ...) * 4 B  < 64 KiB,
+
+far below the ~16 MiB VMEM budget, so no grid is needed and the two matmuls
+feed the MXU back-to-back. ``interpret=True`` is mandatory on CPU PJRT (real
+TPU lowering emits a Mosaic custom-call the CPU plugin cannot execute).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lstm_cell_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref, ho_ref, co_ref):
+    x = x_ref[...]
+    h = h_ref[...]
+    c = c_ref[...]
+    # Fused gate pre-activation: two matmuls + bias, all in VMEM.
+    gates = jnp.dot(x, wx_ref[...]) + jnp.dot(h, wh_ref[...]) + b_ref[...]
+    hidden = h.shape[-1]
+    i = jax.nn.sigmoid(gates[:, :hidden])
+    f = jax.nn.sigmoid(gates[:, hidden : 2 * hidden])
+    g = jnp.tanh(gates[:, 2 * hidden : 3 * hidden])
+    o = jax.nn.sigmoid(gates[:, 3 * hidden :])
+    c_new = f * c + i * g
+    co_ref[...] = c_new
+    ho_ref[...] = o * jnp.tanh(c_new)
+
+
+def lstm_cell(x, h, c, wx, wh, b):
+    """Fused LSTM cell step.
+
+    Args:
+      x:  [B, E] input slice.
+      h:  [B, H] hidden state.
+      c:  [B, H] cell state.
+      wx: [E, 4H] input projection.
+      wh: [H, 4H] recurrent projection.
+      b:  [4H] bias.
+
+    Returns:
+      (h_new, c_new), each [B, H].
+    """
+    batch, hidden = h.shape
+    out_shape = (
+        jax.ShapeDtypeStruct((batch, hidden), x.dtype),
+        jax.ShapeDtypeStruct((batch, hidden), x.dtype),
+    )
+    return pl.pallas_call(
+        _lstm_cell_kernel,
+        out_shape=out_shape,
+        interpret=True,
+    )(x, h, c, wx, wh, b)

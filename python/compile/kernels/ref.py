@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: pytest compares each kernel against
+its oracle via ``assert_allclose`` across hypothesis-generated shapes.
+No Pallas imports here — plain jnp only.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def lstm_cell_ref(x, h, c, wx, wh, b):
+    """Reference LSTM cell, same contract as kernels.lstm_cell.lstm_cell."""
+    gates = x @ wx + h @ wh + b
+    hidden = h.shape[-1]
+    i = jax.nn.sigmoid(gates[:, :hidden])
+    f = jax.nn.sigmoid(gates[:, hidden : 2 * hidden])
+    g = jnp.tanh(gates[:, 2 * hidden : 3 * hidden])
+    o = jax.nn.sigmoid(gates[:, 3 * hidden :])
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def pairwise_sqdist_ref(x, centroids):
+    """Reference pairwise squared distances, [N, D] x [K, D] -> [N, K]."""
+    diff = x[:, None, :] - centroids[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def ewma_threshold_ref(err, tm, alpha, k):
+    """Reference threshold-model step, same contract as kernels.ewma."""
+    mean, var = tm[0], tm[1]
+    thr = mean + k[0] * jnp.sqrt(jnp.maximum(var, 1e-12))
+    flag = jnp.where(err[0] > thr, 1.0, 0.0)
+    new_mean = (1.0 - alpha[0]) * mean + alpha[0] * err[0]
+    diff = err[0] - new_mean
+    new_var = (1.0 - alpha[0]) * var + alpha[0] * diff * diff
+    tm_new = jnp.stack([new_mean, new_var])
+    return tm_new, jnp.reshape(thr, (1,)), jnp.reshape(flag, (1,))

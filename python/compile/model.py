@@ -1,0 +1,290 @@
+"""L2: IFTM anomaly-detection jobs as JAX step functions.
+
+Each job follows the IFTM decomposition (Schmidt et al., ICWS'18):
+
+  * an **identity function** reconstructs/predicts the current sample and
+    yields a scalar reconstruction error, and
+  * a **threshold model** (EWMA mean/variance) decides whether that error is
+    anomalous.
+
+Three identity functions mirror the paper's workloads: *Arima* (online AR(p)
+with NLMS coefficient updates), *Birch* (nearest cluster-feature centroid),
+and *LSTM* (two stacked fused-Pallas LSTM cells + linear readout).
+
+Every public ``*_step`` function is pure and state-threading: it takes flat
+f32 arrays ``(params..., state..., x)`` and returns
+``(err, thr, flag, state'...)``. The AOT pipeline (``aot.py``) lowers each of
+them to one HLO artifact; the Rust runtime feeds outputs back into inputs by
+index (see ``manifest.json``).
+
+Python in this package runs at build time only — never on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import config
+from .kernels import ewma_threshold, lstm_cell, pairwise_sqdist
+
+# ---------------------------------------------------------------------------
+# Threshold model (shared)
+# ---------------------------------------------------------------------------
+
+
+def threshold_step(err, tm):
+    """IFTM threshold-model step via the Pallas EWMA kernel.
+
+    Args:
+      err: [1] identity-function error.
+      tm:  [2] (ewma_mean, ewma_var) state.
+
+    Returns:
+      (tm_new [2], thr [1], flag [1]).
+    """
+    alpha = jnp.full((1,), config.EWMA_ALPHA, dtype=err.dtype)
+    k = jnp.full((1,), config.SIGMA_K, dtype=err.dtype)
+    return ewma_threshold(err, tm, alpha, k)
+
+
+def threshold_step_batched(err, tm):
+    """Vectorized threshold step for the batched serving variant.
+
+    Args:
+      err: [B] errors.
+      tm:  [B, 2] per-stream threshold state.
+
+    Returns:
+      (tm_new [B, 2], thr [B], flag [B]).
+    """
+    alpha = config.EWMA_ALPHA
+    k = config.SIGMA_K
+    mean, var = tm[:, 0], tm[:, 1]
+    thr = mean + k * jnp.sqrt(jnp.maximum(var, 1e-12))
+    flag = jnp.where(err > thr, 1.0, 0.0).astype(err.dtype)
+    new_mean = (1.0 - alpha) * mean + alpha * err
+    diff = err - new_mean
+    new_var = (1.0 - alpha) * var + alpha * diff * diff
+    return jnp.stack([new_mean, new_var], axis=1), thr, flag
+
+
+# ---------------------------------------------------------------------------
+# Arima identity function: online AR(p) with NLMS updates
+# ---------------------------------------------------------------------------
+
+
+def arima_step(coeffs, window, tm, x):
+    """One Arima job step.
+
+    Args:
+      coeffs: [P, M] per-metric AR coefficients.
+      window: [P, M] sliding window of past samples (row 0 oldest).
+      tm:     [2] threshold-model state.
+      x:      [M] current sample.
+
+    Returns:
+      (err [1], thr [1], flag [1], coeffs' [P, M], window' [P, M], tm' [2])
+    """
+    pred = jnp.sum(coeffs * window, axis=0)  # [M]
+    resid = x - pred
+    err = jnp.mean(jnp.abs(resid))[None]
+    # NLMS: per-metric normalized gradient step.
+    norm = jnp.sum(window * window, axis=0) + 1e-6  # [M]
+    coeffs_new = coeffs + config.AR_MU * window * (resid / norm)[None, :]
+    window_new = jnp.concatenate([window[1:], x[None, :]], axis=0)
+    tm_new, thr, flag = threshold_step(err, tm)
+    return err, thr, flag, coeffs_new, window_new, tm_new
+
+
+# ---------------------------------------------------------------------------
+# Birch identity function: nearest cluster-feature centroid
+# ---------------------------------------------------------------------------
+
+
+def birch_step(centroids, counts, tm, x):
+    """One Birch job step.
+
+    Args:
+      centroids: [K, M] cluster-feature centroids.
+      counts:    [K] per-centroid sample counts.
+      tm:        [2] threshold-model state.
+      x:         [M] current sample.
+
+    Returns:
+      (err [1], thr [1], flag [1], centroids' [K, M], counts' [K], tm' [2])
+    """
+    d = pairwise_sqdist(x[None, :], centroids)[0]  # [K] via Pallas kernel
+    j = jnp.argmin(d)
+    err = jnp.sqrt(jnp.maximum(d[j], 0.0))[None]
+    onehot = jax.nn.one_hot(j, centroids.shape[0], dtype=x.dtype)  # [K]
+    # Incremental centroid mean update of the winning centroid only.
+    lr = onehot / (counts + 1.0)  # [K]
+    centroids_new = centroids + lr[:, None] * (x[None, :] - centroids)
+    counts_new = counts + onehot
+    tm_new, thr, flag = threshold_step(err, tm)
+    return err, thr, flag, centroids_new, counts_new, tm_new
+
+
+# ---------------------------------------------------------------------------
+# LSTM identity function: 2 stacked fused cells + linear readout
+# ---------------------------------------------------------------------------
+
+
+def lstm_step(wx1, wh1, b1, wx2, wh2, b2, wo, bo, h1, c1, h2, c2, tm, x):
+    """One LSTM job step.
+
+    The prediction for the current sample is read out of the *previous*
+    hidden state (one-step-ahead forecasting), then the stacked cells are
+    advanced with the observed sample.
+
+    Args:
+      wx1,wh1,b1: layer-1 cell params ([M,4H], [H,4H], [4H]).
+      wx2,wh2,b2: layer-2 cell params ([H,4H], [H,4H], [4H]).
+      wo, bo:     readout ([H, M], [M]).
+      h1,c1,h2,c2: [1, H] cell states.
+      tm:         [2] threshold-model state.
+      x:          [M] current sample.
+
+    Returns:
+      (err [1], thr [1], flag [1], h1', c1', h2', c2', tm')
+    """
+    pred = (h2 @ wo + bo)[0]  # [M] forecast from previous state
+    err = jnp.mean(jnp.abs(pred - x))[None]
+    h1n, c1n = lstm_cell(x[None, :], h1, c1, wx1, wh1, b1)
+    h2n, c2n = lstm_cell(h1n, h2, c2, wx2, wh2, b2)
+    tm_new, thr, flag = threshold_step(err, tm)
+    return err, thr, flag, h1n, c1n, h2n, c2n, tm_new
+
+
+def lstm_step_batched(wx1, wh1, b1, wx2, wh2, b2, wo, bo, h1, c1, h2, c2, tm, x):
+    """Batched LSTM job step over B independent streams.
+
+    States are [B, H], tm is [B, 2], x is [B, M]. Params are shared.
+    Returns (err [B], thr [B], flag [B], h1', c1', h2', c2', tm').
+    """
+    pred = h2 @ wo + bo  # [B, M]
+    err = jnp.mean(jnp.abs(pred - x), axis=1)  # [B]
+    h1n, c1n = lstm_cell(x, h1, c1, wx1, wh1, b1)
+    h2n, c2n = lstm_cell(h1n, h2, c2, wx2, wh2, b2)
+    tm_new, thr, flag = threshold_step_batched(err, tm)
+    return err, thr, flag, h1n, c1n, h2n, c2n, tm_new
+
+
+def lstm_chunk(wx1, wh1, b1, wx2, wh2, b2, wo, bo, h1, c1, h2, c2, tm, xs):
+    """Fused multi-sample chunk: scan ``lstm_step`` over xs [T, M].
+
+    One PJRT call processes T stream samples with the state loop kept
+    on-device — this is the optimized L3 hot path (amortizes the per-call
+    host<->device tuple round-trip over T samples).
+
+    Returns (errs [T], thrs [T], flags [T], h1', c1', h2', c2', tm').
+    """
+
+    def body(carry, x):
+        h1, c1, h2, c2, tm = carry
+        err, thr, flag, h1, c1, h2, c2, tm = lstm_step(
+            wx1, wh1, b1, wx2, wh2, b2, wo, bo, h1, c1, h2, c2, tm, x
+        )
+        return (h1, c1, h2, c2, tm), (err[0], thr[0], flag[0])
+
+    (h1, c1, h2, c2, tm), (errs, thrs, flags) = jax.lax.scan(
+        body, (h1, c1, h2, c2, tm), xs
+    )
+    return errs, thrs, flags, h1, c1, h2, c2, tm
+
+
+def arima_chunk(coeffs, window, tm, xs):
+    """Fused multi-sample Arima chunk (scan over xs [T, M])."""
+
+    def body(carry, x):
+        coeffs, window, tm = carry
+        err, thr, flag, coeffs, window, tm = arima_step(coeffs, window, tm, x)
+        return (coeffs, window, tm), (err[0], thr[0], flag[0])
+
+    (coeffs, window, tm), (errs, thrs, flags) = jax.lax.scan(
+        body, (coeffs, window, tm), xs
+    )
+    return errs, thrs, flags, coeffs, window, tm
+
+
+def birch_chunk(centroids, counts, tm, xs):
+    """Fused multi-sample Birch chunk (scan over xs [T, M])."""
+
+    def body(carry, x):
+        centroids, counts, tm = carry
+        err, thr, flag, centroids, counts, tm = birch_step(centroids, counts, tm, x)
+        return (centroids, counts, tm), (err[0], thr[0], flag[0])
+
+    (centroids, counts, tm), (errs, thrs, flags) = jax.lax.scan(
+        body, (centroids, counts, tm), xs
+    )
+    return errs, thrs, flags, centroids, counts, tm
+
+
+# ---------------------------------------------------------------------------
+# Parameter / state initialization (used by aot.py and tests)
+# ---------------------------------------------------------------------------
+
+
+def init_lstm(seed: int = 0, metrics: int = config.METRICS, hidden: int = config.LSTM_HIDDEN):
+    """Glorot-ish LSTM params + zero states. Returns (params, state) dicts."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), 8)
+
+    def glorot(key, shape):
+        fan = sum(shape)
+        return jax.random.normal(key, shape, dtype=jnp.float32) * jnp.sqrt(2.0 / fan)
+
+    params = {
+        "wx1": glorot(keys[0], (metrics, 4 * hidden)),
+        "wh1": glorot(keys[1], (hidden, 4 * hidden)),
+        "b1": jnp.zeros((4 * hidden,), jnp.float32),
+        "wx2": glorot(keys[2], (hidden, 4 * hidden)),
+        "wh2": glorot(keys[3], (hidden, 4 * hidden)),
+        "b2": jnp.zeros((4 * hidden,), jnp.float32),
+        "wo": glorot(keys[4], (hidden, metrics)),
+        "bo": jnp.zeros((metrics,), jnp.float32),
+    }
+    state = {
+        "h1": jnp.zeros((1, hidden), jnp.float32),
+        "c1": jnp.zeros((1, hidden), jnp.float32),
+        "h2": jnp.zeros((1, hidden), jnp.float32),
+        "c2": jnp.zeros((1, hidden), jnp.float32),
+        "tm": jnp.zeros((2,), jnp.float32),
+    }
+    return params, state
+
+
+def init_lstm_batched(seed: int = 0, batch: int = config.BATCH,
+                      metrics: int = config.METRICS, hidden: int = config.LSTM_HIDDEN):
+    """Shared params + per-stream zero states for the batched variant."""
+    params, _ = init_lstm(seed, metrics, hidden)
+    state = {
+        "h1": jnp.zeros((batch, hidden), jnp.float32),
+        "c1": jnp.zeros((batch, hidden), jnp.float32),
+        "h2": jnp.zeros((batch, hidden), jnp.float32),
+        "c2": jnp.zeros((batch, hidden), jnp.float32),
+        "tm": jnp.zeros((batch, 2), jnp.float32),
+    }
+    return params, state
+
+
+def init_arima(seed: int = 0, metrics: int = config.METRICS, p: int = config.AR_WINDOW):
+    """AR coefficients start at the persistence model (last value weight 1)."""
+    coeffs = jnp.zeros((p, metrics), jnp.float32).at[-1].set(1.0)
+    state = {
+        "coeffs": coeffs,
+        "window": jnp.zeros((p, metrics), jnp.float32),
+        "tm": jnp.zeros((2,), jnp.float32),
+    }
+    return {}, state
+
+
+def init_birch(seed: int = 0, metrics: int = config.METRICS, k: int = config.BIRCH_K):
+    """Centroids spread on a small sphere so the first assignments split."""
+    key = jax.random.PRNGKey(seed)
+    centroids = jax.random.normal(key, (k, metrics), dtype=jnp.float32) * 0.5
+    state = {
+        "centroids": centroids,
+        "counts": jnp.ones((k,), jnp.float32),
+        "tm": jnp.zeros((2,), jnp.float32),
+    }
+    return {}, state

@@ -1,0 +1,93 @@
+"""AOT pipeline checks: lowering, manifest consistency, init blob sizes."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, config
+
+jax.config.update("jax_platform_name", "cpu")
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def artifacts():
+    return aot.build_artifacts()
+
+
+def test_expected_artifact_set(artifacts):
+    names = {a.name for a in artifacts}
+    want = {
+        "arima", "birch", "lstm",
+        f"arima_chunk{config.CHUNK}", f"birch_chunk{config.CHUNK}",
+        f"lstm_chunk{config.CHUNK}", f"lstm_batch{config.BATCH}",
+    }
+    assert names == want
+
+
+def test_init_bytes_match_input_shapes(artifacts):
+    for art in artifacts:
+        expect = sum(
+            int(np.prod(np.shape(a))) * 4
+            for (_, a, role) in art.inputs
+            if role != "stream"
+        )
+        assert len(art.init_bytes()) == expect, art.name
+
+
+def test_exactly_one_stream_input(artifacts):
+    for art in artifacts:
+        streams = [n for (n, _, r) in art.inputs if r == "stream"]
+        assert streams in (["x"], ["xs"]), art.name
+        # Stream input is last by convention (rust appends x on each call).
+        assert art.inputs[-1][2] == "stream", art.name
+
+
+def test_lowered_hlo_is_parseable_text(artifacts):
+    # Lower the cheapest artifact and sanity-check the HLO text shape.
+    arima = next(a for a in artifacts if a.name == "arima")
+    text, in_meta, out_meta = arima.lower()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    assert len(in_meta) == 4
+    assert [o["name"] for o in out_meta[:3]] == ["err", "thr", "flag"]
+
+
+def test_state_outputs_feed_matching_inputs(artifacts):
+    arima = next(a for a in artifacts if a.name == "arima")
+    _, in_meta, out_meta = arima.lower()
+    for o in out_meta:
+        if o["role"] == "state":
+            fed = in_meta[o["feeds"]]
+            assert fed["name"] == o["name"]
+            assert fed["shape"] == o["shape"]
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestBuiltArtifacts:
+    def test_manifest_files_exist(self):
+        with open(os.path.join(ART_DIR, "manifest.json")) as f:
+            manifest = json.load(f)
+        assert manifest["metrics"] == config.METRICS
+        for art in manifest["artifacts"]:
+            assert os.path.exists(os.path.join(ART_DIR, art["file"]))
+            assert os.path.exists(os.path.join(ART_DIR, art["init_file"]))
+
+    def test_init_file_sizes(self):
+        with open(os.path.join(ART_DIR, "manifest.json")) as f:
+            manifest = json.load(f)
+        for art in manifest["artifacts"]:
+            expect = sum(
+                int(np.prod(i["shape"])) * 4
+                for i in art["inputs"]
+                if i["role"] != "stream"
+            )
+            got = os.path.getsize(os.path.join(ART_DIR, art["init_file"]))
+            assert got == expect, art["name"]

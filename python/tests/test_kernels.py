@@ -1,0 +1,190 @@
+"""L1 correctness: every Pallas kernel vs. its pure-jnp oracle.
+
+Hypothesis sweeps shapes/values; assert_allclose is the core signal.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ewma_threshold, lstm_cell, pairwise_sqdist
+from compile.kernels.ref import (
+    ewma_threshold_ref,
+    lstm_cell_ref,
+    pairwise_sqdist_ref,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+def _rand(key, shape, scale=1.0):
+    return jax.random.normal(key, shape, dtype=jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# LSTM cell kernel
+# ---------------------------------------------------------------------------
+
+
+class TestLstmCell:
+    def _run(self, seed, batch, embed, hidden):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+        x = _rand(ks[0], (batch, embed))
+        h = _rand(ks[1], (batch, hidden))
+        c = _rand(ks[2], (batch, hidden))
+        wx = _rand(ks[3], (embed, 4 * hidden), 0.3)
+        wh = _rand(ks[4], (hidden, 4 * hidden), 0.3)
+        b = _rand(ks[5], (4 * hidden,), 0.1)
+        got_h, got_c = lstm_cell(x, h, c, wx, wh, b)
+        want_h, want_c = lstm_cell_ref(x, h, c, wx, wh, b)
+        assert_allclose(got_h, want_h, **TOL)
+        assert_allclose(got_c, want_c, **TOL)
+
+    def test_model_shape(self):
+        self._run(0, 1, 28, 32)
+
+    def test_batched_shape(self):
+        self._run(1, 8, 28, 32)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**16),
+        batch=st.integers(1, 9),
+        embed=st.integers(1, 40),
+        hidden=st.integers(1, 48),
+    )
+    def test_hypothesis_sweep(self, seed, batch, embed, hidden):
+        self._run(seed, batch, embed, hidden)
+
+    def test_zero_state_gives_bounded_output(self):
+        # |h| <= 1 because h = sigmoid(.) * tanh(.)
+        ks = jax.random.split(jax.random.PRNGKey(7), 3)
+        x = _rand(ks[0], (4, 28), 10.0)
+        wx = _rand(ks[1], (28, 128), 1.0)
+        wh = _rand(ks[2], (32, 128), 1.0)
+        h = jnp.zeros((4, 32))
+        c = jnp.zeros((4, 32))
+        b = jnp.zeros((128,))
+        got_h, got_c = lstm_cell(x, h, c, wx, wh, b)
+        assert np.all(np.abs(got_h) <= 1.0 + 1e-6)
+        # c' = f*0 + i*g with |i|<=1, |g|<=1
+        assert np.all(np.abs(got_c) <= 1.0 + 1e-6)
+
+    def test_forget_gate_saturation_keeps_cell(self):
+        # Huge positive forget bias, tiny input gate -> c' ~= c.
+        batch, embed, hidden = 2, 5, 7
+        x = jnp.zeros((batch, embed))
+        h = jnp.zeros((batch, hidden))
+        c = jnp.linspace(-1, 1, batch * hidden).reshape(batch, hidden).astype(jnp.float32)
+        wx = jnp.zeros((embed, 4 * hidden))
+        wh = jnp.zeros((hidden, 4 * hidden))
+        b = jnp.concatenate([
+            jnp.full((hidden,), -30.0),  # i -> 0
+            jnp.full((hidden,), 30.0),   # f -> 1
+            jnp.zeros((hidden,)),        # g
+            jnp.zeros((hidden,)),        # o
+        ])
+        _, got_c = lstm_cell(x, h, c, wx, wh, b)
+        assert_allclose(got_c, c, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Pairwise squared-distance kernel
+# ---------------------------------------------------------------------------
+
+
+class TestPairwiseSqdist:
+    def _run(self, seed, n, k, d, block_k):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+        x = _rand(ks[0], (n, d), 2.0)
+        cents = _rand(ks[1], (k, d), 2.0)
+        got = pairwise_sqdist(x, cents, block_k=block_k)
+        want = pairwise_sqdist_ref(x, cents)
+        assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_model_shape(self):
+        self._run(0, 1, 16, 28, 8)
+
+    def test_single_tile(self):
+        self._run(1, 3, 8, 28, 8)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**16),
+        n=st.integers(1, 12),
+        tiles=st.integers(1, 4),
+        block_k=st.sampled_from([2, 4, 8]),
+        d=st.integers(1, 32),
+    )
+    def test_hypothesis_sweep(self, seed, n, tiles, block_k, d):
+        self._run(seed, n, tiles * block_k, d, block_k)
+
+    def test_zero_distance_on_identical_points(self):
+        x = jnp.ones((2, 6), jnp.float32)
+        cents = jnp.tile(x[:1], (4, 1))
+        d = pairwise_sqdist(x, cents, block_k=2)
+        assert_allclose(d, np.zeros((2, 4)), atol=1e-5)
+
+    def test_rejects_bad_tile(self):
+        with pytest.raises(ValueError):
+            pairwise_sqdist(jnp.zeros((2, 4)), jnp.zeros((6, 4)), block_k=4)
+
+    def test_rejects_dim_mismatch(self):
+        with pytest.raises(ValueError):
+            pairwise_sqdist(jnp.zeros((2, 4)), jnp.zeros((8, 5)))
+
+
+# ---------------------------------------------------------------------------
+# EWMA threshold kernel
+# ---------------------------------------------------------------------------
+
+
+class TestEwmaThreshold:
+    def _run(self, err_v, mean_v, var_v, alpha_v=0.05, k_v=3.0):
+        err = jnp.array([err_v], jnp.float32)
+        tm = jnp.array([mean_v, var_v], jnp.float32)
+        alpha = jnp.array([alpha_v], jnp.float32)
+        k = jnp.array([k_v], jnp.float32)
+        got = ewma_threshold(err, tm, alpha, k)
+        want = ewma_threshold_ref(err, tm, alpha, k)
+        for g, w in zip(got, want):
+            assert_allclose(g, w, **TOL)
+        return got
+
+    def test_basic(self):
+        self._run(0.5, 0.2, 0.01)
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        err_v=st.floats(0, 100, allow_nan=False, width=32),
+        mean_v=st.floats(0, 50, allow_nan=False, width=32),
+        var_v=st.floats(0, 25, allow_nan=False, width=32),
+        alpha_v=st.floats(0.0009765625, 0.999755859375, width=32),
+        k_v=st.floats(0.5, 6.0, width=32),
+    )
+    def test_hypothesis_sweep(self, err_v, mean_v, var_v, alpha_v, k_v):
+        self._run(err_v, mean_v, var_v, alpha_v, k_v)
+
+    def test_flag_fires_above_threshold(self):
+        tm, thr, flag = self._run(10.0, 0.1, 0.0001)
+        assert float(flag[0]) == 1.0
+
+    def test_flag_quiet_below_threshold(self):
+        tm, thr, flag = self._run(0.1, 0.5, 0.01)
+        assert float(flag[0]) == 0.0
+
+    def test_converges_to_constant_signal(self):
+        # Feeding a constant error drives ewma_mean -> err, ewma_var -> 0.
+        tm = jnp.array([0.0, 1.0], jnp.float32)
+        err = jnp.array([2.0], jnp.float32)
+        alpha = jnp.array([0.3], jnp.float32)
+        k = jnp.array([3.0], jnp.float32)
+        for _ in range(200):
+            tm, _, _ = ewma_threshold(err, tm, alpha, k)
+        assert abs(float(tm[0]) - 2.0) < 1e-3
+        assert float(tm[1]) < 1e-3

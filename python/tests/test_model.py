@@ -1,0 +1,228 @@
+"""L2 correctness: IFTM step functions — shapes, state threading, semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile import config, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+M = config.METRICS
+
+
+def _stream(seed, n, anomaly_at=None):
+    """Synthetic sensor stream: smooth sinusoids + optional anomaly spike."""
+    rng = np.random.default_rng(seed)
+    t = np.arange(n)[:, None]
+    phase = rng.uniform(0, 2 * np.pi, (1, M))
+    freq = rng.uniform(0.01, 0.1, (1, M))
+    xs = np.sin(freq * t + phase) + 0.01 * rng.standard_normal((n, M))
+    if anomaly_at is not None:
+        xs[anomaly_at] += 8.0
+    return jnp.asarray(xs, jnp.float32)
+
+
+class TestArima:
+    def test_shapes_and_threading(self):
+        _, st = model.init_arima()
+        x = _stream(0, 1)[0]
+        out = model.arima_step(st["coeffs"], st["window"], st["tm"], x)
+        err, thr, flag, coeffs, window, tm = out
+        assert err.shape == (1,) and thr.shape == (1,) and flag.shape == (1,)
+        assert coeffs.shape == (config.AR_WINDOW, M)
+        assert window.shape == (config.AR_WINDOW, M)
+        assert tm.shape == (2,)
+
+    def test_window_slides(self):
+        _, st = model.init_arima()
+        x = jnp.full((M,), 7.0, jnp.float32)
+        *_, window, _ = model.arima_step(st["coeffs"], st["window"], st["tm"], x)
+        assert_allclose(window[-1], np.full(M, 7.0))
+        assert_allclose(window[:-1], np.asarray(st["window"])[1:])
+
+    def test_error_shrinks_on_predictable_signal(self):
+        # On a constant signal the persistence-init AR model is exact after
+        # the window fills up.
+        _, st = model.init_arima()
+        coeffs, window, tm = st["coeffs"], st["window"], st["tm"]
+        x = jnp.full((M,), 1.5, jnp.float32)
+        errs = []
+        for _ in range(config.AR_WINDOW + 5):
+            err, _, _, coeffs, window, tm = model.arima_step(coeffs, window, tm, x)
+            errs.append(float(err[0]))
+        assert errs[-1] < 1e-3
+
+    def test_nlms_reduces_error_on_sinusoid(self):
+        xs = _stream(3, 300)
+        _, st = model.init_arima()
+        coeffs, window, tm = st["coeffs"], st["window"], st["tm"]
+        errs = []
+        for x in xs:
+            err, _, _, coeffs, window, tm = model.arima_step(coeffs, window, tm, x)
+            errs.append(float(err[0]))
+        early = np.mean(errs[20:60])
+        late = np.mean(errs[-40:])
+        assert late < early
+
+
+class TestBirch:
+    def test_shapes(self):
+        _, st = model.init_birch()
+        x = _stream(0, 1)[0]
+        out = model.birch_step(st["centroids"], st["counts"], st["tm"], x)
+        err, thr, flag, cents, counts, tm = out
+        assert cents.shape == (config.BIRCH_K, M)
+        assert counts.shape == (config.BIRCH_K,)
+        assert err.shape == (1,)
+
+    def test_count_increments_by_one(self):
+        _, st = model.init_birch()
+        x = _stream(1, 1)[0]
+        *_, counts, _ = model.birch_step(st["centroids"], st["counts"], st["tm"], x)
+        assert abs(float(jnp.sum(counts) - jnp.sum(st["counts"])) - 1.0) < 1e-5
+
+    def test_winning_centroid_moves_toward_sample(self):
+        _, st = model.init_birch()
+        x = _stream(2, 1)[0]
+        d0 = np.asarray(jnp.sum((st["centroids"] - x[None]) ** 2, axis=1))
+        j = int(np.argmin(d0))
+        *_, cents, counts, _ = model.birch_step(
+            st["centroids"], st["counts"], st["tm"], x
+        )
+        d1 = np.asarray(jnp.sum((cents - x[None]) ** 2, axis=1))
+        assert d1[j] < d0[j]
+        # Losers unchanged.
+        mask = np.ones(config.BIRCH_K, bool)
+        mask[j] = False
+        assert_allclose(np.asarray(cents)[mask], np.asarray(st["centroids"])[mask])
+
+    def test_repeated_sample_error_vanishes(self):
+        _, st = model.init_birch()
+        cents, counts, tm = st["centroids"], st["counts"], st["tm"]
+        x = _stream(4, 1)[0]
+        err = None
+        for _ in range(50):
+            err, _, _, cents, counts, tm = model.birch_step(cents, counts, tm, x)
+        assert float(err[0]) < 0.1
+
+
+class TestLstm:
+    def test_shapes(self):
+        p, st = model.init_lstm()
+        x = _stream(0, 1)[0]
+        out = model.lstm_step(
+            p["wx1"], p["wh1"], p["b1"], p["wx2"], p["wh2"], p["b2"],
+            p["wo"], p["bo"], st["h1"], st["c1"], st["h2"], st["c2"], st["tm"], x,
+        )
+        err, thr, flag, h1, c1, h2, c2, tm = out
+        assert err.shape == (1,)
+        assert h1.shape == (1, config.LSTM_HIDDEN)
+        assert tm.shape == (2,)
+
+    def test_state_changes_with_input(self):
+        p, st = model.init_lstm()
+        x = _stream(1, 1)[0]
+        *_, h1, c1, h2, c2, _ = model.lstm_step(
+            p["wx1"], p["wh1"], p["b1"], p["wx2"], p["wh2"], p["b2"],
+            p["wo"], p["bo"], st["h1"], st["c1"], st["h2"], st["c2"], st["tm"], x,
+        )
+        assert float(jnp.max(jnp.abs(h1))) > 0.0
+        assert float(jnp.max(jnp.abs(h2))) > 0.0
+
+    def test_batched_matches_singles(self):
+        """lstm_step_batched over B streams == B independent lstm_step calls."""
+        B = 4
+        p, _ = model.init_lstm()
+        _, bst = model.init_lstm_batched(batch=B)
+        xs = _stream(5, B)
+        berr, bthr, bflag, bh1, bc1, bh2, bc2, btm = model.lstm_step_batched(
+            p["wx1"], p["wh1"], p["b1"], p["wx2"], p["wh2"], p["b2"],
+            p["wo"], p["bo"], bst["h1"], bst["c1"], bst["h2"], bst["c2"],
+            bst["tm"], xs,
+        )
+        for i in range(B):
+            _, sst = model.init_lstm()
+            err, thr, flag, h1, c1, h2, c2, tm = model.lstm_step(
+                p["wx1"], p["wh1"], p["b1"], p["wx2"], p["wh2"], p["b2"],
+                p["wo"], p["bo"], sst["h1"], sst["c1"], sst["h2"], sst["c2"],
+                sst["tm"], xs[i],
+            )
+            assert_allclose(berr[i], err[0], rtol=1e-5, atol=1e-6)
+            assert_allclose(bh1[i], h1[0], rtol=1e-5, atol=1e-6)
+            assert_allclose(btm[i], tm, rtol=1e-5, atol=1e-6)
+
+
+class TestChunks:
+    """The scan'd chunk variants must equal the per-step loop exactly."""
+
+    def test_arima_chunk_equals_loop(self):
+        T = 16
+        xs = _stream(6, T)
+        _, st = model.init_arima()
+        coeffs, window, tm = st["coeffs"], st["window"], st["tm"]
+        loop_errs = []
+        for x in xs:
+            err, thr, flag, coeffs, window, tm = model.arima_step(coeffs, window, tm, x)
+            loop_errs.append(float(err[0]))
+        _, st2 = model.init_arima()
+        errs, thrs, flags, c2, w2, tm2 = model.arima_chunk(
+            st2["coeffs"], st2["window"], st2["tm"], xs
+        )
+        assert_allclose(errs, np.asarray(loop_errs), rtol=1e-5, atol=1e-6)
+        assert_allclose(c2, coeffs, rtol=1e-5, atol=1e-6)
+        assert_allclose(tm2, tm, rtol=1e-5, atol=1e-6)
+
+    def test_birch_chunk_equals_loop(self):
+        T = 8
+        xs = _stream(7, T)
+        _, st = model.init_birch()
+        cents, counts, tm = st["centroids"], st["counts"], st["tm"]
+        loop_errs = []
+        for x in xs:
+            err, _, _, cents, counts, tm = model.birch_step(cents, counts, tm, x)
+            loop_errs.append(float(err[0]))
+        _, st2 = model.init_birch()
+        errs, _, _, c2, n2, tm2 = model.birch_chunk(
+            st2["centroids"], st2["counts"], st2["tm"], xs
+        )
+        assert_allclose(errs, np.asarray(loop_errs), rtol=1e-5, atol=1e-6)
+        assert_allclose(n2, counts, rtol=1e-5, atol=1e-6)
+
+    def test_lstm_chunk_equals_loop(self):
+        T = 8
+        xs = _stream(8, T)
+        p, st = model.init_lstm()
+        h1, c1, h2, c2, tm = st["h1"], st["c1"], st["h2"], st["c2"], st["tm"]
+        loop_errs = []
+        for x in xs:
+            err, _, _, h1, c1, h2, c2, tm = model.lstm_step(
+                p["wx1"], p["wh1"], p["b1"], p["wx2"], p["wh2"], p["b2"],
+                p["wo"], p["bo"], h1, c1, h2, c2, tm, x,
+            )
+            loop_errs.append(float(err[0]))
+        p2, st2 = model.init_lstm()
+        errs, _, _, h1b, c1b, h2b, c2b, tmb = model.lstm_chunk(
+            p2["wx1"], p2["wh1"], p2["b1"], p2["wx2"], p2["wh2"], p2["b2"],
+            p2["wo"], p2["bo"], st2["h1"], st2["c1"], st2["h2"], st2["c2"],
+            st2["tm"], xs,
+        )
+        assert_allclose(errs, np.asarray(loop_errs), rtol=1e-4, atol=1e-5)
+        assert_allclose(h2b, h2, rtol=1e-4, atol=1e-5)
+
+
+class TestIftmSemantics:
+    def test_anomaly_spike_flags(self):
+        """A large spike after a calm warmup must trip the threshold model."""
+        n, spike = 260, 250
+        xs = _stream(9, n, anomaly_at=spike)
+        _, st = model.init_arima()
+        coeffs, window, tm = st["coeffs"], st["window"], st["tm"]
+        flags = []
+        for x in xs:
+            _, _, flag, coeffs, window, tm = model.arima_step(coeffs, window, tm, x)
+            flags.append(float(flag[0]))
+        assert flags[spike] == 1.0
+        # Calm region right before the spike should be quiet.
+        assert np.mean(flags[spike - 50 : spike]) < 0.2

@@ -1,0 +1,9 @@
+//! Ablation bench: regenerate the design-choice comparison (DESIGN.md).
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let report = streamprof::repro::ablation::run();
+    println!("{}", report.rendered);
+    println!("[bench] ablations: regenerated in {:.2?}", t0.elapsed());
+}

@@ -1,0 +1,13 @@
+//! Bench/regenerator for fig4 — runs the experiment end-to-end, reports
+//! wallclock, and prints the paper-comparison rendering.
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let report = streamprof::repro::fig4::run();
+    println!("{}", report.rendered);
+    println!("[bench] fig4_nms_points: regenerated in {:.2?}", t0.elapsed());
+    for p in &report.csv_paths {
+        println!("[bench] wrote {}", p.display());
+    }
+}

@@ -1,0 +1,19 @@
+//! Bench/regenerator for fig5 — runs the experiment end-to-end, reports
+//! wallclock, and prints the paper-comparison rendering.
+//! Pass --full for the paper-scale repetition counts (default: quick).
+use std::time::Instant;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let t0 = Instant::now();
+    let report = streamprof::repro::fig5::run(!full);
+    println!("{}", report.rendered);
+    println!(
+        "[bench] fig5_smape_steps ({}): regenerated in {:.2?}",
+        if full { "full" } else { "quick" },
+        t0.elapsed()
+    );
+    for p in &report.csv_paths {
+        println!("[bench] wrote {}", p.display());
+    }
+}

@@ -1,0 +1,12 @@
+//! Bench/regenerator for fig6 — profiling time vs. steps + early stopping.
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let report = streamprof::repro::fig6::run();
+    println!("{}", report.rendered);
+    println!("[bench] fig6_profiling_time: regenerated in {:.2?}", t0.elapsed());
+    for p in &report.csv_paths {
+        println!("[bench] wrote {}", p.display());
+    }
+}

@@ -1,0 +1,19 @@
+//! Bench/regenerator for fig7 — runs the experiment end-to-end, reports
+//! wallclock, and prints the paper-comparison rendering.
+//! Pass --full for the paper-scale repetition counts (default: quick).
+use std::time::Instant;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let t0 = Instant::now();
+    let report = streamprof::repro::fig7::run(!full);
+    println!("{}", report.rendered);
+    println!(
+        "[bench] fig7_strategy_wins ({}): regenerated in {:.2?}",
+        if full { "full" } else { "quick" },
+        t0.elapsed()
+    );
+    for p in &report.csv_paths {
+        println!("[bench] wrote {}", p.display());
+    }
+}

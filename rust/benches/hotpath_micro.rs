@@ -1,0 +1,130 @@
+//! Micro-benchmarks over every L3 hot path (hand-rolled harness — criterion
+//! is not in the offline vendor set). These feed EXPERIMENTS.md §Perf.
+//!
+//! Paths measured:
+//!   * nested-model LM fit (the per-step cost of NMS),
+//!   * GP fit + EI argmax (the per-step cost of BO),
+//!   * early-stop monitor push (per profiled sample),
+//!   * simulated observation + full profiling session (experiment harness),
+//!   * SMAPE evaluation over a grid,
+//!   * PJRT per-sample step and chunked step (the serving request path,
+//!     when artifacts are built).
+
+use streamprof::coordinator::{smape_vs_dataset, Profiler, ProfilerConfig, SimulatedBackend};
+use streamprof::earlystop::{EarlyStopConfig, EarlyStopMonitor};
+use streamprof::fit::{ProfilePoint, RuntimeModel};
+use streamprof::gp::{Gp, Matern52};
+use streamprof::runtime::{artifacts_available, default_artifacts_dir, Engine};
+use streamprof::simulator::{node, Algo, SimulatedJob};
+use streamprof::strategies;
+use streamprof::stream::SensorStream;
+use streamprof::util::bench::{black_box, Bench};
+use streamprof::util::Rng;
+use streamprof::workloads::PjrtJob;
+
+fn main() {
+    let mut csv: Vec<String> = vec!["name,mean_ns,p50_ns,p95_ns".into()];
+    let mut run = |b: Bench| {
+        println!("{}", b.report());
+        csv.push(b.csv_row());
+    };
+
+    // --- fit: nested LM on 6 noisy points (NMS per-step cost) ---
+    let mut rng = Rng::new(1);
+    let pts: Vec<ProfilePoint> = [0.1f64, 0.2, 0.5, 1.0, 2.0, 4.0]
+        .iter()
+        .map(|&r| {
+            let y = 0.05 * r.powf(-0.9) + 0.01;
+            ProfilePoint::new(r, y * (1.0 + 0.05 * rng.normal()))
+        })
+        .collect();
+    let mut b = Bench::new("fit/lm_6pt_full_model");
+    b.iter(|| RuntimeModel::fit(black_box(&pts)));
+    run(b);
+
+    let warm = RuntimeModel::fit(&pts);
+    let mut b = Bench::new("fit/lm_6pt_warm_start");
+    b.iter(|| RuntimeModel::fit_warm(black_box(&pts), Some(&warm)));
+    run(b);
+
+    let m = warm.clone();
+    let mut b = Bench::new("fit/model_eval");
+    b.iter(|| black_box(m.eval(black_box(0.7))));
+    run(b);
+
+    let mut b = Bench::new("fit/model_invert");
+    b.iter(|| black_box(m.invert(black_box(0.2))));
+    run(b);
+
+    // --- gp: fit + EI argmax over a 40-point grid (BO per-step cost) ---
+    let obs: Vec<(f64, f64)> = (0..8).map(|i| (0.1 + i as f64 * 0.5, (i as f64).sin())).collect();
+    let cands: Vec<f64> = (1..=40).map(|i| i as f64 * 0.1).collect();
+    let mut b = Bench::new("gp/fit8_plus_ei_40cand");
+    b.iter(|| {
+        let mut gp = Gp::new(Matern52::default(), 1e-2, 0.1, 4.0);
+        gp.fit(black_box(&obs));
+        black_box(gp.argmax_ei(&cands, 0.9))
+    });
+    run(b);
+
+    // --- early stopping: per-sample push (profiling inner loop) ---
+    let mut mon = EarlyStopMonitor::new(EarlyStopConfig::new(0.95, 0.0001));
+    let mut x = 0.7f64;
+    let mut b = Bench::new("earlystop/push");
+    b.iter(|| {
+        x = 0.2 + (x * 1.3).fract() * 0.01;
+        black_box(mon.push(black_box(x)))
+    });
+    run(b);
+
+    // --- simulator: single observation + full session ---
+    let mut job = SimulatedJob::new(node("pi4").unwrap(), Algo::Lstm, 3);
+    let mut b = Bench::new("sim/observe_mean_10k");
+    b.iter(|| black_box(job.observe_mean(black_box(0.5), 10_000)));
+    run(b);
+
+    let mut seed = 0u64;
+    let mut b = Bench::new("session/nms_6steps_sim");
+    b.iter(|| {
+        seed += 1;
+        let cfg = ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() };
+        let mut backend =
+            SimulatedBackend::new(SimulatedJob::new(node("pi4").unwrap(), Algo::Arima, seed));
+        Profiler::new(cfg, strategies::by_name("nms", seed).unwrap()).run(&mut backend)
+    });
+    run(b);
+
+    // --- SMAPE over a 40-point dataset ---
+    let truth: Vec<ProfilePoint> =
+        (1..=40).map(|i| ProfilePoint::new(i as f64 * 0.1, 0.05 / (i as f64 * 0.1))).collect();
+    let mut b = Bench::new("eval/smape_40pt");
+    b.iter(|| black_box(smape_vs_dataset(&m, black_box(&truth))));
+    run(b);
+
+    // --- PJRT request path (needs artifacts) ---
+    if artifacts_available() {
+        let engine = Engine::new(&default_artifacts_dir()).expect("engine");
+        let mut stream = SensorStream::new(7);
+        for algo in Algo::ALL {
+            let mut pj = PjrtJob::load(&engine, algo).expect("load");
+            let x = stream.next_sample();
+            let mut b = Bench::new(&format!("pjrt/{}_step", algo.name()));
+            b.iter(|| pj.process_chunk(black_box(&x)).expect("step"));
+            run(b);
+        }
+        let chunk = engine.manifest().chunk;
+        let mut pj = PjrtJob::load_named(&engine, &format!("lstm_chunk{chunk}")).unwrap();
+        let xs = stream.generate(chunk);
+        let mut b = Bench::new(&format!("pjrt/lstm_chunk{chunk}_per_call"));
+        b.iter(|| pj.process_chunk(black_box(&xs)).expect("chunk"));
+        run(b);
+    } else {
+        println!("(skipping pjrt benches: artifacts not built)");
+    }
+
+    // Persist CSV for EXPERIMENTS.md §Perf.
+    let dir = std::path::PathBuf::from("results");
+    std::fs::create_dir_all(&dir).ok();
+    std::fs::write(dir.join("hotpath_micro.csv"), csv.join("\n") + "\n").ok();
+    println!("[bench] wrote results/hotpath_micro.csv");
+}

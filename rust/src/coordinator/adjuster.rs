@@ -1,0 +1,143 @@
+//! Adaptive resource adjustment — the downstream consumer of the runtime
+//! model (paper Fig. 1): "set the highest restriction of resources, while
+//! still meeting runtime targets of the incoming data".
+
+use crate::fit::RuntimeModel;
+use crate::stream::ArrivalProcess;
+
+/// One adjustment decision.
+#[derive(Clone, Copy, Debug)]
+pub struct Adjustment {
+    /// Chosen CPU limitation (grid value).
+    pub limit: f64,
+    /// Model-predicted per-sample runtime at that limitation.
+    pub predicted_runtime: f64,
+    /// The per-sample budget that had to be met (1/arrival-rate · margin).
+    pub budget: f64,
+    /// False when even `l_max` cannot meet the budget (stream too fast).
+    pub feasible: bool,
+}
+
+/// Picks the tightest CPU limitation that still meets just-in-time
+/// processing for a given arrival rate.
+#[derive(Clone, Debug)]
+pub struct ResourceAdjuster {
+    model: RuntimeModel,
+    l_min: f64,
+    l_max: f64,
+    delta: f64,
+    /// Safety margin: predicted runtime must be ≤ `margin · gap`.
+    pub margin: f64,
+}
+
+impl ResourceAdjuster {
+    pub fn new(model: RuntimeModel, l_min: f64, l_max: f64, delta: f64) -> Self {
+        Self { model, l_min, l_max, delta, margin: 0.9 }
+    }
+
+    pub fn model(&self) -> &RuntimeModel {
+        &self.model
+    }
+
+    /// Replace the model (e.g. after re-profiling).
+    pub fn update_model(&mut self, model: RuntimeModel) {
+        self.model = model;
+    }
+
+    /// Decide for a fixed per-sample gap (seconds between samples).
+    pub fn decide(&self, gap: f64) -> Adjustment {
+        let budget = gap * self.margin;
+        let n = ((self.l_max - self.l_min) / self.delta).round() as usize;
+        for i in 0..=n {
+            let limit = self.l_min + i as f64 * self.delta;
+            let predicted = self.model.eval(limit);
+            if predicted <= budget {
+                return Adjustment { limit, predicted_runtime: predicted, budget, feasible: true };
+            }
+        }
+        Adjustment {
+            limit: self.l_max,
+            predicted_runtime: self.model.eval(self.l_max),
+            budget,
+            feasible: false,
+        }
+    }
+
+    /// Decide for an arrival process over a horizon, re-deciding every
+    /// `window` samples — the adaptive loop of Fig. 1.
+    pub fn plan(&self, arrivals: &ArrivalProcess, horizon: usize, window: usize) -> Vec<Adjustment> {
+        assert!(window > 0);
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < horizon {
+            let end = (i + window).min(horizon);
+            // Tightest gap inside the window governs.
+            let gap = (i..end).map(|k| arrivals.gap_at(k)).fold(f64::INFINITY, f64::min);
+            out.push(self.decide(gap));
+            i = end;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fit::{ModelKind, RuntimeModel};
+
+    fn model() -> RuntimeModel {
+        // t(R) = 0.05/R + 0.005
+        RuntimeModel { kind: ModelKind::Full, a: 0.05, b: 1.0, c: 0.005, d: 1.0, fit_cost: 0.0 }
+    }
+
+    #[test]
+    fn picks_tightest_feasible_limit() {
+        let adj = ResourceAdjuster::new(model(), 0.1, 4.0, 0.1);
+        // 10 Hz stream -> gap 0.1s, budget 0.09 -> need 0.05/R+0.005 <= 0.09
+        // -> R >= 0.588 -> grid 0.6.
+        let d = adj.decide(0.1);
+        assert!(d.feasible);
+        assert!((d.limit - 0.6).abs() < 1e-9, "got {}", d.limit);
+        assert!(d.predicted_runtime <= d.budget);
+    }
+
+    #[test]
+    fn slow_stream_gets_tiny_limit() {
+        let adj = ResourceAdjuster::new(model(), 0.1, 4.0, 0.1);
+        let d = adj.decide(10.0); // one sample every 10s
+        assert!(d.feasible);
+        assert!((d.limit - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn infeasible_stream_detected() {
+        let adj = ResourceAdjuster::new(model(), 0.1, 4.0, 0.1);
+        // gap 1ms: even at 4 cores t = 0.0175 > 0.0009.
+        let d = adj.decide(0.001);
+        assert!(!d.feasible);
+        assert_eq!(d.limit, 4.0);
+    }
+
+    #[test]
+    fn plan_adapts_to_varying_rate() {
+        let adj = ResourceAdjuster::new(model(), 0.1, 4.0, 0.1);
+        let arrivals = ArrivalProcess::Varying { lo: 2.0, hi: 15.0, period: 200.0 };
+        let plan = adj.plan(&arrivals, 400, 50);
+        assert_eq!(plan.len(), 8);
+        let limits: Vec<f64> = plan.iter().map(|a| a.limit).collect();
+        let max = limits.iter().cloned().fold(f64::MIN, f64::max);
+        let min = limits.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max > min, "limits should vary with the rate: {limits:?}");
+        assert!(plan.iter().all(|a| a.feasible));
+    }
+
+    #[test]
+    fn margin_tightens_choice() {
+        let mut adj = ResourceAdjuster::new(model(), 0.1, 4.0, 0.1);
+        adj.margin = 0.5;
+        let strict = adj.decide(0.1).limit;
+        adj.margin = 1.0;
+        let loose = adj.decide(0.1).limit;
+        assert!(strict > loose);
+    }
+}

@@ -1,0 +1,239 @@
+//! Profiling backends: what the profiler measures against.
+//!
+//! The profiler is backend-agnostic — it only needs "profile `n` samples
+//! (or until early stopping) under limitation `R` and report the mean
+//! per-sample runtime plus the wallclock spent". Two backends:
+//!
+//!   * [`SimulatedBackend`] — Table-I node models (fast, deterministic;
+//!     used by the experiment harness).
+//!   * [`PjrtBackend`] — the real AOT-compiled IFTM jobs under the
+//!     duty-cycle throttle on the local machine.
+
+use crate::earlystop::{EarlyStopConfig, EarlyStopMonitor};
+use crate::simulator::SimulatedJob;
+use crate::stream::SensorStream;
+use crate::workloads::{PjrtJob, StreamJob};
+
+/// One profiling run's outcome.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    pub limit: f64,
+    /// Mean per-sample runtime observed (seconds).
+    pub mean_runtime: f64,
+    /// Samples actually consumed (early stopping may use fewer).
+    pub samples: usize,
+    /// Wallclock spent on this run (seconds).
+    pub wallclock: f64,
+}
+
+/// Backend abstraction for the profiler.
+pub trait ProfilingBackend {
+    /// Profile `samples` samples under `limit`.
+    fn measure(&mut self, limit: f64, samples: usize) -> Measurement;
+
+    /// Profile under `limit` until the early-stop criterion fires (capped).
+    fn measure_early_stop(
+        &mut self,
+        limit: f64,
+        cfg: &EarlyStopConfig,
+        cap: usize,
+    ) -> Measurement;
+
+    /// Largest assignable limitation (`l_max`, the core count).
+    fn l_max(&self) -> f64;
+
+    /// Label for logs.
+    fn label(&self) -> String;
+}
+
+/// Simulated node backend.
+pub struct SimulatedBackend {
+    job: SimulatedJob,
+}
+
+impl SimulatedBackend {
+    pub fn new(job: SimulatedJob) -> Self {
+        Self { job }
+    }
+
+    pub fn job(&self) -> &SimulatedJob {
+        &self.job
+    }
+
+    pub fn job_mut(&mut self) -> &mut SimulatedJob {
+        &mut self.job
+    }
+}
+
+impl ProfilingBackend for SimulatedBackend {
+    fn measure(&mut self, limit: f64, samples: usize) -> Measurement {
+        let (mean, wall) = self.job.profiling_time(limit, samples);
+        Measurement { limit, mean_runtime: mean, samples, wallclock: wall }
+    }
+
+    fn measure_early_stop(
+        &mut self,
+        limit: f64,
+        cfg: &EarlyStopConfig,
+        cap: usize,
+    ) -> Measurement {
+        let mut mon = EarlyStopMonitor::new(*cfg);
+        let mut wall = 0.0;
+        for _ in 0..cap {
+            let rt = self.job.observe_sample(limit);
+            wall += rt;
+            if mon.push(rt) {
+                break;
+            }
+        }
+        Measurement {
+            limit,
+            mean_runtime: mon.mean(),
+            samples: mon.samples() as usize,
+            wallclock: wall,
+        }
+    }
+
+    fn l_max(&self) -> f64 {
+        self.job.node.cores
+    }
+
+    fn label(&self) -> String {
+        format!("sim:{}/{}", self.job.node.name, self.job.algo.name())
+    }
+}
+
+/// Real PJRT backend: executes the per-sample artifact under a virtual-time
+/// duty-cycle throttle and feeds it synthetic sensor samples.
+pub struct PjrtBackend {
+    job: PjrtJob,
+    stream: SensorStream,
+    /// Assignable core budget of the local machine.
+    cores: f64,
+    /// When true, the throttle actually sleeps (e2e serving); otherwise the
+    /// stall is accounted only (fast profiling experiments).
+    pub real_sleep: bool,
+}
+
+impl PjrtBackend {
+    pub fn new(job: PjrtJob, stream: SensorStream, cores: f64) -> Self {
+        Self { job, stream, cores, real_sleep: false }
+    }
+
+    pub fn job_mut(&mut self) -> &mut PjrtJob {
+        &mut self.job
+    }
+
+    fn throttle(&self, limit: f64) -> crate::runtime::Throttle {
+        if self.real_sleep {
+            crate::runtime::Throttle::sleeping(limit)
+        } else {
+            crate::runtime::Throttle::virtual_time(limit)
+        }
+    }
+}
+
+impl ProfilingBackend for PjrtBackend {
+    fn measure(&mut self, limit: f64, samples: usize) -> Measurement {
+        let throttle = self.throttle(limit);
+        self.job.set_throttle(Some(throttle));
+        let mut total = 0.0;
+        let mut n = 0usize;
+        for _ in 0..samples {
+            let x = self.stream.next_sample();
+            let before = self.job.latencies.len();
+            if self.job.process_chunk(&x).is_err() {
+                break;
+            }
+            for lat in &self.job.latencies[before..] {
+                total += lat.as_secs_f64();
+                n += 1;
+            }
+        }
+        self.job.set_throttle(None);
+        Measurement {
+            limit,
+            mean_runtime: if n > 0 { total / n as f64 } else { f64::NAN },
+            samples: n,
+            wallclock: total,
+        }
+    }
+
+    fn measure_early_stop(
+        &mut self,
+        limit: f64,
+        cfg: &EarlyStopConfig,
+        cap: usize,
+    ) -> Measurement {
+        let throttle = self.throttle(limit);
+        self.job.set_throttle(Some(throttle));
+        let mut mon = EarlyStopMonitor::new(*cfg);
+        let mut wall = 0.0;
+        for _ in 0..cap {
+            let x = self.stream.next_sample();
+            let before = self.job.latencies.len();
+            if self.job.process_chunk(&x).is_err() {
+                break;
+            }
+            let mut stop = false;
+            for lat in &self.job.latencies[before..] {
+                wall += lat.as_secs_f64();
+                stop = mon.push(lat.as_secs_f64());
+            }
+            if stop {
+                break;
+            }
+        }
+        self.job.set_throttle(None);
+        Measurement {
+            limit,
+            mean_runtime: mon.mean(),
+            samples: mon.samples() as usize,
+            wallclock: wall,
+        }
+    }
+
+    fn l_max(&self) -> f64 {
+        self.cores
+    }
+
+    fn label(&self) -> String {
+        format!("pjrt:{}", self.job.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::{node, Algo};
+
+    #[test]
+    fn simulated_measure_matches_truth() {
+        let job = SimulatedJob::new(node("pi4").unwrap(), Algo::Arima, 3);
+        let truth = job.truth().mean_runtime(0.5);
+        let mut b = SimulatedBackend::new(job);
+        let m = b.measure(0.5, 10_000);
+        assert_eq!(m.samples, 10_000);
+        assert!((m.mean_runtime - truth).abs() / truth < 0.05);
+        assert!((m.wallclock - m.mean_runtime * 10_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn early_stop_uses_fewer_samples() {
+        let job = SimulatedJob::new(node("pi4").unwrap(), Algo::Lstm, 5);
+        let mut b = SimulatedBackend::new(job);
+        let cfg = EarlyStopConfig::new(0.95, 0.10);
+        let m = b.measure_early_stop(0.3, &cfg, 10_000);
+        assert!(m.samples < 10_000, "should stop early, used {}", m.samples);
+        assert!(m.samples >= cfg.min_samples as usize);
+        let truth = b.job().truth().mean_runtime(0.3);
+        assert!((m.mean_runtime - truth).abs() / truth < 0.15);
+    }
+
+    #[test]
+    fn backend_l_max_is_core_count() {
+        let b = SimulatedBackend::new(SimulatedJob::new(node("e216").unwrap(), Algo::Birch, 1));
+        assert_eq!(b.l_max(), 16.0);
+        assert!(b.label().contains("e216"));
+    }
+}

@@ -1,0 +1,213 @@
+//! Multi-job coordinator: the paper's "adaptive adjustment of resources per
+//! job and component" (abstract) on one node.
+//!
+//! Each registered stream job carries its fitted runtime model; the manager
+//! assigns every job the tightest CPU limit meeting its arrival rate and
+//! resolves over-subscription by shedding the *lowest-priority* jobs to
+//! best-effort (the node cannot run everything just-in-time — someone must
+//! lose, and it should be a deliberate choice).
+
+use std::collections::BTreeMap;
+
+use crate::fit::RuntimeModel;
+
+use super::adjuster::{Adjustment, ResourceAdjuster};
+
+/// One managed stream-analysis job.
+#[derive(Clone, Debug)]
+pub struct ManagedJob {
+    pub name: String,
+    pub model: RuntimeModel,
+    /// Current sample arrival rate (Hz).
+    pub rate_hz: f64,
+    /// Larger = more important (kept just-in-time longer).
+    pub priority: i32,
+}
+
+/// Assignment outcome for one job.
+#[derive(Clone, Debug)]
+pub struct Assignment {
+    pub name: String,
+    pub adjustment: Adjustment,
+    /// False when the job was shed to best-effort (capacity or
+    /// infeasibility).
+    pub guaranteed: bool,
+}
+
+/// Node-level capacity plan.
+#[derive(Clone, Debug)]
+pub struct CapacityPlan {
+    pub assignments: Vec<Assignment>,
+    pub total_assigned: f64,
+    pub capacity: f64,
+}
+
+/// The job registry + allocator.
+pub struct JobManager {
+    capacity: f64,
+    l_min: f64,
+    delta: f64,
+    jobs: BTreeMap<String, ManagedJob>,
+}
+
+impl JobManager {
+    pub fn new(capacity: f64) -> Self {
+        Self { capacity, l_min: 0.1, delta: 0.1, jobs: BTreeMap::new() }
+    }
+
+    /// Register (or replace) a job with its profiled runtime model.
+    pub fn register(&mut self, job: ManagedJob) {
+        self.jobs.insert(job.name.clone(), job);
+    }
+
+    pub fn deregister(&mut self, name: &str) -> Option<ManagedJob> {
+        self.jobs.remove(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Update a job's arrival rate (the Fig. 1 adaptive loop input).
+    pub fn update_rate(&mut self, name: &str, rate_hz: f64) -> bool {
+        if let Some(j) = self.jobs.get_mut(name) {
+            j.rate_hz = rate_hz;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Compute the capacity plan: per-job tightest limits, then shed
+    /// lowest-priority jobs while the node is over-subscribed.
+    pub fn plan(&self) -> CapacityPlan {
+        let mut assignments: Vec<Assignment> = self
+            .jobs
+            .values()
+            .map(|j| {
+                let adj = ResourceAdjuster::new(
+                    j.model.clone(),
+                    self.l_min,
+                    self.capacity,
+                    self.delta,
+                );
+                let a = adj.decide(1.0 / j.rate_hz);
+                Assignment {
+                    name: j.name.clone(),
+                    guaranteed: a.feasible,
+                    adjustment: a,
+                }
+            })
+            .collect();
+
+        // Shed until the guaranteed set fits: lowest priority first,
+        // largest demand as tie-break.
+        loop {
+            let total: f64 = assignments
+                .iter()
+                .filter(|a| a.guaranteed)
+                .map(|a| a.adjustment.limit)
+                .sum();
+            if total <= self.capacity + 1e-9 {
+                break;
+            }
+            let victim = assignments
+                .iter_mut()
+                .filter(|a| a.guaranteed)
+                .min_by(|x, y| {
+                    let px = self.jobs[&x.name].priority;
+                    let py = self.jobs[&y.name].priority;
+                    px.cmp(&py).then(
+                        x.adjustment
+                            .limit
+                            .partial_cmp(&y.adjustment.limit)
+                            .unwrap()
+                            .reverse(),
+                    )
+                });
+            match victim {
+                Some(v) => v.guaranteed = false,
+                None => break,
+            }
+        }
+        let total_assigned = assignments
+            .iter()
+            .filter(|a| a.guaranteed)
+            .map(|a| a.adjustment.limit)
+            .sum();
+        CapacityPlan { assignments, total_assigned, capacity: self.capacity }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fit::ModelKind;
+
+    fn model(a: f64) -> RuntimeModel {
+        RuntimeModel { kind: ModelKind::Full, a, b: 1.0, c: 0.001, d: 1.0, fit_cost: 0.0 }
+    }
+
+    fn job(name: &str, a: f64, rate: f64, prio: i32) -> ManagedJob {
+        ManagedJob { name: name.into(), model: model(a), rate_hz: rate, priority: prio }
+    }
+
+    #[test]
+    fn assigns_tight_limits_when_capacity_suffices() {
+        let mut mgr = JobManager::new(4.0);
+        mgr.register(job("a", 0.05, 5.0, 1)); // needs 0.05/R+0.001 <= 0.18 -> R>=0.28 -> 0.3
+        mgr.register(job("b", 0.02, 5.0, 1));
+        let plan = mgr.plan();
+        assert!(plan.assignments.iter().all(|a| a.guaranteed));
+        assert!(plan.total_assigned <= 4.0);
+        let a = plan.assignments.iter().find(|x| x.name == "a").unwrap();
+        assert!((a.adjustment.limit - 0.3).abs() < 1e-9, "{}", a.adjustment.limit);
+    }
+
+    #[test]
+    fn sheds_lowest_priority_on_oversubscription() {
+        let mut mgr = JobManager::new(1.0);
+        // Each needs ~0.6 CPU at 10 Hz -> two can't both be guaranteed.
+        mgr.register(job("important", 0.05, 10.0, 10));
+        mgr.register(job("batch", 0.05, 10.0, 1));
+        let plan = mgr.plan();
+        let imp = plan.assignments.iter().find(|a| a.name == "important").unwrap();
+        let batch = plan.assignments.iter().find(|a| a.name == "batch").unwrap();
+        assert!(imp.guaranteed);
+        assert!(!batch.guaranteed);
+        assert!(plan.total_assigned <= 1.0);
+    }
+
+    #[test]
+    fn rate_update_changes_plan() {
+        let mut mgr = JobManager::new(4.0);
+        mgr.register(job("a", 0.05, 2.0, 1));
+        let before = mgr.plan().assignments[0].adjustment.limit;
+        assert!(mgr.update_rate("a", 20.0));
+        let after = mgr.plan().assignments[0].adjustment.limit;
+        assert!(after > before, "{before} -> {after}");
+        assert!(!mgr.update_rate("ghost", 1.0));
+    }
+
+    #[test]
+    fn infeasible_job_not_guaranteed() {
+        let mut mgr = JobManager::new(2.0);
+        mgr.register(job("fast", 0.05, 1000.0, 5)); // 1 kHz: impossible
+        let plan = mgr.plan();
+        assert!(!plan.assignments[0].guaranteed);
+    }
+
+    #[test]
+    fn register_replaces() {
+        let mut mgr = JobManager::new(4.0);
+        mgr.register(job("a", 0.05, 2.0, 1));
+        mgr.register(job("a", 0.10, 2.0, 1));
+        assert_eq!(mgr.len(), 1);
+        assert!(mgr.deregister("a").is_some());
+        assert!(mgr.is_empty());
+    }
+}

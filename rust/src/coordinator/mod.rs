@@ -1,0 +1,16 @@
+//! L3 coordinator: the paper's system contribution.
+//!
+//! * [`backend`] — what gets profiled (simulated nodes / real PJRT jobs),
+//! * [`profiler`] — Algorithm-1 initial placement + strategy loop + early
+//!   stopping orchestration,
+//! * [`adjuster`] — the adaptive resource adjustment the model enables.
+
+pub mod adjuster;
+pub mod backend;
+pub mod manager;
+pub mod profiler;
+
+pub use adjuster::{Adjustment, ResourceAdjuster};
+pub use manager::{Assignment, CapacityPlan, JobManager, ManagedJob};
+pub use backend::{Measurement, PjrtBackend, ProfilingBackend, SimulatedBackend};
+pub use profiler::{smape_vs_dataset, Profiler, ProfilerConfig, SessionResult, StepRecord};

@@ -1,0 +1,311 @@
+//! The profiling orchestrator — the paper's end-to-end procedure:
+//!
+//! 1. place `n` initial runs via Algorithm 1 and profile them in parallel
+//!    (wallclock = the slowest run, Eq. 2 guarantees they fit on the node),
+//! 2. adopt the runtime observed at the smallest limitation as the
+//!    **synthetic target**,
+//! 3. iterate: fit the nested runtime model (warm-started for NMS), ask the
+//!    selection strategy for the next limitation, profile it (optionally
+//!    with early stopping), and
+//! 4. stop after `max_steps` profiled limitations (or grid exhaustion).
+
+use crate::earlystop::EarlyStopConfig;
+use crate::fit::{ProfilePoint, RuntimeModel};
+use crate::stats::smape_guarded;
+use crate::strategies::{initial_limits, ProfilingContext, SelectionStrategy};
+
+use super::backend::{Measurement, ProfilingBackend};
+
+/// Session configuration (§III-A.c names).
+#[derive(Clone, Debug)]
+pub struct ProfilerConfig {
+    /// Synthetic-target fraction `p` of `l_max`.
+    pub p: f64,
+    /// Initial parallel profiling runs `n ∈ {2,3,4}`.
+    pub n_initial: usize,
+    /// Samples per profiling run (1000/3000/5000/10000 in the paper).
+    pub samples: usize,
+    /// When set, runs stop early per §II-C instead of consuming `samples`.
+    pub early_stop: Option<EarlyStopConfig>,
+    /// Cap on per-run samples when early stopping is active.
+    pub early_stop_cap: usize,
+    /// Total profiled limitations, including the initial runs.
+    pub max_steps: usize,
+    /// Limitation grid parameters.
+    pub l_min: f64,
+    pub delta: f64,
+}
+
+impl Default for ProfilerConfig {
+    fn default() -> Self {
+        Self {
+            p: 0.05,
+            n_initial: 3,
+            samples: 10_000,
+            early_stop: None,
+            early_stop_cap: 10_000,
+            max_steps: 6,
+            l_min: 0.1,
+            delta: 0.1,
+        }
+    }
+}
+
+/// One profiled limitation with the model state after refitting.
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    /// 1-based step index (initial parallel runs share step 1..n).
+    pub index: usize,
+    pub limit: f64,
+    pub mean_runtime: f64,
+    pub samples: usize,
+    /// Wallclock of this run.
+    pub wallclock: f64,
+    /// Cumulative session wallclock after this step (parallel initial runs
+    /// contribute their max).
+    pub cumulative_time: f64,
+    /// Model fitted to all points up to and including this step.
+    pub model: RuntimeModel,
+}
+
+/// Completed profiling session.
+#[derive(Clone, Debug)]
+pub struct SessionResult {
+    pub backend: String,
+    pub strategy: String,
+    pub initial_limits: Vec<f64>,
+    /// Synthetic target runtime adopted after the initial phase.
+    pub target: f64,
+    pub steps: Vec<StepRecord>,
+    pub total_time: f64,
+}
+
+impl SessionResult {
+    /// The model after the final step.
+    pub fn final_model(&self) -> &RuntimeModel {
+        &self.steps.last().expect("non-empty session").model
+    }
+
+    /// Model state after `k` profiled limitations (k >= n_initial).
+    pub fn model_after(&self, k: usize) -> Option<&RuntimeModel> {
+        self.steps.get(k.checked_sub(1)?).map(|s| &s.model)
+    }
+
+    /// Cumulative wallclock after `k` profiled limitations.
+    pub fn time_after(&self, k: usize) -> Option<f64> {
+        self.steps.get(k.checked_sub(1)?).map(|s| s.cumulative_time)
+    }
+}
+
+/// Score a fitted model against a ground-truth dataset (the acquisition
+/// sweep): SMAPE over all grid limitations (paper Eq. 3, ε-guarded).
+pub fn smape_vs_dataset(model: &RuntimeModel, dataset: &[ProfilePoint]) -> f64 {
+    let truth: Vec<f64> = dataset.iter().map(|p| p.runtime).collect();
+    let pred: Vec<f64> = dataset.iter().map(|p| model.eval(p.limit)).collect();
+    smape_guarded(&truth, &pred, 1e-9)
+}
+
+/// The orchestrator.
+pub struct Profiler {
+    cfg: ProfilerConfig,
+    strategy: Box<dyn SelectionStrategy>,
+}
+
+impl Profiler {
+    pub fn new(cfg: ProfilerConfig, strategy: Box<dyn SelectionStrategy>) -> Self {
+        assert!(cfg.max_steps >= cfg.n_initial, "max_steps < n_initial");
+        Self { cfg, strategy }
+    }
+
+    pub fn config(&self) -> &ProfilerConfig {
+        &self.cfg
+    }
+
+    fn run_one(&self, backend: &mut dyn ProfilingBackend, limit: f64) -> Measurement {
+        match &self.cfg.early_stop {
+            Some(es) => backend.measure_early_stop(limit, es, self.cfg.early_stop_cap),
+            None => backend.measure(limit, self.cfg.samples),
+        }
+    }
+
+    /// Run a full profiling session against `backend`.
+    pub fn run(&mut self, backend: &mut dyn ProfilingBackend) -> SessionResult {
+        let l_max = backend.l_max();
+        let mut ctx = ProfilingContext::new(self.cfg.l_min, l_max, self.cfg.delta);
+        let init =
+            initial_limits(self.cfg.p, self.cfg.n_initial, self.cfg.l_min, l_max, self.cfg.delta);
+
+        let mut steps: Vec<StepRecord> = Vec::new();
+        let mut cumulative = 0.0;
+
+        // ---- Phase 1: initial parallel runs (wallclock = slowest). ----
+        let measurements: Vec<Measurement> =
+            init.iter().map(|&l| self.run_one(backend, l)).collect();
+        let parallel_wall = measurements
+            .iter()
+            .map(|m| m.wallclock)
+            .fold(0.0f64, f64::max);
+        cumulative += parallel_wall;
+        // Synthetic target: runtime at the smallest initial limitation.
+        let target_meas = measurements
+            .iter()
+            .min_by(|a, b| a.limit.partial_cmp(&b.limit).unwrap())
+            .expect("non-empty initial placement");
+        ctx.target = target_meas.mean_runtime;
+
+        for m in &measurements {
+            ctx.points.push(ProfilePoint::new(m.limit, m.mean_runtime));
+        }
+        ctx.model = RuntimeModel::fit(&ctx.points);
+        for (i, m) in measurements.iter().enumerate() {
+            steps.push(StepRecord {
+                index: i + 1,
+                limit: m.limit,
+                mean_runtime: m.mean_runtime,
+                samples: m.samples,
+                wallclock: m.wallclock,
+                cumulative_time: cumulative,
+                model: RuntimeModel::fit(&ctx.points[..=i]),
+            });
+        }
+        // The record for the last initial step holds the joint fit.
+        if let Some(last) = steps.last_mut() {
+            last.model = ctx.model.clone();
+        }
+
+        // ---- Phase 2: iterative strategy-driven profiling. ----
+        while steps.len() < self.cfg.max_steps {
+            let Some(next) = self.strategy.next_limit(&ctx) else {
+                break;
+            };
+            let m = self.run_one(backend, next);
+            cumulative += m.wallclock;
+            ctx.points.push(ProfilePoint::new(m.limit, m.mean_runtime));
+            let warm = self.strategy.warm_start().then_some(&ctx.model);
+            ctx.model = RuntimeModel::fit_warm(&ctx.points, warm);
+            steps.push(StepRecord {
+                index: steps.len() + 1,
+                limit: m.limit,
+                mean_runtime: m.mean_runtime,
+                samples: m.samples,
+                wallclock: m.wallclock,
+                cumulative_time: cumulative,
+                model: ctx.model.clone(),
+            });
+        }
+
+        SessionResult {
+            backend: backend.label(),
+            strategy: self.strategy.name().to_string(),
+            initial_limits: init,
+            target: ctx.target,
+            steps,
+            total_time: cumulative,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::SimulatedBackend;
+    use crate::simulator::{node, Algo, SimulatedJob};
+    use crate::strategies;
+
+    fn backend(node_name: &str, algo: Algo, seed: u64) -> SimulatedBackend {
+        SimulatedBackend::new(SimulatedJob::new(node(node_name).unwrap(), algo, seed))
+    }
+
+    fn run_session(strategy: &str, node_name: &str, steps: usize, seed: u64) -> SessionResult {
+        let cfg = ProfilerConfig {
+            samples: 1000,
+            max_steps: steps,
+            ..Default::default()
+        };
+        let mut b = backend(node_name, Algo::Arima, seed);
+        let mut prof = Profiler::new(cfg, strategies::by_name(strategy, seed).unwrap());
+        prof.run(&mut b)
+    }
+
+    #[test]
+    fn session_has_expected_shape() {
+        let s = run_session("nms", "pi4", 6, 1);
+        assert_eq!(s.steps.len(), 6);
+        assert_eq!(s.initial_limits.len(), 3);
+        assert!(s.target > 0.0);
+        assert!(s.total_time > 0.0);
+        // Cumulative time is monotone.
+        for w in s.steps.windows(2) {
+            assert!(w[1].cumulative_time >= w[0].cumulative_time);
+        }
+        // No duplicate profiled limits.
+        for (i, a) in s.steps.iter().enumerate() {
+            for b in &s.steps[i + 1..] {
+                assert!((a.limit - b.limit).abs() > 0.05, "dup {}", a.limit);
+            }
+        }
+    }
+
+    #[test]
+    fn initial_runs_accounted_in_parallel() {
+        let s = run_session("nms", "pi4", 3, 2);
+        // All three initial steps share the same cumulative time == max.
+        let c0 = s.steps[0].cumulative_time;
+        assert!(s.steps.iter().all(|st| (st.cumulative_time - c0).abs() < 1e-9));
+        let max_wall = s.steps.iter().map(|st| st.wallclock).fold(0.0f64, f64::max);
+        assert!((c0 - max_wall).abs() < 1e-9);
+    }
+
+    #[test]
+    fn smape_improves_with_steps_for_nms() {
+        let mut truth_job = SimulatedJob::new(node("pi4").unwrap(), Algo::Arima, 999);
+        let dataset = truth_job.acquire_dataset(10_000);
+        let s = run_session("nms", "pi4", 8, 3);
+        let early = smape_vs_dataset(s.model_after(3).unwrap(), &dataset);
+        let late = smape_vs_dataset(s.model_after(8).unwrap(), &dataset);
+        assert!(late < early, "SMAPE should improve: {early} -> {late}");
+        assert!(late < 0.2, "final SMAPE should be decent: {late}");
+    }
+
+    #[test]
+    fn all_strategies_complete_sessions() {
+        for strat in ["nms", "bs", "bo", "random"] {
+            let s = run_session(strat, "e2high", 6, 7);
+            assert_eq!(s.steps.len(), 6, "{strat}");
+            assert!(s.final_model().eval(1.0).is_finite());
+        }
+    }
+
+    #[test]
+    fn early_stopping_reduces_profiling_time() {
+        let cfg_full = ProfilerConfig { samples: 10_000, max_steps: 6, ..Default::default() };
+        let cfg_es = ProfilerConfig {
+            samples: 10_000,
+            max_steps: 6,
+            early_stop: Some(crate::earlystop::EarlyStopConfig::new(0.95, 0.10)),
+            early_stop_cap: 10_000,
+            ..Default::default()
+        };
+        let mut b1 = backend("pi4", Algo::Arima, 11);
+        let mut b2 = backend("pi4", Algo::Arima, 11);
+        let t_full = Profiler::new(cfg_full, strategies::by_name("nms", 1).unwrap())
+            .run(&mut b1)
+            .total_time;
+        let t_es = Profiler::new(cfg_es, strategies::by_name("nms", 1).unwrap())
+            .run(&mut b2)
+            .total_time;
+        assert!(
+            t_es < t_full * 0.5,
+            "early stopping should at least halve profiling time: {t_es} vs {t_full}"
+        );
+    }
+
+    #[test]
+    fn single_core_node_works_with_two_initial() {
+        let cfg = ProfilerConfig { n_initial: 2, samples: 1000, max_steps: 5, ..Default::default() };
+        let mut b = backend("n1", Algo::Lstm, 13);
+        let s = Profiler::new(cfg, strategies::by_name("bs", 1).unwrap()).run(&mut b);
+        assert!(s.steps.len() <= 5);
+        assert!(s.initial_limits.iter().sum::<f64>() <= 1.0 + 1e-9);
+    }
+}

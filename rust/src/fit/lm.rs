@@ -1,0 +1,210 @@
+//! Levenberg–Marquardt nonlinear least squares.
+//!
+//! Generic over a residual function; the Jacobian is computed by central
+//! differences (problem sizes here are ≤5 params × ≤40 points, so numeric
+//! differentiation costs nothing and avoids per-model analytic code).
+
+use crate::linalg::{Cholesky, Mat};
+
+pub struct LmOptions {
+    pub max_iters: usize,
+    /// Initial damping factor.
+    pub lambda0: f64,
+    /// Stop when the relative cost improvement falls below this.
+    pub cost_tol: f64,
+    /// Stop when the max step magnitude falls below this.
+    pub step_tol: f64,
+}
+
+impl Default for LmOptions {
+    fn default() -> Self {
+        Self { max_iters: 80, lambda0: 1e-3, cost_tol: 1e-10, step_tol: 1e-10 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct LmResult {
+    pub params: Vec<f64>,
+    pub cost: f64,
+    pub iterations: usize,
+    pub converged: bool,
+}
+
+/// Minimize `0.5 * ||residuals(θ)||²` starting from `theta0`.
+///
+/// `residuals(θ, out)` must fill `out` with the residual vector.
+pub fn levenberg_marquardt<F>(
+    theta0: &[f64],
+    n_residuals: usize,
+    mut residuals: F,
+    opts: &LmOptions,
+) -> LmResult
+where
+    F: FnMut(&[f64], &mut [f64]),
+{
+    let np = theta0.len();
+    let mut theta = theta0.to_vec();
+    let mut r = vec![0.0; n_residuals];
+    let mut r_try = vec![0.0; n_residuals];
+    residuals(&theta, &mut r);
+    let mut cost = 0.5 * dot(&r, &r);
+    let mut lambda = opts.lambda0;
+    let mut converged = false;
+    let mut iters = 0;
+
+    // Scratch for the Jacobian.
+    let mut jac = Mat::zeros(n_residuals, np);
+    let mut rp = vec![0.0; n_residuals];
+    let mut rm = vec![0.0; n_residuals];
+
+    for iter in 0..opts.max_iters {
+        iters = iter + 1;
+        // Central-difference Jacobian.
+        for j in 0..np {
+            let h = 1e-6 * (1.0 + theta[j].abs());
+            let saved = theta[j];
+            theta[j] = saved + h;
+            residuals(&theta, &mut rp);
+            theta[j] = saved - h;
+            residuals(&theta, &mut rm);
+            theta[j] = saved;
+            for i in 0..n_residuals {
+                jac[(i, j)] = (rp[i] - rm[i]) / (2.0 * h);
+            }
+        }
+        // Normal equations: (JᵀJ + λ diag(JᵀJ)) δ = -Jᵀ r
+        let jt = jac.transpose();
+        let mut jtj = jt.matmul(&jac);
+        let jtr = jt.matvec(&r);
+        let grad_inf = jtr.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        if grad_inf < 1e-14 {
+            converged = true;
+            break;
+        }
+        let mut improved = false;
+        for _ in 0..12 {
+            let mut a = jtj.clone();
+            for k in 0..np {
+                // Marquardt scaling with a floor to keep A SPD.
+                let d = jtj[(k, k)].max(1e-12);
+                a[(k, k)] += lambda * d;
+            }
+            let delta = match Cholesky::new(&a) {
+                Ok(ch) => ch.solve(&jtr.iter().map(|v| -v).collect::<Vec<_>>()),
+                Err(_) => {
+                    lambda *= 10.0;
+                    continue;
+                }
+            };
+            let theta_try: Vec<f64> =
+                theta.iter().zip(&delta).map(|(t, d)| t + d).collect();
+            residuals(&theta_try, &mut r_try);
+            let cost_try = 0.5 * dot(&r_try, &r_try);
+            if cost_try.is_finite() && cost_try < cost {
+                let rel_impr = (cost - cost_try) / cost.max(1e-300);
+                let step_inf = delta.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+                theta = theta_try;
+                r.copy_from_slice(&r_try);
+                cost = cost_try;
+                lambda = (lambda * 0.3).max(1e-12);
+                improved = true;
+                if rel_impr < opts.cost_tol || step_inf < opts.step_tol {
+                    converged = true;
+                }
+                break;
+            }
+            lambda *= 10.0;
+            if lambda > 1e12 {
+                break;
+            }
+        }
+        if !improved {
+            converged = true; // stuck at a (local) minimum
+            break;
+        }
+        if converged {
+            break;
+        }
+        // Keep borrow checker happy about jtj reuse.
+        let _ = &mut jtj;
+    }
+    LmResult { params: theta, cost, iterations: iters, converged }
+}
+
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_linear_model_exactly() {
+        // y = 2x + 1, residuals r_i = θ0 x_i + θ1 − y_i
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ys = [1.0, 3.0, 5.0, 7.0];
+        let res = levenberg_marquardt(
+            &[0.0, 0.0],
+            xs.len(),
+            |theta, out| {
+                for i in 0..xs.len() {
+                    out[i] = theta[0] * xs[i] + theta[1] - ys[i];
+                }
+            },
+            &LmOptions::default(),
+        );
+        assert!(res.converged);
+        assert!((res.params[0] - 2.0).abs() < 1e-8);
+        assert!((res.params[1] - 1.0).abs() < 1e-8);
+        assert!(res.cost < 1e-16);
+    }
+
+    #[test]
+    fn fits_rosenbrock_style_nonlinear() {
+        // Classic Rosenbrock as residuals: r1 = 10(y − x²), r2 = 1 − x.
+        let res = levenberg_marquardt(
+            &[-1.2, 1.0],
+            2,
+            |t, out| {
+                out[0] = 10.0 * (t[1] - t[0] * t[0]);
+                out[1] = 1.0 - t[0];
+            },
+            &LmOptions { max_iters: 500, ..Default::default() },
+        );
+        assert!((res.params[0] - 1.0).abs() < 1e-6, "{:?}", res.params);
+        assert!((res.params[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fits_exponential_decay() {
+        // y = 3 exp(-1.5 x); θ in log-space for positivity.
+        let xs: Vec<f64> = (0..20).map(|i| i as f64 * 0.2).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * (-1.5 * x).exp()).collect();
+        let res = levenberg_marquardt(
+            &[0.0, 0.0],
+            xs.len(),
+            |t, out| {
+                let (a, k) = (t[0].exp(), t[1].exp());
+                for i in 0..xs.len() {
+                    out[i] = a * (-k * xs[i]).exp() - ys[i];
+                }
+            },
+            &LmOptions::default(),
+        );
+        assert!((res.params[0].exp() - 3.0).abs() < 1e-6);
+        assert!((res.params[1].exp() - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn survives_flat_residuals() {
+        let res = levenberg_marquardt(
+            &[5.0],
+            3,
+            |_t, out| out.iter_mut().for_each(|r| *r = 0.0),
+            &LmOptions::default(),
+        );
+        assert!(res.converged);
+        assert_eq!(res.params[0], 5.0);
+    }
+}

@@ -1,0 +1,493 @@
+//! The paper's runtime model (§II-A): `compute(R) = a·(R·d)^(−b) + c`
+//! with the nested fallback family for few profiling points:
+//!
+//! ```text
+//! |R| = 1:  f(R) = R^(−1)
+//! |R| = 2:  f(R) = a·R^(−1)
+//! |R| = 3:  f(R) = a·R^(−b)
+//! |R| = 4:  f(R) = a·R^(−b) + c
+//! |R| ≥ 5:  f(R) = a·(R·d)^(−b) + c
+//! ```
+//!
+//! Fitting uses Levenberg–Marquardt on *relative* residuals
+//! `(f(Rᵢ) − yᵢ)/yᵢ` so the exponential low-CPU region and the flat
+//! high-CPU region contribute comparably (the paper scores with SMAPE,
+//! which is likewise scale-free). Parameters are optimized in log-space to
+//! enforce positivity. The NMS warm start (§III-B.3: "reuses the previously
+//! fitted parameters from preceding runtime models") maps directly onto
+//! [`RuntimeModel::fit_warm`].
+
+mod lm;
+
+pub use lm::{levenberg_marquardt, LmOptions, LmResult};
+
+/// One profiled point: CPU limitation → mean per-sample runtime (seconds).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ProfilePoint {
+    pub limit: f64,
+    pub runtime: f64,
+}
+
+impl ProfilePoint {
+    pub fn new(limit: f64, runtime: f64) -> Self {
+        Self { limit, runtime }
+    }
+}
+
+/// Which member of the nested family is active.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ModelKind {
+    /// `R^-1` — no data-dependent parameters.
+    Inverse,
+    /// `a·R^-1`.
+    ScaledInverse,
+    /// `a·R^-b`.
+    PowerLaw,
+    /// `a·R^-b + c`.
+    PowerLawOffset,
+    /// `a·(R·d)^-b + c` — Eq. 1.
+    Full,
+}
+
+impl ModelKind {
+    /// Paper §II-A: the member is chosen by the number of profiled points.
+    pub fn for_points(n: usize) -> ModelKind {
+        match n {
+            0 | 1 => ModelKind::Inverse,
+            2 => ModelKind::ScaledInverse,
+            3 => ModelKind::PowerLaw,
+            4 => ModelKind::PowerLawOffset,
+            _ => ModelKind::Full,
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        match self {
+            ModelKind::Inverse => 0,
+            ModelKind::ScaledInverse => 1,
+            ModelKind::PowerLaw => 2,
+            ModelKind::PowerLawOffset => 3,
+            ModelKind::Full => 4,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Inverse => "R^-1",
+            ModelKind::ScaledInverse => "a*R^-1",
+            ModelKind::PowerLaw => "a*R^-b",
+            ModelKind::PowerLawOffset => "a*R^-b+c",
+            ModelKind::Full => "a*(R*d)^-b+c",
+        }
+    }
+}
+
+/// Fitted runtime model. `params = [a, b, c, d]` with inactive members held
+/// at their neutral values (a=1, b=1, c=0, d=1) so every kind evaluates
+/// through the same closed form.
+#[derive(Clone, Debug)]
+pub struct RuntimeModel {
+    pub kind: ModelKind,
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    pub d: f64,
+    /// Final 0.5·Σr² of the fit (relative residuals).
+    pub fit_cost: f64,
+}
+
+impl RuntimeModel {
+    /// Neutral model (used before any point is profiled).
+    pub fn identity() -> Self {
+        Self { kind: ModelKind::Inverse, a: 1.0, b: 1.0, c: 0.0, d: 1.0, fit_cost: 0.0 }
+    }
+
+    /// Predicted per-sample runtime at CPU limitation `r`.
+    pub fn eval(&self, r: f64) -> f64 {
+        debug_assert!(r > 0.0);
+        self.a * (r * self.d).powf(-self.b) + self.c
+    }
+
+    /// Invert the model: the CPU limitation whose predicted runtime equals
+    /// `target`. Returns `None` when the target is unreachable (below the
+    /// asymptote `c`).
+    pub fn invert(&self, target: f64) -> Option<f64> {
+        if target <= self.c || target <= 0.0 {
+            return None;
+        }
+        let base = self.a / (target - self.c);
+        if base <= 0.0 {
+            return None;
+        }
+        let r = base.powf(1.0 / self.b) / self.d;
+        r.is_finite().then_some(r)
+    }
+
+    /// Fit the nested family to `points` with no warm start.
+    pub fn fit(points: &[ProfilePoint]) -> Self {
+        Self::fit_warm(points, None)
+    }
+
+    /// Fit with an optional warm start from the previous step's model (the
+    /// NMS reuse). The member is chosen from `points.len()` per §II-A.
+    pub fn fit_warm(points: &[ProfilePoint], warm: Option<&RuntimeModel>) -> Self {
+        Self::fit_opts(points, warm, true)
+    }
+
+    /// Fit with explicit control over the multi-start basin search
+    /// (`multistart = false` uses only the primary seed) — exposed for the
+    /// ablation experiments.
+    pub fn fit_opts(
+        points: &[ProfilePoint],
+        warm: Option<&RuntimeModel>,
+        multistart: bool,
+    ) -> Self {
+        let kind = ModelKind::for_points(points.len());
+        match kind {
+            ModelKind::Inverse => {
+                let mut m = Self::identity();
+                if let Some(p) = points.first() {
+                    // The curve still passes f(R) = R^-1; keep cost bookkeeping.
+                    let r = (1.0 / p.limit - p.runtime) / p.runtime;
+                    m.fit_cost = 0.5 * r * r;
+                }
+                m
+            }
+            ModelKind::ScaledInverse => {
+                // Closed-form LSQ on relative residuals:
+                // min_a Σ ((a/Rᵢ − yᵢ)/yᵢ)²
+                //   =>  a = Σ 1/(Rᵢ yᵢ)  /  Σ 1/(Rᵢ² yᵢ²).
+                let num: f64 = points.iter().map(|p| 1.0 / (p.limit * p.runtime)).sum();
+                let den: f64 = points
+                    .iter()
+                    .map(|p| {
+                        let t = 1.0 / (p.limit * p.runtime);
+                        t * t
+                    })
+                    .sum();
+                let a = if den > 0.0 { num / den } else { 1.0 };
+                let mut m = Self { kind, a, b: 1.0, c: 0.0, d: 1.0, fit_cost: 0.0 };
+                m.fit_cost = Self::relative_cost(&m, points);
+                m
+            }
+            _ => Self::fit_lm(kind, points, warm, multistart),
+        }
+    }
+
+    fn relative_cost(model: &RuntimeModel, points: &[ProfilePoint]) -> f64 {
+        0.5 * points
+            .iter()
+            .map(|p| {
+                let r = (model.eval(p.limit) - p.runtime) / p.runtime;
+                r * r
+            })
+            .sum::<f64>()
+    }
+
+    fn fit_lm(
+        kind: ModelKind,
+        points: &[ProfilePoint],
+        warm: Option<&RuntimeModel>,
+        multistart: bool,
+    ) -> Self {
+        let np = kind.n_params();
+        // θ layout (log-space): [ln a, ln b, ln c, ln d][..np]
+        let theta0 = Self::initial_theta(kind, points, warm);
+        let limits: Vec<f64> = points.iter().map(|p| p.limit).collect();
+        let runtimes: Vec<f64> = points.iter().map(|p| p.runtime).collect();
+        let kind_copy = kind;
+        let eval_theta = move |t: &[f64], r: f64| -> f64 {
+            let a = t[0].exp();
+            let b = if kind_copy.n_params() >= 2 { t[1].exp() } else { 1.0 };
+            let c = if kind_copy.n_params() >= 3 { t[2].exp() } else { 0.0 };
+            let d = if kind_copy.n_params() >= 4 { t[3].exp() } else { 1.0 };
+            a * (r * d).powf(-b) + c
+        };
+        // Multi-start LM: the loss surface has (at least) two basins — a
+        // "plateau" basin where the offset c carries the saturated
+        // high-CPU region, and a zero-offset basin with a stretched
+        // exponent. Which one LM lands in depends on the seed, so we try
+        // the primary seed (warm-started for NMS) plus a plateau seed and
+        // keep the better fit.
+        // Residual scale: SMAPE (the paper's target metric, Eq. 3) sums
+        // *absolute* errors, so the fit weighs points by magnitude — the
+        // exponential knee dominates, matching how the profiler is scored.
+        // A geometric blend with the per-point scale keeps the plateau from
+        // being ignored entirely (the adjuster needs it).
+        let y_bar = runtimes.iter().sum::<f64>() / runtimes.len() as f64;
+        let scales: Vec<f64> = runtimes.iter().map(|&y| (y * y_bar).sqrt()).collect();
+        let mut seeds: Vec<Vec<f64>> = vec![theta0.clone()];
+        if multistart && np >= 3 {
+            // Plateau basin seed: assume the saturated floor carries 80% of
+            // the smallest observed runtime, then seed (a, b) from a
+            // log-log regression of the *residual* y − c0 so the whole
+            // seed is self-consistent and LM descends inside that basin.
+            let c0 = (min_runtime(points) * 0.8).max(1e-9);
+            let shifted: Vec<ProfilePoint> = points
+                .iter()
+                .map(|p| ProfilePoint::new(p.limit, (p.runtime - c0).max(c0 * 0.01)))
+                .collect();
+            let (a0, b0) = loglog_seed(&shifted);
+            let mut plateau = theta0.clone();
+            plateau[0] = a0.max(1e-12).ln();
+            plateau[1] = b0.clamp(0.1, 4.0).ln();
+            plateau[2] = c0.ln();
+            seeds.push(plateau);
+        }
+        // Priors keep degenerate point sets (e.g. plateau-heavy sets on
+        // many-core machines) from extrapolating catastrophically into the
+        // unprofiled knee:
+        //   * scale params a, c: weak pull toward the seed (λ=0.03),
+        //   * shape params b, d: moderate pull toward their physical
+        //     neutral value 1 (λ=0.1) — CFS scaling exponents far from 1
+        //     need actual knee evidence to be believed.
+        let n_res = points.len() + np;
+        let mut best: Option<(f64, Vec<f64>)> = None;
+        for seed in seeds {
+            let res = levenberg_marquardt(
+                &seed,
+                n_res,
+                |t, out| {
+                    for i in 0..limits.len() {
+                        out[i] = (eval_theta(t, limits[i]) - runtimes[i]) / scales[i];
+                    }
+                    for j in 0..np {
+                        out[limits.len() + j] = match j {
+                            0 | 2 => 0.03 * (t[j] - seed[j]),
+                            _ => 0.1 * t[j], // toward ln 1 = 0
+                        };
+                    }
+                },
+                &LmOptions::default(),
+            );
+            // Basin selection: data residuals plus an additive shape
+            // penalty, so an overfit basin with wild exponents loses to a
+            // sane basin that fits the points marginally worse.
+            let data_cost: f64 = 0.5
+                * limits
+                    .iter()
+                    .zip(runtimes.iter().zip(&scales))
+                    .map(|(&l, (&y, &s))| {
+                        let r = (eval_theta(&res.params, l) - y) / s;
+                        r * r
+                    })
+                    .sum::<f64>();
+            let ln_b = if np >= 2 { res.params[1] } else { 0.0 };
+            let ln_d = if np >= 4 { res.params[3] } else { 0.0 };
+            let score = data_cost + 0.005 * (ln_b * ln_b + ln_d * ln_d);
+            if best.as_ref().map(|(c, _)| score < *c).unwrap_or(true) {
+                best = Some((score, res.params));
+            }
+        }
+        let theta = best.expect("at least one seed").1;
+        let a = theta[0].exp();
+        let b = if np >= 2 { theta[1].exp().clamp(0.02, 8.0) } else { 1.0 };
+        let c = if np >= 3 { theta[2].exp() } else { 0.0 };
+        let d = if np >= 4 { theta[3].exp().clamp(1e-3, 1e3) } else { 1.0 };
+        let mut model = Self { kind, a, b, c, d, fit_cost: 0.0 };
+        model.fit_cost = Self::relative_cost(&model, points);
+        // Guard against degenerate LM outcomes: fall back to the previous
+        // (simpler or warm) model when it explains the data clearly better.
+        if let Some(w) = warm {
+            let warm_cost = Self::relative_cost(w, points);
+            if !model.fit_cost.is_finite() || model.fit_cost > warm_cost * 4.0 {
+                let mut fallback = w.clone();
+                fallback.kind = kind;
+                fallback.fit_cost = warm_cost;
+                return fallback;
+            }
+        }
+        model
+    }
+
+    /// Initial θ: warm-started from the previous model when available
+    /// (newly activated parameters start neutral), otherwise from a log-log
+    /// regression heuristic.
+    fn initial_theta(kind: ModelKind, points: &[ProfilePoint], warm: Option<&RuntimeModel>) -> Vec<f64> {
+        let np = kind.n_params();
+        let mut theta = vec![0.0; np];
+        if let Some(w) = warm {
+            theta[0] = w.a.max(1e-12).ln();
+            if np >= 2 {
+                theta[1] = w.b.max(1e-6).ln();
+            }
+            if np >= 3 {
+                theta[2] = if w.c > 0.0 {
+                    w.c.ln()
+                } else {
+                    // Newly activated offset: start well below the smallest
+                    // observed runtime.
+                    (min_runtime(points) * 0.05).max(1e-9).ln()
+                };
+            }
+            if np >= 4 {
+                theta[3] = if (w.d - 1.0).abs() > 1e-9 { w.d.max(1e-6).ln() } else { 0.0 };
+            }
+            return theta;
+        }
+        // Cold start: log-log slope for b, intercept for a.
+        let (a0, b0) = loglog_seed(points);
+        theta[0] = a0.max(1e-12).ln();
+        if np >= 2 {
+            theta[1] = b0.clamp(0.05, 5.0).ln();
+        }
+        if np >= 3 {
+            theta[2] = (min_runtime(points) * 0.05).max(1e-9).ln();
+        }
+        if np >= 4 {
+            theta[3] = 0.0; // d = 1
+        }
+        theta
+    }
+}
+
+fn min_runtime(points: &[ProfilePoint]) -> f64 {
+    points.iter().map(|p| p.runtime).fold(f64::INFINITY, f64::min)
+}
+
+/// Least-squares line through (ln R, ln y): y ≈ a R^-b.
+fn loglog_seed(points: &[ProfilePoint]) -> (f64, f64) {
+    let n = points.len() as f64;
+    if points.len() < 2 {
+        let p = points.first().copied().unwrap_or(ProfilePoint::new(1.0, 1.0));
+        return (p.runtime * p.limit, 1.0);
+    }
+    let (mut sx, mut sy, mut sxx, mut sxy) = (0.0, 0.0, 0.0, 0.0);
+    for p in points {
+        let x = p.limit.ln();
+        let y = p.runtime.max(1e-12).ln();
+        sx += x;
+        sy += y;
+        sxx += x * x;
+        sxy += x * y;
+    }
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        let p = points[0];
+        return (p.runtime * p.limit, 1.0);
+    }
+    let slope = (n * sxy - sx * sy) / denom;
+    let intercept = (sy - slope * sx) / n;
+    (intercept.exp(), -slope)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth(a: f64, b: f64, c: f64, d: f64, limits: &[f64]) -> Vec<ProfilePoint> {
+        limits
+            .iter()
+            .map(|&r| ProfilePoint::new(r, a * (r * d).powf(-b) + c))
+            .collect()
+    }
+
+    #[test]
+    fn kind_selection_follows_paper() {
+        assert_eq!(ModelKind::for_points(1), ModelKind::Inverse);
+        assert_eq!(ModelKind::for_points(2), ModelKind::ScaledInverse);
+        assert_eq!(ModelKind::for_points(3), ModelKind::PowerLaw);
+        assert_eq!(ModelKind::for_points(4), ModelKind::PowerLawOffset);
+        assert_eq!(ModelKind::for_points(5), ModelKind::Full);
+        assert_eq!(ModelKind::for_points(9), ModelKind::Full);
+    }
+
+    #[test]
+    fn scaled_inverse_recovers_a() {
+        let pts = synth(3.0, 1.0, 0.0, 1.0, &[0.5, 2.0]);
+        let m = RuntimeModel::fit(&pts);
+        assert_eq!(m.kind, ModelKind::ScaledInverse);
+        assert!((m.a - 3.0).abs() < 1e-9, "a={}", m.a);
+    }
+
+    #[test]
+    fn power_law_recovers_a_b() {
+        let pts = synth(2.0, 0.7, 0.0, 1.0, &[0.2, 1.0, 4.0]);
+        let m = RuntimeModel::fit(&pts);
+        assert_eq!(m.kind, ModelKind::PowerLaw);
+        // Shape priors (see fit_lm) trade exact recovery for robust
+        // extrapolation: allow ~2% bias on noiseless data.
+        assert!((m.a - 2.0).abs() / 2.0 < 0.02, "a={}", m.a);
+        assert!((m.b - 0.7).abs() / 0.7 < 0.05, "b={}", m.b);
+    }
+
+    #[test]
+    fn offset_model_recovers_asymptote() {
+        let pts = synth(1.5, 0.9, 0.08, 1.0, &[0.2, 0.6, 2.0, 6.0]);
+        let m = RuntimeModel::fit(&pts);
+        assert_eq!(m.kind, ModelKind::PowerLawOffset);
+        for &r in &[0.3f64, 1.0, 3.0] {
+            let want = 1.5 * r.powf(-0.9) + 0.08;
+            assert!((m.eval(r) - want).abs() / want < 0.02, "r={r}");
+        }
+    }
+
+    #[test]
+    fn full_model_fits_noiseless_curve() {
+        let pts = synth(0.8, 1.1, 0.02, 2.0, &[0.1, 0.3, 0.8, 2.0, 4.0, 8.0]);
+        let m = RuntimeModel::fit(&pts);
+        assert_eq!(m.kind, ModelKind::Full);
+        // d is redundant with a (a·(Rd)^-b = (a d^-b)·R^-b), so compare
+        // predictions rather than raw params.
+        for &r in &[0.15f64, 0.5, 1.5, 6.0] {
+            let want = 0.8 * (r * 2.0).powf(-1.1) + 0.02;
+            assert!((m.eval(r) - want).abs() / want < 0.03, "r={r}: {} vs {want}", m.eval(r));
+        }
+    }
+
+    #[test]
+    fn warm_start_not_worse_than_cold() {
+        let pts5 = synth(1.2, 0.8, 0.05, 1.5, &[0.1, 0.4, 1.0, 2.5, 6.0]);
+        let warm_src = RuntimeModel::fit(&pts5[..4]);
+        let cold = RuntimeModel::fit(&pts5);
+        let warm = RuntimeModel::fit_warm(&pts5, Some(&warm_src));
+        assert!(warm.fit_cost <= cold.fit_cost * 1.5 + 1e-6);
+        // Both should describe the curve well (priors allow a small bias).
+        assert!(warm.fit_cost < 1e-3, "warm cost {}", warm.fit_cost);
+    }
+
+    #[test]
+    fn invert_is_inverse_of_eval() {
+        let pts = synth(1.0, 1.2, 0.03, 1.0, &[0.1, 0.5, 1.0, 3.0, 8.0]);
+        let m = RuntimeModel::fit(&pts);
+        for &r in &[0.2f64, 0.7, 2.0, 5.0] {
+            let t = m.eval(r);
+            let r_back = m.invert(t).expect("invertible");
+            assert!((r_back - r).abs() / r < 1e-6, "r={r}, back={r_back}");
+        }
+    }
+
+    #[test]
+    fn invert_rejects_unreachable_targets() {
+        let m = RuntimeModel { kind: ModelKind::Full, a: 1.0, b: 1.0, c: 0.5, d: 1.0, fit_cost: 0.0 };
+        assert!(m.invert(0.4).is_none()); // below asymptote
+        assert!(m.invert(-1.0).is_none());
+        assert!(m.invert(0.6).is_some());
+    }
+
+    #[test]
+    fn noisy_fit_stays_close() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(99);
+        let limits = [0.1f64, 0.2, 0.4, 0.8, 1.6, 3.2];
+        let pts: Vec<ProfilePoint> = limits
+            .iter()
+            .map(|&r| {
+                let clean = 2.0 * r.powf(-1.0) + 0.05;
+                ProfilePoint::new(r, clean * (1.0 + 0.03 * rng.normal()))
+            })
+            .collect();
+        let m = RuntimeModel::fit(&pts);
+        for &r in &limits {
+            let want = 2.0 * r.powf(-1.0) + 0.05;
+            assert!((m.eval(r) - want).abs() / want < 0.15, "r={r}");
+        }
+    }
+
+    #[test]
+    fn single_point_model_is_pure_inverse() {
+        let m = RuntimeModel::fit(&[ProfilePoint::new(0.5, 10.0)]);
+        assert_eq!(m.kind, ModelKind::Inverse);
+        assert!((m.eval(0.5) - 2.0).abs() < 1e-12); // 1/0.5, ignores data per paper
+    }
+}

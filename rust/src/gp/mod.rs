@@ -1,0 +1,212 @@
+//! Gaussian-process regression substrate for the BO selection strategy.
+//!
+//! Paper §III-A.b: "We use BO with Matern5/2 as prior function, and Expected
+//! Improvement (EI) as acquisition function." Inputs (CPU limitations) are
+//! scaled to [0, 1]; observations are standardized to zero mean / unit
+//! variance before conditioning, and EI is computed on the standardized
+//! scale (maximization).
+
+use crate::linalg::{Cholesky, Mat};
+use crate::stats::{normal_cdf, normal_pdf};
+
+/// Matérn-5/2 kernel over scalar inputs.
+#[derive(Clone, Copy, Debug)]
+pub struct Matern52 {
+    /// Signal variance σ².
+    pub variance: f64,
+    /// Length scale ℓ (in scaled-input units).
+    pub length_scale: f64,
+}
+
+impl Default for Matern52 {
+    fn default() -> Self {
+        Self { variance: 1.0, length_scale: 0.25 }
+    }
+}
+
+impl Matern52 {
+    pub fn eval(&self, x1: f64, x2: f64) -> f64 {
+        let r = (x1 - x2).abs() / self.length_scale;
+        let s5 = 5.0f64.sqrt() * r;
+        self.variance * (1.0 + s5 + 5.0 * r * r / 3.0) * (-s5).exp()
+    }
+}
+
+/// GP posterior over scalar inputs with fixed hyperparameters + noise.
+pub struct Gp {
+    kernel: Matern52,
+    noise: f64,
+    xs: Vec<f64>,
+    /// Standardized observations.
+    ys_std: Vec<f64>,
+    y_mean: f64,
+    y_scale: f64,
+    chol: Option<Cholesky>,
+    alpha: Vec<f64>,
+    /// Input scaling (lo, hi) -> [0,1].
+    x_lo: f64,
+    x_hi: f64,
+}
+
+impl Gp {
+    pub fn new(kernel: Matern52, noise: f64, x_lo: f64, x_hi: f64) -> Self {
+        assert!(x_hi > x_lo, "bad input range");
+        Self {
+            kernel,
+            noise,
+            xs: Vec::new(),
+            ys_std: Vec::new(),
+            y_mean: 0.0,
+            y_scale: 1.0,
+            chol: None,
+            alpha: Vec::new(),
+            x_lo,
+            x_hi,
+        }
+    }
+
+    fn scale_x(&self, x: f64) -> f64 {
+        (x - self.x_lo) / (self.x_hi - self.x_lo)
+    }
+
+    /// Condition on observations `(x, y)`; replaces any previous data.
+    pub fn fit(&mut self, points: &[(f64, f64)]) {
+        self.xs = points.iter().map(|(x, _)| self.scale_x(*x)).collect();
+        let raw: Vec<f64> = points.iter().map(|(_, y)| *y).collect();
+        let n = raw.len();
+        if n == 0 {
+            self.chol = None;
+            return;
+        }
+        self.y_mean = raw.iter().sum::<f64>() / n as f64;
+        let var = raw.iter().map(|y| (y - self.y_mean).powi(2)).sum::<f64>() / n as f64;
+        self.y_scale = var.sqrt().max(1e-9);
+        self.ys_std = raw.iter().map(|y| (y - self.y_mean) / self.y_scale).collect();
+
+        let mut k = Mat::from_fn(n, n, |i, j| self.kernel.eval(self.xs[i], self.xs[j]));
+        for i in 0..n {
+            k[(i, i)] += self.noise;
+        }
+        let (chol, _) = Cholesky::new_with_jitter(&k, 1e-10).expect("kernel matrix SPD");
+        self.alpha = chol.solve(&self.ys_std);
+        self.chol = Some(chol);
+    }
+
+    pub fn n_obs(&self) -> usize {
+        self.xs.len()
+    }
+
+    /// Posterior mean/variance at `x` (original scale for mean; variance on
+    /// the standardized scale).
+    pub fn predict(&self, x: f64) -> (f64, f64) {
+        let (mu_std, var_std) = self.predict_std(x);
+        (self.y_mean + self.y_scale * mu_std, var_std)
+    }
+
+    fn predict_std(&self, x: f64) -> (f64, f64) {
+        let xs_scaled = self.scale_x(x);
+        let Some(chol) = &self.chol else {
+            return (0.0, self.kernel.variance);
+        };
+        let kstar: Vec<f64> =
+            self.xs.iter().map(|&xi| self.kernel.eval(xs_scaled, xi)).collect();
+        let mu: f64 = kstar.iter().zip(&self.alpha).map(|(k, a)| k * a).sum();
+        let v = chol.forward_solve(&kstar);
+        let var = self.kernel.eval(xs_scaled, xs_scaled) - v.iter().map(|x| x * x).sum::<f64>();
+        (mu, var.max(1e-12))
+    }
+
+    /// Expected Improvement (maximization) at `x` given incumbent best
+    /// observation `best_y` (original scale).
+    pub fn expected_improvement(&self, x: f64, best_y: f64) -> f64 {
+        let (mu_std, var_std) = self.predict_std(x);
+        let best_std = (best_y - self.y_mean) / self.y_scale;
+        let sigma = var_std.sqrt();
+        if sigma < 1e-12 {
+            return (mu_std - best_std).max(0.0);
+        }
+        let z = (mu_std - best_std) / sigma;
+        (mu_std - best_std) * normal_cdf(z) + sigma * normal_pdf(z)
+    }
+
+    /// Argmax of EI over `candidates` (original-scale xs). Returns `None`
+    /// when the candidate list is empty.
+    pub fn argmax_ei(&self, candidates: &[f64], best_y: f64) -> Option<f64> {
+        candidates
+            .iter()
+            .map(|&x| (x, self.expected_improvement(x, best_y)))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(x, _)| x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_properties() {
+        let k = Matern52::default();
+        assert!((k.eval(0.3, 0.3) - k.variance).abs() < 1e-12);
+        assert!(k.eval(0.0, 0.1) > k.eval(0.0, 0.5)); // decays with distance
+        assert!((k.eval(0.1, 0.7) - k.eval(0.7, 0.1)).abs() < 1e-15); // symmetric
+    }
+
+    #[test]
+    fn posterior_interpolates_observations() {
+        let mut gp = Gp::new(Matern52::default(), 1e-8, 0.0, 4.0);
+        let pts = [(0.5, 2.0), (1.5, 1.0), (3.0, 0.5)];
+        gp.fit(&pts);
+        for (x, y) in pts {
+            let (mu, _) = gp.predict(x);
+            assert!((mu - y).abs() < 1e-3, "at {x}: {mu} vs {y}");
+        }
+    }
+
+    #[test]
+    fn variance_grows_away_from_data() {
+        let mut gp = Gp::new(Matern52::default(), 1e-6, 0.0, 10.0);
+        gp.fit(&[(2.0, 1.0), (3.0, 2.0)]);
+        let (_, var_near) = gp.predict(2.5);
+        let (_, var_far) = gp.predict(9.0);
+        assert!(var_far > var_near * 5.0);
+    }
+
+    #[test]
+    fn ei_positive_and_peaks_in_promising_region() {
+        // Observations rising to the right: EI for maximization should
+        // prefer the unexplored right side over the explored left.
+        let mut gp = Gp::new(Matern52::default(), 1e-6, 0.0, 1.0);
+        gp.fit(&[(0.1, 0.2), (0.3, 0.5), (0.5, 0.9)]);
+        let best = 0.9;
+        let ei_left = gp.expected_improvement(0.12, best);
+        let ei_right = gp.expected_improvement(0.8, best);
+        assert!(ei_right > ei_left, "{ei_right} vs {ei_left}");
+    }
+
+    #[test]
+    fn argmax_ei_picks_from_candidates() {
+        let mut gp = Gp::new(Matern52::default(), 1e-6, 0.0, 1.0);
+        gp.fit(&[(0.2, 0.1), (0.8, 0.7)]);
+        let got = gp.argmax_ei(&[0.1, 0.5, 0.9], 0.7).unwrap();
+        assert!([0.1, 0.5, 0.9].contains(&got));
+        assert!(gp.argmax_ei(&[], 0.7).is_none());
+    }
+
+    #[test]
+    fn prior_prediction_without_data() {
+        let gp = Gp::new(Matern52::default(), 1e-6, 0.0, 1.0);
+        let (mu, var) = gp.predict(0.5);
+        assert_eq!(mu, 0.0);
+        assert!((var - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn noisy_observations_smooth_not_interpolate() {
+        let mut gp = Gp::new(Matern52::default(), 0.5, 0.0, 1.0);
+        // Two contradictory observations at the same x.
+        gp.fit(&[(0.5, 1.0), (0.5, -1.0)]);
+        let (mu, _) = gp.predict(0.5);
+        assert!(mu.abs() < 0.3, "should average, got {mu}");
+    }
+}

@@ -1,0 +1,23 @@
+//! streamprof — efficient runtime profiling for black-box ML services on
+//! sensor streams (Becker et al., 2022).
+//!
+//! Three-layer reproduction: this crate is the L3 coordinator (profiling
+//! strategies, early stopping, adaptive resource adjustment) plus every
+//! substrate the paper depends on; the ML services themselves are JAX/Pallas
+//! programs compiled AOT to HLO artifacts and executed via PJRT (see
+//! `python/compile/` and DESIGN.md).
+#![allow(clippy::needless_range_loop)]
+
+pub mod fit;
+pub mod coordinator;
+pub mod earlystop;
+pub mod gp;
+pub mod linalg;
+pub mod repro;
+pub mod runtime;
+pub mod simulator;
+pub mod stats;
+pub mod strategies;
+pub mod stream;
+pub mod util;
+pub mod workloads;

@@ -1,0 +1,281 @@
+//! Small dense linear algebra substrate for the GP and the LM fitter.
+//!
+//! Row-major `Mat` with Cholesky factorization/solves — the problem sizes
+//! here are tiny (≤ a few dozen profiling points), so no blocking or SIMD is
+//! needed; numerical robustness (jitter on near-singular systems) matters
+//! more than speed.
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Self { rows: r, cols: c, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn transpose(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul dims");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out[(i, j)] += a * other[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len(), "matvec dims");
+        (0..self.rows)
+            .map(|i| (0..self.cols).map(|j| self[(i, j)] * v[j]).sum())
+            .collect()
+    }
+
+    /// In-place scaled diagonal add: `A += lambda * I`.
+    pub fn add_diag(&mut self, lambda: f64) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            self[(i, i)] += lambda;
+        }
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Lower-triangular Cholesky factor of a symmetric positive-definite matrix.
+pub struct Cholesky {
+    l: Mat,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum LinalgError {
+    #[error("matrix not positive definite (pivot {0} = {1:.3e})")]
+    NotPositiveDefinite(usize, f64),
+    #[error("dimension mismatch: {0}")]
+    Dims(String),
+}
+
+impl Cholesky {
+    /// Factor `A = L Lᵀ`. Fails on non-SPD input.
+    pub fn new(a: &Mat) -> Result<Self, LinalgError> {
+        if a.rows != a.cols {
+            return Err(LinalgError::Dims(format!("{}x{} not square", a.rows, a.cols)));
+        }
+        let n = a.rows;
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = a[(i, j)];
+                for k in 0..j {
+                    sum -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if sum <= 0.0 {
+                        return Err(LinalgError::NotPositiveDefinite(i, sum));
+                    }
+                    l[(i, j)] = sum.sqrt();
+                } else {
+                    l[(i, j)] = sum / l[(j, j)];
+                }
+            }
+        }
+        Ok(Self { l })
+    }
+
+    /// Factor with escalating diagonal jitter until SPD (GP kernels).
+    pub fn new_with_jitter(a: &Mat, mut jitter: f64) -> Result<(Self, f64), LinalgError> {
+        let mut attempt = a.clone();
+        for _ in 0..12 {
+            match Self::new(&attempt) {
+                Ok(ch) => return Ok((ch, jitter)),
+                Err(_) => {
+                    attempt = a.clone();
+                    jitter = (jitter * 10.0).max(1e-12);
+                    attempt.add_diag(jitter);
+                }
+            }
+        }
+        Err(LinalgError::NotPositiveDefinite(0, jitter))
+    }
+
+    /// Solve `A x = b` via forward + back substitution.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows;
+        assert_eq!(b.len(), n, "cholesky solve dims");
+        // L y = b
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut sum = b[i];
+            for k in 0..i {
+                sum -= self.l[(i, k)] * y[k];
+            }
+            y[i] = sum / self.l[(i, i)];
+        }
+        // Lᵀ x = y
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut sum = y[i];
+            for k in (i + 1)..n {
+                sum -= self.l[(k, i)] * x[k];
+            }
+            x[i] = sum / self.l[(i, i)];
+        }
+        x
+    }
+
+    /// Solve only the forward half `L y = b` (for GP predictive variance).
+    pub fn forward_solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows;
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut sum = b[i];
+            for k in 0..i {
+                sum -= self.l[(i, k)] * y[k];
+            }
+            y[i] = sum / self.l[(i, i)];
+        }
+        y
+    }
+
+    /// log |A| = 2 Σ log L_ii.
+    pub fn log_det(&self) -> f64 {
+        (0..self.l.rows).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c, Mat::from_rows(&[&[19.0, 22.0], &[43.0, 50.0]]));
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Mat::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn cholesky_solves_spd_system() {
+        // A = M Mᵀ + I is SPD.
+        let m = Mat::from_rows(&[&[1.0, 2.0, 0.5], &[0.0, 1.0, -1.0], &[2.0, 0.3, 1.0]]);
+        let mut a = m.matmul(&m.transpose());
+        a.add_diag(1.0);
+        let x_true = vec![0.3, -1.2, 2.5];
+        let b = a.matvec(&x_true);
+        let ch = Cholesky::new(&a).unwrap();
+        let x = ch.solve(&b);
+        for (xi, ti) in x.iter().zip(&x_true) {
+            assert!((xi - ti).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(Cholesky::new(&a).is_err());
+    }
+
+    #[test]
+    fn jitter_recovers_semidefinite() {
+        // Rank-1 PSD matrix: xxᵀ, singular -> jitter makes it SPD.
+        let a = Mat::from_rows(&[&[1.0, 1.0], &[1.0, 1.0]]);
+        let (ch, jitter) = Cholesky::new_with_jitter(&a, 1e-12).unwrap();
+        assert!(jitter > 0.0);
+        let x = ch.solve(&[1.0, 1.0]);
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn log_det_matches_direct() {
+        let a = Mat::from_rows(&[&[4.0, 2.0], &[2.0, 3.0]]); // det = 8
+        let ch = Cholesky::new(&a).unwrap();
+        assert!((ch.log_det() - 8.0f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn forward_solve_consistent() {
+        let a = Mat::from_rows(&[&[4.0, 2.0], &[2.0, 3.0]]);
+        let ch = Cholesky::new(&a).unwrap();
+        let b = vec![1.0, 2.0];
+        let y = ch.forward_solve(&b);
+        // ||y||² = bᵀ A⁻¹ b
+        let x = ch.solve(&b);
+        let quad: f64 = b.iter().zip(&x).map(|(bi, xi)| bi * xi).sum();
+        let ynorm: f64 = y.iter().map(|v| v * v).sum();
+        assert!((quad - ynorm).abs() < 1e-12);
+    }
+}

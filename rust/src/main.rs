@@ -1,0 +1,261 @@
+//! streamprof CLI — leader entrypoint for the profiling coordinator.
+//!
+//! Subcommands:
+//!   nodes                      print Table I (the modeled testbed)
+//!   acquire  [opts]            run the §III-A.a acquisition sweep -> CSV
+//!   profile  [opts]            run one profiling session (sim or PJRT)
+//!   adjust   [opts]            profile + adaptive resource adjustment plan
+//!   repro    <id|all> [--full] regenerate paper tables/figures
+//!   artifacts                  show AOT artifact/manifest status
+//!
+//! Run `streamprof` with no arguments for usage.
+
+use anyhow::{bail, Context, Result};
+
+use streamprof::coordinator::{
+    smape_vs_dataset, PjrtBackend, Profiler, ProfilerConfig, ProfilingBackend,
+    ResourceAdjuster, SimulatedBackend,
+};
+use streamprof::earlystop::EarlyStopConfig;
+use streamprof::repro;
+use streamprof::runtime::{artifacts_available, default_artifacts_dir, Engine};
+use streamprof::simulator::{node, Algo, SimulatedJob, NODES};
+use streamprof::strategies;
+use streamprof::stream::{ArrivalProcess, SensorStream};
+use streamprof::util::{logging, Args, CsvWriter, Table};
+use streamprof::workloads::PjrtJob;
+
+fn main() {
+    let args = Args::from_env();
+    logging::set_level(logging::level_from_str(&args.opt_or("log", "info")));
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let result = match cmd {
+        "nodes" => cmd_nodes(),
+        "acquire" => cmd_acquire(&args),
+        "profile" => cmd_profile(&args).map(|_| ()),
+        "adjust" => cmd_adjust(&args),
+        "repro" => cmd_repro(&args),
+        "artifacts" => cmd_artifacts(),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "streamprof — efficient runtime profiling for black-box ML services\n\
+         \n\
+         USAGE: streamprof <command> [options]\n\
+         \n\
+         COMMANDS:\n\
+         \u{20} nodes                         print the modeled testbed (Table I)\n\
+         \u{20} acquire   --node pi4 --algo arima [--samples 10000] [--seed 1] [--out f.csv]\n\
+         \u{20} profile   --node pi4 --algo arima --strategy nms [--p 0.05] [--n-initial 3]\n\
+         \u{20}           [--samples 10000] [--steps 6] [--early-stop] [--lambda 0.1]\n\
+         \u{20}           [--backend sim|pjrt] [--seed 1]\n\
+         \u{20} adjust    <profile options> [--rate-lo 1] [--rate-hi 5] [--horizon 1000]\n\
+         \u{20} repro     <table1|fig2|fig3|fig4|fig5|fig6|fig7|all> [--full]\n\
+         \u{20} artifacts                     AOT artifact status\n"
+    );
+}
+
+fn cmd_nodes() -> Result<()> {
+    println!("{}", repro::table1::run().rendered);
+    Ok(())
+}
+
+fn cmd_acquire(args: &Args) -> Result<()> {
+    let node_name = args.opt_or("node", "pi4");
+    let algo = Algo::from_name(&args.opt_or("algo", "arima")).context("unknown algo")?;
+    let spec = node(&node_name).with_context(|| format!("unknown node {node_name}"))?;
+    let samples = args.opt_usize("samples", 10_000);
+    let seed = args.opt_u64("seed", 1);
+    let mut job = SimulatedJob::new(spec, algo, seed);
+    let ds = job.acquire_dataset(samples);
+    let out = args.opt_or("out", &format!("results/acquire_{node_name}_{}.csv", algo.name()));
+    let mut csv = CsvWriter::create(&out, &["limit", "mean_runtime_s"])?;
+    let mut table = Table::new(&["limit", "mean runtime (s)"]).with_title(&format!(
+        "Acquisition sweep — {} / {} ({samples} samples)",
+        node_name,
+        algo.name()
+    ));
+    for p in &ds {
+        csv.rowd(&[&p.limit, &p.runtime])?;
+        if (p.limit * 10.0).round() as usize % 5 == 0 {
+            table.rowd(&[&format!("{:.1}", p.limit), &format!("{:.4}", p.runtime)]);
+        }
+    }
+    csv.flush()?;
+    println!("{}", table.render());
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn build_backend(args: &Args) -> Result<Box<dyn ProfilingBackend>> {
+    let backend = args.opt_or("backend", "sim");
+    match backend.as_str() {
+        "sim" => {
+            let node_name = args.opt_or("node", "pi4");
+            let algo =
+                Algo::from_name(&args.opt_or("algo", "arima")).context("unknown algo")?;
+            let spec = node(&node_name).with_context(|| format!("unknown node {node_name}"))?;
+            Ok(Box::new(SimulatedBackend::new(SimulatedJob::new(
+                spec,
+                algo,
+                args.opt_u64("seed", 1),
+            ))))
+        }
+        "pjrt" => {
+            if !artifacts_available() {
+                bail!("artifacts not built — run `make artifacts` first");
+            }
+            let algo =
+                Algo::from_name(&args.opt_or("algo", "arima")).context("unknown algo")?;
+            let engine = Engine::new(&default_artifacts_dir())?;
+            let job = PjrtJob::load(&engine, algo)?;
+            let cores = args.opt_f64("cores", 4.0);
+            Ok(Box::new(PjrtBackend::new(
+                job,
+                SensorStream::new(args.opt_u64("seed", 1)),
+                cores,
+            )))
+        }
+        other => bail!("unknown backend '{other}' (sim|pjrt)"),
+    }
+}
+
+fn cmd_profile(args: &Args) -> Result<streamprof::coordinator::SessionResult> {
+    let cfg = ProfilerConfig {
+        p: args.opt_f64("p", 0.05),
+        n_initial: args.opt_usize("n-initial", 3),
+        samples: args.opt_usize("samples", 10_000),
+        early_stop: args.flag("early-stop").then(|| {
+            EarlyStopConfig::new(
+                args.opt_f64("confidence", 0.95),
+                args.opt_f64("lambda", 0.1),
+            )
+        }),
+        early_stop_cap: args.opt_usize("samples", 10_000),
+        max_steps: args.opt_usize("steps", 6),
+        ..Default::default()
+    };
+    let strategy_name = args.opt_or("strategy", "nms");
+    let strategy = strategies::by_name(&strategy_name, args.opt_u64("seed", 1))
+        .with_context(|| format!("unknown strategy {strategy_name}"))?;
+    let mut backend = build_backend(args)?;
+    let mut profiler = Profiler::new(cfg, strategy);
+    let sess = profiler.run(backend.as_mut());
+
+    let mut table =
+        Table::new(&["step", "limit", "mean rt (s)", "samples", "cum time (s)", "model"])
+            .with_title(&format!(
+                "Profiling session — {} via {} (target rt {:.4}s)",
+                sess.backend, sess.strategy, sess.target
+            ));
+    for s in &sess.steps {
+        table.rowd(&[
+            &s.index,
+            &format!("{:.1}", s.limit),
+            &format!("{:.4}", s.mean_runtime),
+            &s.samples,
+            &format!("{:.1}", s.cumulative_time),
+            &s.model.kind.name(),
+        ]);
+    }
+    println!("{}", table.render());
+    let m = sess.final_model();
+    println!(
+        "final model: {} with a={:.4} b={:.3} c={:.5} d={:.3}",
+        m.kind.name(),
+        m.a,
+        m.b,
+        m.c,
+        m.d
+    );
+    // SMAPE against a fresh acquisition (sim backend only).
+    if args.opt_or("backend", "sim") == "sim" {
+        let node_name = args.opt_or("node", "pi4");
+        let algo = Algo::from_name(&args.opt_or("algo", "arima")).unwrap();
+        let mut truth_job = SimulatedJob::new(
+            node(&node_name).unwrap(),
+            algo,
+            args.opt_u64("seed", 1) + 10_000,
+        );
+        let truth = truth_job.acquire_dataset(10_000);
+        println!("SMAPE vs 10k acquisition sweep: {:.3}", smape_vs_dataset(m, &truth));
+    }
+    Ok(sess)
+}
+
+fn cmd_adjust(args: &Args) -> Result<()> {
+    let sess = cmd_profile(args)?;
+    let l_max = node(&args.opt_or("node", "pi4")).map(|n| n.cores).unwrap_or(4.0);
+    let adj = ResourceAdjuster::new(sess.final_model().clone(), 0.1, l_max, 0.1);
+    let arrivals = ArrivalProcess::Varying {
+        lo: args.opt_f64("rate-lo", 1.0),
+        hi: args.opt_f64("rate-hi", 5.0),
+        period: args.opt_f64("period", 400.0),
+    };
+    let horizon = args.opt_usize("horizon", 1000);
+    let plan = adj.plan(&arrivals, horizon, args.opt_usize("window", 100));
+    let mut table = Table::new(&["window", "budget (s)", "limit", "pred rt (s)", "feasible"])
+        .with_title("Adaptive adjustment plan (Fig. 1 right-hand side)");
+    for (i, a) in plan.iter().enumerate() {
+        table.rowd(&[
+            &i,
+            &format!("{:.3}", a.budget),
+            &format!("{:.1}", a.limit),
+            &format!("{:.4}", a.predicted_runtime),
+            &a.feasible,
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let which = args.positional.get(1).map(String::as_str).unwrap_or("all");
+    let quick = !args.flag("full");
+    let reports = match which {
+        "all" => repro::run_all(quick),
+        "table1" => vec![repro::table1::run()],
+        "fig2" => vec![repro::fig2::run()],
+        "fig3" => vec![repro::fig3::run(quick)],
+        "fig4" => vec![repro::fig4::run()],
+        "fig5" => vec![repro::fig5::run(quick)],
+        "fig6" => vec![repro::fig6::run()],
+        "fig7" => vec![repro::fig7::run(quick)],
+        other => bail!("unknown experiment '{other}'"),
+    };
+    for r in reports {
+        println!("==== {} ====\n{}", r.id, r.rendered);
+        for p in &r.csv_paths {
+            println!("  wrote {}", p.display());
+        }
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_artifacts() -> Result<()> {
+    if !artifacts_available() {
+        println!("artifacts: NOT built (run `make artifacts`)");
+        return Ok(());
+    }
+    let engine = Engine::new(&default_artifacts_dir())?;
+    println!("artifacts dir: {}", default_artifacts_dir().display());
+    println!("pjrt platform: {}", engine.platform());
+    let mut table = Table::new(&["artifact", "chunk", "inputs", "outputs"]);
+    for a in &engine.manifest().artifacts {
+        table.rowd(&[&a.name, &a.chunk, &a.inputs.len(), &a.outputs.len()]);
+    }
+    println!("{}", table.render());
+    println!("nodes registry: {} machines", NODES.len());
+    Ok(())
+}

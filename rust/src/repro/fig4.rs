@@ -1,0 +1,95 @@
+//! Fig. 4 — NMS profiling-point selection after six profiled limitations,
+//! Arima on pi4, for each sample-size scenario (3 initial parallel runs,
+//! synthetic target 5% ⇒ 0.2 CPU).
+//!
+//! Emits the profiled points (initial vs. NMS-selected) and the fitted
+//! curve per sample size; the paper's visual claim — the NMS-selected
+//! points cluster near the synthetic target at ~0.2 CPU, and larger sample
+//! sizes fit the curve better — is exported as findings.
+
+use crate::coordinator::smape_vs_dataset;
+use crate::util::{CsvWriter, Table};
+
+use super::{results_dir, AcquiredDataset, ExemplaryConfig, ReproReport, SAMPLE_SIZES};
+
+pub fn run() -> ReproReport {
+    let cfg = ExemplaryConfig::default();
+    let points_path = results_dir().join("fig4_points.csv");
+    let curve_path = results_dir().join("fig4_curves.csv");
+    let mut points_csv = CsvWriter::create(
+        &points_path,
+        &["sample_size", "step", "limit", "runtime", "phase"],
+    )
+    .expect("csv");
+    let mut curve_csv =
+        CsvWriter::create(&curve_path, &["sample_size", "limit", "predicted", "truth_10k"])
+            .expect("csv");
+
+    let mut table = Table::new(&["samples", "selected limits (step 4..6)", "SMAPE@6"])
+        .with_title("Fig. 4 — NMS-chosen profiling points, Arima on pi4 (target 5% => 0.2 CPU)");
+
+    let mut findings = Vec::new();
+    for &size in &SAMPLE_SIZES {
+        let ds = AcquiredDataset::acquire(cfg.node, cfg.algo, 404);
+        let sess = super::run_session(&ds, "NMS", size, cfg.p, cfg.n_initial, 6, 11);
+        let truth = ds.truth_points();
+        for s in &sess.steps {
+            let phase = if s.index <= cfg.n_initial { "initial" } else { "selected" };
+            points_csv
+                .rowd(&[&size, &s.index, &s.limit, &s.mean_runtime, &phase])
+                .unwrap();
+        }
+        let model = sess.final_model();
+        for p in &truth {
+            curve_csv
+                .rowd(&[&size, &p.limit, &model.eval(p.limit), &p.runtime])
+                .unwrap();
+        }
+        let smape = smape_vs_dataset(model, &truth);
+        let selected: Vec<f64> =
+            sess.steps.iter().skip(cfg.n_initial).map(|s| s.limit).collect();
+        // Distance of selected points from the synthetic-target limit 0.2.
+        let mean_dist = selected.iter().map(|l| (l - 0.2).abs()).sum::<f64>()
+            / selected.len().max(1) as f64;
+        findings.push((format!("smape_{size}"), smape));
+        findings.push((format!("mean_dist_to_target_{size}"), mean_dist));
+        table.rowd(&[
+            &size,
+            &format!("{selected:.2?}"),
+            &format!("{smape:.3}"),
+        ]);
+    }
+    points_csv.flush().unwrap();
+    curve_csv.flush().unwrap();
+
+    let rendered = table.render();
+    ReproReport { id: "fig4", rendered, findings, csv_paths: vec![points_path, curve_path] }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selected_points_cluster_near_synthetic_target() {
+        let r = run();
+        for size in SAMPLE_SIZES {
+            let d = r.finding(&format!("mean_dist_to_target_{size}")).unwrap();
+            // Fig. 4: "selected next profiling points ... located close to
+            // the chosen synthetic target at a CPU limitation of 0.2".
+            assert!(d < 1.0, "size {size}: mean distance {d}");
+        }
+    }
+
+    #[test]
+    fn more_samples_fit_better() {
+        let r = run();
+        let s1k = r.finding("smape_1000").unwrap();
+        let s10k = r.finding("smape_10000").unwrap();
+        assert!(
+            s10k <= s1k + 0.02,
+            "10k should fit at least as well: {s10k} vs {s1k}"
+        );
+        assert!(s10k < 0.15, "10k-sample fit should be good: {s10k}");
+    }
+}

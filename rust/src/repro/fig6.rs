@@ -1,0 +1,137 @@
+//! Fig. 6 + §III-B.4 — profiling time over consecutive steps for Arima on
+//! pi4 (1000 and 10000 samples), NMS/BS/BO, plus the early-stopping run.
+//!
+//! Paper anchor numbers (Arima, pi4, 3 initial runs, target 5%):
+//!   * 4 steps, 1000 samples:  NMS 268 s, BS 199 s, BO 263 s
+//!   * 6 steps, NMS: 392 s (1000 samples) / 2451 s (10000 samples)
+//!   * early stopping (95%, λ=10%): 1135 s total, SMAPE 0.13 @ 6 steps
+//! We reproduce the *shape*: time ≈ linear in steps, ×~5-10 from 1k→10k,
+//! NMS slightly slower than BS, early stopping ≈ halves the 10k time.
+
+use crate::coordinator::{smape_vs_dataset, Profiler, ProfilerConfig};
+use crate::earlystop::EarlyStopConfig;
+use crate::strategies;
+use crate::util::{CsvWriter, Table};
+
+use super::{results_dir, AcquiredDataset, DatasetBackend, ExemplaryConfig, ReproReport};
+
+const STRATEGIES: [&str; 3] = ["NMS", "BS", "BO"];
+
+pub fn run() -> ReproReport {
+    let cfg = ExemplaryConfig::default();
+    let csv_path = results_dir().join("fig6_profiling_time.csv");
+    let mut csv = CsvWriter::create(
+        &csv_path,
+        &["strategy", "sample_size", "steps", "cumulative_time_s", "smape"],
+    )
+    .expect("csv");
+
+    let ds = AcquiredDataset::acquire(cfg.node, cfg.algo, 606);
+    let truth = ds.truth_points();
+    let mut findings = Vec::new();
+    let mut table = Table::new(&["strategy", "samples", "t@4 (s)", "t@6 (s)", "SMAPE@4", "SMAPE@6"])
+        .with_title("Fig. 6 — profiling time, Arima on pi4 (3 initial runs, target 5%)");
+
+    for strat in STRATEGIES {
+        for &size in &[1000usize, 10_000] {
+            let sess = super::run_session(&ds, strat, size, cfg.p, cfg.n_initial, 6, 21);
+            for k in cfg.n_initial..=sess.steps.len() {
+                let t = sess.time_after(k).unwrap();
+                let s = smape_vs_dataset(sess.model_after(k).unwrap(), &truth);
+                csv.rowd(&[&strat, &size, &k, &t, &s]).unwrap();
+            }
+            let t4 = sess.time_after(4).unwrap();
+            let t6 = sess.time_after(6).unwrap();
+            let s4 = smape_vs_dataset(sess.model_after(4).unwrap(), &truth);
+            let s6 = smape_vs_dataset(sess.model_after(6).unwrap(), &truth);
+            findings.push((format!("{strat}_{size}_t4"), t4));
+            findings.push((format!("{strat}_{size}_t6"), t6));
+            findings.push((format!("{strat}_{size}_smape4"), s4));
+            findings.push((format!("{strat}_{size}_smape6"), s6));
+            table.rowd(&[
+                &strat,
+                &size,
+                &format!("{t4:.0}"),
+                &format!("{t6:.0}"),
+                &format!("{s4:.2}"),
+                &format!("{s6:.2}"),
+            ]);
+        }
+    }
+
+    // Early-stopping variant (95% CI, λ=10%), compared to 10k samples.
+    let es_cfg = ProfilerConfig {
+        p: cfg.p,
+        n_initial: cfg.n_initial,
+        samples: 10_000,
+        early_stop: Some(EarlyStopConfig::new(0.95, 0.10)),
+        early_stop_cap: 10_000,
+        max_steps: 6,
+        ..Default::default()
+    };
+    let mut backend = DatasetBackend::new(&ds, 10_000);
+    let sess = Profiler::new(es_cfg, strategies::by_name("NMS", 21).unwrap()).run(&mut backend);
+    let es_time = sess.total_time;
+    let es_smape = smape_vs_dataset(sess.final_model(), &truth);
+    csv.rowd(&[&"NMS+early-stop", &10_000, &6usize, &es_time, &es_smape]).unwrap();
+    csv.flush().unwrap();
+    table.rowd(&[
+        &"NMS+ES",
+        &"10000(cap)",
+        &"-",
+        &format!("{es_time:.0}"),
+        &"-",
+        &format!("{es_smape:.2}"),
+    ]);
+    findings.push(("es_time".into(), es_time));
+    findings.push(("es_smape".into(), es_smape));
+
+    let mut rendered = table.render();
+    rendered.push_str(&format!(
+        "\nPaper anchors: NMS 268s/BS 199s/BO 263s @4 steps (1k); NMS 392s @6 (1k), \
+         2451s @6 (10k); early stopping 1135s, SMAPE 0.13.\n\
+         Measured:      NMS {:.0}s/BS {:.0}s/BO {:.0}s @4 (1k); NMS {:.0}s @6 (1k), \
+         {:.0}s @6 (10k); early stopping {:.0}s, SMAPE {:.2}.\n",
+        findings.iter().find(|(k, _)| k == "NMS_1000_t4").unwrap().1,
+        findings.iter().find(|(k, _)| k == "BS_1000_t4").unwrap().1,
+        findings.iter().find(|(k, _)| k == "BO_1000_t4").unwrap().1,
+        findings.iter().find(|(k, _)| k == "NMS_1000_t6").unwrap().1,
+        findings.iter().find(|(k, _)| k == "NMS_10000_t6").unwrap().1,
+        es_time,
+        es_smape,
+    ));
+    ReproReport { id: "fig6", rendered, findings, csv_paths: vec![csv_path] }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn magnitudes_match_paper_anchors() {
+        let r = super::run();
+        // 4-step 1k-sample profiling in the low hundreds of seconds
+        // (paper: 199-268 s). Allow a generous band — it's a simulator.
+        let nms4 = r.finding("NMS_1000_t4").unwrap();
+        assert!((80.0..700.0).contains(&nms4), "NMS t4 {nms4}");
+        // 10k samples cost ~10x the 1k time (paper: 1690 vs 268 ~ x6 at 4
+        // steps because of which limits get profiled; linear-in-n here).
+        let t1k = r.finding("NMS_1000_t6").unwrap();
+        let t10k = r.finding("NMS_10000_t6").unwrap();
+        assert!(t10k / t1k > 4.0, "10k/1k ratio {}", t10k / t1k);
+        // Early stopping cuts the 10k cost by > 40% at comparable SMAPE.
+        let es = r.finding("es_time").unwrap();
+        assert!(es < 0.6 * t10k, "early stop {es} vs full {t10k}");
+        let es_smape = r.finding("es_smape").unwrap();
+        let full_smape = r.finding("NMS_10000_smape6").unwrap();
+        assert!(es_smape < full_smape + 0.15, "{es_smape} vs {full_smape}");
+    }
+
+    #[test]
+    fn smape_improves_from_step4_to_step6() {
+        let r = super::run();
+        let s4 = r.finding("NMS_10000_smape4").unwrap();
+        let s6 = r.finding("NMS_10000_smape6").unwrap();
+        // Paper SIII-B.4: past step 4-5 the SMAPE barely moves; require
+        // no significant regression.
+        assert!(s6 <= s4 + 0.01, "{s4} -> {s6}");
+    }
+}

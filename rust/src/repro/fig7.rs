@@ -1,0 +1,129 @@
+//! Fig. 7 — number of wins per selection strategy and profiling-step count
+//! across all nodes and algorithms, 50 repetitions, with 0% and 10%
+//! tolerance policies (§III-B.5).
+//!
+//! A strategy "wins" a (node, algo, rep, steps) cell when it produces the
+//! smallest SMAPE; with the 10% policy, every strategy within 10% of the
+//! best is counted as a (near-)winner.
+
+use crate::coordinator::smape_vs_dataset;
+use crate::simulator::{Algo, NODES};
+use crate::util::{CsvWriter, Table};
+
+use super::{results_dir, AcquiredDataset, ReproReport};
+
+const STRATEGIES: [&str; 4] = ["NMS", "BS", "BO", "Random"];
+const STEPS_RANGE: std::ops::RangeInclusive<usize> = 4..=8;
+
+pub fn run(quick: bool) -> ReproReport {
+    let reps: u64 = if quick { 10 } else { 50 };
+    let csv_path = results_dir().join("fig7_strategy_wins.csv");
+    let mut csv = CsvWriter::create(
+        &csv_path,
+        &["steps", "strategy", "wins_strict", "wins_10pct"],
+    )
+    .expect("csv");
+
+    // wins[steps][strategy] under both tolerance policies.
+    let mut strict = vec![[0u32; STRATEGIES.len()]; *STEPS_RANGE.end() + 1];
+    let mut tol10 = vec![[0u32; STRATEGIES.len()]; *STEPS_RANGE.end() + 1];
+
+    for node in NODES {
+        for algo in Algo::ALL {
+            for rep in 0..reps {
+                let ds = AcquiredDataset::acquire(node, algo, 7000 + rep);
+                let truth = ds.truth_points();
+                // One session per strategy; evaluate at each step count.
+                let sessions: Vec<_> = STRATEGIES
+                    .iter()
+                    .map(|s| {
+                        super::run_session(&ds, s, 10_000, 0.05, 3, *STEPS_RANGE.end(), 9000 + rep)
+                    })
+                    .collect();
+                for steps in STEPS_RANGE {
+                    let smapes: Vec<f64> = sessions
+                        .iter()
+                        .map(|sess| match sess.model_after(steps) {
+                            Some(m) => smape_vs_dataset(m, &truth),
+                            None => f64::INFINITY,
+                        })
+                        .collect();
+                    let best = smapes.iter().cloned().fold(f64::INFINITY, f64::min);
+                    for (i, &s) in smapes.iter().enumerate() {
+                        if s <= best + 1e-12 {
+                            strict[steps][i] += 1;
+                        }
+                        if s <= best * 1.10 + 1e-12 {
+                            tol10[steps][i] += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    let mut findings = Vec::new();
+    let mut table = Table::new(&["steps", "NMS", "BS", "BO", "Random"])
+        .with_title("Fig. 7 — wins per strategy (strict / within-10%)");
+    for steps in STEPS_RANGE {
+        let cells: Vec<String> = (0..STRATEGIES.len())
+            .map(|i| format!("{} / {}", strict[steps][i], tol10[steps][i]))
+            .collect();
+        table.row(&[
+            format!("{steps}"),
+            cells[0].clone(),
+            cells[1].clone(),
+            cells[2].clone(),
+            cells[3].clone(),
+        ]);
+        for (i, strat) in STRATEGIES.iter().enumerate() {
+            csv.rowd(&[&steps, strat, &strict[steps][i], &tol10[steps][i]]).unwrap();
+            findings.push((format!("{strat}_wins_at{steps}"), strict[steps][i] as f64));
+        }
+    }
+    csv.flush().unwrap();
+
+    // Aggregate over step counts.
+    for (i, strat) in STRATEGIES.iter().enumerate() {
+        let total: u32 = STEPS_RANGE.map(|s| strict[s][i]).sum();
+        findings.push((format!("{strat}_wins_total"), total as f64));
+    }
+
+    let rendered = table.render();
+    ReproReport { id: "fig7", rendered, findings, csv_paths: vec![csv_path] }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn model_guided_strategies_beat_naive_ones() {
+        // Reproducible qualitative claims (see EXPERIMENTS.md fig7 notes:
+        // our BO baseline — paper reward + fixed well-chosen Matérn
+        // hyperparameters — is stronger than the paper's, so the NMS-vs-BO
+        // ordering deviates; NMS vs the naive baselines reproduces).
+        let r = super::run(true);
+        let total = |s: &str| r.finding(&format!("{s}_wins_total")).unwrap();
+        let nms = total("NMS");
+        let bo = total("BO");
+        let bs = total("BS");
+        let random = total("Random");
+        // The model-guided methods dominate the naive ones overall.
+        assert!(nms + bo > (bs + random) * 1.3, "guided {} vs naive {}", nms + bo, bs + random);
+        // NMS stays clearly ahead of the Random control and competitive
+        // with BS (paper: "BS and BO result in very similar errors",
+        // Random only occasionally competitive).
+        assert!(nms as f64 >= random as f64 * 0.8, "NMS {nms} vs Random {random}");
+        assert!(nms as f64 >= bs as f64 * 0.8, "NMS {nms} vs BS {bs}");
+    }
+
+    #[test]
+    fn every_strategy_wins_somewhere() {
+        // Sanity: no strategy is degenerate (the paper's Fig. 7 shows all
+        // four collecting wins at every step count).
+        let r = super::run(true);
+        for strat in super::STRATEGIES {
+            let t = r.finding(&format!("{strat}_wins_total")).unwrap();
+            assert!(t > 0.0, "{strat} never wins");
+        }
+    }
+}

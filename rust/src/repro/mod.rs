@@ -1,0 +1,111 @@
+//! Experiment harness: regenerate every table and figure of the paper's
+//! evaluation (§III). Each `figN` module produces CSV series under
+//! `results/` plus an ASCII rendering, and returns a [`ReproReport`]
+//! whose `findings` are compared against the paper's qualitative claims in
+//! integration tests and EXPERIMENTS.md.
+
+pub mod ablation;
+pub mod dataset;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod table1;
+
+pub use dataset::{AcquiredDataset, DatasetBackend, SAMPLE_SIZES};
+
+use std::path::PathBuf;
+
+use crate::coordinator::{Profiler, ProfilerConfig, SessionResult};
+use crate::simulator::{Algo, NodeSpec};
+use crate::strategies;
+
+/// Output of one experiment regeneration.
+pub struct ReproReport {
+    /// Experiment id (e.g. "fig3").
+    pub id: &'static str,
+    /// Rendered ASCII tables / summaries.
+    pub rendered: String,
+    /// Machine-checkable findings (name -> value) used by tests.
+    pub findings: Vec<(String, f64)>,
+    /// CSV files written.
+    pub csv_paths: Vec<PathBuf>,
+}
+
+impl ReproReport {
+    pub fn finding(&self, name: &str) -> Option<f64> {
+        self.findings
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| *v)
+    }
+}
+
+/// Where CSV output goes (`$STREAMPROF_RESULTS` or `./results`).
+pub fn results_dir() -> PathBuf {
+    std::env::var("STREAMPROF_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("results"))
+}
+
+/// Run one profiling session against an acquired dataset.
+///
+/// This is the evaluation workhorse shared by all figures: strategy by
+/// name, Algorithm-1 initial placement with (p, n_initial), fixed sample
+/// size, up to `max_steps` profiled limitations.
+pub fn run_session(
+    ds: &AcquiredDataset,
+    strategy: &str,
+    sample_size: usize,
+    p: f64,
+    n_initial: usize,
+    max_steps: usize,
+    seed: u64,
+) -> SessionResult {
+    let cfg = ProfilerConfig {
+        p,
+        n_initial,
+        samples: sample_size,
+        max_steps,
+        ..Default::default()
+    };
+    let strat = strategies::by_name(strategy, seed).expect("strategy name");
+    let mut backend = DatasetBackend::new(ds, sample_size);
+    Profiler::new(cfg, strat).run(&mut backend)
+}
+
+/// Default experiment node/algo/config (the paper's exemplary setting:
+/// pi4, 3 initial parallel runs, synthetic target 5%).
+pub struct ExemplaryConfig {
+    pub node: &'static NodeSpec,
+    pub algo: Algo,
+    pub p: f64,
+    pub n_initial: usize,
+}
+
+impl Default for ExemplaryConfig {
+    fn default() -> Self {
+        Self {
+            node: crate::simulator::node("pi4").expect("pi4 in registry"),
+            algo: Algo::Arima,
+            p: 0.05,
+            n_initial: 3,
+        }
+    }
+}
+
+/// Run every experiment (the `repro all` CLI path).
+pub fn run_all(quick: bool) -> Vec<ReproReport> {
+    vec![
+        table1::run(),
+        fig2::run(),
+        fig3::run(quick),
+        fig4::run(),
+        fig5::run(quick),
+        fig6::run(),
+        fig7::run(quick),
+        ablation::run(),
+    ]
+}

@@ -1,0 +1,59 @@
+//! Table I — hardware specifications of the evaluation machines.
+
+use crate::simulator::NODES;
+use crate::util::{CsvWriter, Table};
+
+use super::{results_dir, ReproReport};
+
+pub fn run() -> ReproReport {
+    let mut table = Table::new(&["Hostname", "Type", "CPU", "Cores", "Memory"])
+        .with_title("Table I — hardware specifications (modeled)");
+    let csv_path = results_dir().join("table1_nodes.csv");
+    let mut csv = CsvWriter::create(
+        &csv_path,
+        &["hostname", "kind", "cpu", "cores", "memory_gb", "speed", "scaling", "noise_cov"],
+    )
+    .expect("csv");
+    for n in NODES {
+        table.rowd(&[
+            &n.name,
+            &n.kind,
+            &n.cpu_model,
+            &n.cores,
+            &format!("{} GB", n.memory_gb),
+        ]);
+        csv.rowd(&[
+            &n.name,
+            &n.kind,
+            &n.cpu_model,
+            &n.cores,
+            &n.memory_gb,
+            &n.speed,
+            &n.scaling,
+            &n.noise_cov,
+        ])
+        .unwrap();
+    }
+    csv.flush().unwrap();
+    ReproReport {
+        id: "table1",
+        rendered: table.render(),
+        findings: vec![
+            ("n_nodes".into(), NODES.len() as f64),
+            ("max_cores".into(), NODES.iter().map(|n| n.cores).fold(0.0, f64::max)),
+        ],
+        csv_paths: vec![csv_path],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn renders_seven_rows() {
+        let r = super::run();
+        assert_eq!(r.finding("n_nodes"), Some(7.0));
+        assert_eq!(r.finding("max_cores"), Some(16.0));
+        assert!(r.rendered.contains("pi4"));
+        assert!(r.rendered.contains("e2-highcpu (16 vCPU)"));
+    }
+}

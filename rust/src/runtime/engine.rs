@@ -1,0 +1,197 @@
+//! PJRT engine: compile HLO-text artifacts once, execute them per sample or
+//! per chunk with the state loop threaded on the Rust side.
+//!
+//! Python never runs here — the artifacts were lowered AOT by
+//! `python/compile/aot.py` and this module is the entire request path.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest, Role};
+
+/// Shared PJRT CPU client (compile + execute).
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+}
+
+/// One job step's observable outcome.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StepOutcome {
+    /// Identity-function error.
+    pub err: f32,
+    /// Threshold-model boundary in effect for this sample.
+    pub thr: f32,
+    /// 1.0 when the sample was flagged anomalous.
+    pub flag: f32,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client and parse the manifest in `artifacts_dir`.
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one artifact into a ready-to-step job instance.
+    pub fn load_job(&self, name: &str) -> Result<LoadedJob> {
+        let spec = self
+            .manifest
+            .artifact(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))?
+            .clone();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.hlo_path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", spec.hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        let init = spec.load_init()?;
+        let mut carried = Vec::with_capacity(init.len());
+        for (vals, t) in init.iter().zip(spec.inputs.iter().filter(|t| t.role != Role::Stream)) {
+            carried.push(literal_from_f32(vals, &t.shape)?);
+        }
+        Ok(LoadedJob { spec, exe, carried })
+    }
+}
+
+/// A compiled artifact plus its carried (param + state) literals.
+pub struct LoadedJob {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// Literals for every non-stream input, in input order. Params stay
+    /// fixed; state entries are replaced after each call.
+    carried: Vec<xla::Literal>,
+}
+
+impl LoadedJob {
+    pub fn name(&self) -> &str {
+        &self.spec.name
+    }
+
+    /// Stream tensor length expected per call (`metrics` for per-sample
+    /// artifacts, `chunk * metrics` for chunked ones).
+    pub fn stream_elements(&self) -> usize {
+        let idx = self.spec.inputs.len() - 1;
+        self.spec.inputs[idx].elements()
+    }
+
+    /// Samples processed per call (1 unless chunked).
+    pub fn samples_per_call(&self) -> usize {
+        self.spec.chunk.max(1)
+    }
+
+    /// Reset all state tensors to their init.bin values.
+    pub fn reset(&mut self) -> Result<()> {
+        let init = self.spec.load_init()?;
+        for (slot, (vals, t)) in self
+            .carried
+            .iter_mut()
+            .zip(init.iter().zip(self.spec.inputs.iter().filter(|t| t.role != Role::Stream)))
+        {
+            *slot = literal_from_f32(vals, &t.shape)?;
+        }
+        Ok(())
+    }
+
+    /// Execute one call with the given stream values; threads state.
+    ///
+    /// For per-sample artifacts `x` is one `[metrics]` sample and one
+    /// [`StepOutcome`] is returned; for chunked artifacts `x` is
+    /// `[chunk * metrics]` and `chunk` outcomes are returned.
+    pub fn step(&mut self, x: &[f32]) -> Result<Vec<StepOutcome>> {
+        let stream_idx = self.spec.inputs.len() - 1;
+        let want = self.spec.inputs[stream_idx].elements();
+        if x.len() != want {
+            bail!(
+                "stream input length {} != expected {want} for {}",
+                x.len(),
+                self.spec.name
+            );
+        }
+        let x_lit = literal_from_f32(x, &self.spec.inputs[stream_idx].shape)?;
+        let mut args: Vec<&xla::Literal> = self.carried.iter().collect();
+        args.push(&x_lit);
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e:?}", self.spec.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result: {e:?}"))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling result: {e:?}"))?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "output arity mismatch for {}: {} vs {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let mut outcomes = Vec::new();
+        let mut errs: Vec<f32> = Vec::new();
+        let mut thrs: Vec<f32> = Vec::new();
+        let mut flags: Vec<f32> = Vec::new();
+        for (part, ospec) in parts.into_iter().zip(&self.spec.outputs) {
+            match (ospec.role, ospec.name.as_str()) {
+                (Role::Out, "err") | (Role::Out, "errs") => {
+                    errs = part.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+                }
+                (Role::Out, "thr") | (Role::Out, "thrs") => {
+                    thrs = part.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+                }
+                (Role::Out, "flag") | (Role::Out, "flags") => {
+                    flags = part.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+                }
+                (Role::State, _) => {
+                    let feeds = ospec.feeds.context("state output missing feeds")?;
+                    self.carried[feeds] = part;
+                }
+                (role, name) => bail!("unexpected output {name} with role {role:?}"),
+            }
+        }
+        for i in 0..errs.len() {
+            outcomes.push(StepOutcome { err: errs[i], thr: thrs[i], flag: flags[i] });
+        }
+        Ok(outcomes)
+    }
+
+    /// Fetch a carried state tensor by input name (diagnostics/tests).
+    pub fn state(&self, name: &str) -> Result<Vec<f32>> {
+        let pos = self
+            .spec
+            .inputs
+            .iter()
+            .filter(|t| t.role != Role::Stream)
+            .position(|t| t.name == name)
+            .with_context(|| format!("no carried input '{name}'"))?;
+        self.carried[pos]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+fn literal_from_f32(vals: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(vals);
+    if shape.len() <= 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape {shape:?}: {e:?}"))
+}

@@ -1,0 +1,294 @@
+//! `artifacts/manifest.json` schema: what the AOT pipeline produced and how
+//! to drive it (input order, roles, the output→input state loop).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Role of a tensor in the step-function contract.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    /// Constant across the stream (weights); loaded once from init.bin.
+    Param,
+    /// Threaded state; replaced by the matching output after every call.
+    State,
+    /// The stream input (`x` or `xs`), provided per call.
+    Stream,
+    /// Plain output (err/thr/flag).
+    Out,
+}
+
+impl Role {
+    fn parse(s: &str) -> Result<Role> {
+        Ok(match s {
+            "param" => Role::Param,
+            "state" => Role::State,
+            "stream" => Role::Stream,
+            "out" => Role::Out,
+            other => bail!("unknown role '{other}'"),
+        })
+    }
+}
+
+/// One tensor in the artifact signature.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub role: Role,
+    /// For state outputs: index of the input this output feeds.
+    pub feeds: Option<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One lowered job variant.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    pub init_path: PathBuf,
+    /// 0 for per-sample artifacts; T for scan'd chunk artifacts.
+    pub chunk: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    /// Index of the stream input (always last by AOT convention; verified).
+    pub fn stream_input(&self) -> Result<usize> {
+        let idx = self
+            .inputs
+            .iter()
+            .position(|t| t.role == Role::Stream)
+            .context("artifact has no stream input")?;
+        if idx != self.inputs.len() - 1 {
+            bail!("stream input must be last (artifact {})", self.name);
+        }
+        Ok(idx)
+    }
+
+    /// Load `init.bin`: per non-stream input, its f32 values (input order).
+    pub fn load_init(&self) -> Result<Vec<Vec<f32>>> {
+        let bytes = std::fs::read(&self.init_path)
+            .with_context(|| format!("reading {}", self.init_path.display()))?;
+        let expect: usize = self
+            .inputs
+            .iter()
+            .filter(|t| t.role != Role::Stream)
+            .map(|t| t.elements() * 4)
+            .sum();
+        if bytes.len() != expect {
+            bail!(
+                "init blob size mismatch for {}: {} bytes, expected {expect}",
+                self.name,
+                bytes.len()
+            );
+        }
+        let mut out = Vec::new();
+        let mut off = 0;
+        for t in self.inputs.iter().filter(|t| t.role != Role::Stream) {
+            let n = t.elements();
+            let mut vals = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &bytes[off + i * 4..off + i * 4 + 4];
+                vals.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += n * 4;
+            out.push(vals);
+        }
+        Ok(out)
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub metrics: usize,
+    pub chunk: usize,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let root = json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let metrics = root
+            .req("metrics")
+            .map_err(anyhow::Error::msg)?
+            .as_usize()
+            .context("metrics not a number")?;
+        let chunk = root
+            .get("chunk")
+            .and_then(Json::as_usize)
+            .unwrap_or(0);
+        let mut artifacts = Vec::new();
+        for art in root
+            .req("artifacts")
+            .map_err(anyhow::Error::msg)?
+            .as_arr()
+            .context("artifacts not an array")?
+        {
+            artifacts.push(Self::parse_artifact(art, dir)?);
+        }
+        Ok(Manifest { metrics, chunk, artifacts })
+    }
+
+    fn parse_artifact(art: &Json, dir: &Path) -> Result<ArtifactSpec> {
+        let name = art
+            .req("name")
+            .map_err(anyhow::Error::msg)?
+            .as_str()
+            .context("name")?
+            .to_string();
+        let file = art.req("file").map_err(anyhow::Error::msg)?.as_str().context("file")?;
+        let init = art
+            .req("init_file")
+            .map_err(anyhow::Error::msg)?
+            .as_str()
+            .context("init_file")?;
+        let chunk = art.get("chunk").and_then(Json::as_usize).unwrap_or(0);
+        let parse_tensors = |key: &str| -> Result<Vec<TensorSpec>> {
+            let mut out = Vec::new();
+            for t in art
+                .req(key)
+                .map_err(anyhow::Error::msg)?
+                .as_arr()
+                .with_context(|| format!("{key} not an array"))?
+            {
+                let shape = t
+                    .req("shape")
+                    .map_err(anyhow::Error::msg)?
+                    .as_arr()
+                    .context("shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("dim"))
+                    .collect::<Result<Vec<_>>>()?;
+                out.push(TensorSpec {
+                    name: t
+                        .req("name")
+                        .map_err(anyhow::Error::msg)?
+                        .as_str()
+                        .context("tensor name")?
+                        .to_string(),
+                    shape,
+                    role: Role::parse(
+                        t.req("role").map_err(anyhow::Error::msg)?.as_str().context("role")?,
+                    )?,
+                    feeds: t.get("feeds").and_then(Json::as_usize),
+                });
+            }
+            Ok(out)
+        };
+        let spec = ArtifactSpec {
+            name,
+            hlo_path: dir.join(file),
+            init_path: dir.join(init),
+            chunk,
+            inputs: parse_tensors("inputs")?,
+            outputs: parse_tensors("outputs")?,
+        };
+        // Validate the state loop.
+        for o in &spec.outputs {
+            if o.role == Role::State {
+                let feeds = o
+                    .feeds
+                    .with_context(|| format!("state output {} missing feeds", o.name))?;
+                let inp = spec
+                    .inputs
+                    .get(feeds)
+                    .with_context(|| format!("feeds index {feeds} out of range"))?;
+                if inp.shape != o.shape {
+                    bail!(
+                        "state loop shape mismatch {}: {:?} -> {:?}",
+                        o.name,
+                        o.shape,
+                        inp.shape
+                    );
+                }
+            }
+        }
+        spec.stream_input()?;
+        Ok(spec)
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        art_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_built_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&art_dir()).unwrap();
+        assert_eq!(m.metrics, 28);
+        for name in ["arima", "birch", "lstm"] {
+            let a = m.artifact(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(a.chunk, 0);
+            assert!(a.hlo_path.exists());
+            // err/thr/flag lead the outputs.
+            assert_eq!(a.outputs[0].name, "err");
+            assert_eq!(a.outputs[1].name, "thr");
+            assert_eq!(a.outputs[2].name, "flag");
+        }
+        let chunked = m.artifact("lstm_chunk32").expect("chunk artifact");
+        assert_eq!(chunked.chunk, 32);
+    }
+
+    #[test]
+    fn init_blob_loads_with_correct_sizes() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&art_dir()).unwrap();
+        let lstm = m.artifact("lstm").unwrap();
+        let init = lstm.load_init().unwrap();
+        // 8 params + 5 state tensors.
+        assert_eq!(init.len(), 13);
+        let wx1 = &init[0];
+        assert_eq!(wx1.len(), 28 * 128);
+        assert!(wx1.iter().any(|v| *v != 0.0), "weights should be non-zero");
+        let h1 = &init[8];
+        assert!(h1.iter().all(|v| *v == 0.0), "initial state should be zero");
+    }
+
+    #[test]
+    fn state_loop_contract_holds() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&art_dir()).unwrap();
+        for a in &m.artifacts {
+            for o in a.outputs.iter().filter(|o| o.role == Role::State) {
+                let inp = &a.inputs[o.feeds.unwrap()];
+                assert_eq!(inp.name, o.name);
+                assert_eq!(inp.shape, o.shape);
+            }
+            assert_eq!(a.stream_input().unwrap(), a.inputs.len() - 1);
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! PJRT runtime: load AOT artifacts (HLO text), compile once, execute on
+//! the request path; plus the Docker-like CPU throttle.
+//!
+//! Adapted from the verified `/opt/xla-example/load_hlo` wiring: HLO *text*
+//! is the interchange (xla_extension 0.5.1 rejects jax≥0.5 protos), the
+//! lowered module returns a 1-tuple which is decomposed per call, and state
+//! tensors are threaded back into the next call's inputs.
+
+mod engine;
+mod manifest;
+mod throttle;
+
+pub use engine::{Engine, LoadedJob, StepOutcome};
+pub use manifest::{ArtifactSpec, Manifest, Role, TensorSpec};
+pub use throttle::{Throttle, ThrottledRun};
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: `$STREAMPROF_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("STREAMPROF_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+/// True when the AOT artifacts have been built.
+pub fn artifacts_available() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}

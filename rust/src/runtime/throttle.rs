@@ -1,0 +1,126 @@
+//! Duty-cycle CPU throttle emulating Docker's `--cpus` CFS quota.
+//!
+//! Docker's `--cpus=R` (R < 1) gives a container `R * period` of CPU time
+//! per scheduling period — i.e. a duty cycle: run, then stall until the
+//! next period. We reproduce the observable effect for a single-threaded
+//! job step: after a step that consumed `t_busy` of CPU, stall for
+//! `t_busy * (1/R − 1)`, making the *effective* per-sample runtime
+//! `t_busy / R`. For R ≥ 1 a single-threaded step cannot run faster than
+//! unthrottled, so the effective runtime equals `t_busy` (multi-core
+//! scaling of the paper's multi-threaded jobs is covered by the node
+//! simulator — see DESIGN.md §5).
+
+use std::time::{Duration, Instant};
+
+/// Throttle wrapper measuring + stalling around closures.
+#[derive(Clone, Copy, Debug)]
+pub struct Throttle {
+    limit: f64,
+    /// When true (default in tests/benches), the stall is accounted but not
+    /// actually slept, keeping experiments fast while reporting identical
+    /// effective runtimes.
+    virtual_time: bool,
+}
+
+/// Result of one throttled execution.
+#[derive(Clone, Copy, Debug)]
+pub struct ThrottledRun {
+    /// CPU time actually consumed by the closure.
+    pub busy: Duration,
+    /// Stall injected by the quota (zero when limit >= 1).
+    pub stall: Duration,
+}
+
+impl ThrottledRun {
+    /// The runtime an observer (and the profiler) sees.
+    pub fn effective(&self) -> Duration {
+        self.busy + self.stall
+    }
+}
+
+impl Throttle {
+    /// A real sleeping throttle (e2e serving example).
+    pub fn sleeping(limit: f64) -> Self {
+        assert!(limit > 0.0, "limit must be positive");
+        Self { limit, virtual_time: false }
+    }
+
+    /// An accounting-only throttle (fast experiments; identical numbers).
+    pub fn virtual_time(limit: f64) -> Self {
+        assert!(limit > 0.0, "limit must be positive");
+        Self { limit, virtual_time: true }
+    }
+
+    pub fn limit(&self) -> f64 {
+        self.limit
+    }
+
+    /// Run `f` under the quota.
+    pub fn run<T>(&self, f: impl FnOnce() -> T) -> (T, ThrottledRun) {
+        let t0 = Instant::now();
+        let out = f();
+        let busy = t0.elapsed();
+        let stall = if self.limit < 1.0 {
+            busy.mul_f64(1.0 / self.limit - 1.0)
+        } else {
+            Duration::ZERO
+        };
+        if !self.virtual_time && !stall.is_zero() {
+            std::thread::sleep(stall);
+        }
+        (out, ThrottledRun { busy, stall })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn busy_work_us(us: u64) {
+        let t0 = Instant::now();
+        while t0.elapsed() < Duration::from_micros(us) {
+            std::hint::black_box(0u64);
+        }
+    }
+
+    #[test]
+    fn effective_runtime_scales_inverse_to_limit() {
+        let t = Throttle::virtual_time(0.25);
+        let (_, run) = t.run(|| busy_work_us(200));
+        let ratio = run.effective().as_secs_f64() / run.busy.as_secs_f64();
+        assert!((ratio - 4.0).abs() < 0.01, "ratio {ratio}");
+    }
+
+    #[test]
+    fn no_stall_at_full_allocation() {
+        let t = Throttle::virtual_time(1.0);
+        let (_, run) = t.run(|| busy_work_us(100));
+        assert!(run.stall.is_zero());
+        let t2 = Throttle::virtual_time(2.5);
+        let (_, run2) = t2.run(|| busy_work_us(100));
+        assert!(run2.stall.is_zero());
+    }
+
+    #[test]
+    fn sleeping_throttle_actually_stalls() {
+        let t = Throttle::sleeping(0.5);
+        let t0 = Instant::now();
+        let (_, run) = t.run(|| busy_work_us(2000));
+        let wall = t0.elapsed();
+        // Wall time should be ~2x busy time (±scheduler noise).
+        assert!(wall >= run.busy + run.stall / 2, "wall {wall:?} run {run:?}");
+    }
+
+    #[test]
+    fn returns_closure_output() {
+        let t = Throttle::virtual_time(0.5);
+        let (val, _) = t.run(|| 41 + 1);
+        assert_eq!(val, 42);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn rejects_zero_limit() {
+        Throttle::virtual_time(0.0);
+    }
+}

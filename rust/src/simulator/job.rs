@@ -1,0 +1,358 @@
+//! Simulated black-box job: ground-truth runtime curves + per-sample noise.
+//!
+//! The profiler observes exactly what it would observe on the real testbed:
+//! per-sample processing times of a containerized job under a CPU
+//! limitation. The ground truth follows the paper's own model family
+//! `t(R) = a·(R·d)^(−b) + c` with parameters derived from the node spec and
+//! the algorithm's base cost, plus lognormal per-sample noise.
+//!
+//! Fig. 6 anchoring (Arima on pi4): four NMS profiling steps with 1000
+//! samples ≈ 268 s, i.e. mean per-sample times of ~60–70 ms around
+//! limitations of 0.2–1.0 CPU. The base costs below put Arima/pi4 at
+//! t(1.0) ≈ 54 ms and t(0.2) ≈ 210 ms, matching those magnitudes.
+
+use super::nodes::NodeSpec;
+use crate::fit::ProfilePoint;
+use crate::util::Rng;
+
+/// The three IFTM workloads from the paper's evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algo {
+    Arima,
+    Birch,
+    Lstm,
+}
+
+impl Algo {
+    pub const ALL: [Algo; 3] = [Algo::Arima, Algo::Birch, Algo::Lstm];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Arima => "arima",
+            Algo::Birch => "birch",
+            Algo::Lstm => "lstm",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Algo> {
+        match s.to_ascii_lowercase().as_str() {
+            "arima" => Some(Algo::Arima),
+            "birch" => Some(Algo::Birch),
+            "lstm" => Some(Algo::Lstm),
+            _ => None,
+        }
+    }
+
+    /// Per-sample compute cost (seconds) at one full reference core
+    /// (wally-speed). Ratios mirror the relative FLOP counts of the three
+    /// AOT artifacts (LSTM ≫ Birch > Arima).
+    pub fn base_cost(&self) -> f64 {
+        match self {
+            Algo::Arima => 0.013,
+            Algo::Birch => 0.021,
+            Algo::Lstm => 0.055,
+        }
+    }
+
+    /// Fraction of the base cost that remains at unbounded parallelism
+    /// (runtime floor `c`): framework overhead + sequential part.
+    pub fn floor_fraction(&self) -> f64 {
+        match self {
+            Algo::Arima => 0.18,
+            Algo::Birch => 0.15,
+            Algo::Lstm => 0.12,
+        }
+    }
+}
+
+/// Ground-truth curve parameters for one (node, algorithm) pair.
+///
+/// Deliberately **not** a member of the fitted family: real measured
+/// runtime curves deviate systematically from `a·(R·d)^(−b)+c` — streaming
+/// jobs saturate at their intrinsic parallelism, and CFS scheduling leaves
+/// limit-dependent artifacts. Without this mismatch every strategy would
+/// fit the curve perfectly from any 5 points and the paper's SMAPE floors
+/// (0.1–0.3 on pi4) and strategy rankings could not emerge.
+#[derive(Clone, Debug)]
+pub struct GroundTruth {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    pub d: f64,
+    pub noise_cov: f64,
+    /// Intrinsic parallelism of the job (cores it can actually use);
+    /// runtime stops improving (smoothly) beyond this.
+    pub saturation: f64,
+    /// Systematic limit-dependent deviation (scheduler/interference
+    /// artifacts), deterministic per (node, algo): two sine components.
+    pub wiggle: [(f64, f64, f64); 2], // (amplitude, frequency, phase)
+    /// Per-sample runtimes are far noisier than the aggregate CoV —
+    /// interference, scheduling, and GC make individual samples vary
+    /// wildly (visible in the paper's Fig. 2). The per-sample CoV is
+    /// `noise_cov * sqrt(autocorr)`, so the mean over n samples still has
+    /// standard error `noise_cov * sqrt(autocorr / n)` — equivalently, n
+    /// samples carry `n / autocorr` independent observations' worth of
+    /// information. This is what makes early stopping meaningful: the
+    /// paper's 95%/10% criterion consumed roughly half of the 10k samples.
+    pub autocorr: f64,
+    /// Low-limit scheduling penalty: CFS quota overhead is proportionally
+    /// worse at very small limits (fixed per-period costs), adding
+    /// `a · knee_amp · exp(−r / knee_scale)` that the fitted family cannot
+    /// express — capturing it requires actually profiling the knee.
+    pub knee_amp: f64,
+    pub knee_scale: f64,
+}
+
+/// Deterministic per-(node, algo) parameter stream.
+fn param_rng(node: &NodeSpec, algo: Algo) -> Rng {
+    let mut h = 0xcbf29ce484222325u64; // FNV-1a
+    for b in node.name.bytes().chain(algo.name().bytes()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    Rng::new(h)
+}
+
+impl GroundTruth {
+    pub fn derive(node: &NodeSpec, algo: Algo) -> Self {
+        let mut rng = param_rng(node, algo);
+        let base = algo.base_cost() / node.speed;
+        let sat_base = match algo {
+            Algo::Arima => 1.3,
+            Algo::Birch => 2.0,
+            Algo::Lstm => 3.0,
+        };
+        GroundTruth {
+            a: base * (1.0 - algo.floor_fraction()),
+            b: node.scaling,
+            c: base * algo.floor_fraction(),
+            // Mild per-node stretch of the limitation axis; keeps d
+            // non-trivial so the full Eq. 1 is exercised.
+            d: 1.0 + 0.05 * (node.cores / 8.0),
+            noise_cov: node.noise_cov,
+            saturation: (sat_base * rng.uniform(0.8, 1.2)).min(node.cores),
+            wiggle: [
+                (rng.uniform(0.01, 0.035), rng.uniform(4.0, 8.0), rng.uniform(0.0, 6.28)),
+                (rng.uniform(0.008, 0.02), rng.uniform(12.0, 20.0), rng.uniform(0.0, 6.28)),
+            ],
+            autocorr: 100.0,
+            knee_amp: rng.uniform(2.5, 6.0),
+            knee_scale: rng.uniform(0.05, 0.12),
+        }
+    }
+
+    /// Noise-free mean per-sample runtime at limitation `r`.
+    pub fn mean_runtime(&self, r: f64) -> f64 {
+        debug_assert!(r > 0.0);
+        // Parallelism saturation with a crisp elbow (k=4 smooth-min):
+        // r_eff ~= r below the saturation point, -> saturation above it.
+        let s = self.saturation;
+        let r_eff = r * s / (r.powi(4) + s.powi(4)).powf(0.25);
+        let smooth = self.a * (r_eff * self.d).powf(-self.b) + self.c;
+        // CFS per-period overhead: a sharp, localized blow-up below ~0.2
+        // CPU (the paper's "exponential increase ... at lower CPU
+        // limitations"). Capturing it requires profiling the deep knee.
+        let knee = self.a * self.knee_amp * (-r / self.knee_scale).exp();
+        // Systematic limit-dependent artifact (same for every sample).
+        let mut w = 1.0;
+        for &(amp, freq, phase) in &self.wiggle {
+            w += amp * (freq * r + phase).sin();
+        }
+        (smooth + knee) * w
+    }
+
+    /// Standard error of the mean over `n` samples.
+    pub fn mean_se(&self, mean: f64, n: usize) -> f64 {
+        let n_eff = (n as f64 / self.autocorr).max(1.0);
+        mean * self.noise_cov / n_eff.sqrt()
+    }
+
+    /// Coefficient of variation of a SINGLE per-sample runtime (consistent
+    /// with `mean_se`: iid draws at this CoV give the same aggregate SE).
+    pub fn sample_cov(&self) -> f64 {
+        self.noise_cov * self.autocorr.sqrt()
+    }
+}
+
+/// A simulated containerized ML job on a specific node.
+pub struct SimulatedJob {
+    pub node: &'static NodeSpec,
+    pub algo: Algo,
+    truth: GroundTruth,
+    rng: Rng,
+}
+
+impl SimulatedJob {
+    pub fn new(node: &'static NodeSpec, algo: Algo, seed: u64) -> Self {
+        let truth = GroundTruth::derive(node, algo);
+        Self { node, algo, truth, rng: Rng::new(seed) }
+    }
+
+    pub fn truth(&self) -> &GroundTruth {
+        &self.truth
+    }
+
+    /// Observe ONE per-sample processing time under limitation `r`
+    /// (lognormal noise at the per-sample CoV around the ground-truth
+    /// mean — individual samples are much noisier than aggregate means).
+    pub fn observe_sample(&mut self, r: f64) -> f64 {
+        let mean = self.truth.mean_runtime(r);
+        self.rng.lognormal_mean_cov(mean, self.truth.sample_cov())
+    }
+
+    /// Observe the empirical mean over `n` samples under limitation `r`.
+    ///
+    /// For large `n` the sample mean is drawn from its CLT distribution
+    /// (normal with the autocorrelation-adjusted standard error) instead of
+    /// summing `n` lognormals — statistically equivalent for n ≥ 256 and
+    /// ~1000x faster, which matters for the 50-repetition Fig. 7 sweep.
+    pub fn observe_mean(&mut self, r: f64, n: usize) -> f64 {
+        debug_assert!(n > 0);
+        let mean = self.truth.mean_runtime(r);
+        if n < 256 {
+            let mut acc = 0.0;
+            for _ in 0..n {
+                acc += self.rng.lognormal_mean_cov(mean, self.truth.sample_cov());
+            }
+            acc / n as f64
+        } else {
+            let se = self.truth.mean_se(mean, n);
+            (mean + se * self.rng.normal()).max(mean * 0.01)
+        }
+    }
+
+    /// The wallclock cost of profiling `n` samples at limitation `r` —
+    /// the job processes samples back-to-back, so profiling time is the sum
+    /// of per-sample runtimes ≈ n · observed mean.
+    pub fn profiling_time(&mut self, r: f64, n: usize) -> (f64, f64) {
+        let mean = self.observe_mean(r, n);
+        (mean, mean * n as f64)
+    }
+
+    /// The paper's data-acquisition sweep (§III-A.a): start from all cores,
+    /// decrease by 0.1, measure the mean over `n` samples at each limit.
+    /// Returns points sorted by ascending limit.
+    pub fn acquire_dataset(&mut self, n: usize) -> Vec<ProfilePoint> {
+        let mut pts: Vec<ProfilePoint> = self
+            .node
+            .limit_grid()
+            .iter()
+            .map(|&r| ProfilePoint::new(r, self.observe_mean(r, n)))
+            .collect();
+        pts.sort_by(|x, y| x.limit.partial_cmp(&y.limit).unwrap());
+        pts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::nodes::node;
+
+    #[test]
+    fn runtime_decreases_with_more_cpu() {
+        let job = SimulatedJob::new(node("pi4").unwrap(), Algo::Arima, 1);
+        let slow = job.truth().mean_runtime(0.1);
+        let mid = job.truth().mean_runtime(1.0);
+        let fast = job.truth().mean_runtime(4.0);
+        assert!(slow > mid && mid > fast);
+        // Exponential blow-up at small limits: 0.1 is ~7x 1.0 (b≈0.85).
+        assert!(slow / mid > 5.0, "ratio {}", slow / mid);
+    }
+
+    #[test]
+    fn lstm_slower_than_birch_slower_than_arima() {
+        let n = node("wally").unwrap();
+        let a = GroundTruth::derive(n, Algo::Arima).mean_runtime(1.0);
+        let b = GroundTruth::derive(n, Algo::Birch).mean_runtime(1.0);
+        let l = GroundTruth::derive(n, Algo::Lstm).mean_runtime(1.0);
+        assert!(a < b && b < l);
+    }
+
+    #[test]
+    fn pi4_slowest_per_core() {
+        for algo in Algo::ALL {
+            let pi4 = GroundTruth::derive(node("pi4").unwrap(), algo).mean_runtime(1.0);
+            for other in ["wally", "asok", "e2high", "e2small", "e216", "n1"] {
+                let t = GroundTruth::derive(node(other).unwrap(), algo).mean_runtime(1.0);
+                assert!(pi4 > t, "pi4 vs {other} for {algo:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn e2high_faster_than_e2small_at_same_limit() {
+        // The paper's Fig. 3 discussion: same core count, different runtime.
+        let h = GroundTruth::derive(node("e2high").unwrap(), Algo::Lstm);
+        let s = GroundTruth::derive(node("e2small").unwrap(), Algo::Lstm);
+        for r in [0.2, 0.5, 1.0, 2.0] {
+            assert!(h.mean_runtime(r) < s.mean_runtime(r));
+        }
+    }
+
+    #[test]
+    fn observed_mean_converges_to_truth() {
+        let mut job = SimulatedJob::new(node("pi4").unwrap(), Algo::Lstm, 7);
+        let truth = job.truth().mean_runtime(0.5);
+        let m = job.observe_mean(0.5, 100_000);
+        assert!((m - truth).abs() / truth < 0.01, "{m} vs {truth}");
+    }
+
+    #[test]
+    fn small_n_path_unbiased() {
+        let mut job = SimulatedJob::new(node("wally").unwrap(), Algo::Arima, 9);
+        let truth = job.truth().mean_runtime(1.0);
+        let mut acc = 0.0;
+        let reps = 2000;
+        for _ in 0..reps {
+            acc += job.observe_mean(1.0, 100);
+        }
+        let grand = acc / reps as f64;
+        assert!((grand - truth).abs() / truth < 0.01);
+    }
+
+    #[test]
+    fn acquisition_sweep_covers_grid() {
+        let mut job = SimulatedJob::new(node("e2high").unwrap(), Algo::Birch, 3);
+        let ds = job.acquire_dataset(1000);
+        assert_eq!(ds.len(), 20); // 2.0 / 0.1
+        assert!(ds.windows(2).all(|w| w[0].limit < w[1].limit));
+        assert!(ds.iter().all(|p| p.runtime > 0.0));
+        // Monotone-ish: first point (0.1 CPU) much slower than last (2.0).
+        assert!(ds[0].runtime > ds.last().unwrap().runtime * 3.0);
+    }
+
+    #[test]
+    fn profiling_time_scales_with_samples() {
+        let mut job = SimulatedJob::new(node("pi4").unwrap(), Algo::Arima, 5);
+        let (_, t1k) = job.profiling_time(0.2, 1000);
+        let (_, t10k) = job.profiling_time(0.2, 10_000);
+        let ratio = t10k / t1k;
+        // Linear in n (modulo noise on the observed means).
+        assert!((9.0..11.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn fig6_magnitude_anchor() {
+        // Paper: ~268s for 4 profiling steps, Arima/pi4, 1000 samples.
+        // Our 4-step cost at plausible NMS-selected limits (0.2, 0.55, 2.0,
+        // 0.3) should land within a factor ~2 of that.
+        let mut job = SimulatedJob::new(node("pi4").unwrap(), Algo::Arima, 11);
+        let total: f64 = [0.2, 0.55, 2.0, 0.3]
+            .iter()
+            .map(|&r| job.profiling_time(r, 1000).1)
+            .sum();
+        assert!(
+            (130.0..500.0).contains(&total),
+            "4-step profiling time {total}s should be near the paper's 268s"
+        );
+    }
+
+    #[test]
+    fn algo_name_roundtrip() {
+        for a in Algo::ALL {
+            assert_eq!(Algo::from_name(a.name()), Some(a));
+        }
+        assert_eq!(Algo::from_name("bogus"), None);
+    }
+}

@@ -1,0 +1,13 @@
+//! Testbed substitute: node models (Table I) and simulated black-box jobs.
+//!
+//! See DESIGN.md §4/§5 — the profiling methods only ever observe
+//! `(CPU limitation → noisy per-sample runtimes)`, which is exactly the
+//! interface this module reproduces. The `localhost` path in
+//! [`crate::workloads`] provides the same interface backed by *real* PJRT
+//! executions under a duty-cycle throttle.
+
+pub mod job;
+pub mod nodes;
+
+pub use job::{Algo, GroundTruth, SimulatedJob};
+pub use nodes::{node, NodeSpec, NODES};

@@ -1,0 +1,182 @@
+//! The seven evaluation machines (paper Table I) as calibrated node models.
+//!
+//! We do not have the authors' physical testbed (two Xeon servers, a
+//! Raspberry Pi 4, four GCP VM types), so each machine is modeled by the
+//! parameters that determine what the profiler can observe: core count
+//! (`l_max`), a single-core speed factor (relative to the Xeon E3-1230),
+//! a parallel-scaling exponent, a runtime floor, and per-sample noise.
+//! See DESIGN.md §4 for the calibration rationale and §5 for why this
+//! substitution preserves the paper's findings.
+
+/// Static description of one machine type (Table I row).
+#[derive(Clone, Debug)]
+pub struct NodeSpec {
+    /// Hostname used throughout the paper's figures.
+    pub name: &'static str,
+    /// Human-readable machine type.
+    pub kind: &'static str,
+    /// CPU model string.
+    pub cpu_model: &'static str,
+    /// Number of cores == largest assignable CPU limitation `l_max`.
+    pub cores: f64,
+    /// Memory in GB (Table I column; informational).
+    pub memory_gb: f64,
+    /// Single-core speed relative to the fastest machine (wally).
+    /// Smaller = slower CPU = larger per-sample runtimes.
+    pub speed: f64,
+    /// Parallel-scaling exponent `b` of the ground-truth curve; < 1 means
+    /// sublinear gains from additional cores (Amdahl-ish).
+    pub scaling: f64,
+    /// Coefficient of variation of per-sample runtime noise (lognormal).
+    pub noise_cov: f64,
+}
+
+impl NodeSpec {
+    /// Smallest assignable CPU limitation (Docker `--cpus` granularity used
+    /// in the paper's acquisition sweep).
+    pub const L_MIN: f64 = 0.1;
+    /// Logical step size δ of the limitation grid.
+    pub const DELTA: f64 = 0.1;
+
+    /// The limitation grid `L = {l_min, l_min+δ, ..., l_max}` (paper §II-B).
+    pub fn limit_grid(&self) -> Vec<f64> {
+        let n = (self.cores / Self::DELTA).round() as usize;
+        (1..=n).map(|i| i as f64 * Self::DELTA).collect()
+    }
+
+    pub fn l_max(&self) -> f64 {
+        self.cores
+    }
+}
+
+/// Table I registry. Speed factors follow the CPU generations: wally's
+/// E3-1230 (Sandy Bridge, 2011) ≈ 1.0; asok's X5355 (Clovertown, 2007) is
+/// roughly half as fast per core; the Pi 4's Cortex-A72 is ~4x slower; GCP
+/// e2 machines run on recent Xeon/EPYC hosts near wally's per-core speed,
+/// with e2-small being a shared-core (throttled) variant; n1's Skylake
+/// vCPU sits in between.
+pub const NODES: &[NodeSpec] = &[
+    NodeSpec {
+        name: "wally",
+        kind: "Commodity server",
+        cpu_model: "Intel Xeon E3-1230",
+        cores: 8.0,
+        memory_gb: 16.0,
+        speed: 1.0,
+        scaling: 0.92,
+        noise_cov: 0.10,
+    },
+    NodeSpec {
+        name: "asok",
+        kind: "Commodity server",
+        cpu_model: "Intel Xeon X5355",
+        cores: 8.0,
+        memory_gb: 32.0,
+        speed: 0.52,
+        scaling: 0.88,
+        noise_cov: 0.12,
+    },
+    NodeSpec {
+        name: "pi4",
+        kind: "Single-board computer",
+        cpu_model: "Raspberry Pi 4B (Cortex-A72)",
+        cores: 4.0,
+        memory_gb: 2.0,
+        speed: 0.24,
+        scaling: 0.85,
+        noise_cov: 0.18,
+    },
+    NodeSpec {
+        name: "e2high",
+        kind: "GCP VM",
+        cpu_model: "e2-highcpu (2 vCPU)",
+        cores: 2.0,
+        memory_gb: 2.0,
+        speed: 0.90,
+        scaling: 0.90,
+        noise_cov: 0.14,
+    },
+    NodeSpec {
+        name: "e2small",
+        kind: "GCP VM",
+        cpu_model: "e2-small (2 shared vCPU)",
+        cores: 2.0,
+        memory_gb: 2.0,
+        speed: 0.55,
+        scaling: 0.90,
+        noise_cov: 0.16,
+    },
+    NodeSpec {
+        name: "e216",
+        kind: "GCP VM",
+        cpu_model: "e2-highcpu (16 vCPU)",
+        cores: 16.0,
+        memory_gb: 16.0,
+        speed: 0.90,
+        scaling: 0.95,
+        noise_cov: 0.12,
+    },
+    NodeSpec {
+        name: "n1",
+        kind: "GCP VM",
+        cpu_model: "n1-standard (1 vCPU)",
+        cores: 1.0,
+        memory_gb: 3.75,
+        speed: 0.70,
+        scaling: 0.90,
+        noise_cov: 0.14,
+    },
+];
+
+/// Look up a node by hostname.
+pub fn node(name: &str) -> Option<&'static NodeSpec> {
+    NODES.iter().find(|n| n.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_seven_machines() {
+        assert_eq!(NODES.len(), 7);
+        let names: Vec<_> = NODES.iter().map(|n| n.name).collect();
+        assert_eq!(names, vec!["wally", "asok", "pi4", "e2high", "e2small", "e216", "n1"]);
+    }
+
+    #[test]
+    fn core_counts_match_table1() {
+        assert_eq!(node("wally").unwrap().cores, 8.0);
+        assert_eq!(node("asok").unwrap().cores, 8.0);
+        assert_eq!(node("pi4").unwrap().cores, 4.0);
+        assert_eq!(node("e2high").unwrap().cores, 2.0);
+        assert_eq!(node("e2small").unwrap().cores, 2.0);
+        assert_eq!(node("e216").unwrap().cores, 16.0);
+        assert_eq!(node("n1").unwrap().cores, 1.0);
+    }
+
+    #[test]
+    fn e2high_faster_than_e2small_same_cores() {
+        // Paper §III-B.1: identical core count, different CPUs -> different
+        // runtime behaviour, motivating per-device profiling.
+        let high = node("e2high").unwrap();
+        let small = node("e2small").unwrap();
+        assert_eq!(high.cores, small.cores);
+        assert!(high.speed > small.speed);
+    }
+
+    #[test]
+    fn limit_grid_spans_l_min_to_l_max() {
+        let g = node("pi4").unwrap().limit_grid();
+        assert_eq!(g.len(), 40);
+        assert!((g[0] - 0.1).abs() < 1e-12);
+        assert!((g[39] - 4.0).abs() < 1e-12);
+        let n1 = node("n1").unwrap().limit_grid();
+        assert_eq!(n1.len(), 10);
+    }
+
+    #[test]
+    fn unknown_node_is_none() {
+        assert!(node("gcp-tpu").is_none());
+    }
+}

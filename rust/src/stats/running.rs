@@ -1,0 +1,162 @@
+//! Welford's online mean/variance — used by the early-stopping monitor on
+//! per-sample runtime streams.
+
+#[derive(Clone, Debug, Default)]
+pub struct RunningStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl RunningStats {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        let delta2 = x - self.mean;
+        self.m2 += delta * delta2;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Coefficient of variation (std/mean); 0 for degenerate inputs.
+    pub fn cov(&self) -> f64 {
+        if self.mean.abs() < f64::MIN_POSITIVE {
+            0.0
+        } else {
+            self.std_dev() / self.mean
+        }
+    }
+
+    /// Merge two accumulators (parallel profiling runs).
+    pub fn merge(&self, other: &RunningStats) -> RunningStats {
+        if self.n == 0 {
+            return other.clone();
+        }
+        if other.n == 0 {
+            return self.clone();
+        }
+        let n = self.n + other.n;
+        let delta = other.mean - self.mean;
+        let mean = self.mean + delta * other.n as f64 / n as f64;
+        let m2 = self.m2
+            + other.m2
+            + delta * delta * (self.n as f64 * other.n as f64) / n as f64;
+        RunningStats {
+            n,
+            mean,
+            m2,
+            min: self.min.min(other.min),
+            max: self.max.max(other.max),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0);
+        (mean, var)
+    }
+
+    #[test]
+    fn matches_naive_two_pass() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64 * 0.37).sin() * 5.0 + 10.0).collect();
+        let mut s = RunningStats::new();
+        for &x in &xs {
+            s.push(x);
+        }
+        let (mean, var) = naive(&xs);
+        assert!((s.mean() - mean).abs() < 1e-10);
+        assert!((s.variance() - var).abs() < 1e-10);
+    }
+
+    #[test]
+    fn merge_equals_concat() {
+        let xs: Vec<f64> = (0..57).map(|i| (i as f64).sqrt()).collect();
+        let (a_xs, b_xs) = xs.split_at(23);
+        let mut a = RunningStats::new();
+        let mut b = RunningStats::new();
+        let mut whole = RunningStats::new();
+        for &x in a_xs {
+            a.push(x);
+        }
+        for &x in b_xs {
+            b.push(x);
+        }
+        for &x in &xs {
+            whole.push(x);
+        }
+        let merged = a.merge(&b);
+        assert_eq!(merged.count(), whole.count());
+        assert!((merged.mean() - whole.mean()).abs() < 1e-10);
+        assert!((merged.variance() - whole.variance()).abs() < 1e-10);
+        assert_eq!(merged.min(), whole.min());
+        assert_eq!(merged.max(), whole.max());
+    }
+
+    #[test]
+    fn degenerate_cases() {
+        let s = RunningStats::new();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.variance(), 0.0);
+        let mut s1 = RunningStats::new();
+        s1.push(4.2);
+        assert_eq!(s1.mean(), 4.2);
+        assert_eq!(s1.variance(), 0.0);
+        assert_eq!(s1.min(), 4.2);
+        assert_eq!(s1.max(), 4.2);
+    }
+
+    #[test]
+    fn merge_with_empty() {
+        let mut a = RunningStats::new();
+        a.push(1.0);
+        a.push(3.0);
+        let empty = RunningStats::new();
+        let m = a.merge(&empty);
+        assert_eq!(m.count(), 2);
+        assert_eq!(m.mean(), 2.0);
+        let m2 = empty.merge(&a);
+        assert_eq!(m2.count(), 2);
+    }
+}

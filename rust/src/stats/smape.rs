@@ -1,0 +1,85 @@
+//! SMAPE — the paper's primary accuracy metric (Eq. 3):
+//!
+//! ```text
+//! SMAPE = Σ |ŷᵢ − yᵢ| / Σ (yᵢ + ŷᵢ)   ∈ [0, 1]
+//! ```
+//!
+//! assuming non-negative predictions; `smape_guarded` applies the paper's
+//! `ŷᵢ = max(ŷᵢ, ε)` guard first.
+
+/// Plain SMAPE per Eq. 3. Panics in debug builds on negative values.
+pub fn smape(truth: &[f64], pred: &[f64]) -> f64 {
+    assert_eq!(truth.len(), pred.len(), "smape arity");
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (&y, &yh) in truth.iter().zip(pred) {
+        debug_assert!(y >= 0.0, "smape expects non-negative truth");
+        num += (yh - y).abs();
+        den += y + yh;
+    }
+    if den == 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+/// SMAPE with the paper's ε-guard on predictions (`ŷ = max(ŷ, ε)`), which
+/// also makes negative model extrapolations safe to score.
+pub fn smape_guarded(truth: &[f64], pred: &[f64], eps: f64) -> f64 {
+    let guarded: Vec<f64> = pred.iter().map(|&p| p.max(eps)).collect();
+    smape(truth, &guarded)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_prediction_is_zero() {
+        let y = [1.0, 2.0, 3.0];
+        assert_eq!(smape(&y, &y), 0.0);
+    }
+
+    #[test]
+    fn worst_case_is_one() {
+        // truth 0 vs pred >0 everywhere -> num == den -> 1.0
+        let y = [0.0, 0.0];
+        let p = [5.0, 1.0];
+        assert_eq!(smape(&y, &p), 1.0);
+    }
+
+    #[test]
+    fn bounded_in_unit_interval() {
+        let y = [0.1, 4.0, 2.0, 7.5];
+        let p = [0.4, 1.0, 9.0, 7.0];
+        let s = smape(&y, &p);
+        assert!((0.0..=1.0).contains(&s));
+    }
+
+    #[test]
+    fn known_value() {
+        // |2-1|/(1+2) aggregated: num=1+1=2, den=3+7=10 -> 0.2
+        let y = [1.0, 4.0];
+        let p = [2.0, 3.0];
+        assert!((smape(&y, &p) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn guard_clips_negative_predictions() {
+        let y = [1.0];
+        let p = [-5.0];
+        let s = smape_guarded(&y, &p, 1e-6);
+        assert!(s <= 1.0 && s > 0.99);
+    }
+
+    #[test]
+    fn symmetric_in_scale() {
+        // SMAPE is scale-free: scaling truth+pred by k leaves it unchanged.
+        let y = [1.0, 2.0, 3.0];
+        let p = [1.5, 1.5, 3.5];
+        let y10: Vec<f64> = y.iter().map(|v| v * 10.0).collect();
+        let p10: Vec<f64> = p.iter().map(|v| v * 10.0).collect();
+        assert!((smape(&y, &p) - smape(&y10, &p10)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,161 @@
+//! Binary Search selection (paper §III-A.b).
+//!
+//! "It recursively compares a target value to the middle element of a
+//! sorted value list, and continues searching in either its first or second
+//! half." The sorted list is the limitation grid; the compared value is the
+//! runtime observed at the probed limitation vs. the synthetic target.
+//! Runtime decreases with the limit, so: observed runtime above the target
+//! → the limit was too small → search the upper half, and vice versa.
+
+use super::{ProfilingContext, SelectionStrategy};
+
+pub struct BinarySearch {
+    /// Current bracket over the grid (inclusive indices), established on
+    /// the first call from the full grid.
+    bracket: Option<(usize, usize)>,
+    /// The limit we asked for last, to locate its observation.
+    last_query: Option<f64>,
+}
+
+impl BinarySearch {
+    pub fn new() -> Self {
+        Self { bracket: None, last_query: None }
+    }
+
+    fn grid(ctx: &ProfilingContext) -> Vec<f64> {
+        let n = ((ctx.l_max - ctx.l_min) / ctx.delta).round() as usize;
+        (0..=n).map(|i| ctx.snap(ctx.l_min + i as f64 * ctx.delta)).collect()
+    }
+}
+
+impl Default for BinarySearch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SelectionStrategy for BinarySearch {
+    fn name(&self) -> &'static str {
+        "BS"
+    }
+
+    fn next_limit(&mut self, ctx: &ProfilingContext) -> Option<f64> {
+        let grid = Self::grid(ctx);
+        let (mut lo, mut hi) = self.bracket.unwrap_or((0, grid.len() - 1));
+        // Consume the observation of our previous query.
+        if let Some(q) = self.last_query.take() {
+            if let Some(obs) = ctx
+                .points
+                .iter()
+                .rev()
+                .find(|p| (p.limit - q).abs() < ctx.delta / 2.0)
+            {
+                let mid = grid.iter().position(|&g| (g - q).abs() < ctx.delta / 2.0);
+                if let Some(mid) = mid {
+                    if obs.runtime > ctx.target {
+                        // Too slow -> need more CPU -> upper half.
+                        lo = (mid + 1).min(hi);
+                    } else {
+                        // Fast enough -> tighten -> lower half.
+                        hi = mid.saturating_sub(1).max(lo);
+                    }
+                }
+            }
+        }
+        // Probe the middle of the bracket. The paper's BS is deliberately
+        // "comparably naive": when the exact midpoint was already profiled
+        // (e.g. by the initial parallel runs) it probes the *nearest*
+        // unprofiled grid point inside the bracket — it does not skip ahead.
+        if lo > hi {
+            return ctx.candidates().into_iter().next();
+        }
+        let mid = (lo + hi) / 2;
+        let cand = grid[mid];
+        let probe = if ctx.profiled(cand) {
+            let in_bracket: Vec<f64> = grid[lo..=hi]
+                .iter()
+                .copied()
+                .filter(|&g| !ctx.profiled(g))
+                .collect();
+            in_bracket
+                .into_iter()
+                .min_by(|a, b| {
+                    let da = (a - cand).abs();
+                    let db = (b - cand).abs();
+                    da.partial_cmp(&db).unwrap().then(a.partial_cmp(b).unwrap())
+                })
+                .or_else(|| ctx.nearest_candidate(cand))
+        } else {
+            Some(cand)
+        };
+        self.bracket = Some((lo, hi));
+        self.last_query = probe;
+        probe
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fit::{ProfilePoint, RuntimeModel};
+
+    fn ctx_with_target(target: f64) -> ProfilingContext {
+        let mut c = ProfilingContext::new(0.1, 4.0, 0.1);
+        c.target = target;
+        c.model = RuntimeModel::identity();
+        c
+    }
+
+    /// Ground truth runtime used in the tests: t(R) = 0.04/R.
+    fn rt(r: f64) -> f64 {
+        0.04 / r
+    }
+
+    #[test]
+    fn converges_to_target_neighbourhood() {
+        // Target = runtime at 0.2 CPU -> BS should walk toward ~0.2.
+        let target = rt(0.2);
+        let mut c = ctx_with_target(target);
+        let mut bs = BinarySearch::new();
+        let mut queried = Vec::new();
+        for _ in 0..6 {
+            let q = bs.next_limit(&c).unwrap();
+            queried.push(q);
+            c.points.push(ProfilePoint::new(q, rt(q)));
+        }
+        let last = *queried.last().unwrap();
+        assert!(last <= 0.5, "should approach the small-limit region: {queried:?}");
+        // Strictly halving: first query is the grid middle (~2.0).
+        assert!((queried[0] - 2.0).abs() < 0.11, "{queried:?}");
+    }
+
+    #[test]
+    fn never_repeats_a_point() {
+        let mut c = ctx_with_target(rt(1.0));
+        let mut bs = BinarySearch::new();
+        let mut seen = Vec::new();
+        for _ in 0..12 {
+            if let Some(q) = bs.next_limit(&c) {
+                assert!(
+                    !seen.iter().any(|&s: &f64| (s - q).abs() < 0.05),
+                    "repeat {q} in {seen:?}"
+                );
+                seen.push(q);
+                c.points.push(ProfilePoint::new(q, rt(q)));
+            }
+        }
+    }
+
+    #[test]
+    fn moves_up_when_too_slow() {
+        let mut c = ctx_with_target(rt(3.0)); // generous target
+        let mut bs = BinarySearch::new();
+        let q1 = bs.next_limit(&c).unwrap();
+        // Observe something much slower than the target.
+        c.points.push(ProfilePoint::new(q1, rt(q1)));
+        let q2 = bs.next_limit(&c).unwrap();
+        // rt(q1 ~2.0) = 0.02 > target(=0.0133)? rt(2.0)=0.02, target=0.0133:
+        // too slow -> move up.
+        assert!(q2 > q1, "{q1} -> {q2}");
+    }
+}

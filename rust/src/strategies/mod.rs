@@ -1,0 +1,155 @@
+//! Profiling-point selection strategies (paper §II-B, §III-A.b).
+//!
+//! All strategies operate on the limitation grid
+//! `L = {l_min, l_min+δ, …, l_max}` and are driven by a **synthetic
+//! target** runtime (the observed runtime of a deliberately small CPU
+//! limitation), so the exponential knee of the curve is explored without a
+//! user-specified runtime target.
+
+mod bo;
+mod bs;
+mod nms;
+mod random;
+pub mod synthetic;
+
+pub use bo::BayesianOpt;
+pub use bs::BinarySearch;
+pub use nms::NestedModeling;
+pub use random::RandomSelect;
+pub use synthetic::initial_limits;
+
+use crate::fit::{ProfilePoint, RuntimeModel};
+
+/// Everything a strategy may look at when choosing the next limitation.
+pub struct ProfilingContext {
+    pub l_min: f64,
+    pub l_max: f64,
+    pub delta: f64,
+    /// Synthetic target runtime (seconds per sample).
+    pub target: f64,
+    /// Points profiled so far, in profiling order.
+    pub points: Vec<ProfilePoint>,
+    /// Model fitted to `points` (nested family).
+    pub model: RuntimeModel,
+}
+
+impl ProfilingContext {
+    pub fn new(l_min: f64, l_max: f64, delta: f64) -> Self {
+        Self {
+            l_min,
+            l_max,
+            delta,
+            target: f64::NAN,
+            points: Vec::new(),
+            model: RuntimeModel::identity(),
+        }
+    }
+
+    /// Snap a raw limitation onto the grid, clamped to `[l_min, l_max]`.
+    pub fn snap(&self, r: f64) -> f64 {
+        let stepped = (r / self.delta).round() * self.delta;
+        // Re-quantize to kill float drift (0.30000000000000004 -> 0.3).
+        let q = (stepped / self.delta).round() * self.delta;
+        q.clamp(self.l_min, self.l_max)
+    }
+
+    /// Whether a grid point was already profiled (within grid tolerance).
+    pub fn profiled(&self, r: f64) -> bool {
+        self.points.iter().any(|p| (p.limit - r).abs() < self.delta / 2.0)
+    }
+
+    /// All unprofiled grid points, ascending.
+    pub fn candidates(&self) -> Vec<f64> {
+        let n = ((self.l_max - self.l_min) / self.delta).round() as usize;
+        (0..=n)
+            .map(|i| self.snap(self.l_min + i as f64 * self.delta))
+            .filter(|&r| !self.profiled(r))
+            .collect()
+    }
+
+    /// Nearest unprofiled grid point to `r` (ties -> smaller limit).
+    pub fn nearest_candidate(&self, r: f64) -> Option<f64> {
+        self.candidates()
+            .into_iter()
+            .min_by(|a, b| {
+                let da = (a - r).abs();
+                let db = (b - r).abs();
+                da.partial_cmp(&db)
+                    .unwrap()
+                    .then(a.partial_cmp(b).unwrap())
+            })
+    }
+}
+
+/// A profiling-point selection strategy.
+pub trait SelectionStrategy {
+    /// Display name used in figures/CSV.
+    fn name(&self) -> &'static str;
+    /// Choose the next CPU limitation to profile; `None` when exhausted.
+    fn next_limit(&mut self, ctx: &ProfilingContext) -> Option<f64>;
+    /// Whether the profiler should warm-start model fits from the previous
+    /// step's parameters (the NMS reuse, §III-B.3).
+    fn warm_start(&self) -> bool {
+        false
+    }
+}
+
+/// Construct a strategy by name (CLI/bench plumbing).
+pub fn by_name(name: &str, seed: u64) -> Option<Box<dyn SelectionStrategy>> {
+    match name.to_ascii_lowercase().as_str() {
+        "bs" | "binary" | "binarysearch" => Some(Box::new(BinarySearch::new())),
+        "bo" | "bayesian" => Some(Box::new(BayesianOpt::new())),
+        "nms" | "nested" => Some(Box::new(NestedModeling::new())),
+        "random" => Some(Box::new(RandomSelect::new(seed))),
+        _ => None,
+    }
+}
+
+/// The four strategies of the final evaluation (Fig. 7).
+pub const STRATEGY_NAMES: [&str; 4] = ["NMS", "BS", "BO", "Random"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> ProfilingContext {
+        ProfilingContext::new(0.1, 4.0, 0.1)
+    }
+
+    #[test]
+    fn snap_quantizes_to_grid() {
+        let c = ctx();
+        assert!((c.snap(0.234) - 0.2).abs() < 1e-9);
+        assert!((c.snap(3.99) - 4.0).abs() < 1e-9);
+        assert!((c.snap(0.0) - 0.1).abs() < 1e-9); // clamped to l_min
+        assert!((c.snap(9.0) - 4.0).abs() < 1e-9); // clamped to l_max
+    }
+
+    #[test]
+    fn candidates_exclude_profiled() {
+        let mut c = ctx();
+        assert_eq!(c.candidates().len(), 40);
+        c.points.push(ProfilePoint::new(0.2, 1.0));
+        c.points.push(ProfilePoint::new(2.0, 0.1));
+        let cands = c.candidates();
+        assert_eq!(cands.len(), 38);
+        assert!(!cands.iter().any(|&r| (r - 0.2).abs() < 1e-9));
+        assert!(!cands.iter().any(|&r| (r - 2.0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn nearest_candidate_skips_profiled() {
+        let mut c = ctx();
+        c.points.push(ProfilePoint::new(0.5, 1.0));
+        let got = c.nearest_candidate(0.5).unwrap();
+        assert!((got - 0.4).abs() < 1e-9, "tie -> smaller, got {got}");
+    }
+
+    #[test]
+    fn by_name_builds_all() {
+        for n in ["bs", "bo", "nms", "random"] {
+            assert!(by_name(n, 1).is_some(), "{n}");
+        }
+        assert!(by_name("hillclimb", 1).is_none());
+    }
+}

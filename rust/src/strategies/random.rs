@@ -1,0 +1,66 @@
+//! Random selection — the control strategy of the final evaluation
+//! (§III-B.5): "randomly chooses profiling points after the initial
+//! parallel ones".
+
+use super::{ProfilingContext, SelectionStrategy};
+use crate::util::Rng;
+
+pub struct RandomSelect {
+    rng: Rng,
+}
+
+impl RandomSelect {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Rng::new(seed) }
+    }
+}
+
+impl SelectionStrategy for RandomSelect {
+    fn name(&self) -> &'static str {
+        "Random"
+    }
+
+    fn next_limit(&mut self, ctx: &ProfilingContext) -> Option<f64> {
+        let cands = ctx.candidates();
+        if cands.is_empty() {
+            None
+        } else {
+            Some(*self.rng.choose(&cands))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fit::ProfilePoint;
+
+    #[test]
+    fn picks_unprofiled_grid_points() {
+        let mut c = ProfilingContext::new(0.1, 1.0, 0.1);
+        c.points.push(ProfilePoint::new(0.5, 1.0));
+        let mut r = RandomSelect::new(42);
+        for _ in 0..50 {
+            let q = r.next_limit(&c).unwrap();
+            assert!((q - 0.5).abs() > 0.05, "picked profiled point");
+            assert!((0.1..=1.0).contains(&q));
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let c = ProfilingContext::new(0.1, 4.0, 0.1);
+        let mut a = RandomSelect::new(7);
+        let mut b = RandomSelect::new(7);
+        for _ in 0..10 {
+            assert_eq!(a.next_limit(&c), b.next_limit(&c));
+        }
+    }
+
+    #[test]
+    fn exhausts_to_none() {
+        let mut c = ProfilingContext::new(0.1, 0.1, 0.1);
+        c.points.push(ProfilePoint::new(0.1, 1.0));
+        assert!(RandomSelect::new(1).next_limit(&c).is_none());
+    }
+}

@@ -1,0 +1,153 @@
+//! Synthetic targets + initial parallel profiling placement (Algorithm 1).
+//!
+//! The limitation `l_p = max(0.2, l_max · p)` is profiled first; its
+//! observed runtime becomes the *synthetic target* that steers all later
+//! selections. The initial `n ∈ {2,3,4}` runs execute in parallel, so their
+//! limitations must sum to at most `l_max` (Eq. 2).
+
+/// Algorithm 1: the initial CPU limitations to profile in parallel.
+///
+/// Returns limits snapped to the `delta` grid, deduplicated, each ≥
+/// `l_min`, and with `Σ ≤ l_max`. On machines too small for the requested
+/// parallelism (the paper's 1-core n1 case) fewer than `n` limits are
+/// returned.
+pub fn initial_limits(p: f64, n: usize, l_min: f64, l_max: f64, delta: f64) -> Vec<f64> {
+    assert!((2..=4).contains(&n), "paper evaluates n in {{2,3,4}}");
+    let lp = (l_max * p).max(0.2);
+    let lm = (l_min + l_max) / 2.0;
+    let lq = (lp + l_max) / 4.0;
+    let raw: Vec<f64> = match n {
+        2 => vec![lp, l_max - lp],
+        3 if l_max > 1.0 => vec![lp, lm, l_max - lm - lp],
+        3 => vec![lp, lq, l_max / 2.0], // "comfort small CPUs"
+        _ => {
+            let lqm = (lp + lq) / 2.0;
+            vec![lp, lq, lqm, l_max - lqm - lq - lp]
+        }
+    };
+    sanitize(raw, l_min, l_max, delta)
+}
+
+/// Snap to grid, drop non-positive/duplicate entries, and enforce the
+/// parallel-capacity constraint `Σ ≤ l_max` by dropping the largest
+/// entries first (the small ones carry the synthetic-target information).
+fn sanitize(raw: Vec<f64>, l_min: f64, l_max: f64, delta: f64) -> Vec<f64> {
+    let snap = |r: f64| ((r / delta).round() * delta * 1e9).round() / 1e9;
+    let mut out: Vec<f64> = Vec::new();
+    for r in raw {
+        let s = snap(r).clamp(0.0, l_max);
+        if s >= l_min - 1e-9 && !out.iter().any(|&x| (x - s).abs() < delta / 2.0) {
+            out.push(s);
+        }
+    }
+    // Capacity: drop largest while the sum exceeds l_max.
+    out.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    while out.len() > 1 && out.iter().sum::<f64>() > l_max + 1e-9 {
+        out.pop();
+    }
+    out
+}
+
+/// The synthetic-target percentage sweep of the evaluation (§III-A.c):
+/// p ∈ {2.5%, 5%, …, 15%}.
+pub const TARGET_PERCENTAGES: [f64; 6] = [0.025, 0.05, 0.075, 0.10, 0.125, 0.15];
+
+/// Initial-parallel-run counts of the evaluation.
+pub const PARALLEL_RUNS: [usize; 3] = [2, 3, 4];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sum(v: &[f64]) -> f64 {
+        v.iter().sum()
+    }
+
+    #[test]
+    fn n2_on_pi4_matches_algorithm1() {
+        // l_max=4, p=5% -> lp = max(0.2, 0.2) = 0.2; {0.2, 3.8}.
+        let l = initial_limits(0.05, 2, 0.1, 4.0, 0.1);
+        assert_eq!(l, vec![0.2, 3.8]);
+        assert!(sum(&l) <= 4.0 + 1e-9);
+    }
+
+    #[test]
+    fn n3_large_machine_uses_middle_value() {
+        // l_max=8, p=2.5% -> lp=0.2, lm=4.05->4.0(snap), third=8-4.05-0.2=3.75->3.8
+        let l = initial_limits(0.025, 3, 0.1, 8.0, 0.1);
+        assert_eq!(l.len(), 3);
+        assert!((l[0] - 0.2).abs() < 1e-9);
+        assert!(sum(&l) <= 8.0 + 1e-9);
+    }
+
+    #[test]
+    fn n3_small_machine_comforts_small_cpus() {
+        // n1: l_max=1 -> {lp=0.2, lq=0.3, 0.5}, sum=1.0.
+        let l = initial_limits(0.05, 3, 0.1, 1.0, 0.1);
+        assert_eq!(l, vec![0.2, 0.3, 0.5]);
+        assert!((sum(&l) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn n4_on_one_core_degrades_gracefully() {
+        // Paper: four parallel runs are not possible on n1; we return fewer.
+        let l = initial_limits(0.05, 4, 0.1, 1.0, 0.1);
+        assert!(l.len() < 4, "{l:?}");
+        assert!(sum(&l) <= 1.0 + 1e-9);
+        assert!(l.contains(&0.2), "synthetic target survives: {l:?}");
+    }
+
+    #[test]
+    fn n4_on_big_machine_has_four_unique() {
+        let l = initial_limits(0.05, 4, 0.1, 16.0, 0.1);
+        assert_eq!(l.len(), 4);
+        assert!(sum(&l) <= 16.0 + 1e-9);
+        for w in l.windows(2) {
+            assert!(w[1] > w[0], "sorted unique: {l:?}");
+        }
+    }
+
+    #[test]
+    fn synthetic_target_floor_is_point_two() {
+        // Paper §III-A.c: 0.1 is excluded to avoid prolonging profiling;
+        // limits 2.5%..10% of 2 cores all floor at 0.2.
+        for p in [0.025, 0.05, 0.075, 0.10] {
+            let l = initial_limits(p, 2, 0.1, 2.0, 0.1);
+            assert!((l[0] - 0.2).abs() < 1e-9, "p={p}: {l:?}");
+        }
+        // 12.5% and 15% of 2 cores -> 0.25/0.3 -> snap 0.3 (paper: "0.3 CPU
+        // for two available cores").
+        for p in [0.125, 0.15] {
+            let l = initial_limits(p, 2, 0.1, 2.0, 0.1);
+            assert!((l[0] - 0.3).abs() < 1e-9, "p={p}: {l:?}");
+        }
+    }
+
+    #[test]
+    fn e216_lowest_target_is_04() {
+        // Paper: e216 best fitted with target at 2.5% of 16 cores = 0.4.
+        let l = initial_limits(0.025, 3, 0.1, 16.0, 0.1);
+        assert!((l[0] - 0.4).abs() < 1e-9, "{l:?}");
+    }
+
+    #[test]
+    fn all_sweep_configs_satisfy_eq2() {
+        use crate::simulator::NODES;
+        for node in NODES {
+            for &p in &TARGET_PERCENTAGES {
+                for &n in &PARALLEL_RUNS {
+                    let l = initial_limits(p, n, 0.1, node.cores, 0.1);
+                    assert!(!l.is_empty(), "{} p={p} n={n}", node.name);
+                    assert!(
+                        sum(&l) <= node.cores + 1e-9,
+                        "{} p={p} n={n}: {l:?}",
+                        node.name
+                    );
+                    for &x in &l {
+                        assert!(x >= 0.1 - 1e-9);
+                    }
+                }
+            }
+        }
+    }
+}

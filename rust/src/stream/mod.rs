@@ -1,0 +1,237 @@
+//! Sensor-stream substrate: multi-metric sample generation and arrival
+//! processes.
+//!
+//! The paper's jobs consume "a dataset of 10,000 samples with 28 monitoring
+//! metrics" (§III-A.a). The generator synthesizes plausible monitoring
+//! series — per-metric trend + seasonality + noise + occasional anomaly
+//! bursts — and the arrival processes model fixed and varying sample
+//! frequencies (the varying case motivates adaptive resource adjustment).
+
+use crate::util::Rng;
+
+/// Number of monitoring metrics per sample (matches `python/compile/config.py`).
+pub const METRICS: usize = 28;
+/// Default dataset length (paper §III-A.a).
+pub const DEFAULT_SAMPLES: usize = 10_000;
+
+/// Per-metric signal parameters.
+#[derive(Clone, Debug)]
+struct MetricGen {
+    base: f64,
+    trend: f64,
+    amp1: f64,
+    freq1: f64,
+    phase1: f64,
+    amp2: f64,
+    freq2: f64,
+    phase2: f64,
+    noise: f64,
+}
+
+/// Deterministic multi-metric sensor stream generator.
+pub struct SensorStream {
+    metrics: Vec<MetricGen>,
+    rng: Rng,
+    t: usize,
+    /// Steps remaining in the current anomaly burst.
+    burst_left: usize,
+    burst_scale: f64,
+    /// Probability of starting an anomaly burst at any step.
+    pub anomaly_rate: f64,
+}
+
+impl SensorStream {
+    pub fn new(seed: u64) -> Self {
+        Self::with_metrics(seed, METRICS)
+    }
+
+    pub fn with_metrics(seed: u64, n_metrics: usize) -> Self {
+        let mut rng = Rng::new(seed);
+        let metrics = (0..n_metrics)
+            .map(|_| MetricGen {
+                base: rng.uniform(-0.5, 0.5),
+                trend: rng.uniform(-5e-5, 5e-5),
+                amp1: rng.uniform(0.3, 1.0),
+                freq1: rng.uniform(0.005, 0.05),
+                phase1: rng.uniform(0.0, std::f64::consts::TAU),
+                amp2: rng.uniform(0.05, 0.3),
+                freq2: rng.uniform(0.05, 0.4),
+                phase2: rng.uniform(0.0, std::f64::consts::TAU),
+                noise: rng.uniform(0.01, 0.05),
+            })
+            .collect();
+        Self {
+            metrics,
+            rng,
+            t: 0,
+            burst_left: 0,
+            burst_scale: 0.0,
+            anomaly_rate: 0.0,
+        }
+    }
+
+    /// Enable random anomaly bursts (used by the e2e serving example).
+    pub fn with_anomalies(mut self, rate: f64) -> Self {
+        self.anomaly_rate = rate;
+        self
+    }
+
+    /// Whether the generator is currently inside an anomaly burst.
+    pub fn in_anomaly(&self) -> bool {
+        self.burst_left > 0
+    }
+
+    /// Produce the next sample (f32, ready for the PJRT artifacts).
+    pub fn next_sample(&mut self) -> Vec<f32> {
+        if self.burst_left == 0 && self.anomaly_rate > 0.0 {
+            if self.rng.next_f64() < self.anomaly_rate {
+                self.burst_left = 3 + self.rng.below(8);
+                self.burst_scale = self.rng.uniform(4.0, 9.0);
+            }
+        } else if self.burst_left > 0 {
+            self.burst_left -= 1;
+        }
+        let t = self.t as f64;
+        self.t += 1;
+        let anomaly = if self.burst_left > 0 { self.burst_scale } else { 0.0 };
+        self.metrics
+            .iter()
+            .map(|m| {
+                let v = m.base
+                    + m.trend * t
+                    + m.amp1 * (m.freq1 * t + m.phase1).sin()
+                    + m.amp2 * (m.freq2 * t + m.phase2).sin()
+                    + m.noise * self.rng.normal()
+                    + anomaly * m.noise * 20.0;
+                v as f32
+            })
+            .collect()
+    }
+
+    /// Generate a flat `[n * metrics]` buffer (row-major) — the shape the
+    /// chunked artifacts consume.
+    pub fn generate(&mut self, n: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(n * self.metrics.len());
+        for _ in 0..n {
+            out.extend(self.next_sample());
+        }
+        out
+    }
+
+    pub fn n_metrics(&self) -> usize {
+        self.metrics.len()
+    }
+}
+
+/// Sample arrival process: when does the next sample arrive?
+#[derive(Clone, Debug)]
+pub enum ArrivalProcess {
+    /// Fixed frequency (Hz).
+    Fixed(f64),
+    /// Sinusoidally varying frequency between `lo` and `hi` Hz with the
+    /// given period (in samples) — the paper's "changing sample arrival
+    /// rates" scenario.
+    Varying { lo: f64, hi: f64, period: f64 },
+}
+
+impl ArrivalProcess {
+    /// Arrival rate (Hz) at sample index `i`.
+    pub fn rate_at(&self, i: usize) -> f64 {
+        match self {
+            ArrivalProcess::Fixed(hz) => *hz,
+            ArrivalProcess::Varying { lo, hi, period } => {
+                let mid = 0.5 * (lo + hi);
+                let amp = 0.5 * (hi - lo);
+                mid + amp * (std::f64::consts::TAU * i as f64 / period).sin()
+            }
+        }
+    }
+
+    /// Inter-arrival gap before sample `i` (seconds).
+    pub fn gap_at(&self, i: usize) -> f64 {
+        1.0 / self.rate_at(i)
+    }
+
+    /// The tightest per-sample runtime budget over the whole horizon —
+    /// the just-in-time constraint the adjuster must satisfy.
+    pub fn min_gap(&self, horizon: usize) -> f64 {
+        (0..horizon).map(|i| self.gap_at(i)).fold(f64::INFINITY, f64::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = SensorStream::new(42);
+        let mut b = SensorStream::new(42);
+        assert_eq!(a.generate(10), b.generate(10));
+    }
+
+    #[test]
+    fn sample_has_28_metrics() {
+        let mut s = SensorStream::new(1);
+        assert_eq!(s.next_sample().len(), METRICS);
+        assert_eq!(s.n_metrics(), 28);
+    }
+
+    #[test]
+    fn values_are_bounded_and_finite() {
+        let mut s = SensorStream::new(2);
+        for _ in 0..1000 {
+            for v in s.next_sample() {
+                assert!(v.is_finite());
+                assert!(v.abs() < 10.0, "calm stream should stay small: {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn anomalies_create_outliers() {
+        let mut s = SensorStream::new(3).with_anomalies(0.01);
+        let mut max_abs: f32 = 0.0;
+        let mut saw_anomaly = false;
+        for _ in 0..2000 {
+            let x = s.next_sample();
+            if s.in_anomaly() {
+                saw_anomaly = true;
+            }
+            for v in x {
+                max_abs = max_abs.max(v.abs());
+            }
+        }
+        assert!(saw_anomaly);
+        assert!(max_abs > 2.0, "bursts should push values out: {max_abs}");
+    }
+
+    #[test]
+    fn generate_is_row_major() {
+        let mut a = SensorStream::new(7);
+        let flat = a.generate(3);
+        let mut b = SensorStream::new(7);
+        let s0 = b.next_sample();
+        let s1 = b.next_sample();
+        assert_eq!(&flat[..METRICS], &s0[..]);
+        assert_eq!(&flat[METRICS..2 * METRICS], &s1[..]);
+    }
+
+    #[test]
+    fn varying_arrival_oscillates() {
+        let p = ArrivalProcess::Varying { lo: 5.0, hi: 20.0, period: 100.0 };
+        let rates: Vec<f64> = (0..100).map(|i| p.rate_at(i)).collect();
+        let max = rates.iter().cloned().fold(f64::MIN, f64::max);
+        let min = rates.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max > 19.0 && min < 6.0);
+        // Budget = 1/max rate.
+        assert!((p.min_gap(100) - 1.0 / max).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fixed_arrival_constant() {
+        let p = ArrivalProcess::Fixed(10.0);
+        assert_eq!(p.rate_at(0), 10.0);
+        assert_eq!(p.gap_at(123), 0.1);
+    }
+}

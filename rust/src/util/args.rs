@@ -1,0 +1,132 @@
+//! Tiny CLI argument parser (no `clap` in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable) — excludes argv[0].
+    pub fn parse_from<I: IntoIterator<Item = String>>(items: I) -> Self {
+        let mut args = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(item) = it.next() {
+            if let Some(rest) = item.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.options.insert(rest.to_string(), v);
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else {
+                args.positional.push(item);
+            }
+        }
+        args
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Self {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    /// True when `--name` was present — either as a bare flag or (because a
+    /// schema-less parser binds `--name value` greedily) as an option.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.options.contains_key(name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
+        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    /// Comma-separated list option (empty items dropped).
+    pub fn opt_list(&self, name: &str) -> Option<Vec<String>> {
+        self.opt(name).map(|s| {
+            s.split(',')
+                .map(|p| p.trim().to_string())
+                .filter(|p| !p.is_empty())
+                .collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("profile out.csv --node pi4 --algo=arima --verbose");
+        assert_eq!(a.positional, vec!["profile", "out.csv"]);
+        assert_eq!(a.opt("node"), Some("pi4"));
+        assert_eq!(a.opt("algo"), Some("arima"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn greedy_value_binding_still_counts_as_flag() {
+        // Schema-less ambiguity: `--verbose out.csv` binds greedily; flag()
+        // still reports presence.
+        let a = parse("profile --verbose out.csv");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["profile"]);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse("--p 0.05 --steps 6 --seed 42");
+        assert_eq!(a.opt_f64("p", 0.1), 0.05);
+        assert_eq!(a.opt_usize("steps", 1), 6);
+        assert_eq!(a.opt_u64("seed", 0), 42);
+        assert_eq!(a.opt_f64("missing", 9.0), 9.0);
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse("--nodes pi4,wally, asok");
+        assert_eq!(a.opt_list("nodes").unwrap(), vec!["pi4", "wally"]);
+        let b = parse("--nodes=pi4,wally,asok");
+        assert_eq!(b.opt_list("nodes").unwrap(), vec!["pi4", "wally", "asok"]);
+    }
+
+    #[test]
+    fn negative_number_values() {
+        // "--key value" where value starts with '-' but not '--'.
+        let a = parse("--offset -3.5");
+        assert_eq!(a.opt_f64("offset", 0.0), -3.5);
+    }
+}

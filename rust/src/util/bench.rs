@@ -1,0 +1,158 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Usage inside a `harness = false` bench target:
+//!
+//! ```ignore
+//! let mut b = Bench::new("fit/lm_5pt");
+//! b.iter(|| fit_once(&pts));
+//! println!("{}", b.report());
+//! ```
+//!
+//! Runs a calibration phase to pick an iteration count targeting
+//! ~`target_time`, then measures batches and reports mean/p50/p95 with a
+//! simple MAD-based outlier note. Results can also be dumped as CSV rows so
+//! EXPERIMENTS.md §Perf tables are regenerable.
+
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    name: String,
+    target_time: Duration,
+    samples: Vec<f64>, // seconds per iteration
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            target_time: Duration::from_millis(300),
+            samples: Vec::new(),
+        }
+    }
+
+    pub fn with_target_time(mut self, d: Duration) -> Self {
+        self.target_time = d;
+        self
+    }
+
+    /// Measure `f` repeatedly; stores per-iteration seconds.
+    pub fn iter<T, F: FnMut() -> T>(&mut self, mut f: F) {
+        // Calibrate: how many iterations fit into ~10ms?
+        let mut n = 1u64;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..n {
+                black_box(f());
+            }
+            let dt = t0.elapsed();
+            if dt > Duration::from_millis(10) || n > 1 << 24 {
+                break;
+            }
+            n *= 4;
+        }
+        // Measure batches until target_time is spent.
+        let t_all = Instant::now();
+        while t_all.elapsed() < self.target_time {
+            let t0 = Instant::now();
+            for _ in 0..n {
+                black_box(f());
+            }
+            let per_iter = t0.elapsed().as_secs_f64() / n as f64;
+            self.samples.push(per_iter);
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((s.len() - 1) as f64 * p).round() as usize;
+        s[idx]
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} mean {}  p50 {}  p95 {}  ({} batches)",
+            self.name,
+            fmt_time(self.mean()),
+            fmt_time(self.percentile(0.50)),
+            fmt_time(self.percentile(0.95)),
+            self.samples.len()
+        )
+    }
+
+    /// `name,mean_ns,p50_ns,p95_ns` CSV row.
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{:.1},{:.1},{:.1}",
+            self.name,
+            self.mean() * 1e9,
+            self.percentile(0.50) * 1e9,
+            self.percentile(0.95) * 1e9
+        )
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+pub fn fmt_time(secs: f64) -> String {
+    if secs.is_nan() {
+        "n/a".to_string()
+    } else if secs < 1e-6 {
+        format!("{:7.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:7.2}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:7.2}ms", secs * 1e3)
+    } else {
+        format!("{:7.3}s ", secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bench::new("noop").with_target_time(Duration::from_millis(30));
+        let mut acc = 0u64;
+        b.iter(|| {
+            acc = acc.wrapping_add(1);
+            acc
+        });
+        assert!(b.mean() > 0.0);
+        assert!(!b.samples.is_empty());
+        assert!(b.report().contains("noop"));
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut b = Bench::new("x").with_target_time(Duration::from_millis(30));
+        b.iter(|| std::hint::black_box(3.0f64).sqrt());
+        assert!(b.percentile(0.5) <= b.percentile(0.95) * 1.0001);
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(5e-9).contains("ns"));
+        assert!(fmt_time(5e-6).contains("µs"));
+        assert!(fmt_time(5e-3).contains("ms"));
+        assert!(fmt_time(5.0).contains("s "));
+    }
+}

@@ -1,0 +1,19 @@
+//! Utility substrates: PRNG, JSON, CSV, tables, CLI args, logging, bench.
+//!
+//! Everything here replaces crates (`rand`, `serde`, `clap`, `criterion`,
+//! `env_logger`) that are unavailable in the offline vendor set — see
+//! DESIGN.md §5 (substitutions).
+
+pub mod args;
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod table;
+
+pub use args::Args;
+pub use csv::CsvWriter;
+pub use json::Json;
+pub use rng::Rng;
+pub use table::Table;

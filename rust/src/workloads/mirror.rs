@@ -1,0 +1,384 @@
+//! Pure-Rust mirrors of the three IFTM step functions.
+//!
+//! These reproduce `python/compile/model.py` exactly (same constants, same
+//! f32 arithmetic order where it matters) and serve two purposes:
+//!   1. cross-check oracle for the PJRT artifacts (integration tests assert
+//!      PJRT ≈ mirror over long streams), and
+//!   2. an artifact-free job backend for tests and quick experiments.
+
+use crate::runtime::StepOutcome;
+
+/// EWMA smoothing factor (== config.EWMA_ALPHA).
+pub const EWMA_ALPHA: f32 = 0.05;
+/// Sigma multiplier of the threshold model (== config.SIGMA_K).
+pub const SIGMA_K: f32 = 3.0;
+/// NLMS step size (== config.AR_MU).
+pub const AR_MU: f32 = 0.05;
+
+/// IFTM threshold model state (ewma mean, ewma var).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ThresholdModel {
+    pub mean: f32,
+    pub var: f32,
+}
+
+impl ThresholdModel {
+    /// One update; returns (threshold-in-effect, flag).
+    pub fn step(&mut self, err: f32) -> (f32, f32) {
+        let thr = self.mean + SIGMA_K * self.var.max(1e-12).sqrt();
+        let flag = if err > thr { 1.0 } else { 0.0 };
+        let new_mean = (1.0 - EWMA_ALPHA) * self.mean + EWMA_ALPHA * err;
+        let diff = err - new_mean;
+        let new_var = (1.0 - EWMA_ALPHA) * self.var + EWMA_ALPHA * diff * diff;
+        self.mean = new_mean;
+        self.var = new_var;
+        (thr, flag)
+    }
+}
+
+/// Online AR(p) with NLMS updates — mirrors `model.arima_step`.
+pub struct ArimaMirror {
+    p: usize,
+    m: usize,
+    /// [P, M] row-major.
+    coeffs: Vec<f32>,
+    /// [P, M] row-major, row 0 oldest.
+    window: Vec<f32>,
+    tm: ThresholdModel,
+}
+
+impl ArimaMirror {
+    pub fn new(p: usize, m: usize) -> Self {
+        let mut coeffs = vec![0.0f32; p * m];
+        // Persistence init: last row = 1.
+        for j in 0..m {
+            coeffs[(p - 1) * m + j] = 1.0;
+        }
+        Self { p, m, coeffs, window: vec![0.0; p * m], tm: ThresholdModel::default() }
+    }
+
+    /// Construct from artifact init tensors (coeffs, window, tm).
+    pub fn from_init(p: usize, m: usize, init: &[Vec<f32>]) -> Self {
+        Self {
+            p,
+            m,
+            coeffs: init[0].clone(),
+            window: init[1].clone(),
+            tm: ThresholdModel { mean: init[2][0], var: init[2][1] },
+        }
+    }
+
+    pub fn step(&mut self, x: &[f32]) -> StepOutcome {
+        assert_eq!(x.len(), self.m);
+        let (p, m) = (self.p, self.m);
+        // pred[j] = Σ_i coeffs[i,j] * window[i,j]
+        let mut pred = vec![0.0f32; m];
+        for i in 0..p {
+            for j in 0..m {
+                pred[j] += self.coeffs[i * m + j] * self.window[i * m + j];
+            }
+        }
+        let mut abs_sum = 0.0f32;
+        let mut resid = vec![0.0f32; m];
+        for j in 0..m {
+            resid[j] = x[j] - pred[j];
+            abs_sum += resid[j].abs();
+        }
+        let err = abs_sum / m as f32;
+        // NLMS per-metric normalized update.
+        let mut norm = vec![1e-6f32; m];
+        for i in 0..p {
+            for j in 0..m {
+                let w = self.window[i * m + j];
+                norm[j] += w * w;
+            }
+        }
+        for i in 0..p {
+            for j in 0..m {
+                self.coeffs[i * m + j] +=
+                    AR_MU * self.window[i * m + j] * (resid[j] / norm[j]);
+            }
+        }
+        // Slide window.
+        self.window.copy_within(m.., 0);
+        let off = (p - 1) * m;
+        self.window[off..off + m].copy_from_slice(x);
+        let (thr, flag) = self.tm.step(err);
+        StepOutcome { err, thr, flag }
+    }
+}
+
+/// Nearest-centroid Birch mirror — mirrors `model.birch_step`.
+pub struct BirchMirror {
+    k: usize,
+    m: usize,
+    /// [K, M] row-major.
+    centroids: Vec<f32>,
+    counts: Vec<f32>,
+    tm: ThresholdModel,
+}
+
+impl BirchMirror {
+    pub fn from_init(k: usize, m: usize, init: &[Vec<f32>]) -> Self {
+        Self {
+            k,
+            m,
+            centroids: init[0].clone(),
+            counts: init[1].clone(),
+            tm: ThresholdModel { mean: init[2][0], var: init[2][1] },
+        }
+    }
+
+    pub fn step(&mut self, x: &[f32]) -> StepOutcome {
+        assert_eq!(x.len(), self.m);
+        let (k, m) = (self.k, self.m);
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for i in 0..k {
+            let mut d = 0.0f32;
+            for j in 0..m {
+                let diff = x[j] - self.centroids[i * m + j];
+                d += diff * diff;
+            }
+            if d < best_d {
+                best_d = d;
+                best = i;
+            }
+        }
+        let err = best_d.max(0.0).sqrt();
+        let lr = 1.0 / (self.counts[best] + 1.0);
+        for j in 0..m {
+            let c = self.centroids[best * m + j];
+            self.centroids[best * m + j] = c + lr * (x[j] - c);
+        }
+        self.counts[best] += 1.0;
+        let (thr, flag) = self.tm.step(err);
+        StepOutcome { err, thr, flag }
+    }
+}
+
+/// Two stacked LSTM cells + linear readout — mirrors `model.lstm_step`.
+pub struct LstmMirror {
+    m: usize,
+    h: usize,
+    // Params, row-major as written by aot.py.
+    wx1: Vec<f32>, // [M, 4H]
+    wh1: Vec<f32>, // [H, 4H]
+    b1: Vec<f32>,  // [4H]
+    wx2: Vec<f32>, // [H, 4H]
+    wh2: Vec<f32>, // [H, 4H]
+    b2: Vec<f32>,  // [4H]
+    wo: Vec<f32>,  // [H, M]
+    bo: Vec<f32>,  // [M]
+    // State.
+    h1: Vec<f32>,
+    c1: Vec<f32>,
+    h2: Vec<f32>,
+    c2: Vec<f32>,
+    tm: ThresholdModel,
+    // Scratch (avoid per-step allocation on the hot path).
+    gates: Vec<f32>,
+}
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+impl LstmMirror {
+    pub fn from_init(m: usize, h: usize, init: &[Vec<f32>]) -> Self {
+        Self {
+            m,
+            h,
+            wx1: init[0].clone(),
+            wh1: init[1].clone(),
+            b1: init[2].clone(),
+            wx2: init[3].clone(),
+            wh2: init[4].clone(),
+            b2: init[5].clone(),
+            wo: init[6].clone(),
+            bo: init[7].clone(),
+            h1: init[8].clone(),
+            c1: init[9].clone(),
+            h2: init[10].clone(),
+            c2: init[11].clone(),
+            tm: ThresholdModel { mean: init[12][0], var: init[12][1] },
+            gates: vec![0.0; 4 * h],
+        }
+    }
+
+    /// `gates = x @ Wx + h @ Wh + b`; then the cell update.
+    fn cell(
+        gates: &mut [f32],
+        x: &[f32],
+        wx: &[f32],
+        hs: &mut Vec<f32>,
+        cs: &mut [f32],
+        wh: &[f32],
+        b: &[f32],
+        hidden: usize,
+    ) {
+        let g4 = 4 * hidden;
+        gates.copy_from_slice(b);
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &wx[i * g4..(i + 1) * g4];
+            for (g, &w) in gates.iter_mut().zip(row) {
+                *g += xi * w;
+            }
+        }
+        for (i, &hi) in hs.iter().enumerate() {
+            if hi == 0.0 {
+                continue;
+            }
+            let row = &wh[i * g4..(i + 1) * g4];
+            for (g, &w) in gates.iter_mut().zip(row) {
+                *g += hi * w;
+            }
+        }
+        for j in 0..hidden {
+            let i_g = sigmoid(gates[j]);
+            let f_g = sigmoid(gates[hidden + j]);
+            let g_g = gates[2 * hidden + j].tanh();
+            let o_g = sigmoid(gates[3 * hidden + j]);
+            let c_new = f_g * cs[j] + i_g * g_g;
+            cs[j] = c_new;
+            hs[j] = o_g * c_new.tanh();
+        }
+    }
+
+    pub fn step(&mut self, x: &[f32]) -> StepOutcome {
+        assert_eq!(x.len(), self.m);
+        let (m, h) = (self.m, self.h);
+        // Forecast from the previous layer-2 state.
+        let mut abs_sum = 0.0f32;
+        for j in 0..m {
+            let mut pred = self.bo[j];
+            for i in 0..h {
+                pred += self.h2[i] * self.wo[i * m + j];
+            }
+            abs_sum += (pred - x[j]).abs();
+        }
+        let err = abs_sum / m as f32;
+        // Advance the stacked cells.
+        let mut gates = std::mem::take(&mut self.gates);
+        Self::cell(&mut gates, x, &self.wx1, &mut self.h1, &mut self.c1, &self.wh1, &self.b1, h);
+        let h1_snapshot = self.h1.clone();
+        Self::cell(
+            &mut gates,
+            &h1_snapshot,
+            &self.wx2,
+            &mut self.h2,
+            &mut self.c2,
+            &self.wh2,
+            &self.b2,
+            h,
+        );
+        self.gates = gates;
+        let (thr, flag) = self.tm.step(err);
+        StepOutcome { err, thr, flag }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::SensorStream;
+
+    #[test]
+    fn threshold_model_flags_spikes() {
+        let mut tm = ThresholdModel::default();
+        for _ in 0..100 {
+            tm.step(0.1);
+        }
+        let (_, flag) = tm.step(5.0);
+        assert_eq!(flag, 1.0);
+        // Quiet sample right after should not flag (mean barely moved).
+        let (_, flag2) = tm.step(0.1);
+        assert_eq!(flag2, 0.0);
+    }
+
+    #[test]
+    fn arima_error_vanishes_on_constant_signal() {
+        let m = 28;
+        let mut job = ArimaMirror::new(8, m);
+        let x = vec![1.5f32; m];
+        let mut last = f32::MAX;
+        for _ in 0..20 {
+            last = job.step(&x).err;
+        }
+        assert!(last < 1e-3, "err {last}");
+    }
+
+    #[test]
+    fn arima_learns_sinusoid() {
+        let m = 28;
+        let mut job = ArimaMirror::new(8, m);
+        let mut stream = SensorStream::new(11);
+        let mut early = 0.0;
+        let mut late = 0.0;
+        for i in 0..300 {
+            let e = job.step(&stream.next_sample()).err;
+            if (20..60).contains(&i) {
+                early += e;
+            }
+            if i >= 260 {
+                late += e;
+            }
+        }
+        assert!(late / 40.0 < early / 40.0, "late {late} early {early}");
+    }
+
+    #[test]
+    fn birch_winning_centroid_converges() {
+        let k = 4;
+        let m = 3;
+        let init = vec![
+            vec![0.0, 0.0, 0.0, 1.0, 1.0, 1.0, -1.0, -1.0, -1.0, 2.0, 2.0, 2.0],
+            vec![1.0; k],
+            vec![0.0, 0.0],
+        ];
+        let mut job = BirchMirror::from_init(k, m, &init);
+        let x = vec![0.9f32, 0.9, 0.9];
+        let mut err = f32::MAX;
+        for _ in 0..50 {
+            err = job.step(&x).err;
+        }
+        assert!(err < 0.05, "err {err}");
+    }
+
+    #[test]
+    fn lstm_mirror_runs_and_bounds_hidden() {
+        let (m, h) = (4, 3);
+        // Tiny random-ish params.
+        let mk = |n: usize, s: f32| (0..n).map(|i| ((i * 37 % 11) as f32 / 11.0 - 0.5) * s).collect::<Vec<f32>>();
+        let init = vec![
+            mk(m * 4 * h, 0.6),
+            mk(h * 4 * h, 0.6),
+            vec![0.0; 4 * h],
+            mk(h * 4 * h, 0.6),
+            mk(h * 4 * h, 0.6),
+            vec![0.0; 4 * h],
+            mk(h * m, 0.6),
+            vec![0.0; m],
+            vec![0.0; h],
+            vec![0.0; h],
+            vec![0.0; h],
+            vec![0.0; h],
+            vec![0.0, 0.0],
+        ];
+        let mut job = LstmMirror::from_init(m, h, &init);
+        for t in 0..50 {
+            let x: Vec<f32> = (0..m).map(|j| ((t + j) as f32 * 0.3).sin()).collect();
+            let out = job.step(&x);
+            assert!(out.err.is_finite());
+        }
+        for v in &job.h1 {
+            assert!(v.abs() <= 1.0 + 1e-5);
+        }
+        for v in &job.h2 {
+            assert!(v.abs() <= 1.0 + 1e-5);
+        }
+    }
+}

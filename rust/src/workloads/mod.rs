@@ -1,0 +1,167 @@
+//! IFTM workload drivers: the black-box jobs the profiler measures.
+//!
+//! Two interchangeable backends implement [`StreamJob`]:
+//!   * [`PjrtJob`] — the real thing: executes the AOT-compiled artifacts
+//!     via the PJRT runtime (optionally under a [`Throttle`]).
+//!   * mirrors ([`mirror`]) — pure-Rust re-implementations used as a
+//!     numeric cross-check oracle and an artifact-free backend.
+
+pub mod mirror;
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::runtime::{Engine, LoadedJob, StepOutcome, Throttle};
+use crate::simulator::Algo;
+
+/// A black-box streaming job: consume one sample, emit the IFTM outcome.
+pub trait StreamJob {
+    /// Process one `[metrics]` sample.
+    fn process(&mut self, x: &[f32]) -> Result<StepOutcome>;
+    /// Job label for logs/metrics.
+    fn label(&self) -> String;
+}
+
+/// Real PJRT-backed job (per-sample artifact) with optional CPU throttle.
+pub struct PjrtJob {
+    job: LoadedJob,
+    throttle: Option<Throttle>,
+    /// Effective per-sample runtimes (busy + stall) of every processed
+    /// sample — what the profiler observes.
+    pub latencies: Vec<Duration>,
+}
+
+impl PjrtJob {
+    /// Load the per-sample artifact for `algo` from `engine`.
+    pub fn load(engine: &Engine, algo: Algo) -> Result<Self> {
+        let job = engine.load_job(algo.name())?;
+        Ok(Self { job, throttle: None, latencies: Vec::new() })
+    }
+
+    /// Load any artifact by name (incl. chunked/batched variants).
+    pub fn load_named(engine: &Engine, name: &str) -> Result<Self> {
+        let job = engine.load_job(name)?;
+        Ok(Self { job, throttle: None, latencies: Vec::new() })
+    }
+
+    /// Apply a CPU limitation (Docker-like duty cycle).
+    pub fn with_throttle(mut self, throttle: Throttle) -> Self {
+        self.throttle = Some(throttle);
+        self
+    }
+
+    pub fn set_throttle(&mut self, throttle: Option<Throttle>) {
+        self.throttle = throttle;
+    }
+
+    /// Reset job state (threshold model, windows, cells) to initial values.
+    pub fn reset(&mut self) -> Result<()> {
+        self.latencies.clear();
+        self.job.reset()
+    }
+
+    /// Process a chunk via a chunked artifact (`xs` is `[T * metrics]`).
+    pub fn process_chunk(&mut self, xs: &[f32]) -> Result<Vec<StepOutcome>> {
+        let run = |job: &mut LoadedJob| job.step(xs);
+        match self.throttle {
+            Some(t) => {
+                let (res, timing) = t.run(|| run(&mut self.job));
+                let outs = res?;
+                // Attribute the call's effective time across its samples.
+                let per = timing.effective().div_f64(outs.len().max(1) as f64);
+                self.latencies.extend(std::iter::repeat(per).take(outs.len()));
+                Ok(outs)
+            }
+            None => {
+                let t0 = std::time::Instant::now();
+                let outs = run(&mut self.job)?;
+                let per = t0.elapsed().div_f64(outs.len().max(1) as f64);
+                self.latencies.extend(std::iter::repeat(per).take(outs.len()));
+                Ok(outs)
+            }
+        }
+    }
+
+    pub fn samples_per_call(&self) -> usize {
+        self.job.samples_per_call()
+    }
+
+    /// Mean observed per-sample latency (seconds).
+    pub fn mean_latency(&self) -> f64 {
+        if self.latencies.is_empty() {
+            return 0.0;
+        }
+        self.latencies.iter().map(Duration::as_secs_f64).sum::<f64>()
+            / self.latencies.len() as f64
+    }
+
+    /// Access the loaded artifact (diagnostics).
+    pub fn inner(&self) -> &LoadedJob {
+        &self.job
+    }
+}
+
+impl StreamJob for PjrtJob {
+    fn process(&mut self, x: &[f32]) -> Result<StepOutcome> {
+        let outs = self.process_chunk(x)?;
+        anyhow::ensure!(outs.len() == 1, "expected a per-sample artifact");
+        Ok(outs[0])
+    }
+
+    fn label(&self) -> String {
+        format!("pjrt:{}", self.job.name())
+    }
+}
+
+/// Artifact-free mirror job implementing the same trait.
+pub enum MirrorJob {
+    Arima(mirror::ArimaMirror),
+    Birch(mirror::BirchMirror),
+    Lstm(mirror::LstmMirror),
+}
+
+impl MirrorJob {
+    /// Build from the manifest + init blob so mirror and PJRT start from
+    /// identical parameters.
+    pub fn from_engine(engine: &Engine, algo: Algo) -> Result<Self> {
+        let spec = engine
+            .manifest()
+            .artifact(algo.name())
+            .ok_or_else(|| anyhow::anyhow!("artifact {} missing", algo.name()))?;
+        let init = spec.load_init()?;
+        let m = engine.manifest().metrics;
+        Ok(match algo {
+            Algo::Arima => {
+                let p = spec.inputs[0].shape[0];
+                MirrorJob::Arima(mirror::ArimaMirror::from_init(p, m, &init))
+            }
+            Algo::Birch => {
+                let k = spec.inputs[0].shape[0];
+                MirrorJob::Birch(mirror::BirchMirror::from_init(k, m, &init))
+            }
+            Algo::Lstm => {
+                let h = spec.inputs[1].shape[0]; // wh1 is [H, 4H]
+                MirrorJob::Lstm(mirror::LstmMirror::from_init(m, h, &init))
+            }
+        })
+    }
+}
+
+impl StreamJob for MirrorJob {
+    fn process(&mut self, x: &[f32]) -> Result<StepOutcome> {
+        Ok(match self {
+            MirrorJob::Arima(j) => j.step(x),
+            MirrorJob::Birch(j) => j.step(x),
+            MirrorJob::Lstm(j) => j.step(x),
+        })
+    }
+
+    fn label(&self) -> String {
+        match self {
+            MirrorJob::Arima(_) => "mirror:arima".into(),
+            MirrorJob::Birch(_) => "mirror:birch".into(),
+            MirrorJob::Lstm(_) => "mirror:lstm".into(),
+        }
+    }
+}

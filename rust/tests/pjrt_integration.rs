@@ -1,0 +1,150 @@
+//! Integration: AOT artifacts executed via PJRT vs. pure-Rust mirrors.
+//!
+//! These tests are the end-to-end correctness signal for the three-layer
+//! stack: JAX/Pallas kernels (L1) → lowered step functions (L2) → PJRT
+//! execution driven from Rust (L3). The mirrors re-implement the exact
+//! semantics, so outcome trajectories must agree to f32 tolerance across
+//! long streams. Skipped (with a notice) when `make artifacts` hasn't run.
+
+use streamprof::runtime::{artifacts_available, default_artifacts_dir, Engine};
+use streamprof::simulator::Algo;
+use streamprof::stream::SensorStream;
+use streamprof::workloads::{MirrorJob, PjrtJob, StreamJob};
+
+fn engine() -> Option<Engine> {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::new(&default_artifacts_dir()).expect("engine"))
+}
+
+fn assert_close(a: f32, b: f32, tol: f32, what: &str) {
+    let denom = b.abs().max(1e-3);
+    assert!(
+        (a - b).abs() / denom < tol,
+        "{what}: pjrt={a} mirror={b}"
+    );
+}
+
+fn compare_trajectories(algo: Algo, steps: usize, tol: f32) {
+    let Some(engine) = engine() else { return };
+    let mut pjrt = PjrtJob::load(&engine, algo).expect("load artifact");
+    let mut mirror = MirrorJob::from_engine(&engine, algo).expect("mirror");
+    let mut stream = SensorStream::new(1234).with_anomalies(0.005);
+    let mut flags_pjrt = 0u32;
+    let mut flags_mirror = 0u32;
+    for i in 0..steps {
+        let x = stream.next_sample();
+        let a = pjrt.process(&x).expect("pjrt step");
+        let b = mirror.process(&x).expect("mirror step");
+        assert_close(a.err, b.err, tol, &format!("{algo:?} err @{i}"));
+        assert_close(a.thr, b.thr, tol.max(2e-3), &format!("{algo:?} thr @{i}"));
+        flags_pjrt += a.flag as u32;
+        flags_mirror += b.flag as u32;
+    }
+    // Flag decisions may differ at most rarely (boundary samples).
+    let diff = (flags_pjrt as i64 - flags_mirror as i64).unsigned_abs();
+    assert!(diff <= 2, "{algo:?}: flag count diverged {flags_pjrt} vs {flags_mirror}");
+}
+
+#[test]
+fn arima_pjrt_matches_mirror_over_500_samples() {
+    compare_trajectories(Algo::Arima, 500, 2e-3);
+}
+
+#[test]
+fn birch_pjrt_matches_mirror_over_500_samples() {
+    compare_trajectories(Algo::Birch, 500, 2e-3);
+}
+
+#[test]
+fn lstm_pjrt_matches_mirror_over_300_samples() {
+    compare_trajectories(Algo::Lstm, 300, 5e-3);
+}
+
+#[test]
+fn chunked_artifact_matches_per_sample_artifact() {
+    let Some(engine) = engine() else { return };
+    let chunk = engine.manifest().chunk;
+    assert!(chunk > 0);
+    let mut per = PjrtJob::load(&engine, Algo::Lstm).unwrap();
+    let mut chunked = PjrtJob::load_named(&engine, &format!("lstm_chunk{chunk}")).unwrap();
+    let mut stream = SensorStream::new(77);
+    let xs = stream.generate(chunk);
+    // Per-sample path.
+    let mut per_outs = Vec::new();
+    for i in 0..chunk {
+        let x = &xs[i * 28..(i + 1) * 28];
+        per_outs.push(per.process(x).unwrap());
+    }
+    // Chunked path (one PJRT call).
+    let chunk_outs = chunked.process_chunk(&xs).unwrap();
+    assert_eq!(chunk_outs.len(), chunk);
+    for (i, (a, b)) in chunk_outs.iter().zip(&per_outs).enumerate() {
+        assert_close(a.err, b.err, 1e-4, &format!("chunk err @{i}"));
+        assert_close(a.thr, b.thr, 1e-3, &format!("chunk thr @{i}"));
+        assert_eq!(a.flag, b.flag, "chunk flag @{i}");
+    }
+}
+
+#[test]
+fn batched_artifact_runs_independent_streams() {
+    let Some(engine) = engine() else { return };
+    let mut batched = PjrtJob::load_named(&engine, "lstm_batch8").unwrap();
+    let mut singles: Vec<PjrtJob> = (0..8)
+        .map(|_| PjrtJob::load(&engine, Algo::Lstm).unwrap())
+        .collect();
+    let mut streams: Vec<SensorStream> = (0..8).map(|i| SensorStream::new(100 + i)).collect();
+    for step in 0..20 {
+        let mut xb = Vec::with_capacity(8 * 28);
+        let mut singles_out = Vec::new();
+        for (j, s) in streams.iter_mut().enumerate() {
+            let x = s.next_sample();
+            singles_out.push(singles[j].process(&x).unwrap());
+            xb.extend(x);
+        }
+        // The batched artifact returns outcomes for all 8 streams at once.
+        let outs = batched.process_chunk(&xb).unwrap();
+        assert_eq!(outs.len(), 8);
+        for j in 0..8 {
+            assert_close(
+                outs[j].err,
+                singles_out[j].err,
+                1e-4,
+                &format!("batch err stream {j} @{step}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn anomaly_burst_is_detected_by_real_artifact() {
+    let Some(engine) = engine() else { return };
+    let mut job = PjrtJob::load(&engine, Algo::Arima).unwrap();
+    let mut stream = SensorStream::new(5);
+    // Warm up on the calm stream.
+    for _ in 0..300 {
+        let x = stream.next_sample();
+        job.process(&x).unwrap();
+    }
+    // Inject a hand-made spike.
+    let mut x = stream.next_sample();
+    for v in x.iter_mut() {
+        *v += 10.0;
+    }
+    let out = job.process(&x).unwrap();
+    assert_eq!(out.flag, 1.0, "spike must be flagged (err={}, thr={})", out.err, out.thr);
+}
+
+#[test]
+fn state_reset_restores_initial_trajectory() {
+    let Some(engine) = engine() else { return };
+    let mut job = PjrtJob::load(&engine, Algo::Birch).unwrap();
+    let mut stream = SensorStream::new(9);
+    let xs: Vec<Vec<f32>> = (0..50).map(|_| stream.next_sample()).collect();
+    let first: Vec<f32> = xs.iter().map(|x| job.process(x).unwrap().err).collect();
+    job.reset().unwrap();
+    let second: Vec<f32> = xs.iter().map(|x| job.process(x).unwrap().err).collect();
+    assert_eq!(first, second, "reset must reproduce the exact trajectory");
+}

@@ -1,0 +1,121 @@
+//! End-to-end integration over the full L3 pipeline on the simulated
+//! testbed: acquisition sweep → profiling session (all strategies) →
+//! runtime model → adaptive resource adjustment, plus the PJRT-backed
+//! profiling path when artifacts are present.
+
+use streamprof::coordinator::{
+    smape_vs_dataset, PjrtBackend, Profiler, ProfilerConfig, ProfilingBackend,
+    ResourceAdjuster, SimulatedBackend,
+};
+use streamprof::earlystop::EarlyStopConfig;
+use streamprof::repro::{AcquiredDataset, DatasetBackend};
+use streamprof::runtime::{artifacts_available, default_artifacts_dir, Engine};
+use streamprof::simulator::{node, Algo, SimulatedJob, NODES};
+use streamprof::strategies;
+use streamprof::stream::{ArrivalProcess, SensorStream};
+use streamprof::workloads::PjrtJob;
+
+#[test]
+fn full_pipeline_profile_then_adjust() {
+    // 1. Profile the job on a simulated pi4.
+    let cfg = ProfilerConfig { samples: 10_000, max_steps: 6, ..Default::default() };
+    let mut backend =
+        SimulatedBackend::new(SimulatedJob::new(node("pi4").unwrap(), Algo::Lstm, 42));
+    let sess = Profiler::new(cfg, strategies::by_name("nms", 1).unwrap()).run(&mut backend);
+    let model = sess.final_model().clone();
+
+    // 2. The model predicts the measured points well.
+    for step in &sess.steps {
+        let rel = (model.eval(step.limit) - step.mean_runtime).abs() / step.mean_runtime;
+        assert!(rel < 0.5, "model off at {}: {rel}", step.limit);
+    }
+
+    // 3. Adjust resources for a varying-rate stream.
+    let adj = ResourceAdjuster::new(model, 0.1, 4.0, 0.1);
+    let arrivals = ArrivalProcess::Varying { lo: 1.0, hi: 4.0, period: 300.0 };
+    let plan = adj.plan(&arrivals, 900, 100);
+    assert_eq!(plan.len(), 9);
+    assert!(plan.iter().all(|a| a.feasible), "pi4 should sustain 4 Hz LSTM");
+    // Faster windows get more CPU.
+    let max_limit = plan.iter().map(|a| a.limit).fold(0.0f64, f64::max);
+    let min_limit = plan.iter().map(|a| a.limit).fold(f64::MAX, f64::min);
+    assert!(max_limit > min_limit);
+}
+
+#[test]
+fn all_strategies_on_all_nodes_produce_usable_models() {
+    for node_spec in NODES {
+        for strat in ["nms", "bs", "bo", "random"] {
+            let ds = AcquiredDataset::acquire(node_spec, Algo::Birch, 7);
+            let mut backend = DatasetBackend::new(&ds, 10_000);
+            let cfg = ProfilerConfig { samples: 10_000, max_steps: 8, ..Default::default() };
+            let sess = Profiler::new(cfg, strategies::by_name(strat, 3).unwrap())
+                .run(&mut backend);
+            let smape = smape_vs_dataset(sess.final_model(), &ds.truth_points());
+            assert!(
+                smape < 0.35,
+                "{}/{strat}: final SMAPE {smape}",
+                node_spec.name
+            );
+        }
+    }
+}
+
+#[test]
+fn early_stopping_pipeline_reduces_time_at_similar_accuracy() {
+    let ds = AcquiredDataset::acquire(node("pi4").unwrap(), Algo::Arima, 11);
+    let truth = ds.truth_points();
+    let run = |early: bool| {
+        let cfg = ProfilerConfig {
+            samples: 10_000,
+            max_steps: 6,
+            early_stop: early.then(|| EarlyStopConfig::new(0.95, 0.10)),
+            ..Default::default()
+        };
+        let mut backend = DatasetBackend::new(&ds, 10_000);
+        Profiler::new(cfg, strategies::by_name("nms", 5).unwrap()).run(&mut backend)
+    };
+    let full = run(false);
+    let es = run(true);
+    assert!(es.total_time < full.total_time * 0.5);
+    let s_full = smape_vs_dataset(full.final_model(), &truth);
+    let s_es = smape_vs_dataset(es.final_model(), &truth);
+    assert!(s_es < s_full + 0.15, "ES {s_es} vs full {s_full}");
+}
+
+#[test]
+fn pjrt_backed_profiling_session() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let engine = Engine::new(&default_artifacts_dir()).unwrap();
+    let job = PjrtJob::load(&engine, Algo::Arima).unwrap();
+    let mut backend = PjrtBackend::new(job, SensorStream::new(3), 4.0);
+    // Small sample counts: this hits the real executable per sample.
+    let m1 = backend.measure(0.5, 40);
+    let m2 = backend.measure(1.0, 40);
+    assert_eq!(m1.samples, 40);
+    assert!(m1.mean_runtime > 0.0 && m1.mean_runtime.is_finite());
+    // Duty-cycle accounting: 0.5 CPU should look ~2x slower than 1.0 CPU.
+    let ratio = m1.mean_runtime / m2.mean_runtime;
+    assert!(
+        ratio > 1.3 && ratio < 3.5,
+        "throttle accounting off: ratio {ratio}"
+    );
+
+    // A full (short) profiling session against the real artifact.
+    let cfg = ProfilerConfig {
+        samples: 30,
+        max_steps: 5,
+        n_initial: 2,
+        ..Default::default()
+    };
+    let sess = Profiler::new(cfg, strategies::by_name("nms", 1).unwrap()).run(&mut backend);
+    assert_eq!(sess.steps.len(), 5);
+    assert!(sess.final_model().eval(1.0) > 0.0);
+    // Runtime model should predict the throttle's 1/R shape for R < 1:
+    // eval(0.2) substantially above eval(1.0).
+    let m = sess.final_model();
+    assert!(m.eval(0.2) > m.eval(1.0) * 2.0);
+}

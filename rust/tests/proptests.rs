@@ -1,0 +1,212 @@
+//! Property-based tests (hand-rolled; `proptest` is not in the offline
+//! vendor set): randomized sweeps over coordinator invariants — selection,
+//! fitting, early stopping, placement, adjustment — with seeds derived from
+//! a deterministic PRNG so failures are reproducible.
+
+use streamprof::coordinator::{
+    Profiler, ProfilerConfig, ResourceAdjuster, SimulatedBackend,
+};
+use streamprof::earlystop::{EarlyStopConfig, EarlyStopMonitor};
+use streamprof::fit::{ProfilePoint, RuntimeModel};
+use streamprof::simulator::{Algo, SimulatedJob, NODES};
+use streamprof::strategies::{self, initial_limits};
+use streamprof::util::Rng;
+
+const CASES: u64 = 60;
+
+/// Property: Algorithm 1 placement always satisfies Eq. 2 on random
+/// configurations (any node, any p in a broad range, any n).
+#[test]
+fn prop_initial_limits_feasible() {
+    let mut rng = Rng::new(0xA11);
+    for _ in 0..CASES {
+        let node = &NODES[rng.below(NODES.len())];
+        let p = rng.uniform(0.01, 0.2);
+        let n = 2 + rng.below(3);
+        let limits = initial_limits(p, n, 0.1, node.cores, 0.1);
+        assert!(!limits.is_empty());
+        let sum: f64 = limits.iter().sum();
+        assert!(sum <= node.cores + 1e-9, "{}: {limits:?}", node.name);
+        for w in limits.windows(2) {
+            assert!(w[1] > w[0] + 0.04, "sorted unique: {limits:?}");
+        }
+        for &l in &limits {
+            assert!(l >= 0.1 - 1e-9 && l <= node.cores + 1e-9);
+        }
+    }
+}
+
+/// Property: the fitted nested model is finite, positive, and monotone
+/// non-increasing over the grid for random noisy curves.
+#[test]
+fn prop_fitted_model_sane() {
+    let mut rng = Rng::new(0xF17);
+    for case in 0..CASES {
+        let a = rng.uniform(0.005, 0.5);
+        let b = rng.uniform(0.4, 1.5);
+        let c = rng.uniform(0.0, 0.1) * a;
+        let n_pts = 2 + rng.below(7);
+        let mut pts = Vec::new();
+        for _ in 0..n_pts {
+            let r = (rng.below(40) + 1) as f64 * 0.1;
+            if pts.iter().any(|p: &ProfilePoint| (p.limit - r).abs() < 0.05) {
+                continue;
+            }
+            let clean = a * r.powf(-b) + c;
+            pts.push(ProfilePoint::new(r, clean * (1.0 + 0.05 * rng.normal())));
+        }
+        if pts.is_empty() {
+            continue;
+        }
+        let m = RuntimeModel::fit(&pts);
+        let mut prev = f64::INFINITY;
+        for i in 1..=40 {
+            let r = i as f64 * 0.1;
+            let v = m.eval(r);
+            assert!(v.is_finite() && v > 0.0, "case {case}: eval({r}) = {v}");
+            assert!(v <= prev + 1e-12, "case {case}: not monotone at {r}");
+            prev = v;
+        }
+    }
+}
+
+/// Property: model inversion is consistent with evaluation wherever the
+/// target is reachable.
+#[test]
+fn prop_invert_roundtrip() {
+    let mut rng = Rng::new(0x1BB);
+    for _ in 0..CASES {
+        let pts: Vec<ProfilePoint> = (0..6)
+            .map(|i| {
+                let r = 0.1 + i as f64 * 0.7;
+                ProfilePoint::new(r, 0.2 * r.powf(-0.9) + 0.01)
+            })
+            .collect();
+        let m = RuntimeModel::fit(&pts);
+        let r = rng.uniform(0.1, 4.0);
+        let t = m.eval(r);
+        if let Some(back) = m.invert(t) {
+            assert!((back - r).abs() / r < 1e-6, "{r} -> {t} -> {back}");
+        }
+    }
+}
+
+/// Property: every strategy, on every node, never re-profiles a limitation
+/// and never leaves the grid.
+#[test]
+fn prop_strategies_respect_grid() {
+    let mut rng = Rng::new(0x5E1);
+    for case in 0..CASES {
+        let node = &NODES[rng.below(NODES.len())];
+        let algo = Algo::ALL[rng.below(3)];
+        let strat_name = ["nms", "bs", "bo", "random"][rng.below(4)];
+        let cfg = ProfilerConfig {
+            p: rng.uniform(0.02, 0.15),
+            n_initial: 2 + rng.below(2),
+            samples: 1000,
+            max_steps: 8,
+            ..Default::default()
+        };
+        let mut backend =
+            SimulatedBackend::new(SimulatedJob::new(node, algo, case));
+        let strat = strategies::by_name(strat_name, case).unwrap();
+        let sess = Profiler::new(cfg, strat).run(&mut backend);
+        for (i, a) in sess.steps.iter().enumerate() {
+            let on_grid = (a.limit / 0.1).round() * 0.1;
+            assert!((a.limit - on_grid).abs() < 1e-6, "off grid: {}", a.limit);
+            assert!(a.limit >= 0.1 - 1e-9 && a.limit <= node.cores + 1e-9);
+            for b in &sess.steps[i + 1..] {
+                assert!(
+                    (a.limit - b.limit).abs() > 0.05,
+                    "case {case} {strat_name}: repeat {}",
+                    a.limit
+                );
+            }
+        }
+    }
+}
+
+/// Property: the early-stopping monitor always terminates and its mean
+/// estimate converges to the true mean within a few percent.
+#[test]
+fn prop_early_stop_terminates_accurately() {
+    let mut rng = Rng::new(0xE5);
+    for _ in 0..CASES {
+        let mean = rng.uniform(0.01, 2.0);
+        let cov = rng.uniform(0.02, 0.35);
+        let lambda = rng.uniform(0.03, 0.2);
+        let mut mon = EarlyStopMonitor::new(EarlyStopConfig::new(0.95, lambda));
+        let mut stopped = false;
+        for _ in 0..2_000_000 {
+            if mon.push(rng.lognormal_mean_cov(mean, cov)) {
+                stopped = true;
+                break;
+            }
+        }
+        assert!(stopped, "did not terminate (cov={cov}, lambda={lambda})");
+        // CI width < lambda*mean implies |est - truth| ~< lambda*mean.
+        let rel = (mon.mean() - mean).abs() / mean;
+        assert!(rel < lambda.max(0.05) * 1.5, "rel err {rel} vs lambda {lambda}");
+    }
+}
+
+/// Property: the adjuster's decision is the *tightest* feasible limit —
+/// one grid step less always violates the budget.
+#[test]
+fn prop_adjuster_tightness() {
+    let mut rng = Rng::new(0xAD1);
+    for _ in 0..CASES {
+        let pts: Vec<ProfilePoint> = (0..8)
+            .map(|i| {
+                let r = 0.1 + i as f64 * 0.5;
+                ProfilePoint::new(r, rng.uniform(0.5, 2.0) * 0.1 * r.powf(-1.0) + 0.005)
+            })
+            .collect();
+        let model = RuntimeModel::fit(&pts);
+        let adj = ResourceAdjuster::new(model.clone(), 0.1, 4.0, 0.1);
+        let gap = rng.uniform(0.01, 5.0);
+        let d = adj.decide(gap);
+        if d.feasible {
+            assert!(d.predicted_runtime <= d.budget + 1e-12);
+            if d.limit > 0.15 {
+                let below = model.eval(d.limit - 0.1);
+                assert!(
+                    below > d.budget,
+                    "limit {} not tight: one step below still fits",
+                    d.limit
+                );
+            }
+        } else {
+            assert!(model.eval(4.0) > d.budget);
+        }
+    }
+}
+
+/// Property: profiling wallclock equals the sum of iterative steps plus the
+/// max of the initial parallel phase (time accounting never drifts).
+#[test]
+fn prop_time_accounting_consistent() {
+    let mut rng = Rng::new(0x71E);
+    for case in 0..CASES / 2 {
+        let node = &NODES[rng.below(NODES.len())];
+        let cfg = ProfilerConfig { samples: 1000, max_steps: 7, ..Default::default() };
+        let mut backend =
+            SimulatedBackend::new(SimulatedJob::new(node, Algo::Arima, case + 999));
+        let sess = Profiler::new(cfg, strategies::by_name("nms", case).unwrap())
+            .run(&mut backend);
+        // Placement may return fewer initial runs than requested (small
+        // machines); use the actual count.
+        let n_initial = sess.initial_limits.len();
+        let init_max = sess.steps[..n_initial.min(sess.steps.len())]
+            .iter()
+            .map(|s| s.wallclock)
+            .fold(0.0f64, f64::max);
+        let tail: f64 = sess.steps.iter().skip(n_initial).map(|s| s.wallclock).sum();
+        assert!(
+            (sess.total_time - (init_max + tail)).abs() < 1e-9,
+            "time drift: {} vs {}",
+            sess.total_time,
+            init_max + tail
+        );
+    }
+}
