@@ -68,6 +68,16 @@ impl JobManager {
         self.jobs.len()
     }
 
+    /// Registered jobs in name order (introspection/diagnostics).
+    pub fn jobs(&self) -> impl Iterator<Item = &ManagedJob> {
+        self.jobs.values()
+    }
+
+    /// Assignable capacity of the node this manager governs.
+    pub fn capacity(&self) -> f64 {
+        self.capacity
+    }
+
     pub fn is_empty(&self) -> bool {
         self.jobs.is_empty()
     }
@@ -180,6 +190,38 @@ mod tests {
         assert!(imp.guaranteed);
         assert!(!batch.guaranteed);
         assert!(plan.total_assigned <= 1.0);
+    }
+
+    #[test]
+    fn shedding_order_is_priority_then_largest_demand() {
+        // Three jobs on a 1-core node. Demands (margin 0.9):
+        //   "high"      prio 5, a=0.10 -> tightest limit 0.6
+        //   "low-big"   prio 1, a=0.12 -> tightest limit 0.7
+        //   "low-small" prio 1, a=0.05 -> tightest limit 0.3
+        // Total 1.6 > 1.0. The first victim must be the *lowest priority*
+        // with the *largest demand* ("low-big"); after shedding it the
+        // remaining 0.9 fits, so "low-small" survives despite equal
+        // priority.
+        let mut mgr = JobManager::new(1.0);
+        mgr.register(job("high", 0.10, 5.0, 5));
+        mgr.register(job("low-big", 0.12, 5.0, 1));
+        mgr.register(job("low-small", 0.05, 5.0, 1));
+        let plan = mgr.plan();
+        let by = |n: &str| plan.assignments.iter().find(|a| a.name == n).unwrap();
+        assert!(by("high").guaranteed);
+        assert!(!by("low-big").guaranteed, "largest low-priority demand sheds first");
+        assert!(by("low-small").guaranteed, "small same-priority job must survive");
+        assert!((plan.total_assigned - 0.9).abs() < 1e-9, "{}", plan.total_assigned);
+    }
+
+    #[test]
+    fn jobs_accessor_iterates_in_name_order() {
+        let mut mgr = JobManager::new(4.0);
+        mgr.register(job("zeta", 0.05, 2.0, 1));
+        mgr.register(job("alpha", 0.05, 2.0, 1));
+        let names: Vec<&str> = mgr.jobs().map(|j| j.name.as_str()).collect();
+        assert_eq!(names, vec!["alpha", "zeta"]);
+        assert_eq!(mgr.capacity(), 4.0);
     }
 
     #[test]

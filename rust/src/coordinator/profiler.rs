@@ -130,6 +130,20 @@ impl Profiler {
 
     /// Run a full profiling session against `backend`.
     pub fn run(&mut self, backend: &mut dyn ProfilingBackend) -> SessionResult {
+        self.run_observed(backend, &mut |_| {})
+    }
+
+    /// Run a full profiling session, invoking `observer` after every
+    /// measurement (initial parallel runs included, in placement order).
+    ///
+    /// This is the seam the fleet engine hooks into: the observer feeds each
+    /// measurement into the job's incremental model refit while the session
+    /// is still in flight, instead of waiting for the final [`SessionResult`].
+    pub fn run_observed(
+        &mut self,
+        backend: &mut dyn ProfilingBackend,
+        observer: &mut dyn FnMut(&Measurement),
+    ) -> SessionResult {
         let l_max = backend.l_max();
         let mut ctx = ProfilingContext::new(self.cfg.l_min, l_max, self.cfg.delta);
         let init =
@@ -139,8 +153,14 @@ impl Profiler {
         let mut cumulative = 0.0;
 
         // ---- Phase 1: initial parallel runs (wallclock = slowest). ----
-        let measurements: Vec<Measurement> =
-            init.iter().map(|&l| self.run_one(backend, l)).collect();
+        let measurements: Vec<Measurement> = init
+            .iter()
+            .map(|&l| {
+                let m = self.run_one(backend, l);
+                observer(&m);
+                m
+            })
+            .collect();
         let parallel_wall = measurements
             .iter()
             .map(|m| m.wallclock)
@@ -179,6 +199,7 @@ impl Profiler {
                 break;
             };
             let m = self.run_one(backend, next);
+            observer(&m);
             cumulative += m.wallclock;
             ctx.points.push(ProfilePoint::new(m.limit, m.mean_runtime));
             let warm = self.strategy.warm_start().then_some(&ctx.model);
@@ -298,6 +319,20 @@ mod tests {
             t_es < t_full * 0.5,
             "early stopping should at least halve profiling time: {t_es} vs {t_full}"
         );
+    }
+
+    #[test]
+    fn observer_sees_every_measurement_in_order() {
+        let cfg = ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() };
+        let mut b = backend("pi4", Algo::Arima, 21);
+        let mut seen: Vec<Measurement> = Vec::new();
+        let s = Profiler::new(cfg, strategies::by_name("nms", 1).unwrap())
+            .run_observed(&mut b, &mut |m| seen.push(*m));
+        assert_eq!(seen.len(), s.steps.len());
+        for (m, step) in seen.iter().zip(&s.steps) {
+            assert_eq!(m.limit, step.limit);
+            assert_eq!(m.mean_runtime, step.mean_runtime);
+        }
     }
 
     #[test]

@@ -1,0 +1,233 @@
+//! Shared measurement cache: the fleet's amortization layer.
+//!
+//! Profiling is expensive — a single 10k-sample run at a small limitation
+//! costs minutes of wallclock — and across a fleet the same `(job label,
+//! cpu-limit bucket)` pair is probed over and over: re-profiling rounds
+//! replay the deterministic initial placement, and replicas of one job
+//! class on the same device type ask for identical measurements. The cache
+//! stores every observed [`Measurement`] under that key so repeated
+//! strategy probes reuse the observed runtime instead of re-executing the
+//! job; a hit is returned with `wallclock = 0` (nothing ran) while the
+//! wallclock it *would* have cost is accumulated as `saved_wallclock`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::backend::{Measurement, ProfilingBackend};
+use crate::earlystop::EarlyStopConfig;
+use crate::strategies::grid_bucket;
+
+/// Cache key: job label (e.g. `"pi4/arima"`) + limitation-grid bucket.
+pub type CacheKey = (String, i64);
+
+/// Hit/miss counters plus the profiling wallclock hits avoided.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    /// Wallclock (seconds) of re-executions avoided by cache hits.
+    pub saved_wallclock: f64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Thread-safe measurement cache shared by every fleet worker.
+pub struct MeasurementCache {
+    map: Mutex<HashMap<CacheKey, Measurement>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    saved_wallclock: Mutex<f64>,
+}
+
+impl Default for MeasurementCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MeasurementCache {
+    pub fn new() -> Self {
+        Self {
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            saved_wallclock: Mutex::new(0.0),
+        }
+    }
+
+    /// Look up a measurement, recording a hit or miss. On a hit the
+    /// original run's wallclock is credited to `saved_wallclock`.
+    pub fn lookup(&self, label: &str, limit: f64, delta: f64) -> Option<Measurement> {
+        let key = (label.to_string(), grid_bucket(limit, delta));
+        let found = self.map.lock().unwrap().get(&key).copied();
+        match found {
+            Some(m) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                *self.saved_wallclock.lock().unwrap() += m.wallclock;
+                Some(m)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Store an executed measurement (last write wins — concurrent workers
+    /// probing the same key observe the same distribution, so either value
+    /// is a valid sample).
+    pub fn insert(&self, label: &str, delta: f64, m: Measurement) {
+        let key = (label.to_string(), grid_bucket(m.limit, delta));
+        self.map.lock().unwrap().insert(key, m);
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            saved_wallclock: *self.saved_wallclock.lock().unwrap(),
+        }
+    }
+}
+
+/// Backend decorator that consults the shared cache before executing.
+///
+/// On a hit the cached measurement is returned with `wallclock = 0` (the
+/// session spends no time on it); on a miss the inner backend executes and
+/// the result is stored for every later probe of the same key.
+pub struct CachedBackend<'a, B: ProfilingBackend> {
+    inner: B,
+    cache: &'a MeasurementCache,
+    label: String,
+    delta: f64,
+}
+
+impl<'a, B: ProfilingBackend> CachedBackend<'a, B> {
+    pub fn new(inner: B, cache: &'a MeasurementCache, label: String, delta: f64) -> Self {
+        Self { inner, cache, label, delta }
+    }
+
+    fn serve(&self, limit: f64, cached: Measurement) -> Measurement {
+        Measurement { limit, wallclock: 0.0, ..cached }
+    }
+}
+
+impl<B: ProfilingBackend> ProfilingBackend for CachedBackend<'_, B> {
+    fn measure(&mut self, limit: f64, samples: usize) -> Measurement {
+        if let Some(m) = self.cache.lookup(&self.label, limit, self.delta) {
+            return self.serve(limit, m);
+        }
+        let m = self.inner.measure(limit, samples);
+        self.cache.insert(&self.label, self.delta, m);
+        m
+    }
+
+    fn measure_early_stop(
+        &mut self,
+        limit: f64,
+        cfg: &EarlyStopConfig,
+        cap: usize,
+    ) -> Measurement {
+        if let Some(m) = self.cache.lookup(&self.label, limit, self.delta) {
+            return self.serve(limit, m);
+        }
+        let m = self.inner.measure_early_stop(limit, cfg, cap);
+        self.cache.insert(&self.label, self.delta, m);
+        m
+    }
+
+    fn l_max(&self) -> f64 {
+        self.inner.l_max()
+    }
+
+    fn label(&self) -> String {
+        self.inner.label()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::SimulatedBackend;
+    use crate::simulator::{node, Algo, SimulatedJob};
+
+    fn backend(cache: &MeasurementCache, seed: u64) -> CachedBackend<'_, SimulatedBackend> {
+        let job = SimulatedJob::new(node("pi4").unwrap(), Algo::Arima, seed);
+        CachedBackend::new(SimulatedBackend::new(job), cache, "pi4/arima".into(), 0.1)
+    }
+
+    #[test]
+    fn second_probe_is_a_hit_with_zero_wallclock() {
+        let cache = MeasurementCache::new();
+        let mut b = backend(&cache, 1);
+        let m1 = b.measure(0.5, 1000);
+        assert!(m1.wallclock > 0.0);
+        let m2 = b.measure(0.5, 1000);
+        assert_eq!(m2.mean_runtime, m1.mean_runtime, "hit must replay the observation");
+        assert_eq!(m2.wallclock, 0.0, "hit must cost no profiling time");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert!((s.saved_wallclock - m1.wallclock).abs() < 1e-12);
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn different_limits_and_labels_miss() {
+        let cache = MeasurementCache::new();
+        let mut b = backend(&cache, 2);
+        b.measure(0.5, 1000);
+        b.measure(0.6, 1000);
+        assert_eq!(cache.stats().misses, 2);
+        assert_eq!(cache.stats().hits, 0);
+        assert_eq!(cache.len(), 2);
+        // Same node/algo but a different label key: distinct entry space.
+        let job = SimulatedJob::new(node("pi4").unwrap(), Algo::Arima, 3);
+        let mut other =
+            CachedBackend::new(SimulatedBackend::new(job), &cache, "other-label".into(), 0.1);
+        other.measure(0.5, 1000);
+        assert_eq!(cache.stats().misses, 3);
+    }
+
+    #[test]
+    fn drifted_limit_shares_the_bucket() {
+        let cache = MeasurementCache::new();
+        let mut b = backend(&cache, 4);
+        b.measure(0.1 + 0.1 + 0.1, 1000); // 0.30000000000000004
+        let m = b.measure(0.3, 1000);
+        assert_eq!(cache.stats().hits, 1);
+        assert_eq!(m.limit, 0.3, "hit is served at the requested limit");
+    }
+
+    #[test]
+    fn early_stop_path_shares_the_cache() {
+        let cache = MeasurementCache::new();
+        let mut b = backend(&cache, 5);
+        let cfg = EarlyStopConfig::new(0.95, 0.10);
+        let m1 = b.measure_early_stop(0.4, &cfg, 10_000);
+        let m2 = b.measure_early_stop(0.4, &cfg, 10_000);
+        assert_eq!(m1.mean_runtime, m2.mean_runtime);
+        assert_eq!(cache.stats().hits, 1);
+        // Cross-path: a plain measure at the same bucket also hits.
+        let m3 = b.measure(0.4, 1000);
+        assert_eq!(m3.mean_runtime, m1.mean_runtime);
+        assert_eq!(cache.stats().hits, 2);
+    }
+}

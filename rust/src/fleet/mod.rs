@@ -1,0 +1,305 @@
+//! Fleet-scale concurrent profiling engine.
+//!
+//! The single-job [`crate::coordinator::Profiler`] becomes a worker task:
+//! N registered stream jobs are sharded across a pool of scoped worker
+//! threads pulling from a shared [`WorkQueue`], all probing through one
+//! [`MeasurementCache`] keyed by `(job label, cpu-limit bucket)` so
+//! repeated strategy probes — re-profiling rounds, and replicas of a job
+//! class on the same device type — reuse observed runtimes instead of
+//! re-executing the job. Each job's [`crate::fit::RuntimeModel`] is refit
+//! *incrementally* (warm-started from the previous parameters) as
+//! measurements land, and the finished models feed straight into per-node
+//! [`JobManager`] registrations, producing the fleet-wide
+//! [`CapacityPlan`]s that close the paper's adaptive-adjustment loop.
+//!
+//! ```text
+//!  FleetJobSpec*N ──► WorkQueue ──► worker pool (scoped threads)
+//!                                     │  Profiler::run_observed
+//!                                     │   ├─ CachedBackend ──► MeasurementCache
+//!                                     │   └─ IncrementalModel (warm refits)
+//!                                     ▼
+//!                                  JobOutcome*N ──► per-node JobManager ──► CapacityPlan
+//! ```
+
+pub mod cache;
+pub mod queue;
+pub mod worker;
+
+pub use cache::{CacheStats, CachedBackend, MeasurementCache};
+pub use queue::WorkQueue;
+pub use worker::{IncrementalModel, JobOutcome};
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::{Assignment, CapacityPlan, JobManager, ManagedJob, ProfilerConfig};
+use crate::simulator::{Algo, NodeSpec, NODES};
+use crate::strategies;
+use crate::stream::ArrivalProcess;
+
+/// One stream job registered with the fleet engine.
+pub struct FleetJobSpec {
+    /// Unique job name (e.g. `"cam-03"`).
+    pub name: String,
+    /// Device the job runs on.
+    pub node: &'static NodeSpec,
+    pub algo: Algo,
+    /// Seed of the job's simulated runtime behaviour.
+    pub seed: u64,
+    /// Larger = more important when the node is over-subscribed.
+    pub priority: i32,
+    /// The sensor stream's arrival process (drives the rate demand).
+    pub arrivals: ArrivalProcess,
+}
+
+impl FleetJobSpec {
+    /// Spec with a fixed 2 Hz stream and default priority.
+    pub fn simulated(name: &str, node: &'static NodeSpec, algo: Algo, seed: u64) -> Self {
+        Self {
+            name: name.to_string(),
+            node,
+            algo,
+            seed,
+            priority: 1,
+            arrivals: ArrivalProcess::Fixed(2.0),
+        }
+    }
+
+    /// Measurement-cache label: jobs of the same class on the same device
+    /// type share runtime behaviour, so they share cache entries.
+    pub fn label(&self) -> String {
+        format!("{}/{}", self.node.name, self.algo.name())
+    }
+}
+
+/// Fleet engine configuration.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Worker threads in the pool.
+    pub workers: usize,
+    /// Profiling rounds per job (round 0 cold; later rounds are the
+    /// periodic re-profiles the cache absorbs).
+    pub rounds: usize,
+    /// Selection strategy name (`strategies::by_name`).
+    pub strategy: String,
+    /// Per-session profiler configuration.
+    pub profiler: ProfilerConfig,
+    /// Arrival-process horizon (samples) used to derive each job's peak
+    /// rate demand.
+    pub horizon: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            rounds: 2,
+            strategy: "nms".to_string(),
+            profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
+            horizon: 1000,
+        }
+    }
+}
+
+/// Everything a completed fleet run reports.
+pub struct FleetSummary {
+    /// Per-job outcomes in submission order.
+    pub outcomes: Vec<JobOutcome>,
+    /// Measurement-cache statistics of this run (delta, not the engine's
+    /// lifetime totals — the cache itself persists across runs).
+    pub cache: CacheStats,
+    /// Per-node capacity plans, keyed by node name (sorted).
+    pub plans: Vec<(String, CapacityPlan)>,
+}
+
+impl FleetSummary {
+    /// Fraction of probes served from the measurement cache.
+    pub fn hit_rate(&self) -> f64 {
+        self.cache.hit_rate()
+    }
+
+    /// Profiling wallclock actually executed (cache hits cost zero).
+    pub fn executed_wallclock(&self) -> f64 {
+        self.outcomes.iter().map(JobOutcome::executed_wallclock).sum()
+    }
+
+    /// The capacity-plan assignment for a job, if any.
+    pub fn assignment(&self, job: &str) -> Option<&Assignment> {
+        self.plans
+            .iter()
+            .flat_map(|(_, plan)| plan.assignments.iter())
+            .find(|a| a.name == job)
+    }
+}
+
+/// The fleet profiling engine.
+pub struct FleetEngine {
+    cfg: FleetConfig,
+    cache: MeasurementCache,
+}
+
+impl FleetEngine {
+    pub fn new(cfg: FleetConfig) -> Self {
+        Self { cfg, cache: MeasurementCache::new() }
+    }
+
+    pub fn config(&self) -> &FleetConfig {
+        &self.cfg
+    }
+
+    /// Cache statistics so far (accumulates across `run` calls).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Profile every job across the worker pool and derive per-node
+    /// capacity plans from the fitted models.
+    pub fn run(&self, specs: Vec<FleetJobSpec>) -> Result<FleetSummary> {
+        ensure!(!specs.is_empty(), "fleet run needs at least one job spec");
+        ensure!(
+            strategies::by_name(&self.cfg.strategy, 0).is_some(),
+            "unknown strategy '{}'",
+            self.cfg.strategy
+        );
+        ensure!(
+            self.cfg.profiler.max_steps >= self.cfg.profiler.n_initial,
+            "profiler max_steps < n_initial"
+        );
+        // Snapshot so the summary reports THIS run's cache behaviour even
+        // when the engine (and its cache) is reused across runs.
+        let cache_before = self.cache.stats();
+        let n_workers = self.cfg.workers.clamp(1, specs.len());
+        let n_jobs = specs.len();
+        let queue = WorkQueue::new(specs.into_iter().enumerate());
+        let results: Mutex<Vec<JobOutcome>> = Mutex::new(Vec::with_capacity(n_jobs));
+        let failures: Mutex<Vec<String>> = Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            for w in 0..n_workers {
+                let queue = &queue;
+                let results = &results;
+                let failures = &failures;
+                let cache = &self.cache;
+                let cfg = &self.cfg;
+                s.spawn(move || {
+                    while let Some((index, spec)) = queue.pop() {
+                        match worker::profile_job(&spec, cfg, cache, w) {
+                            Ok(mut outcome) => {
+                                outcome.index = index;
+                                results.lock().unwrap().push(outcome);
+                            }
+                            Err(e) => {
+                                failures.lock().unwrap().push(format!("{}: {e:#}", spec.name));
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        let failures = failures.into_inner().unwrap();
+        ensure!(failures.is_empty(), "fleet workers failed: {}", failures.join("; "));
+        let mut outcomes = results.into_inner().unwrap();
+        outcomes.sort_by_key(|o| o.index);
+
+        // Feed the fitted models into per-node managers: this is where the
+        // fleet engine hands over to the adaptive-adjustment layer.
+        let mut managers: BTreeMap<&'static str, JobManager> = BTreeMap::new();
+        for o in &outcomes {
+            managers
+                .entry(o.node.name)
+                .or_insert_with(|| JobManager::new(o.node.cores))
+                .register(ManagedJob {
+                    name: o.name.clone(),
+                    model: o.model.clone(),
+                    rate_hz: o.rate_hz,
+                    priority: o.priority,
+                });
+        }
+        let plans = managers
+            .into_iter()
+            .map(|(name, mgr)| (name.to_string(), mgr.plan()))
+            .collect();
+        let cache_after = self.cache.stats();
+        let cache = CacheStats {
+            hits: cache_after.hits - cache_before.hits,
+            misses: cache_after.misses - cache_before.misses,
+            saved_wallclock: cache_after.saved_wallclock - cache_before.saved_wallclock,
+        };
+        Ok(FleetSummary { outcomes, cache, plans })
+    }
+}
+
+/// Build a synthetic fleet of `n` jobs cycling through the Table-I node
+/// set and the three IFTM algorithms, with varying arrival rates and mixed
+/// priorities — the shared roster of the `fleet` CLI subcommand, the
+/// `fleet_profiling` example, and the e2e tests.
+pub fn sim_fleet(n: usize, seed: u64) -> Vec<FleetJobSpec> {
+    (0..n)
+        .map(|i| {
+            let node = &NODES[i % NODES.len()];
+            let algo = Algo::ALL[i % Algo::ALL.len()];
+            FleetJobSpec {
+                name: format!("job-{i:02}"),
+                node,
+                algo,
+                // Same class on the same device type shares runtime
+                // behaviour (and cache entries); distinct classes get
+                // distinct seeds.
+                seed: seed.wrapping_add((i % 21) as u64 * 7919),
+                priority: 1 + (i % 3) as i32,
+                arrivals: ArrivalProcess::Varying {
+                    lo: 0.5,
+                    hi: 1.5 + (i % 4) as f64,
+                    period: 400.0,
+                },
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_fleet_builds_unique_named_jobs() {
+        let specs = sim_fleet(12, 7);
+        assert_eq!(specs.len(), 12);
+        let mut names: Vec<&str> = specs.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 12, "job names must be unique");
+        assert!(specs.iter().all(|s| s.priority >= 1));
+    }
+
+    #[test]
+    fn summary_cache_stats_are_per_run_not_lifetime() {
+        let engine = FleetEngine::new(FleetConfig { workers: 1, rounds: 1, ..Default::default() });
+        let first = engine.run(sim_fleet(2, 3)).unwrap();
+        assert_eq!(first.cache.hits, 0, "distinct labels, single round: no hits");
+        assert!(first.cache.misses > 0);
+        // Same specs again on the same engine: a full cache replay. The
+        // second summary must report only this run's (all-hit) stats, not
+        // the blended lifetime counters.
+        let second = engine.run(sim_fleet(2, 3)).unwrap();
+        assert_eq!(second.cache.misses, 0, "replay run must not re-execute");
+        assert_eq!(second.cache.hits, first.cache.misses);
+        assert!((second.hit_rate() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_fleet_is_an_error() {
+        let engine = FleetEngine::new(FleetConfig::default());
+        assert!(engine.run(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn unknown_strategy_is_an_error() {
+        let engine = FleetEngine::new(FleetConfig {
+            strategy: "hillclimb".into(),
+            ..FleetConfig::default()
+        });
+        assert!(engine.run(sim_fleet(2, 1)).is_err());
+    }
+}

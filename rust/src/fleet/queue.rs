@@ -1,0 +1,75 @@
+//! Shared work queue for the fleet worker pool.
+//!
+//! Deliberately minimal: profiling tasks are coarse (seconds to minutes of
+//! simulated work each), so a mutex-guarded deque is far below contention
+//! range and keeps the pool dependency-free. Workers pull until the queue
+//! is drained; there is no re-enqueue, so termination is trivial.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// A multi-consumer FIFO drained by the worker pool.
+pub struct WorkQueue<T> {
+    inner: Mutex<VecDeque<T>>,
+}
+
+impl<T> WorkQueue<T> {
+    pub fn new<I: IntoIterator<Item = T>>(items: I) -> Self {
+        Self { inner: Mutex::new(items.into_iter().collect()) }
+    }
+
+    /// Pop the next task; `None` once the queue is drained.
+    pub fn pop(&self) -> Option<T> {
+        self.inner.lock().unwrap().pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn fifo_order_single_consumer() {
+        let q = WorkQueue::new(0..5);
+        let drained: Vec<i32> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(drained, vec![0, 1, 2, 3, 4]);
+        assert!(q.is_empty());
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn concurrent_drain_with_more_tasks_than_workers() {
+        // 32 tasks, 4 workers: every task is consumed exactly once and
+        // every worker that can make progress gets some share.
+        let q = WorkQueue::new(0..32u32);
+        let taken: Mutex<Vec<(usize, u32)>> = Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            for w in 0..4 {
+                let q = &q;
+                let taken = &taken;
+                s.spawn(move || {
+                    while let Some(item) = q.pop() {
+                        taken.lock().unwrap().push((w, item));
+                        // Yield so the drain interleaves across workers.
+                        std::thread::yield_now();
+                    }
+                });
+            }
+        });
+        let taken = taken.into_inner().unwrap();
+        assert_eq!(taken.len(), 32);
+        let mut items: Vec<u32> = taken.iter().map(|&(_, i)| i).collect();
+        items.sort_unstable();
+        assert_eq!(items, (0..32).collect::<Vec<_>>(), "each task exactly once");
+        assert!(q.is_empty());
+    }
+}

@@ -1,0 +1,216 @@
+//! The fleet worker task: one registered job, profiled through the shared
+//! measurement cache with incremental model refits.
+//!
+//! A worker repeatedly pulls job tasks from the [`super::queue::WorkQueue`]
+//! and runs `rounds` profiling sessions per job (round 0 is the cold
+//! profile; later rounds are the periodic re-profiles of the paper's
+//! adaptive loop, which the cache turns into near-free replays). Every
+//! measurement — cached or executed — lands in the job's
+//! [`IncrementalModel`], which refits warm from the previous parameters
+//! instead of from scratch.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::backend::{Measurement, SimulatedBackend};
+use crate::coordinator::{Profiler, SessionResult};
+use crate::fit::{ProfilePoint, RuntimeModel};
+use crate::simulator::SimulatedJob;
+use crate::strategies::{self, grid_bucket};
+
+use super::cache::{CachedBackend, MeasurementCache};
+use super::{FleetConfig, FleetJobSpec};
+
+/// A runtime model maintained across measurements: each new observation
+/// warm-starts the refit from the previous parameters (the NMS reuse,
+/// §III-B.3, applied fleet-wide) instead of refitting cold.
+pub struct IncrementalModel {
+    delta: f64,
+    points: Vec<ProfilePoint>,
+    model: RuntimeModel,
+    refits: usize,
+}
+
+impl IncrementalModel {
+    pub fn new(delta: f64) -> Self {
+        Self { delta, points: Vec::new(), model: RuntimeModel::identity(), refits: 0 }
+    }
+
+    /// Fold one measurement in. A repeated probe of the same grid bucket
+    /// (a re-profiling round or a cache replay) *replaces* the stale point
+    /// rather than double-weighting it.
+    pub fn observe(&mut self, m: &Measurement) {
+        let bucket = grid_bucket(m.limit, self.delta);
+        let point = ProfilePoint::new(m.limit, m.mean_runtime);
+        match self
+            .points
+            .iter()
+            .position(|p| grid_bucket(p.limit, self.delta) == bucket)
+        {
+            Some(i) => self.points[i] = point,
+            None => self.points.push(point),
+        }
+        self.model = RuntimeModel::fit_warm(&self.points, Some(&self.model));
+        self.refits += 1;
+    }
+
+    pub fn model(&self) -> &RuntimeModel {
+        &self.model
+    }
+
+    pub fn points(&self) -> &[ProfilePoint] {
+        &self.points
+    }
+
+    /// Total refits performed (one per observed measurement).
+    pub fn refits(&self) -> usize {
+        self.refits
+    }
+}
+
+/// Outcome of profiling one fleet job (all rounds).
+pub struct JobOutcome {
+    /// Position of the job in the submitted spec list (used to restore a
+    /// stable order after the pool finishes out of order).
+    pub index: usize,
+    pub name: String,
+    /// Cache label: `node/algo`.
+    pub label: String,
+    pub node: &'static crate::simulator::NodeSpec,
+    pub algo: crate::simulator::Algo,
+    /// One session per profiling round, in order.
+    pub rounds: Vec<SessionResult>,
+    /// Incrementally refit model over all rounds.
+    pub model: RuntimeModel,
+    /// Distinct grid points backing the model.
+    pub points: usize,
+    /// Model refits performed while measurements landed.
+    pub refits: usize,
+    /// Arrival rate (Hz) the job must sustain (peak over the horizon).
+    pub rate_hz: f64,
+    pub priority: i32,
+    /// Worker that processed this job.
+    pub worker: usize,
+}
+
+impl JobOutcome {
+    /// Profiling wallclock actually spent (cache hits cost zero).
+    pub fn executed_wallclock(&self) -> f64 {
+        self.rounds.iter().map(|s| s.total_time).sum()
+    }
+}
+
+/// Profile one job: `rounds` sessions through the shared cache, feeding the
+/// incremental model, then derive the rate the job must sustain.
+pub fn profile_job(
+    spec: &FleetJobSpec,
+    cfg: &FleetConfig,
+    cache: &MeasurementCache,
+    worker: usize,
+) -> Result<JobOutcome> {
+    let label = spec.label();
+    let mut incremental = IncrementalModel::new(cfg.profiler.delta);
+    let mut rounds = Vec::with_capacity(cfg.rounds);
+    for _round in 0..cfg.rounds.max(1) {
+        // Same seed every round: the job's runtime distribution does not
+        // change between rounds, and a deterministic replay is exactly what
+        // lets the cache absorb the whole re-profile.
+        let job = SimulatedJob::new(spec.node, spec.algo, spec.seed);
+        let backend = SimulatedBackend::new(job);
+        let mut cached = CachedBackend::new(backend, cache, label.clone(), cfg.profiler.delta);
+        let strategy = strategies::by_name(&cfg.strategy, spec.seed)
+            .ok_or_else(|| anyhow!("unknown strategy '{}'", cfg.strategy))?;
+        let mut profiler = Profiler::new(cfg.profiler.clone(), strategy);
+        let session =
+            profiler.run_observed(&mut cached, &mut |m: &Measurement| incremental.observe(m));
+        rounds.push(session);
+    }
+    let rate_hz = spec.arrivals.max_rate(cfg.horizon).max(1e-6);
+    Ok(JobOutcome {
+        index: 0, // assigned by the engine when results are collected
+        name: spec.name.clone(),
+        label,
+        node: spec.node,
+        algo: spec.algo,
+        model: incremental.model().clone(),
+        points: incremental.points().len(),
+        refits: incremental.refits(),
+        rounds,
+        rate_hz,
+        priority: spec.priority,
+        worker,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::{node, Algo};
+
+    fn meas(limit: f64, rt: f64) -> Measurement {
+        Measurement { limit, mean_runtime: rt, samples: 1000, wallclock: rt * 1000.0 }
+    }
+
+    #[test]
+    fn incremental_model_replaces_repeated_buckets() {
+        let mut im = IncrementalModel::new(0.1);
+        im.observe(&meas(0.2, 0.5));
+        im.observe(&meas(1.0, 0.11));
+        im.observe(&meas(2.0, 0.06));
+        assert_eq!(im.points().len(), 3);
+        // Re-observing bucket 0.2 (with float drift) replaces, not appends.
+        im.observe(&meas(0.1 + 0.1, 0.48));
+        assert_eq!(im.points().len(), 3);
+        assert_eq!(im.refits(), 4);
+        let p = im
+            .points()
+            .iter()
+            .find(|p| (p.limit - 0.2).abs() < 1e-9)
+            .unwrap();
+        assert_eq!(p.runtime, 0.48);
+        assert!(im.model().eval(0.5).is_finite());
+    }
+
+    #[test]
+    fn incremental_fit_tracks_the_curve() {
+        // Feed points from a known curve; the incremental model should
+        // describe it about as well as a cold fit of the same points.
+        let mut im = IncrementalModel::new(0.1);
+        let curve = |r: f64| 0.08 * r.powf(-0.9) + 0.01;
+        for &r in &[0.2, 0.4, 1.0, 2.0, 4.0] {
+            im.observe(&meas(r, curve(r)));
+        }
+        let cold = RuntimeModel::fit(im.points());
+        for &r in &[0.3, 0.8, 3.0] {
+            let want = curve(r);
+            let got = im.model().eval(r);
+            let cold_err = ((cold.eval(r) - want) / want).abs();
+            let incr_err = ((got - want) / want).abs();
+            assert!(
+                incr_err < cold_err + 0.05,
+                "incremental fit much worse than cold at {r}: {incr_err} vs {cold_err}"
+            );
+        }
+    }
+
+    #[test]
+    fn profile_job_replays_later_rounds_from_cache() {
+        let cache = MeasurementCache::new();
+        let cfg = FleetConfig {
+            workers: 1,
+            rounds: 2,
+            ..FleetConfig::default()
+        };
+        let spec = FleetJobSpec::simulated("solo", node("pi4").unwrap(), Algo::Arima, 11);
+        let out = profile_job(&spec, &cfg, &cache, 0).unwrap();
+        assert_eq!(out.rounds.len(), 2);
+        let s = cache.stats();
+        // Round 1 misses everything; round 2 replays identically -> every
+        // probe hits and the session costs zero wallclock.
+        assert_eq!(s.misses as usize, out.rounds[0].steps.len());
+        assert_eq!(s.hits as usize, out.rounds[1].steps.len());
+        assert_eq!(out.rounds[1].total_time, 0.0);
+        assert!(out.rounds[0].total_time > 0.0);
+        assert!(out.points >= out.rounds[0].steps.len());
+        assert_eq!(out.refits, out.rounds[0].steps.len() + out.rounds[1].steps.len());
+    }
+}

@@ -11,6 +11,7 @@
 pub mod fit;
 pub mod coordinator;
 pub mod earlystop;
+pub mod fleet;
 pub mod gp;
 pub mod linalg;
 pub mod repro;

@@ -17,6 +17,7 @@ use streamprof::coordinator::{
     ResourceAdjuster, SimulatedBackend,
 };
 use streamprof::earlystop::EarlyStopConfig;
+use streamprof::fleet::{sim_fleet, FleetConfig, FleetEngine};
 use streamprof::repro;
 use streamprof::runtime::{artifacts_available, default_artifacts_dir, Engine};
 use streamprof::simulator::{node, Algo, SimulatedJob, NODES};
@@ -34,6 +35,7 @@ fn main() {
         "acquire" => cmd_acquire(&args),
         "profile" => cmd_profile(&args).map(|_| ()),
         "adjust" => cmd_adjust(&args),
+        "fleet" => cmd_fleet(&args),
         "repro" => cmd_repro(&args),
         "artifacts" => cmd_artifacts(),
         _ => {
@@ -60,6 +62,9 @@ fn print_help() {
          \u{20}           [--samples 10000] [--steps 6] [--early-stop] [--lambda 0.1]\n\
          \u{20}           [--backend sim|pjrt] [--seed 1]\n\
          \u{20} adjust    <profile options> [--rate-lo 1] [--rate-hi 5] [--horizon 1000]\n\
+         \u{20} fleet     [--jobs 12] [--workers 4] [--rounds 2] [--strategy nms]\n\
+         \u{20}           [--samples 1000] [--steps 6] [--early-stop] [--seed 7]\n\
+         \u{20}           [--horizon 1000]\n\
          \u{20} repro     <table1|fig2|fig3|fig4|fig5|fig6|fig7|all> [--full]\n\
          \u{20} artifacts                     AOT artifact status\n"
     );
@@ -216,6 +221,86 @@ fn cmd_adjust(args: &Args) -> Result<()> {
         ]);
     }
     println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let n_jobs = args.opt_usize("jobs", 12);
+    let cfg = FleetConfig {
+        workers: args.opt_usize("workers", 4),
+        rounds: args.opt_usize("rounds", 2),
+        strategy: args.opt_or("strategy", "nms"),
+        profiler: ProfilerConfig {
+            samples: args.opt_usize("samples", 1000),
+            max_steps: args.opt_usize("steps", 6),
+            early_stop: args.flag("early-stop").then(|| {
+                EarlyStopConfig::new(
+                    args.opt_f64("confidence", 0.95),
+                    args.opt_f64("lambda", 0.1),
+                )
+            }),
+            early_stop_cap: args.opt_usize("samples", 1000),
+            ..Default::default()
+        },
+        horizon: args.opt_usize("horizon", 1000),
+    };
+    let workers = cfg.workers;
+    let rounds = cfg.rounds;
+    let engine = FleetEngine::new(cfg);
+    let specs = sim_fleet(n_jobs, args.opt_u64("seed", 7));
+    let summary = engine.run(specs)?;
+
+    let mut table = Table::new(&[
+        "job", "device", "algo", "worker", "probes", "refits", "model", "rate Hz", "limit",
+        "guaranteed",
+    ])
+    .with_title(&format!(
+        "Fleet profiling — {n_jobs} jobs, {workers} workers, {rounds} rounds"
+    ));
+    for o in &summary.outcomes {
+        let (limit, guaranteed) = match summary.assignment(&o.name) {
+            Some(a) => (format!("{:.1}", a.adjustment.limit), a.guaranteed.to_string()),
+            None => ("-".into(), "-".into()),
+        };
+        table.rowd(&[
+            &o.name,
+            &o.node.name,
+            &o.algo.name(),
+            &o.worker,
+            &o.points,
+            &o.refits,
+            &o.model.kind.name(),
+            &format!("{:.1}", o.rate_hz),
+            &limit,
+            &guaranteed,
+        ]);
+    }
+    println!("{}", table.render());
+
+    let mut plans = Table::new(&["node", "capacity", "assigned", "guaranteed", "shed"])
+        .with_title("Per-node capacity plans");
+    for (node, plan) in &summary.plans {
+        let guaranteed = plan.assignments.iter().filter(|a| a.guaranteed).count();
+        plans.rowd(&[
+            &node,
+            &format!("{:.1}", plan.capacity),
+            &format!("{:.1}", plan.total_assigned),
+            &guaranteed,
+            &(plan.assignments.len() - guaranteed),
+        ]);
+    }
+    println!("{}", plans.render());
+
+    let stats = summary.cache;
+    println!(
+        "measurement cache: {} hits / {} misses ({:.0}% hit rate), \
+         {:.0}s of profiling wallclock saved, {:.0}s executed",
+        stats.hits,
+        stats.misses,
+        100.0 * summary.hit_rate(),
+        stats.saved_wallclock,
+        summary.executed_wallclock()
+    );
     Ok(())
 }
 

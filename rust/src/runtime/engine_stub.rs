@@ -1,0 +1,93 @@
+//! API-identical stub for [`Engine`]/[`LoadedJob`] used when the crate is
+//! built without the `pjrt` feature (the default: the `xla` PJRT bindings
+//! are a vendored dependency, not a crates.io one).
+//!
+//! `Engine::new` always fails, so a `LoadedJob` can never be constructed
+//! through this stub — the remaining methods exist only to keep the
+//! downstream code (workloads, backends, CLI, examples) compiling and are
+//! unreachable at runtime.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::manifest::Manifest;
+
+/// One job step's observable outcome.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StepOutcome {
+    /// Identity-function error.
+    pub err: f32,
+    /// Threshold-model boundary in effect for this sample.
+    pub thr: f32,
+    /// 1.0 when the sample was flagged anomalous.
+    pub flag: f32,
+}
+
+/// Stub PJRT client: construction always fails.
+pub struct Engine {
+    _private: (),
+}
+
+impl Engine {
+    pub fn new(_artifacts_dir: &Path) -> Result<Engine> {
+        bail!(
+            "built without the `pjrt` feature — rebuild with \
+             `--features pjrt` and a vendored xla-rs to execute AOT artifacts"
+        )
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        unreachable!("stub Engine cannot be constructed")
+    }
+
+    pub fn platform(&self) -> String {
+        unreachable!("stub Engine cannot be constructed")
+    }
+
+    pub fn load_job(&self, _name: &str) -> Result<LoadedJob> {
+        unreachable!("stub Engine cannot be constructed")
+    }
+}
+
+/// Stub compiled artifact — never constructed.
+pub struct LoadedJob {
+    _private: (),
+}
+
+impl LoadedJob {
+    pub fn name(&self) -> &str {
+        unreachable!("stub LoadedJob cannot be constructed")
+    }
+
+    pub fn stream_elements(&self) -> usize {
+        unreachable!("stub LoadedJob cannot be constructed")
+    }
+
+    pub fn samples_per_call(&self) -> usize {
+        unreachable!("stub LoadedJob cannot be constructed")
+    }
+
+    pub fn reset(&mut self) -> Result<()> {
+        unreachable!("stub LoadedJob cannot be constructed")
+    }
+
+    pub fn step(&mut self, _x: &[f32]) -> Result<Vec<StepOutcome>> {
+        unreachable!("stub LoadedJob cannot be constructed")
+    }
+
+    pub fn state(&self, _name: &str) -> Result<Vec<f32>> {
+        unreachable!("stub LoadedJob cannot be constructed")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_engine_fails_with_actionable_message() {
+        let err = Engine::new(Path::new("/nonexistent")).err().expect("stub must fail");
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

@@ -20,6 +20,15 @@ pub use synthetic::initial_limits;
 
 use crate::fit::{ProfilePoint, RuntimeModel};
 
+/// Index of the limitation-grid cell containing `r` (nearest multiple of
+/// `delta`). This is the canonical quantization shared by grid snapping and
+/// the fleet engine's measurement-cache keys, so a probe at 0.30000000004
+/// and a cached measurement at 0.3 always land in the same bucket.
+pub fn grid_bucket(r: f64, delta: f64) -> i64 {
+    debug_assert!(delta > 0.0);
+    (r / delta).round() as i64
+}
+
 /// Everything a strategy may look at when choosing the next limitation.
 pub struct ProfilingContext {
     pub l_min: f64,
@@ -47,9 +56,7 @@ impl ProfilingContext {
 
     /// Snap a raw limitation onto the grid, clamped to `[l_min, l_max]`.
     pub fn snap(&self, r: f64) -> f64 {
-        let stepped = (r / self.delta).round() * self.delta;
-        // Re-quantize to kill float drift (0.30000000000000004 -> 0.3).
-        let q = (stepped / self.delta).round() * self.delta;
+        let q = grid_bucket(r, self.delta) as f64 * self.delta;
         q.clamp(self.l_min, self.l_max)
     }
 
@@ -114,6 +121,16 @@ mod tests {
 
     fn ctx() -> ProfilingContext {
         ProfilingContext::new(0.1, 4.0, 0.1)
+    }
+
+    #[test]
+    fn grid_bucket_absorbs_float_drift() {
+        // 0.1 * 3 accumulates drift; the bucket index must not.
+        let drifted = 0.1 + 0.1 + 0.1;
+        assert_eq!(grid_bucket(drifted, 0.1), 3);
+        assert_eq!(grid_bucket(0.3, 0.1), 3);
+        assert_eq!(grid_bucket(0.24, 0.1), 2);
+        assert_eq!(grid_bucket(16.0, 0.1), 160);
     }
 
     #[test]

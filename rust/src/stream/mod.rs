@@ -157,6 +157,12 @@ impl ArrivalProcess {
     pub fn min_gap(&self, horizon: usize) -> f64 {
         (0..horizon).map(|i| self.gap_at(i)).fold(f64::INFINITY, f64::min)
     }
+
+    /// Peak arrival rate (Hz) over the horizon — the rate a fleet job's
+    /// guaranteed allocation must sustain (0 for an empty horizon).
+    pub fn max_rate(&self, horizon: usize) -> f64 {
+        1.0 / self.min_gap(horizon)
+    }
 }
 
 #[cfg(test)]
@@ -226,6 +232,8 @@ mod tests {
         assert!(max > 19.0 && min < 6.0);
         // Budget = 1/max rate.
         assert!((p.min_gap(100) - 1.0 / max).abs() < 1e-9);
+        assert!((p.max_rate(100) - max).abs() < 1e-9);
+        assert_eq!(p.max_rate(0), 0.0, "empty horizon has no rate demand");
     }
 
     #[test]

@@ -1,11 +1,10 @@
 //! Leveled stderr logger with monotonic timestamps.
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
 
-use once_cell::sync::Lazy;
-
-static START: Lazy<Instant> = Lazy::new(Instant::now);
+static START: OnceLock<Instant> = OnceLock::new();
 static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
 
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
@@ -38,7 +37,7 @@ pub fn log(level: Level, module: &str, msg: &str) {
     if !enabled(level) {
         return;
     }
-    let t = START.elapsed().as_secs_f64();
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
     let tag = match level {
         Level::Error => "ERROR",
         Level::Warn => "WARN ",

@@ -1,0 +1,119 @@
+//! End-to-end fleet engine run: N simulated jobs sharded over a worker
+//! pool, probing through the shared measurement cache, with incremental
+//! refits feeding per-node capacity plans. Mirrors the acceptance bar for
+//! the fleet subsystem: ≥ 8 jobs on a 4-worker pool must finish with a
+//! ≥ 30% measurement-cache hit rate.
+
+use streamprof::coordinator::ProfilerConfig;
+use streamprof::fleet::{sim_fleet, FleetConfig, FleetEngine, FleetJobSpec};
+use streamprof::simulator::{node, Algo};
+use streamprof::stream::ArrivalProcess;
+
+fn quick_cfg(workers: usize, rounds: usize) -> FleetConfig {
+    FleetConfig {
+        workers,
+        rounds,
+        strategy: "nms".to_string(),
+        profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
+        horizon: 500,
+    }
+}
+
+#[test]
+fn eight_jobs_on_four_workers_hit_the_cache() {
+    let engine = FleetEngine::new(quick_cfg(4, 2));
+    let summary = engine.run(sim_fleet(8, 7)).expect("fleet run");
+    assert_eq!(summary.outcomes.len(), 8);
+    // Submission order restored after the pool finishes out of order.
+    for (i, o) in summary.outcomes.iter().enumerate() {
+        assert_eq!(o.index, i);
+        assert_eq!(o.name, format!("job-{i:02}"));
+        assert_eq!(o.rounds.len(), 2);
+        assert!(o.model.eval(1.0).is_finite() && o.model.eval(1.0) > 0.0);
+        assert!(o.refits >= o.points);
+        assert!(o.rate_hz > 0.0);
+    }
+    // The acceptance bar: re-profiling rounds replay through the cache.
+    let rate = summary.hit_rate();
+    assert!(rate >= 0.30, "cache hit rate {rate:.2} below 30%");
+    assert!(summary.cache.saved_wallclock > 0.0);
+    assert!(summary.executed_wallclock() > 0.0);
+}
+
+#[test]
+fn work_queue_drains_with_more_jobs_than_workers() {
+    // 12 jobs on 3 workers: every job must be profiled exactly once and
+    // the worker ids span the pool.
+    let engine = FleetEngine::new(quick_cfg(3, 1));
+    let summary = engine.run(sim_fleet(12, 3)).expect("fleet run");
+    assert_eq!(summary.outcomes.len(), 12);
+    assert!(summary.outcomes.iter().all(|o| o.worker < 3));
+    let mut names: Vec<&str> = summary.outcomes.iter().map(|o| o.name.as_str()).collect();
+    names.sort_unstable();
+    names.dedup();
+    assert_eq!(names.len(), 12, "each job profiled exactly once");
+}
+
+#[test]
+fn replicas_of_one_job_class_share_cache_entries() {
+    // Two replicas of the same (device, algo) class: the second replica's
+    // probes reuse the first one's measurements even within a single
+    // round, because they share the cache label.
+    let engine = FleetEngine::new(FleetConfig { workers: 1, rounds: 1, ..quick_cfg(1, 1) });
+    let pi4 = node("pi4").unwrap();
+    let specs = vec![
+        FleetJobSpec::simulated("cam-a", pi4, Algo::Lstm, 5),
+        FleetJobSpec::simulated("cam-b", pi4, Algo::Lstm, 5),
+    ];
+    let summary = engine.run(specs).expect("fleet run");
+    let stats = summary.cache;
+    assert!(stats.hits > 0, "replica probes must hit the shared cache");
+    // Both replicas end with usable models and assignments on the node.
+    assert_eq!(summary.plans.len(), 1);
+    assert_eq!(summary.plans[0].0, "pi4");
+    assert!(summary.assignment("cam-a").is_some());
+    assert!(summary.assignment("cam-b").is_some());
+}
+
+#[test]
+fn capacity_plans_cover_every_job_and_respect_capacity() {
+    let engine = FleetEngine::new(quick_cfg(4, 2));
+    let summary = engine.run(sim_fleet(10, 11)).expect("fleet run");
+    let planned: usize = summary.plans.iter().map(|(_, p)| p.assignments.len()).sum();
+    assert_eq!(planned, 10, "every job appears in exactly one node plan");
+    for (node_name, plan) in &summary.plans {
+        assert!(
+            plan.total_assigned <= plan.capacity + 1e-9,
+            "{node_name}: guaranteed set exceeds capacity"
+        );
+    }
+    for o in &summary.outcomes {
+        let a = summary.assignment(&o.name).expect("assignment exists");
+        assert!(a.adjustment.limit > 0.0);
+    }
+}
+
+#[test]
+fn varying_arrivals_drive_rate_demand() {
+    // A job with a faster stream must register a higher rate demand.
+    let engine = FleetEngine::new(quick_cfg(2, 1));
+    let wally = node("wally").unwrap();
+    let mut slow = FleetJobSpec::simulated("slow", wally, Algo::Arima, 1);
+    slow.arrivals = ArrivalProcess::Fixed(1.0);
+    let mut fast = FleetJobSpec::simulated("fast", wally, Algo::Arima, 1);
+    fast.arrivals = ArrivalProcess::Varying { lo: 2.0, hi: 8.0, period: 100.0 };
+    let summary = engine.run(vec![slow, fast]).expect("fleet run");
+    let rate = |n: &str| {
+        summary
+            .outcomes
+            .iter()
+            .find(|o| o.name == n)
+            .unwrap()
+            .rate_hz
+    };
+    assert!((rate("slow") - 1.0).abs() < 1e-9);
+    assert!(rate("fast") > 7.0);
+    // The faster job needs at least as much CPU.
+    let limit = |n: &str| summary.assignment(n).unwrap().adjustment.limit;
+    assert!(limit("fast") >= limit("slow"));
+}

@@ -49,21 +49,25 @@ fn compare_trajectories(algo: Algo, steps: usize, tol: f32) {
 }
 
 #[test]
+#[cfg_attr(not(feature = "pjrt"), ignore = "requires PJRT artifacts")]
 fn arima_pjrt_matches_mirror_over_500_samples() {
     compare_trajectories(Algo::Arima, 500, 2e-3);
 }
 
 #[test]
+#[cfg_attr(not(feature = "pjrt"), ignore = "requires PJRT artifacts")]
 fn birch_pjrt_matches_mirror_over_500_samples() {
     compare_trajectories(Algo::Birch, 500, 2e-3);
 }
 
 #[test]
+#[cfg_attr(not(feature = "pjrt"), ignore = "requires PJRT artifacts")]
 fn lstm_pjrt_matches_mirror_over_300_samples() {
     compare_trajectories(Algo::Lstm, 300, 5e-3);
 }
 
 #[test]
+#[cfg_attr(not(feature = "pjrt"), ignore = "requires PJRT artifacts")]
 fn chunked_artifact_matches_per_sample_artifact() {
     let Some(engine) = engine() else { return };
     let chunk = engine.manifest().chunk;
@@ -89,6 +93,7 @@ fn chunked_artifact_matches_per_sample_artifact() {
 }
 
 #[test]
+#[cfg_attr(not(feature = "pjrt"), ignore = "requires PJRT artifacts")]
 fn batched_artifact_runs_independent_streams() {
     let Some(engine) = engine() else { return };
     let mut batched = PjrtJob::load_named(&engine, "lstm_batch8").unwrap();
@@ -119,6 +124,7 @@ fn batched_artifact_runs_independent_streams() {
 }
 
 #[test]
+#[cfg_attr(not(feature = "pjrt"), ignore = "requires PJRT artifacts")]
 fn anomaly_burst_is_detected_by_real_artifact() {
     let Some(engine) = engine() else { return };
     let mut job = PjrtJob::load(&engine, Algo::Arima).unwrap();
@@ -138,6 +144,7 @@ fn anomaly_burst_is_detected_by_real_artifact() {
 }
 
 #[test]
+#[cfg_attr(not(feature = "pjrt"), ignore = "requires PJRT artifacts")]
 fn state_reset_restores_initial_trajectory() {
     let Some(engine) = engine() else { return };
     let mut job = PjrtJob::load(&engine, Algo::Birch).unwrap();

@@ -84,6 +84,7 @@ fn early_stopping_pipeline_reduces_time_at_similar_accuracy() {
 }
 
 #[test]
+#[cfg_attr(not(feature = "pjrt"), ignore = "requires PJRT artifacts")]
 fn pjrt_backed_profiling_session() {
     if !artifacts_available() {
         eprintln!("SKIP: artifacts not built");
