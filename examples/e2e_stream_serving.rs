@@ -78,7 +78,13 @@ fn main() -> anyhow::Result<()> {
     // ---- Phase 4: serve the stream under the chosen limit. ----
     let n_samples = 4000usize;
     let mut table = Table::new(&[
-        "variant", "samples", "throughput (samples/s)", "p50 (µs)", "p95 (µs)", "p99 (µs)", "anomalies",
+        "variant",
+        "samples",
+        "throughput (samples/s)",
+        "p50 (µs)",
+        "p95 (µs)",
+        "p99 (µs)",
+        "anomalies",
     ])
     .with_title(&format!(
         "Serving 4,000-sample stream (anomaly bursts) at {:.1} CPUs",

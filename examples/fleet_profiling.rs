@@ -48,7 +48,13 @@ fn main() -> anyhow::Result<()> {
     let summary = engine.run(specs)?;
 
     let mut table = Table::new(&[
-        "device", "job", "worker", "profiling time", "SMAPE", "assigned CPUs", "pred s/sample",
+        "device",
+        "job",
+        "worker",
+        "profiling time",
+        "SMAPE",
+        "assigned CPUs",
+        "pred s/sample",
     ])
     .with_title(&format!(
         "Fleet profiling — {n_jobs} jobs, 4 workers, NMS, 2 rounds, 2 Hz streams"

@@ -65,7 +65,12 @@ impl ResourceAdjuster {
 
     /// Decide for an arrival process over a horizon, re-deciding every
     /// `window` samples — the adaptive loop of Fig. 1.
-    pub fn plan(&self, arrivals: &ArrivalProcess, horizon: usize, window: usize) -> Vec<Adjustment> {
+    pub fn plan(
+        &self,
+        arrivals: &ArrivalProcess,
+        horizon: usize,
+        window: usize,
+    ) -> Vec<Adjustment> {
         assert!(window > 0);
         let mut out = Vec::new();
         let mut i = 0;

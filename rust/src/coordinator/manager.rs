@@ -82,6 +82,38 @@ impl JobManager {
         self.jobs.is_empty()
     }
 
+    /// The adjustment this node would grant a job with the given model and
+    /// arrival rate, without registering it — the quote the fleet scheduler
+    /// scores candidate placements with.
+    pub fn quote(&self, model: &RuntimeModel, rate_hz: f64) -> Adjustment {
+        let adj = ResourceAdjuster::new(model.clone(), self.l_min, self.capacity, self.delta);
+        adj.decide(1.0 / rate_hz.max(1e-9))
+    }
+
+    /// Capacity left after the current plan's guaranteed assignments — what
+    /// this node advertises to the fleet scheduler.
+    pub fn residual_capacity(&self) -> f64 {
+        (self.capacity - self.plan().total_assigned).max(0.0)
+    }
+
+    /// Accept an externally placed job iff its tightest feasible limit fits
+    /// the *residual* capacity, so admission can never displace a job that
+    /// is already guaranteed here. A job whose name is already registered
+    /// is refused outright — silently replacing a resident (and deleting
+    /// it on a later rollback) must never happen. Returns the granted
+    /// limit.
+    pub fn try_accept(&mut self, job: ManagedJob) -> Option<f64> {
+        if self.jobs.contains_key(&job.name) {
+            return None;
+        }
+        let a = self.quote(&job.model, job.rate_hz);
+        if !a.feasible || a.limit > self.residual_capacity() + 1e-9 {
+            return None;
+        }
+        self.register(job);
+        Some(a.limit)
+    }
+
     /// Update a job's arrival rate (the Fig. 1 adaptive loop input).
     pub fn update_rate(&mut self, name: &str, rate_hz: f64) -> bool {
         if let Some(j) = self.jobs.get_mut(name) {
@@ -131,13 +163,8 @@ impl JobManager {
                 .min_by(|x, y| {
                     let px = self.jobs[&x.name].priority;
                     let py = self.jobs[&y.name].priority;
-                    px.cmp(&py).then(
-                        x.adjustment
-                            .limit
-                            .partial_cmp(&y.adjustment.limit)
-                            .unwrap()
-                            .reverse(),
-                    )
+                    let by_demand = x.adjustment.limit.partial_cmp(&y.adjustment.limit).unwrap();
+                    px.cmp(&py).then(by_demand.reverse())
                 });
             match victim {
                 Some(v) => v.guaranteed = false,
@@ -241,6 +268,54 @@ mod tests {
         mgr.register(job("fast", 0.05, 1000.0, 5)); // 1 kHz: impossible
         let plan = mgr.plan();
         assert!(!plan.assignments[0].guaranteed);
+    }
+
+    #[test]
+    fn residual_capacity_tracks_guaranteed_assignments() {
+        let mut mgr = JobManager::new(4.0);
+        assert!((mgr.residual_capacity() - 4.0).abs() < 1e-9, "idle node");
+        mgr.register(job("a", 0.05, 5.0, 1)); // tightest limit 0.3
+        assert!((mgr.residual_capacity() - 3.7).abs() < 1e-9);
+        // A shed job consumes no residual capacity.
+        let mut tight = JobManager::new(1.0);
+        tight.register(job("big", 0.05, 10.0, 2)); // needs 0.6
+        tight.register(job("lost", 0.05, 10.0, 1)); // shed
+        assert!((tight.residual_capacity() - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quote_matches_plan_decision() {
+        let mut mgr = JobManager::new(4.0);
+        let j = job("a", 0.05, 5.0, 1);
+        let quoted = mgr.quote(&j.model, j.rate_hz);
+        mgr.register(j);
+        let planned = &mgr.plan().assignments[0].adjustment;
+        assert!((quoted.limit - planned.limit).abs() < 1e-12);
+        assert_eq!(quoted.feasible, planned.feasible);
+    }
+
+    #[test]
+    fn try_accept_grants_only_from_residual() {
+        let mut mgr = JobManager::new(1.0);
+        mgr.register(job("resident", 0.05, 10.0, 5)); // guaranteed at 0.6
+        // Fits: needs 0.3 <= residual 0.4.
+        let granted = mgr.try_accept(job("guest", 0.05, 5.0, 1));
+        assert!((granted.unwrap() - 0.3).abs() < 1e-9);
+        // Does not fit: needs 0.6 > residual 0.1 — refused, not registered.
+        assert!(mgr.try_accept(job("crowd", 0.05, 10.0, 9)).is_none());
+        assert_eq!(mgr.len(), 2);
+        // The resident stayed guaranteed throughout.
+        let plan = mgr.plan();
+        let resident = plan.assignments.iter().find(|a| a.name == "resident").unwrap();
+        assert!(resident.guaranteed);
+        // Infeasible stream: refused regardless of residual.
+        let mut idle = JobManager::new(2.0);
+        assert!(idle.try_accept(job("fast", 0.05, 1000.0, 5)).is_none());
+        assert!(idle.is_empty());
+        // A name collision with a resident is refused, never replaced.
+        assert!(mgr.try_accept(job("resident", 0.01, 1.0, 1)).is_none());
+        let resident = mgr.jobs().find(|j| j.name == "resident").unwrap();
+        assert!((resident.model.a - 0.05).abs() < 1e-12, "resident model untouched");
     }
 
     #[test]

@@ -161,10 +161,7 @@ impl Profiler {
                 m
             })
             .collect();
-        let parallel_wall = measurements
-            .iter()
-            .map(|m| m.wallclock)
-            .fold(0.0f64, f64::max);
+        let parallel_wall = measurements.iter().map(|m| m.wallclock).fold(0.0f64, f64::max);
         cumulative += parallel_wall;
         // Synthetic target: runtime at the smallest initial limitation.
         let target_meas = measurements
@@ -337,7 +334,8 @@ mod tests {
 
     #[test]
     fn single_core_node_works_with_two_initial() {
-        let cfg = ProfilerConfig { n_initial: 2, samples: 1000, max_steps: 5, ..Default::default() };
+        let cfg =
+            ProfilerConfig { n_initial: 2, samples: 1000, max_steps: 5, ..Default::default() };
         let mut b = backend("n1", Algo::Lstm, 13);
         let s = Profiler::new(cfg, strategies::by_name("bs", 1).unwrap()).run(&mut b);
         assert!(s.steps.len() <= 5);

@@ -303,7 +303,11 @@ impl RuntimeModel {
     /// Initial θ: warm-started from the previous model when available
     /// (newly activated parameters start neutral), otherwise from a log-log
     /// regression heuristic.
-    fn initial_theta(kind: ModelKind, points: &[ProfilePoint], warm: Option<&RuntimeModel>) -> Vec<f64> {
+    fn initial_theta(
+        kind: ModelKind,
+        points: &[ProfilePoint],
+        warm: Option<&RuntimeModel>,
+    ) -> Vec<f64> {
         let np = kind.n_params();
         let mut theta = vec![0.0; np];
         if let Some(w) = warm {
@@ -459,7 +463,8 @@ mod tests {
 
     #[test]
     fn invert_rejects_unreachable_targets() {
-        let m = RuntimeModel { kind: ModelKind::Full, a: 1.0, b: 1.0, c: 0.5, d: 1.0, fit_cost: 0.0 };
+        let m =
+            RuntimeModel { kind: ModelKind::Full, a: 1.0, b: 1.0, c: 0.5, d: 1.0, fit_cost: 0.0 };
         assert!(m.invert(0.4).is_none()); // below asymptote
         assert!(m.invert(-1.0).is_none());
         assert!(m.invert(0.6).is_some());

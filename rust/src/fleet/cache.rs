@@ -217,6 +217,99 @@ mod tests {
     }
 
     #[test]
+    fn grid_bucket_boundaries_are_stable_across_the_whole_grid() {
+        // Every grid value, however it was computed — clean multiple,
+        // repeated-addition drift (0.1+0.1+0.1 = 0.30000000000000004), or
+        // scaled-down integer — must land in the bucket of its index, for
+        // the full 16-core grid (160 buckets).
+        let delta = 0.1;
+        let mut acc = 0.0;
+        for i in 1..=160i64 {
+            acc += delta; // accumulates binary-representation drift
+            let clean = i as f64 * delta;
+            let scaled = (i as f64) / 10.0;
+            assert_eq!(grid_bucket(acc, delta), i, "drifted {acc:.17}");
+            assert_eq!(grid_bucket(clean, delta), i, "clean {clean}");
+            assert_eq!(grid_bucket(scaled, delta), i, "scaled {scaled}");
+        }
+        // Off-grid probes bucket to the nearest cell, monotonically.
+        let mut prev = grid_bucket(0.01, delta);
+        for k in 1..400 {
+            let r = 0.01 + k as f64 * 0.04;
+            let b = grid_bucket(r, delta);
+            assert!(b >= prev, "bucketing must be monotone in r");
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn boundary_drift_cannot_split_a_cache_entry() {
+        // A probe at the drifted representation and a probe at the clean
+        // grid value must share one entry — for every bucket of pi4's
+        // grid, not just the famous 0.3 case.
+        let cache = MeasurementCache::new();
+        let mut b = backend(&cache, 9);
+        let mut acc = 0.0;
+        for _ in 0..40 {
+            acc += 0.1;
+            b.measure(acc, 1000);
+        }
+        assert_eq!(cache.len(), 40);
+        assert_eq!(cache.stats().misses, 40);
+        for i in 1..=40 {
+            b.measure(i as f64 * 0.1, 1000);
+        }
+        assert_eq!(cache.len(), 40, "clean probes must not create new entries");
+        assert_eq!(cache.stats().hits, 40);
+    }
+
+    #[test]
+    fn concurrent_workers_account_stats_exactly() {
+        // 8 workers × 100 probes over 10 buckets of one label. Regardless
+        // of interleaving: every lookup is counted exactly once, the saved
+        // wallclock equals hits × the (identical) cached wallclock, and
+        // the map holds exactly one entry per bucket.
+        let cache = MeasurementCache::new();
+        let wall = 2.0;
+        std::thread::scope(|s| {
+            for w in 0..8usize {
+                let cache = &cache;
+                s.spawn(move || {
+                    for k in 0..100usize {
+                        let limit = 0.1 + ((k + w) % 10) as f64 * 0.1;
+                        if cache.lookup("shared", limit, 0.1).is_none() {
+                            cache.insert(
+                                "shared",
+                                0.1,
+                                Measurement {
+                                    limit,
+                                    mean_runtime: 0.05,
+                                    samples: 1000,
+                                    wallclock: wall,
+                                },
+                            );
+                        }
+                        std::thread::yield_now();
+                    }
+                });
+            }
+        });
+        let stats = cache.stats();
+        assert_eq!(stats.hits + stats.misses, 800, "every lookup counted once");
+        assert!(stats.misses >= 10, "each bucket misses at least once");
+        assert!(stats.hits <= 790);
+        assert_eq!(cache.len(), 10, "one entry per bucket");
+        assert!(
+            (stats.saved_wallclock - stats.hits as f64 * wall).abs() < 1e-9,
+            "saved wallclock must equal hits x cached cost: {} vs {}",
+            stats.saved_wallclock,
+            stats.hits as f64 * wall
+        );
+        let rate = stats.hit_rate();
+        assert!((0.0..=1.0).contains(&rate));
+    }
+
+    #[test]
     fn early_stop_path_shares_the_cache() {
         let cache = MeasurementCache::new();
         let mut b = backend(&cache, 5);

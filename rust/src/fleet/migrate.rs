@@ -1,0 +1,435 @@
+//! Shed-job migration: turn per-node capacity plans into a fleet plan.
+//!
+//! The per-node [`JobManager`] resolves over-subscription by shedding its
+//! lowest-priority jobs to best-effort — locally optimal, fleet-wide
+//! wasteful when another node has idle capacity. The rebalancer closes
+//! that gap (LOS, arXiv 2109.13009, schedules periodic stream-ML work
+//! across meshed edge nodes the same way — from local capacity knowledge):
+//!
+//! 1. plan every node and collect the shed (non-guaranteed) jobs,
+//! 2. order them by priority (desc) with the job name as deterministic
+//!    tie-break, so higher-priority shed jobs get first pick of capacity,
+//! 3. for each, score candidate destinations by slack
+//!    ([`candidates_for`]) and migrate into the best one,
+//! 4. stop when no feasible move remains.
+//!
+//! A migrated job is admitted through [`JobManager::try_accept`], which
+//! only grants limits from *residual* capacity — so a migration can never
+//! displace a job that was already guaranteed anywhere, and in particular
+//! a lower-priority migrant can never push out a higher-priority job. A
+//! destination whose own baseline-shed jobs outrank the migrant can crowd
+//! it back out when the node re-plans; such moves are rolled back and the
+//! next candidate is tried. The shed set is fixed up front and residuals
+//! only shrink, so one pass over the ordered shed jobs reaches the
+//! fixpoint.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::{Assignment, CapacityPlan, JobManager, ManagedJob};
+use crate::simulator::NodeSpec;
+
+use super::placement::{candidates_for, translate_model, FleetJob};
+
+/// One applied migration.
+#[derive(Clone, Debug)]
+pub struct Migration {
+    pub job: String,
+    pub from: &'static str,
+    pub to: &'static str,
+    pub priority: i32,
+    /// CPU limit granted on the destination (translated model).
+    pub limit: f64,
+    /// Destination residual capacity after the move.
+    pub slack_after: f64,
+}
+
+/// Fleet-wide utilization / guarantee metrics of a [`FleetPlan`].
+#[derive(Clone, Copy, Debug)]
+pub struct FleetMetrics {
+    pub jobs: usize,
+    /// Guaranteed jobs before any migration (per-node planning only).
+    pub guaranteed_before: usize,
+    /// Guaranteed jobs in the final plan.
+    pub guaranteed_after: usize,
+    pub total_capacity: f64,
+    /// Sum of guaranteed limits across the fleet.
+    pub total_assigned: f64,
+}
+
+impl FleetMetrics {
+    /// Fraction of fleet capacity committed to guaranteed jobs.
+    pub fn utilization(&self) -> f64 {
+        if self.total_capacity <= 0.0 {
+            0.0
+        } else {
+            self.total_assigned / self.total_capacity
+        }
+    }
+
+    /// Fraction of jobs served just-in-time after rebalancing.
+    pub fn guarantee_rate(&self) -> f64 {
+        if self.jobs == 0 {
+            0.0
+        } else {
+            self.guaranteed_after as f64 / self.jobs as f64
+        }
+    }
+}
+
+/// Fleet-wide placement outcome: final per-node plans, the migration log,
+/// and aggregate metrics.
+#[derive(Clone, Debug)]
+pub struct FleetPlan {
+    /// Final per-node capacity plans, keyed by node name (sorted). Nodes
+    /// with no jobs appear with an empty plan (visible idle capacity).
+    pub plans: Vec<(String, CapacityPlan)>,
+    /// Migrations in application order.
+    pub migrations: Vec<Migration>,
+    pub metrics: FleetMetrics,
+}
+
+impl FleetPlan {
+    /// The final assignment for a job, with the node it landed on.
+    pub fn assignment(&self, job: &str) -> Option<(&str, &Assignment)> {
+        for (node, plan) in &self.plans {
+            if let Some(a) = plan.assignments.iter().find(|a| a.name == job) {
+                return Some((node.as_str(), a));
+            }
+        }
+        None
+    }
+
+    /// The final plan of one node.
+    pub fn node_plan(&self, node: &str) -> Option<&CapacityPlan> {
+        self.plans.iter().find(|(n, _)| n == node).map(|(_, p)| p)
+    }
+
+    /// Jobs guaranteed in the final plan, sorted by name.
+    pub fn guaranteed_jobs(&self) -> Vec<&str> {
+        let mut out: Vec<&str> = self
+            .plans
+            .iter()
+            .flat_map(|(_, p)| p.assignments.iter())
+            .filter(|a| a.guaranteed)
+            .map(|a| a.name.as_str())
+            .collect();
+        out.sort_unstable();
+        out
+    }
+}
+
+/// Rebalance across exactly the nodes that appear as some job's home.
+pub fn rebalance(jobs: &[FleetJob]) -> FleetPlan {
+    rebalance_across(jobs, &[])
+}
+
+/// Rebalance with an explicit additional node roster: `extra_nodes` are
+/// available as migration destinations even when no job lives there yet
+/// (a fresh fog node joining the fleet). Home nodes are always included.
+pub fn rebalance_across(jobs: &[FleetJob], extra_nodes: &[&'static NodeSpec]) -> FleetPlan {
+    let mut managers: BTreeMap<&'static str, (&'static NodeSpec, JobManager)> = BTreeMap::new();
+    for &spec in extra_nodes {
+        managers
+            .entry(spec.name)
+            .or_insert_with(|| (spec, JobManager::new(spec.cores)));
+    }
+    for job in jobs {
+        let (_, mgr) = managers
+            .entry(job.node.name)
+            .or_insert_with(|| (job.node, JobManager::new(job.node.cores)));
+        mgr.register(ManagedJob {
+            name: job.name.clone(),
+            model: job.model.clone(),
+            rate_hz: job.rate_hz,
+            priority: job.priority,
+        });
+    }
+
+    // Baseline: per-node planning only. Collect the shed set. Jobs are
+    // resolved by (name, home node) so a name collision across nodes can
+    // never map a shed assignment onto the wrong job; within one node,
+    // `register` keeps the last same-named spec, so resolve from the back
+    // to pick the job the manager actually planned.
+    let mut guaranteed_before = 0usize;
+    let mut shed: Vec<&FleetJob> = Vec::new();
+    for (&home, (_, mgr)) in &managers {
+        for a in mgr.plan().assignments {
+            if a.guaranteed {
+                guaranteed_before += 1;
+                continue;
+            }
+            let lost = jobs
+                .iter()
+                .rev()
+                .find(|j| j.name == a.name && j.node.name == home);
+            if let Some(job) = lost {
+                shed.push(job);
+            }
+        }
+    }
+    // Higher priority first; name breaks ties deterministically.
+    shed.sort_by(|x, y| y.priority.cmp(&x.priority).then_with(|| x.name.cmp(&y.name)));
+
+    let mut migrations: Vec<Migration> = Vec::new();
+    for job in shed {
+        // Candidates best-first; a job with no feasible (or no sticking)
+        // move stays best-effort at home.
+        for cand in candidates_for(job, &managers) {
+            let dest_spec = managers[cand.node].0;
+            let translated = translate_model(&job.model, job.node, dest_spec);
+            let dest = &mut managers.get_mut(cand.node).expect("candidate node exists").1;
+            let accepted = dest.try_accept(ManagedJob {
+                name: job.name.clone(),
+                model: translated,
+                rate_hz: job.rate_hz,
+                priority: job.priority,
+            });
+            let Some(granted) = accepted else {
+                continue;
+            };
+            // The destination re-plans from scratch, and a pre-existing
+            // shed job with higher priority there can crowd the migrant
+            // straight back out of the guaranteed set — roll such no-op
+            // moves back and try the next candidate.
+            let kept = dest
+                .plan()
+                .assignments
+                .iter()
+                .any(|a| a.name == job.name && a.guaranteed);
+            if !kept {
+                dest.deregister(&job.name);
+                continue;
+            }
+            let slack_after = dest.residual_capacity();
+            managers
+                .get_mut(job.node.name)
+                .expect("home node has a manager")
+                .1
+                .deregister(&job.name);
+            migrations.push(Migration {
+                job: job.name.clone(),
+                from: job.node.name,
+                to: cand.node,
+                priority: job.priority,
+                limit: granted,
+                slack_after,
+            });
+            break;
+        }
+    }
+
+    let plans: Vec<(String, CapacityPlan)> = managers
+        .iter()
+        .map(|(&name, (_, mgr))| (name.to_string(), mgr.plan()))
+        .collect();
+    let guaranteed_after = plans
+        .iter()
+        .flat_map(|(_, p)| p.assignments.iter())
+        .filter(|a| a.guaranteed)
+        .count();
+    let metrics = FleetMetrics {
+        // Count registered jobs from the final plans (every job appears in
+        // exactly one), not the input slice — immune to duplicate specs.
+        jobs: plans.iter().map(|(_, p)| p.assignments.len()).sum(),
+        guaranteed_before,
+        guaranteed_after,
+        total_capacity: plans.iter().map(|(_, p)| p.capacity).sum(),
+        total_assigned: plans.iter().map(|(_, p)| p.total_assigned).sum(),
+    };
+    FleetPlan { plans, migrations, metrics }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fit::{ModelKind, RuntimeModel};
+    use crate::simulator::node;
+
+    fn model(a: f64, b: f64) -> RuntimeModel {
+        RuntimeModel { kind: ModelKind::Full, a, b, c: 0.001, d: 1.0, fit_cost: 0.0 }
+    }
+
+    fn job(name: &str, home: &'static NodeSpec, a: f64, rate: f64, prio: i32) -> FleetJob {
+        FleetJob {
+            name: name.into(),
+            node: home,
+            // Exponent = the home node's calibrated scaling, so translation
+            // behaves exactly as for a fleet-fitted model.
+            model: model(a, home.scaling),
+            rate_hz: rate,
+            priority: prio,
+        }
+    }
+
+    /// Five identical jobs on n1 (1 core) needing ~0.6 CPU each at 10 Hz:
+    /// one stays guaranteed, four shed. wally (8 idle cores, ~3x faster)
+    /// can take them all.
+    fn oversubscribed_fleet() -> Vec<FleetJob> {
+        let n1 = node("n1").unwrap();
+        let wally = node("wally").unwrap();
+        let mut jobs: Vec<FleetJob> = (0..5usize)
+            .map(|i| job(&format!("edge-{i}"), n1, 0.05, 10.0, 1 + (i % 2) as i32))
+            .collect();
+        jobs.push(job("anchor", wally, 0.05, 2.0, 5));
+        jobs
+    }
+
+    #[test]
+    fn migrations_rescue_shed_jobs() {
+        let jobs = oversubscribed_fleet();
+        let plan = rebalance(&jobs);
+        assert!(
+            plan.metrics.guaranteed_after > plan.metrics.guaranteed_before,
+            "{:?}",
+            plan.metrics
+        );
+        assert!(!plan.migrations.is_empty());
+        for m in &plan.migrations {
+            assert_eq!(m.from, "n1");
+            assert_eq!(m.to, "wally");
+            assert!(m.limit > 0.0 && m.slack_after >= -1e-9);
+        }
+        // Every migrated job is guaranteed at its destination.
+        for m in &plan.migrations {
+            let (node_name, a) = plan.assignment(&m.job).unwrap();
+            assert_eq!(node_name, m.to);
+            assert!(a.guaranteed, "{} migrated but not guaranteed", m.job);
+        }
+    }
+
+    #[test]
+    fn no_node_plan_exceeds_capacity() {
+        let plan = rebalance(&oversubscribed_fleet());
+        for (name, p) in &plan.plans {
+            assert!(p.total_assigned <= p.capacity + 1e-9, "{name} over capacity");
+        }
+    }
+
+    #[test]
+    fn guaranteed_jobs_never_regress() {
+        let jobs = oversubscribed_fleet();
+        // Baseline: per-node planning only (no cross-node roster).
+        let baseline = rebalance_across(&jobs[..0], &[]); // empty fleet sanity
+        assert_eq!(baseline.metrics.jobs, 0);
+        let plan = rebalance(&jobs);
+        // "anchor" was guaranteed on wally before; still guaranteed after.
+        let (_, anchor) = plan.assignment("anchor").unwrap();
+        assert!(anchor.guaranteed);
+    }
+
+    #[test]
+    fn higher_priority_shed_jobs_pick_first() {
+        // Destination capacity for only ~2 migrants: the priority-2 shed
+        // jobs must win the slots over the priority-1 ones.
+        let n1 = node("n1").unwrap();
+        let e2high = node("e2high").unwrap();
+        let mut jobs: Vec<FleetJob> = (0..5usize)
+            .map(|i| job(&format!("edge-{i}"), n1, 0.05, 10.0, 1 + (i % 2) as i32))
+            .collect();
+        // e2high: 2 cores, speed 0.9 vs n1's 0.7 -> each migrant needs
+        // ~0.4-0.5 CPU; ballast eats most of one core.
+        jobs.push(job("ballast", e2high, 0.05, 8.0, 3));
+        let plan = rebalance(&jobs);
+        let migrated_prios: Vec<i32> = plan.migrations.iter().map(|m| m.priority).collect();
+        // The scenario must actually be capacity-constrained, or the
+        // ordering property below would be vacuous: ballast (0.5) leaves
+        // 1.5 CPUs, each migrant needs 0.4 -> exactly 3 of 4 fit.
+        assert!(
+            !migrated_prios.is_empty() && migrated_prios.len() < 4,
+            "scenario must migrate some but not all shed jobs: {migrated_prios:?}"
+        );
+        // Not everyone fit: no migrated job may have lower priority than a
+        // shed job left behind.
+        let left_behind_max = plan
+            .plans
+            .iter()
+            .flat_map(|(_, p)| p.assignments.iter())
+            .filter(|a| !a.guaranteed)
+            .map(|a| {
+                jobs.iter()
+                    .find(|j| j.name == a.name)
+                    .map(|j| j.priority)
+                    .unwrap_or(i32::MIN)
+            })
+            .max()
+            .unwrap_or(i32::MIN);
+        let migrated_min = migrated_prios.iter().copied().min().unwrap_or(i32::MAX);
+        assert!(
+            migrated_min >= left_behind_max,
+            "lower-priority job migrated while higher-priority stayed shed"
+        );
+    }
+
+    #[test]
+    fn extra_nodes_open_new_destinations() {
+        let n1 = node("n1").unwrap();
+        let e216 = node("e216").unwrap();
+        let jobs: Vec<FleetJob> = (0..5usize)
+            .map(|i| job(&format!("edge-{i}"), n1, 0.05, 10.0, 1))
+            .collect();
+        let local_only = rebalance(&jobs);
+        assert!(local_only.migrations.is_empty(), "single node: nowhere to go");
+        let with_roster = rebalance_across(&jobs, &[e216]);
+        assert!(!with_roster.migrations.is_empty());
+        assert!(with_roster.migrations.iter().all(|m| m.to == "e216"));
+        assert!(with_roster.metrics.guaranteed_after > local_only.metrics.guaranteed_after);
+        // The empty destination shows up in the plan roster either way.
+        assert!(with_roster.node_plan("e216").is_some());
+    }
+
+    #[test]
+    fn crowded_out_migrant_is_rolled_back() {
+        // Destination e2high: "a" (prio 5) guaranteed at 1.1, "x" (prio 3)
+        // shed — residual 0.9. The migrant (prio 1, needs 0.4) fits the
+        // residual, but re-planning sheds the lowest priority first, so
+        // the migrant is crowded straight back out: the move must be
+        // rolled back, leaving the fleet exactly at its baseline.
+        let n1 = node("n1").unwrap();
+        let e2high = node("e2high").unwrap();
+        let jobs = vec![
+            job("keeper", n1, 0.05, 10.0, 5),
+            job("migrant", n1, 0.05, 10.0, 1),
+            job("a", e2high, 0.05, 18.0, 5),
+            job("x", e2high, 0.05, 18.0, 3),
+        ];
+        let plan = rebalance(&jobs);
+        assert!(plan.migrations.is_empty(), "crowded move must roll back");
+        assert_eq!(plan.metrics.guaranteed_after, plan.metrics.guaranteed_before);
+        let (home, m) = plan.assignment("migrant").unwrap();
+        assert_eq!(home, "n1", "rolled-back migrant stays registered at home");
+        assert!(!m.guaranteed);
+        // The destination was left untouched: "a" guaranteed, "x" shed.
+        let dest = plan.node_plan("e2high").unwrap();
+        assert_eq!(dest.assignments.len(), 2);
+        let by = |n: &str| dest.assignments.iter().find(|a| a.name == n).unwrap();
+        assert!(by("a").guaranteed);
+        assert!(!by("x").guaranteed);
+    }
+
+    #[test]
+    fn rebalance_is_deterministic() {
+        let jobs = oversubscribed_fleet();
+        let a = rebalance(&jobs);
+        let b = rebalance(&jobs);
+        assert_eq!(a.migrations.len(), b.migrations.len());
+        for (x, y) in a.migrations.iter().zip(&b.migrations) {
+            assert_eq!(x.job, y.job);
+            assert_eq!(x.to, y.to);
+            assert!((x.limit - y.limit).abs() < 1e-12);
+        }
+        assert_eq!(a.guaranteed_jobs(), b.guaranteed_jobs());
+    }
+
+    #[test]
+    fn infeasible_everywhere_stays_home() {
+        let n1 = node("n1").unwrap();
+        let pi4 = node("pi4").unwrap();
+        // 1 kHz stream: impossible on any machine.
+        let jobs = vec![job("firehose", n1, 0.05, 1000.0, 5)];
+        let plan = rebalance_across(&jobs, &[pi4]);
+        assert!(plan.migrations.is_empty());
+        let (home, a) = plan.assignment("firehose").unwrap();
+        assert_eq!(home, "n1");
+        assert!(!a.guaranteed);
+    }
+}

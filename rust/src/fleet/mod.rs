@@ -22,10 +22,14 @@
 //! ```
 
 pub mod cache;
+pub mod migrate;
+pub mod placement;
 pub mod queue;
 pub mod worker;
 
 pub use cache::{CacheStats, CachedBackend, MeasurementCache};
+pub use migrate::{rebalance, rebalance_across, FleetMetrics, FleetPlan, Migration};
+pub use placement::{candidates_for, translate_model, FleetJob, PlacementCandidate};
 pub use queue::WorkQueue;
 pub use worker::{IncrementalModel, JobOutcome};
 
@@ -132,6 +136,19 @@ impl FleetSummary {
             .flat_map(|(_, plan)| plan.assignments.iter())
             .find(|a| a.name == job)
     }
+
+    /// The placement layer's view of every profiled job.
+    pub fn fleet_jobs(&self) -> Vec<FleetJob> {
+        self.outcomes.iter().map(FleetJob::from).collect()
+    }
+
+    /// Rebalance the fleet: migrate shed jobs to under-subscribed nodes
+    /// (cross-node placement via translated models) and return the
+    /// fleet-wide plan. The per-node plans in `self.plans` are the
+    /// no-migration baseline this improves on.
+    pub fn rebalanced(&self) -> FleetPlan {
+        rebalance(&self.fleet_jobs())
+    }
 }
 
 /// The fleet profiling engine.
@@ -227,6 +244,16 @@ impl FleetEngine {
             saved_wallclock: cache_after.saved_wallclock - cache_before.saved_wallclock,
         };
         Ok(FleetSummary { outcomes, cache, plans })
+    }
+
+    /// Profile every job, then rebalance: shed jobs migrate to
+    /// under-subscribed nodes via cross-node model translation. Returns the
+    /// profiling summary (whose per-node plans are the no-migration
+    /// baseline) together with the fleet-wide plan.
+    pub fn run_rebalanced(&self, specs: Vec<FleetJobSpec>) -> Result<(FleetSummary, FleetPlan)> {
+        let summary = self.run(specs)?;
+        let plan = summary.rebalanced();
+        Ok((summary, plan))
     }
 }
 

@@ -1,0 +1,295 @@
+//! Job→node placement: cross-node model translation and slack scoring.
+//!
+//! The fleet engine fits every job's [`RuntimeModel`] on the job's *home*
+//! node. Black-box performance models transfer across heterogeneous
+//! machines once the machines themselves are calibrated (Witt et al.,
+//! arXiv 1805.11877), and our [`NodeSpec`] registry carries exactly that
+//! calibration: a single-core speed factor, a parallel-scaling exponent,
+//! and the limitation-axis stretch. [`translate_model`] maps a fitted
+//! model from one node onto another through those factors, which makes
+//! cross-node placement decidable from fitted models alone — no probe on
+//! the candidate node is needed to predict the CPU limit a job would
+//! require there.
+//!
+//! Candidate placements are scored by **slack**: the residual capacity the
+//! destination would retain after granting the job its tightest feasible
+//! limit. Placing into maximum slack keeps the fleet's remaining headroom
+//! as even as possible, so later migrations stay feasible.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::JobManager;
+use crate::fit::RuntimeModel;
+use crate::simulator::NodeSpec;
+
+use super::worker::JobOutcome;
+
+/// The placement layer's view of one profiled job: everything needed to
+/// decide where it could run, decoupled from how it was profiled.
+#[derive(Clone, Debug)]
+pub struct FleetJob {
+    pub name: String,
+    /// Home node — where the model was fitted.
+    pub node: &'static NodeSpec,
+    /// Runtime model fitted on the home node.
+    pub model: RuntimeModel,
+    /// Peak arrival rate (Hz) the placement must sustain.
+    pub rate_hz: f64,
+    pub priority: i32,
+}
+
+impl From<&JobOutcome> for FleetJob {
+    fn from(o: &JobOutcome) -> Self {
+        Self {
+            name: o.name.clone(),
+            node: o.node,
+            model: o.model.clone(),
+            rate_hz: o.rate_hz,
+            priority: o.priority,
+        }
+    }
+}
+
+/// Translate a runtime model fitted on `from` into the equivalent model on
+/// `to`, using the node calibration:
+///
+/// * scale parameters `a`, `c` grow by the inverse speed ratio (a slower
+///   CPU inflates every per-sample runtime uniformly),
+/// * the exponent `b` is rescaled by the ratio of parallel-scaling
+///   exponents (Amdahl behaviour belongs to the machine, not the job),
+/// * the limitation stretch `d` is renormalized between the two machines'
+///   calibrated stretches.
+///
+/// The translation is exact for the calibrated curve family; per-node
+/// saturation, scheduler wiggle, and the low-limit knee differ between
+/// machines and remain as (bounded) translation error — see the tests.
+pub fn translate_model(model: &RuntimeModel, from: &NodeSpec, to: &NodeSpec) -> RuntimeModel {
+    let speed = from.runtime_factor_to(to);
+    let mut m = model.clone();
+    m.a *= speed;
+    m.c *= speed;
+    m.b *= from.scaling_factor_to(to);
+    m.d *= to.limit_stretch() / from.limit_stretch();
+    m
+}
+
+/// One scored candidate placement for a job.
+#[derive(Clone, Debug)]
+pub struct PlacementCandidate {
+    /// Destination node name.
+    pub node: &'static str,
+    /// Tightest feasible CPU limit on the destination (translated model).
+    pub limit: f64,
+    /// Residual capacity the destination would retain after the grant.
+    pub slack: f64,
+}
+
+/// Score every node (except the job's home) that could guarantee `job`
+/// from its residual capacity. Returns candidates sorted best-first:
+/// largest slack, node name as the deterministic tie-break.
+pub fn candidates_for(
+    job: &FleetJob,
+    managers: &BTreeMap<&'static str, (&'static NodeSpec, JobManager)>,
+) -> Vec<PlacementCandidate> {
+    let mut out: Vec<PlacementCandidate> = Vec::new();
+    for (&name, (spec, mgr)) in managers {
+        if name == job.node.name {
+            continue;
+        }
+        let translated = translate_model(&job.model, job.node, spec);
+        let quote = mgr.quote(&translated, job.rate_hz);
+        if !quote.feasible {
+            continue;
+        }
+        let residual = mgr.residual_capacity();
+        if quote.limit > residual + 1e-9 {
+            continue;
+        }
+        out.push(PlacementCandidate {
+            node: name,
+            limit: quote.limit,
+            slack: residual - quote.limit,
+        });
+    }
+    out.sort_by(|x, y| {
+        y.slack
+            .partial_cmp(&x.slack)
+            .unwrap()
+            .then_with(|| x.node.cmp(y.node))
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::smape_vs_dataset;
+    use crate::fit::ProfilePoint;
+    use crate::simulator::{node, Algo, GroundTruth, NODES};
+
+    /// Fit the runtime model on a node's noise-free ground-truth curve over
+    /// its whole limitation grid — isolates translation error from
+    /// profiling error.
+    fn fit_on_truth(spec: &'static NodeSpec, algo: Algo) -> RuntimeModel {
+        let truth = GroundTruth::derive(spec, algo);
+        let pts: Vec<ProfilePoint> = spec
+            .limit_grid()
+            .iter()
+            .map(|&r| ProfilePoint::new(r, truth.mean_runtime(r)))
+            .collect();
+        RuntimeModel::fit(&pts)
+    }
+
+    /// Noise-free target-node dataset over the limit range both machines
+    /// can assign (translation is interpolation there; extrapolating past
+    /// the source grid is unreliable — the recorded caveat).
+    fn shared_truth(from: &NodeSpec, to: &'static NodeSpec, algo: Algo) -> Vec<ProfilePoint> {
+        let truth = GroundTruth::derive(to, algo);
+        let hi = from.cores.min(to.cores);
+        to.limit_grid()
+            .iter()
+            .filter(|&&r| r <= hi + 1e-9)
+            .map(|&r| ProfilePoint::new(r, truth.mean_runtime(r)))
+            .collect()
+    }
+
+    #[test]
+    fn translation_tracks_ground_truth_for_every_node_pair() {
+        // Satellite acceptance: a model fitted on one node predicts within
+        // tolerance on every other node's ground-truth curve, for every
+        // ordered NODES pair, over the shared assignable limit range.
+        let mut worst: (f64, String) = (0.0, String::new());
+        let mut total = 0.0;
+        let mut pairs = 0usize;
+        for from in NODES {
+            let model = fit_on_truth(from, Algo::Birch);
+            for to in NODES {
+                if from.name == to.name {
+                    continue;
+                }
+                let translated = translate_model(&model, from, to);
+                let dataset = shared_truth(from, to, Algo::Birch);
+                let smape = smape_vs_dataset(&translated, &dataset);
+                assert!(
+                    smape < 0.55,
+                    "{} -> {}: translated SMAPE {smape:.3} out of tolerance",
+                    from.name,
+                    to.name
+                );
+                if smape > worst.0 {
+                    worst = (smape, format!("{} -> {}", from.name, to.name));
+                }
+                total += smape;
+                pairs += 1;
+            }
+        }
+        let mean = total / pairs as f64;
+        assert!(mean < 0.35, "mean translated SMAPE {mean:.3} (worst {worst:?})");
+    }
+
+    #[test]
+    fn translation_beats_untranslated_across_speed_gaps() {
+        // Wherever the speed calibration differs materially, reading the
+        // home-node model verbatim on the other machine must be clearly
+        // worse than translating it.
+        for from in NODES {
+            let model = fit_on_truth(from, Algo::Arima);
+            for to in NODES {
+                let ratio = from.runtime_factor_to(to).max(to.runtime_factor_to(from));
+                if from.name == to.name || ratio < 1.5 {
+                    continue;
+                }
+                let dataset = shared_truth(from, to, Algo::Arima);
+                let raw = smape_vs_dataset(&model, &dataset);
+                let fixed = smape_vs_dataset(&translate_model(&model, from, to), &dataset);
+                assert!(
+                    fixed < raw,
+                    "{} -> {}: translated {fixed:.3} not better than raw {raw:.3}",
+                    from.name,
+                    to.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn translated_limit_prediction_is_near_truth() {
+        // The placement question itself: predict the CPU limit a job needs
+        // on node B from the model fitted on node A, and compare against
+        // the limit B's own ground truth would demand. Must agree within
+        // two grid steps for a mid-range budget.
+        let pairs = [("wally", "pi4"), ("pi4", "wally"), ("e216", "e2small")];
+        for (f, t) in pairs {
+            let from = node(f).unwrap();
+            let to = node(t).unwrap();
+            let translated = translate_model(&fit_on_truth(from, Algo::Lstm), from, to);
+            let truth = GroundTruth::derive(to, Algo::Lstm);
+            // Budget: the true runtime at a quarter of the shared range —
+            // squarely on the steep part of the curve, where limit
+            // prediction is well conditioned (inverting the saturated
+            // plateau is not; see the ROADMAP caveat).
+            let mid = (0.25 * from.cores.min(to.cores)).max(0.2);
+            let budget = truth.mean_runtime(mid);
+            let grid = to.limit_grid();
+            let want = grid
+                .iter()
+                .copied()
+                .find(|&r| truth.mean_runtime(r) <= budget)
+                .expect("budget reachable on truth");
+            let got = grid
+                .iter()
+                .copied()
+                .find(|&r| translated.eval(r) <= budget)
+                .expect("budget reachable on translated model");
+            let tol = (0.35 * want).max(0.2);
+            assert!(
+                (got - want).abs() <= tol + 1e-9,
+                "{f} -> {t}: predicted limit {got} vs true {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn self_translation_is_identity() {
+        let wally = node("wally").unwrap();
+        let model = fit_on_truth(wally, Algo::Arima);
+        let same = translate_model(&model, wally, wally);
+        for &r in &[0.1, 0.5, 1.0, 4.0, 8.0] {
+            assert!((same.eval(r) - model.eval(r)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn candidates_are_sorted_by_slack_and_skip_home() {
+        use crate::coordinator::ManagedJob;
+        let wally = node("wally").unwrap();
+        let e216 = node("e216").unwrap();
+        let pi4 = node("pi4").unwrap();
+        let mut managers: BTreeMap<&'static str, (&'static NodeSpec, JobManager)> =
+            BTreeMap::new();
+        for spec in [wally, e216, pi4] {
+            managers.insert(spec.name, (spec, JobManager::new(spec.cores)));
+        }
+        let model = fit_on_truth(pi4, Algo::Arima);
+        // Load wally so e216 has more residual slack.
+        managers.get_mut("wally").unwrap().1.register(ManagedJob {
+            name: "ballast".into(),
+            model: translate_model(&model, pi4, wally),
+            rate_hz: 4.0,
+            priority: 1,
+        });
+        let job = FleetJob { name: "cam".into(), node: pi4, model, rate_hz: 4.0, priority: 1 };
+        let cands = candidates_for(&job, &managers);
+        assert!(!cands.is_empty());
+        assert!(cands.iter().all(|c| c.node != "pi4"), "home node excluded");
+        for w in cands.windows(2) {
+            assert!(w[0].slack >= w[1].slack, "sorted best-first");
+        }
+        assert_eq!(cands[0].node, "e216", "idle 16-core node has max slack");
+        for c in &cands {
+            let (spec, _) = &managers[c.node];
+            assert!(c.limit <= spec.cores + 1e-9);
+            assert!(c.slack >= -1e-9);
+        }
+    }
+}

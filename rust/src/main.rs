@@ -64,7 +64,7 @@ fn print_help() {
          \u{20} adjust    <profile options> [--rate-lo 1] [--rate-hi 5] [--horizon 1000]\n\
          \u{20} fleet     [--jobs 12] [--workers 4] [--rounds 2] [--strategy nms]\n\
          \u{20}           [--samples 1000] [--steps 6] [--early-stop] [--seed 7]\n\
-         \u{20}           [--horizon 1000]\n\
+         \u{20}           [--horizon 1000] [--rebalance]\n\
          \u{20} repro     <table1|fig2|fig3|fig4|fig5|fig6|fig7|all> [--full]\n\
          \u{20} artifacts                     AOT artifact status\n"
     );
@@ -251,7 +251,15 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let summary = engine.run(specs)?;
 
     let mut table = Table::new(&[
-        "job", "device", "algo", "worker", "probes", "refits", "model", "rate Hz", "limit",
+        "job",
+        "device",
+        "algo",
+        "worker",
+        "probes",
+        "refits",
+        "model",
+        "rate Hz",
+        "limit",
         "guaranteed",
     ])
     .with_title(&format!(
@@ -301,6 +309,38 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         stats.saved_wallclock,
         summary.executed_wallclock()
     );
+
+    if args.flag("rebalance") {
+        let fleet_plan = summary.rebalanced();
+        let mut moves = Table::new(&["job", "prio", "from", "to", "limit", "slack after"])
+            .with_title("Shed-job migrations (cross-node placement via translated models)");
+        for m in &fleet_plan.migrations {
+            moves.rowd(&[
+                &m.job,
+                &m.priority,
+                &m.from,
+                &m.to,
+                &format!("{:.1}", m.limit),
+                &format!("{:.1}", m.slack_after),
+            ]);
+        }
+        if fleet_plan.migrations.is_empty() {
+            println!("rebalance: no feasible migration (fleet already balanced)");
+        } else {
+            println!("{}", moves.render());
+        }
+        let fm = &fleet_plan.metrics;
+        println!(
+            "fleet plan: {}/{} jobs guaranteed (was {} before migration), \
+             {:.1}/{:.1} CPUs assigned ({:.0}% utilization)",
+            fm.guaranteed_after,
+            fm.jobs,
+            fm.guaranteed_before,
+            fm.total_assigned,
+            fm.total_capacity,
+            100.0 * fm.utilization()
+        );
+    }
     Ok(())
 }
 

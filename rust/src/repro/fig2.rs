@@ -24,12 +24,24 @@ pub fn run() -> ReproReport {
     .expect("csv");
     let mut summary_csv = CsvWriter::create(
         &summary_path,
-        &["limit", "samples_to_stop", "mean_estimate", "truth_mean", "rel_err", "time_saved_vs_10k"],
+        &[
+            "limit",
+            "samples_to_stop",
+            "mean_estimate",
+            "truth_mean",
+            "rel_err",
+            "time_saved_vs_10k",
+        ],
     )
     .expect("csv");
 
     let mut table = Table::new(&[
-        "limit", "samples", "mean est (s)", "truth (s)", "rel err", "time saved",
+        "limit",
+        "samples",
+        "mean est (s)",
+        "truth (s)",
+        "rel err",
+        "time saved",
     ])
     .with_title("Fig. 2 — early stopping, LSTM on pi4, 95% CI, lambda=10%");
 

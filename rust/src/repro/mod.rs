@@ -36,10 +36,7 @@ pub struct ReproReport {
 
 impl ReproReport {
     pub fn finding(&self, name: &str) -> Option<f64> {
-        self.findings
-            .iter()
-            .find(|(n, _)| n == name)
-            .map(|(_, v)| *v)
+        self.findings.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
     }
 }
 

@@ -180,9 +180,7 @@ impl LoadedJob {
             .filter(|t| t.role != Role::Stream)
             .position(|t| t.name == name)
             .with_context(|| format!("no carried input '{name}'"))?;
-        self.carried[pos]
-            .to_vec::<f32>()
-            .map_err(|e| anyhow::anyhow!("{e:?}"))
+        self.carried[pos].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))
     }
 }
 

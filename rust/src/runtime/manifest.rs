@@ -127,10 +127,7 @@ impl Manifest {
             .map_err(anyhow::Error::msg)?
             .as_usize()
             .context("metrics not a number")?;
-        let chunk = root
-            .get("chunk")
-            .and_then(Json::as_usize)
-            .unwrap_or(0);
+        let chunk = root.get("chunk").and_then(Json::as_usize).unwrap_or(0);
         let mut artifacts = Vec::new();
         for art in root
             .req("artifacts")

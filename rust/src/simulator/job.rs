@@ -128,7 +128,7 @@ impl GroundTruth {
             c: base * algo.floor_fraction(),
             // Mild per-node stretch of the limitation axis; keeps d
             // non-trivial so the full Eq. 1 is exercised.
-            d: 1.0 + 0.05 * (node.cores / 8.0),
+            d: node.limit_stretch(),
             noise_cov: node.noise_cov,
             saturation: (sat_base * rng.uniform(0.8, 1.2)).min(node.cores),
             wiggle: [
@@ -338,10 +338,8 @@ mod tests {
         // Our 4-step cost at plausible NMS-selected limits (0.2, 0.55, 2.0,
         // 0.3) should land within a factor ~2 of that.
         let mut job = SimulatedJob::new(node("pi4").unwrap(), Algo::Arima, 11);
-        let total: f64 = [0.2, 0.55, 2.0, 0.3]
-            .iter()
-            .map(|&r| job.profiling_time(r, 1000).1)
-            .sum();
+        let limits = [0.2, 0.55, 2.0, 0.3];
+        let total: f64 = limits.iter().map(|&r| job.profiling_time(r, 1000).1).sum();
         assert!(
             (130.0..500.0).contains(&total),
             "4-step profiling time {total}s should be near the paper's 268s"

@@ -47,6 +47,27 @@ impl NodeSpec {
     pub fn l_max(&self) -> f64 {
         self.cores
     }
+
+    /// Limitation-axis stretch `d` of the calibrated ground-truth curve.
+    /// Exposed (rather than buried in `GroundTruth::derive`) so cross-node
+    /// model translation can renormalize a fitted `d` between machines.
+    pub fn limit_stretch(&self) -> f64 {
+        1.0 + 0.05 * (self.cores / 8.0)
+    }
+
+    /// Factor by which per-sample runtimes grow when the same job moves
+    /// from `self` to `to` at an equal CPU limitation (pre-saturation):
+    /// the inverse single-core speed ratio. > 1 means `to` is slower.
+    pub fn runtime_factor_to(&self, to: &NodeSpec) -> f64 {
+        self.speed / to.speed
+    }
+
+    /// Rescaling applied to a fitted parallel-scaling exponent when a model
+    /// calibrated on `self` is read on `to` (the exponent tracks the
+    /// machine's Amdahl behaviour, not the job).
+    pub fn scaling_factor_to(&self, to: &NodeSpec) -> f64 {
+        to.scaling / self.scaling
+    }
 }
 
 /// Table I registry. Speed factors follow the CPU generations: wally's
@@ -178,5 +199,36 @@ mod tests {
     #[test]
     fn unknown_node_is_none() {
         assert!(node("gcp-tpu").is_none());
+    }
+
+    #[test]
+    fn runtime_factor_is_reciprocal_and_transitive() {
+        let wally = node("wally").unwrap();
+        let pi4 = node("pi4").unwrap();
+        let asok = node("asok").unwrap();
+        // wally -> pi4 slows runtimes down by the speed ratio.
+        assert!((wally.runtime_factor_to(pi4) - 1.0 / 0.24).abs() < 1e-9);
+        // Reciprocal pairs cancel.
+        let round = wally.runtime_factor_to(pi4) * pi4.runtime_factor_to(wally);
+        assert!((round - 1.0).abs() < 1e-12);
+        // Transitive through an intermediate node.
+        let direct = wally.runtime_factor_to(pi4);
+        let hop = wally.runtime_factor_to(asok) * asok.runtime_factor_to(pi4);
+        assert!((direct - hop).abs() < 1e-9);
+        // Self-translation is a no-op for every node.
+        for n in NODES {
+            assert!((n.runtime_factor_to(n) - 1.0).abs() < 1e-12);
+            assert!((n.scaling_factor_to(n) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn limit_stretch_matches_calibration() {
+        // d = 1 + 0.05 * cores/8: wally (8 cores) -> 1.05, n1 (1) -> 1.00625.
+        assert!((node("wally").unwrap().limit_stretch() - 1.05).abs() < 1e-12);
+        assert!((node("n1").unwrap().limit_stretch() - 1.00625).abs() < 1e-12);
+        for n in NODES {
+            assert!(n.limit_stretch() > 1.0 && n.limit_stretch() < 1.2);
+        }
     }
 }

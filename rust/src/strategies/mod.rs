@@ -81,9 +81,7 @@ impl ProfilingContext {
             .min_by(|a, b| {
                 let da = (a - r).abs();
                 let db = (b - r).abs();
-                da.partial_cmp(&db)
-                    .unwrap()
-                    .then(a.partial_cmp(b).unwrap())
+                da.partial_cmp(&db).unwrap().then(a.partial_cmp(b).unwrap())
             })
     }
 }

@@ -20,15 +20,14 @@ impl Args {
             if let Some(rest) = item.strip_prefix("--") {
                 if let Some((k, v)) = rest.split_once('=') {
                     args.options.insert(k.to_string(), v.to_string());
-                } else if it
-                    .peek()
-                    .map(|next| !next.starts_with("--"))
-                    .unwrap_or(false)
-                {
-                    let v = it.next().unwrap();
-                    args.options.insert(rest.to_string(), v);
                 } else {
-                    args.flags.push(rest.to_string());
+                    let bound = it.peek().map(|n| !n.starts_with("--")).unwrap_or(false);
+                    if bound {
+                        let v = it.next().unwrap();
+                        args.options.insert(rest.to_string(), v);
+                    } else {
+                        args.flags.push(rest.to_string());
+                    }
                 }
             } else {
                 args.positional.push(item);

@@ -352,7 +352,11 @@ mod tests {
     fn lstm_mirror_runs_and_bounds_hidden() {
         let (m, h) = (4, 3);
         // Tiny random-ish params.
-        let mk = |n: usize, s: f32| (0..n).map(|i| ((i * 37 % 11) as f32 / 11.0 - 0.5) * s).collect::<Vec<f32>>();
+        let mk = |n: usize, s: f32| {
+            (0..n)
+                .map(|i| ((i * 37 % 11) as f32 / 11.0 - 0.5) * s)
+                .collect::<Vec<f32>>()
+        };
         let init = vec![
             mk(m * 4 * h, 0.6),
             mk(h * 4 * h, 0.6),

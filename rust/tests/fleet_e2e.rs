@@ -94,6 +94,70 @@ fn capacity_plans_cover_every_job_and_respect_capacity() {
 }
 
 #[test]
+fn rebalance_migrates_shed_jobs_to_under_subscribed_nodes() {
+    // An over-subscribed Pi 4 carries twelve 12 Hz streams (each needs
+    // ~0.7 CPU just-in-time — far beyond 4 cores), while wally and e216
+    // idle with one light job each. The scheduler must migrate the shed
+    // jobs out, strictly increase the number of guaranteed jobs over the
+    // no-migration baseline, and regress zero previously-guaranteed jobs.
+    let pi4 = node("pi4").unwrap();
+    let wally = node("wally").unwrap();
+    let e216 = node("e216").unwrap();
+    let mut specs: Vec<FleetJobSpec> = (0..12usize)
+        .map(|i| {
+            let mut s = FleetJobSpec::simulated(&format!("cam-{i:02}"), pi4, Algo::Arima, 7);
+            s.priority = 1 + (i % 3) as i32;
+            s.arrivals = ArrivalProcess::Fixed(12.0);
+            s
+        })
+        .collect();
+    specs.push(FleetJobSpec::simulated("light-wally", wally, Algo::Arima, 3));
+    specs.push(FleetJobSpec::simulated("light-e216", e216, Algo::Birch, 4));
+
+    let engine = FleetEngine::new(quick_cfg(2, 1));
+    let (summary, plan) = engine.run_rebalanced(specs).expect("fleet run");
+
+    // The no-migration baseline really is over-subscribed: pi4 shed jobs.
+    let baseline_guaranteed: Vec<String> = summary
+        .plans
+        .iter()
+        .flat_map(|(_, p)| p.assignments.iter())
+        .filter(|a| a.guaranteed)
+        .map(|a| a.name.clone())
+        .collect();
+    let (_, pi4_plan) = summary.plans.iter().find(|(n, _)| n == "pi4").unwrap();
+    let pi4_shed = pi4_plan.assignments.iter().filter(|a| !a.guaranteed).count();
+    assert!(pi4_shed > 0, "scenario must over-subscribe pi4");
+    assert_eq!(plan.metrics.guaranteed_before, baseline_guaranteed.len());
+
+    // Shed jobs migrated off the Pi into idle capacity.
+    assert!(!plan.migrations.is_empty(), "shed jobs must migrate");
+    for m in &plan.migrations {
+        assert_eq!(m.from, "pi4");
+        assert!(m.to == "wally" || m.to == "e216");
+        let (node_name, a) = plan.assignment(&m.job).expect("migrated job planned");
+        assert_eq!(node_name, m.to);
+        assert!(a.guaranteed, "{} migrated but still best-effort", m.job);
+    }
+
+    // Strictly more guaranteed jobs than the baseline…
+    assert!(
+        plan.metrics.guaranteed_after > plan.metrics.guaranteed_before,
+        "rebalance must win: {:?}",
+        plan.metrics
+    );
+    // …with zero previously-guaranteed jobs regressed…
+    for name in &baseline_guaranteed {
+        let (_, a) = plan.assignment(name).expect("baseline job still planned");
+        assert!(a.guaranteed, "{name} was guaranteed before rebalancing");
+    }
+    // …and every node still within capacity.
+    for (name, p) in &plan.plans {
+        assert!(p.total_assigned <= p.capacity + 1e-9, "{name} over capacity");
+    }
+}
+
+#[test]
 fn varying_arrivals_drive_rate_demand() {
     // A job with a faster stream must register a higher rate demand.
     let engine = FleetEngine::new(quick_cfg(2, 1));
@@ -103,14 +167,7 @@ fn varying_arrivals_drive_rate_demand() {
     let mut fast = FleetJobSpec::simulated("fast", wally, Algo::Arima, 1);
     fast.arrivals = ArrivalProcess::Varying { lo: 2.0, hi: 8.0, period: 100.0 };
     let summary = engine.run(vec![slow, fast]).expect("fleet run");
-    let rate = |n: &str| {
-        summary
-            .outcomes
-            .iter()
-            .find(|o| o.name == n)
-            .unwrap()
-            .rate_hz
-    };
+    let rate = |n: &str| summary.outcomes.iter().find(|o| o.name == n).unwrap().rate_hz;
     assert!((rate("slow") - 1.0).abs() < 1e-9);
     assert!(rate("fast") > 7.0);
     // The faster job needs at least as much CPU.

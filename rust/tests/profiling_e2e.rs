@@ -49,8 +49,8 @@ fn all_strategies_on_all_nodes_produce_usable_models() {
             let ds = AcquiredDataset::acquire(node_spec, Algo::Birch, 7);
             let mut backend = DatasetBackend::new(&ds, 10_000);
             let cfg = ProfilerConfig { samples: 10_000, max_steps: 8, ..Default::default() };
-            let sess = Profiler::new(cfg, strategies::by_name(strat, 3).unwrap())
-                .run(&mut backend);
+            let strategy = strategies::by_name(strat, 3).unwrap();
+            let sess = Profiler::new(cfg, strategy).run(&mut backend);
             let smape = smape_vs_dataset(sess.final_model(), &ds.truth_points());
             assert!(
                 smape < 0.35,

@@ -3,11 +3,10 @@
 //! fitting, early stopping, placement, adjustment — with seeds derived from
 //! a deterministic PRNG so failures are reproducible.
 
-use streamprof::coordinator::{
-    Profiler, ProfilerConfig, ResourceAdjuster, SimulatedBackend,
-};
+use streamprof::coordinator::{Profiler, ProfilerConfig, ResourceAdjuster, SimulatedBackend};
 use streamprof::earlystop::{EarlyStopConfig, EarlyStopMonitor};
-use streamprof::fit::{ProfilePoint, RuntimeModel};
+use streamprof::fit::{ModelKind, ProfilePoint, RuntimeModel};
+use streamprof::fleet::{rebalance, FleetJob};
 use streamprof::simulator::{Algo, SimulatedJob, NODES};
 use streamprof::strategies::{self, initial_limits};
 use streamprof::util::Rng;
@@ -182,6 +181,116 @@ fn prop_adjuster_tightness() {
     }
 }
 
+/// Random fleet for the placement properties: jobs scattered over random
+/// home nodes with power-law runtime models whose exponent matches the
+/// home node's calibration (as a fleet-fitted model would).
+fn random_fleet(rng: &mut Rng) -> Vec<FleetJob> {
+    let n_jobs = 4 + rng.below(10);
+    (0..n_jobs)
+        .map(|i| {
+            let node = &NODES[rng.below(NODES.len())];
+            FleetJob {
+                name: format!("job-{i:02}"),
+                node,
+                model: RuntimeModel {
+                    kind: ModelKind::Full,
+                    a: rng.uniform(0.005, 0.08),
+                    b: node.scaling,
+                    c: rng.uniform(0.0005, 0.005),
+                    d: node.limit_stretch(),
+                    fit_cost: 0.0,
+                },
+                rate_hz: rng.uniform(0.5, 20.0),
+                priority: 1 + rng.below(5) as i32,
+            }
+        })
+        .collect()
+}
+
+/// Property: fleet placement invariants hold on random fleets —
+///   * no node's guaranteed limits exceed its capacity (`l_max`), and no
+///     single granted limit exceeds the node's core count,
+///   * migrations only ever move jobs the baseline plan had shed,
+///   * no job guaranteed in the baseline regresses (in particular, a
+///     higher-priority job is never displaced by a lower-priority one),
+///   * the plan is deterministic given the same inputs.
+#[test]
+fn prop_fleet_placement_invariants() {
+    let mut rng = Rng::new(0xF1EE7);
+    for case in 0..CASES / 2 {
+        let jobs = random_fleet(&mut rng);
+        let plan = rebalance(&jobs);
+
+        // Per-node capacity and per-assignment l_max bounds.
+        for (name, p) in &plan.plans {
+            let spec = NODES.iter().find(|n| n.name == name).unwrap();
+            assert!(
+                p.total_assigned <= spec.cores + 1e-9,
+                "case {case}: {name} assigned {} > l_max {}",
+                p.total_assigned,
+                spec.cores
+            );
+            for a in p.assignments.iter().filter(|a| a.guaranteed) {
+                assert!(
+                    a.adjustment.limit <= spec.cores + 1e-9,
+                    "case {case}: {} limit {} > {name} l_max",
+                    a.name,
+                    a.adjustment.limit
+                );
+            }
+        }
+
+        // Baseline (no-migration) guaranteed set, recomputed independently.
+        let mut baseline_guaranteed: Vec<String> = Vec::new();
+        let mut baseline_shed: Vec<String> = Vec::new();
+        for node in NODES {
+            let mut mgr = streamprof::coordinator::JobManager::new(node.cores);
+            for j in jobs.iter().filter(|j| j.node.name == node.name) {
+                mgr.register(streamprof::coordinator::ManagedJob {
+                    name: j.name.clone(),
+                    model: j.model.clone(),
+                    rate_hz: j.rate_hz,
+                    priority: j.priority,
+                });
+            }
+            for a in mgr.plan().assignments {
+                if a.guaranteed {
+                    baseline_guaranteed.push(a.name);
+                } else {
+                    baseline_shed.push(a.name);
+                }
+            }
+        }
+        assert_eq!(plan.metrics.guaranteed_before, baseline_guaranteed.len());
+
+        // Migrations only move baseline-shed jobs.
+        for m in &plan.migrations {
+            assert!(
+                baseline_shed.iter().any(|s| s == &m.job),
+                "case {case}: {} migrated but was guaranteed at home",
+                m.job
+            );
+            assert_ne!(m.from, m.to, "case {case}: self-migration");
+        }
+
+        // No previously-guaranteed job regresses; the fleet only wins.
+        for name in &baseline_guaranteed {
+            let (_, a) = plan.assignment(name).expect("baseline job planned");
+            assert!(a.guaranteed, "case {case}: {name} displaced by rebalancing");
+        }
+        assert!(plan.metrics.guaranteed_after >= plan.metrics.guaranteed_before);
+
+        // Determinism: identical inputs give an identical plan.
+        let again = rebalance(&jobs);
+        assert_eq!(plan.guaranteed_jobs(), again.guaranteed_jobs());
+        assert_eq!(plan.migrations.len(), again.migrations.len());
+        for (x, y) in plan.migrations.iter().zip(&again.migrations) {
+            assert_eq!((&x.job, x.from, x.to), (&y.job, y.from, y.to));
+            assert!((x.limit - y.limit).abs() < 1e-12, "case {case}");
+        }
+    }
+}
+
 /// Property: profiling wallclock equals the sum of iterative steps plus the
 /// max of the initial parallel phase (time accounting never drifts).
 #[test]
@@ -192,8 +301,8 @@ fn prop_time_accounting_consistent() {
         let cfg = ProfilerConfig { samples: 1000, max_steps: 7, ..Default::default() };
         let mut backend =
             SimulatedBackend::new(SimulatedJob::new(node, Algo::Arima, case + 999));
-        let sess = Profiler::new(cfg, strategies::by_name("nms", case).unwrap())
-            .run(&mut backend);
+        let strat = strategies::by_name("nms", case).unwrap();
+        let sess = Profiler::new(cfg, strat).run(&mut backend);
         // Placement may return fewer initial runs than requested (small
         // machines); use the actual count.
         let n_initial = sess.initial_limits.len();
