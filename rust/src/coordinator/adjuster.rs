@@ -44,6 +44,13 @@ impl ResourceAdjuster {
         self.model = model;
     }
 
+    /// Decide for a stream's arrival rate (Hz): the per-sample gap is
+    /// `1/rate`. The convenience entry the job manager and the adaptive
+    /// fleet loop use after a rate observation.
+    pub fn decide_rate(&self, rate_hz: f64) -> Adjustment {
+        self.decide(1.0 / rate_hz.max(1e-9))
+    }
+
     /// Decide for a fixed per-sample gap (seconds between samples).
     pub fn decide(&self, gap: f64) -> Adjustment {
         let budget = gap * self.margin;
@@ -104,6 +111,20 @@ mod tests {
         assert!(d.feasible);
         assert!((d.limit - 0.6).abs() < 1e-9, "got {}", d.limit);
         assert!(d.predicted_runtime <= d.budget);
+    }
+
+    #[test]
+    fn decide_rate_matches_gap_form() {
+        let adj = ResourceAdjuster::new(model(), 0.1, 4.0, 0.1);
+        let by_rate = adj.decide_rate(10.0);
+        let by_gap = adj.decide(0.1);
+        assert_eq!(by_rate.limit.to_bits(), by_gap.limit.to_bits());
+        assert_eq!(by_rate.feasible, by_gap.feasible);
+        // Degenerate rate is clamped, not a division blow-up: a dead
+        // stream is trivially feasible at the smallest limit.
+        let dead = adj.decide_rate(0.0);
+        assert!(dead.feasible);
+        assert!((dead.limit - 0.1).abs() < 1e-9);
     }
 
     #[test]

@@ -87,7 +87,7 @@ impl JobManager {
     /// scores candidate placements with.
     pub fn quote(&self, model: &RuntimeModel, rate_hz: f64) -> Adjustment {
         let adj = ResourceAdjuster::new(model.clone(), self.l_min, self.capacity, self.delta);
-        adj.decide(1.0 / rate_hz.max(1e-9))
+        adj.decide_rate(rate_hz)
     }
 
     /// Capacity left after the current plan's guaranteed assignments — what
@@ -118,6 +118,18 @@ impl JobManager {
     pub fn update_rate(&mut self, name: &str, rate_hz: f64) -> bool {
         if let Some(j) = self.jobs.get_mut(name) {
             j.rate_hz = rate_hz;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Replace a job's fitted runtime model in place — how a
+    /// drift-triggered re-profile re-enters the manager without losing the
+    /// job's rate and priority.
+    pub fn update_model(&mut self, name: &str, model: RuntimeModel) -> bool {
+        if let Some(j) = self.jobs.get_mut(name) {
+            j.model = model;
             true
         } else {
             false
@@ -260,6 +272,21 @@ mod tests {
         let after = mgr.plan().assignments[0].adjustment.limit;
         assert!(after > before, "{before} -> {after}");
         assert!(!mgr.update_rate("ghost", 1.0));
+    }
+
+    #[test]
+    fn model_update_changes_plan_in_place() {
+        let mut mgr = JobManager::new(4.0);
+        mgr.register(job("a", 0.05, 5.0, 3));
+        let before = mgr.plan().assignments[0].adjustment.limit;
+        // A re-profile found the job 3x slower: the granted limit grows,
+        // while rate and priority survive the swap.
+        assert!(mgr.update_model("a", model(0.15)));
+        let plan = mgr.plan();
+        assert!(plan.assignments[0].adjustment.limit > before);
+        let j = mgr.jobs().next().unwrap();
+        assert_eq!((j.rate_hz, j.priority), (5.0, 3));
+        assert!(!mgr.update_model("ghost", model(0.1)));
     }
 
     #[test]

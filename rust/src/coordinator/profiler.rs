@@ -144,8 +144,26 @@ impl Profiler {
         backend: &mut dyn ProfilingBackend,
         observer: &mut dyn FnMut(&Measurement),
     ) -> SessionResult {
+        self.run_observed_from(backend, observer, None)
+    }
+
+    /// [`Profiler::run_observed`] warm-started from a `prior` model — the
+    /// drift re-profiling path: the stale fit seeds every refit of the
+    /// session (regardless of the strategy's own warm-start policy), so
+    /// the new session converges from what the old model already knew
+    /// instead of from scratch. `prior = None` is byte-identical to
+    /// [`Profiler::run_observed`].
+    pub fn run_observed_from(
+        &mut self,
+        backend: &mut dyn ProfilingBackend,
+        observer: &mut dyn FnMut(&Measurement),
+        prior: Option<&RuntimeModel>,
+    ) -> SessionResult {
         let l_max = backend.l_max();
         let mut ctx = ProfilingContext::new(self.cfg.l_min, l_max, self.cfg.delta);
+        if let Some(p) = prior {
+            ctx.model = p.clone();
+        }
         let init =
             initial_limits(self.cfg.p, self.cfg.n_initial, self.cfg.l_min, l_max, self.cfg.delta);
 
@@ -173,7 +191,7 @@ impl Profiler {
         for m in &measurements {
             ctx.points.push(ProfilePoint::new(m.limit, m.mean_runtime));
         }
-        ctx.model = RuntimeModel::fit(&ctx.points);
+        ctx.model = RuntimeModel::fit_warm(&ctx.points, prior);
         for (i, m) in measurements.iter().enumerate() {
             steps.push(StepRecord {
                 index: i + 1,
@@ -199,7 +217,7 @@ impl Profiler {
             observer(&m);
             cumulative += m.wallclock;
             ctx.points.push(ProfilePoint::new(m.limit, m.mean_runtime));
-            let warm = self.strategy.warm_start().then_some(&ctx.model);
+            let warm = (self.strategy.warm_start() || prior.is_some()).then_some(&ctx.model);
             ctx.model = RuntimeModel::fit_warm(&ctx.points, warm);
             steps.push(StepRecord {
                 index: steps.len() + 1,
@@ -329,6 +347,46 @@ mod tests {
         for (m, step) in seen.iter().zip(&s.steps) {
             assert_eq!(m.limit, step.limit);
             assert_eq!(m.mean_runtime, step.mean_runtime);
+        }
+    }
+
+    #[test]
+    fn prior_none_is_byte_identical_to_plain_run() {
+        let cfg = ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() };
+        let mut b1 = backend("pi4", Algo::Arima, 31);
+        let mut b2 = backend("pi4", Algo::Arima, 31);
+        let s1 = Profiler::new(cfg.clone(), strategies::by_name("nms", 1).unwrap()).run(&mut b1);
+        let s2 = Profiler::new(cfg, strategies::by_name("nms", 1).unwrap())
+            .run_observed_from(&mut b2, &mut |_| {}, None);
+        assert_eq!(s1.steps.len(), s2.steps.len());
+        for (a, b) in s1.steps.iter().zip(&s2.steps) {
+            assert_eq!(a.limit.to_bits(), b.limit.to_bits());
+            assert_eq!(a.mean_runtime.to_bits(), b.mean_runtime.to_bits());
+            assert_eq!(a.model.a.to_bits(), b.model.a.to_bits());
+            assert_eq!(a.model.b.to_bits(), b.model.b.to_bits());
+        }
+        assert_eq!(s1.total_time.to_bits(), s2.total_time.to_bits());
+    }
+
+    #[test]
+    fn prior_seeds_every_refit_of_the_session() {
+        // A warm session from a decent prior must finish with a usable fit
+        // and the same step shape as a cold one (the prior changes where
+        // fits start, never how the session is driven).
+        let cfg = ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() };
+        let mut cold_backend = backend("pi4", Algo::Arima, 33);
+        let cold = Profiler::new(cfg.clone(), strategies::by_name("bs", 1).unwrap())
+            .run(&mut cold_backend);
+        let mut warm_backend = backend("pi4", Algo::Arima, 33);
+        let warm = Profiler::new(cfg, strategies::by_name("bs", 1).unwrap())
+            .run_observed_from(&mut warm_backend, &mut |_| {}, Some(cold.final_model()));
+        assert_eq!(warm.steps.len(), cold.steps.len());
+        let m = warm.final_model();
+        assert!(m.eval(0.5).is_finite() && m.eval(0.5) > 0.0);
+        // Both describe the same backend: predictions agree within noise.
+        for &r in &[0.3, 1.0, 3.0] {
+            let rel = (m.eval(r) - cold.final_model().eval(r)).abs() / cold.final_model().eval(r);
+            assert!(rel < 0.5, "warm vs cold diverged at {r}: {rel}");
         }
     }
 

@@ -9,6 +9,28 @@
 //! strategy probes reuse the observed runtime instead of re-executing the
 //! job; a hit is returned with `wallclock = 0` (nothing ran) while the
 //! wallclock it *would* have cost is accumulated as `saved_wallclock`.
+//!
+//! ## Generation-based aging
+//!
+//! Measurements go stale: when a job class drifts (model upgrade, heavier
+//! input regime), replaying its old runtimes would silently poison every
+//! re-profile. Each label therefore carries a **generation** counter, and
+//! every entry is stamped with the generation current at insert time. A
+//! drift verdict bumps the label's generation
+//! ([`MeasurementCache::bump_generation`]); from that point `lookup`
+//! refuses pre-bump entries (counted as `stale_hits_refused`, and as
+//! misses, so the re-profile executes fresh probes) while
+//! [`MeasurementCache::evict_stale`] reclaims whatever the re-profile did
+//! not overwrite.
+//!
+//! ## Canonical bucket width
+//!
+//! Keys are quantized bucket indices derived from **one canonical `delta`
+//! per label** — the first width a label is registered with. Keying by the
+//! caller-supplied width would alias buckets when a job is reconfigured
+//! (at `delta = 0.2` a probe at 0.8 lands in bucket 4, the bucket a
+//! `delta = 0.1` probe at 0.4 already occupies) and serve measurements
+//! from the wrong limitation.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -18,34 +40,97 @@ use crate::coordinator::backend::{Measurement, ProfilingBackend};
 use crate::earlystop::EarlyStopConfig;
 use crate::strategies::grid_bucket;
 
-/// Cache key: job label (e.g. `"pi4/arima"`) + limitation-grid bucket.
+/// Cache key: job label (e.g. `"pi4/arima"`) + limitation-grid bucket
+/// (quantized with the label's canonical `delta`).
 pub type CacheKey = (String, i64);
 
-/// Hit/miss counters plus the profiling wallclock hits avoided.
+/// Hit/miss counters plus aging bookkeeping and the profiling wallclock
+/// hits avoided. Every `lookup` counts exactly one hit or one miss
+/// (`hits + misses == lookups()`); a stale-generation refusal is a miss
+/// that additionally increments `stale_hits_refused`.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
+    /// Lookups that found an entry but refused it as pre-bump stale
+    /// (also counted in `misses`).
+    pub stale_hits_refused: u64,
+    /// Stale entries reclaimed by `evict_stale` (≤ `inserts`).
+    pub evictions: u64,
+    pub inserts: u64,
     /// Wallclock (seconds) of re-executions avoided by cache hits.
     pub saved_wallclock: f64,
 }
 
 impl CacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
     pub fn hit_rate(&self) -> f64 {
-        let total = self.hits + self.misses;
+        let total = self.lookups();
         if total == 0 {
             0.0
         } else {
             self.hits as f64 / total as f64
         }
     }
+
+    /// Counter deltas since an `earlier` snapshot of the same cache —
+    /// how a persistent cache reports per-run statistics.
+    pub fn delta_since(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits - earlier.hits,
+            misses: self.misses - earlier.misses,
+            stale_hits_refused: self.stale_hits_refused - earlier.stale_hits_refused,
+            evictions: self.evictions - earlier.evictions,
+            inserts: self.inserts - earlier.inserts,
+            saved_wallclock: self.saved_wallclock - earlier.saved_wallclock,
+        }
+    }
+}
+
+/// One stored measurement, stamped with the label generation it was
+/// observed under.
+struct Entry {
+    m: Measurement,
+    generation: u64,
+}
+
+/// Per-label aging state: the canonical bucket width and the current
+/// generation.
+#[derive(Default)]
+struct LabelState {
+    /// Canonical `delta`, fixed by the first insert/lookup of the label.
+    delta: Option<f64>,
+    generation: u64,
+}
+
+/// Both maps behind one lock: entries and label states are read/written
+/// together on every path, and a single mutex rules out lock-order bugs.
+#[derive(Default)]
+struct Store {
+    map: HashMap<CacheKey, Entry>,
+    labels: HashMap<String, LabelState>,
+}
+
+impl Store {
+    /// The label's canonical delta (registering `delta` if first contact)
+    /// and current generation.
+    fn label_state(&mut self, label: &str, delta: f64) -> (f64, u64) {
+        let st = self.labels.entry(label.to_string()).or_default();
+        (*st.delta.get_or_insert(delta), st.generation)
+    }
 }
 
 /// Thread-safe measurement cache shared by every fleet worker.
 pub struct MeasurementCache {
-    map: Mutex<HashMap<CacheKey, Measurement>>,
+    store: Mutex<Store>,
     hits: AtomicU64,
     misses: AtomicU64,
+    stale_hits_refused: AtomicU64,
+    evictions: AtomicU64,
+    inserts: AtomicU64,
     saved_wallclock: Mutex<f64>,
 }
 
@@ -58,21 +143,36 @@ impl Default for MeasurementCache {
 impl MeasurementCache {
     pub fn new() -> Self {
         Self {
-            map: Mutex::new(HashMap::new()),
+            store: Mutex::new(Store::default()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            stale_hits_refused: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            inserts: AtomicU64::new(0),
             saved_wallclock: Mutex::new(0.0),
         }
     }
 
-    /// Look up a measurement, recording a hit or miss. On a hit the
-    /// original run's wallclock is credited to `saved_wallclock`.
+    /// Look up a measurement, recording a hit or miss. Only entries of the
+    /// label's *current* generation are served; a pre-bump entry is refused
+    /// (a miss, plus `stale_hits_refused`) so the caller re-executes. On a
+    /// hit the original run's wallclock is credited to `saved_wallclock`.
     pub fn lookup(&self, label: &str, limit: f64, delta: f64) -> Option<Measurement> {
+        let mut store = self.store.lock().unwrap();
+        let (delta, generation) = store.label_state(label, delta);
         let key = (label.to_string(), grid_bucket(limit, delta));
-        let found = self.map.lock().unwrap().get(&key).copied();
+        let found = match store.map.get(&key) {
+            Some(e) if e.generation == generation => Some(e.m),
+            Some(_) => {
+                self.stale_hits_refused.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+            None => None,
+        };
         match found {
             Some(m) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
+                drop(store);
                 *self.saved_wallclock.lock().unwrap() += m.wallclock;
                 Some(m)
             }
@@ -85,14 +185,55 @@ impl MeasurementCache {
 
     /// Store an executed measurement (last write wins — concurrent workers
     /// probing the same key observe the same distribution, so either value
-    /// is a valid sample).
+    /// is a valid sample). The entry is stamped with the label's current
+    /// generation; overwriting a stale entry refreshes it.
     pub fn insert(&self, label: &str, delta: f64, m: Measurement) {
+        let mut store = self.store.lock().unwrap();
+        let (delta, generation) = store.label_state(label, delta);
         let key = (label.to_string(), grid_bucket(m.limit, delta));
-        self.map.lock().unwrap().insert(key, m);
+        store.map.insert(key, Entry { m, generation });
+        self.inserts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Age out a label: bump its generation so every existing entry of the
+    /// label becomes stale (refused by `lookup`, reclaimed by
+    /// `evict_stale`). Returns the new generation. Called by the adaptive
+    /// loop when a drift verdict invalidates a job class's measurements.
+    pub fn bump_generation(&self, label: &str) -> u64 {
+        let mut store = self.store.lock().unwrap();
+        let st = store.labels.entry(label.to_string()).or_default();
+        st.generation += 1;
+        st.generation
+    }
+
+    /// The current generation of a label (0 until first bumped).
+    pub fn generation(&self, label: &str) -> u64 {
+        self.store
+            .lock()
+            .unwrap()
+            .labels
+            .get(label)
+            .map_or(0, |st| st.generation)
+    }
+
+    /// Reclaim every entry whose stamped generation is behind its label's
+    /// current generation. Current-generation entries are never evicted.
+    /// Returns the number of entries reclaimed.
+    pub fn evict_stale(&self) -> usize {
+        let mut store = self.store.lock().unwrap();
+        let Store { map, labels } = &mut *store;
+        let before = map.len();
+        map.retain(|(label, _), e| match labels.get(label) {
+            Some(st) => e.generation == st.generation,
+            None => true,
+        });
+        let evicted = before - map.len();
+        self.evictions.fetch_add(evicted as u64, Ordering::Relaxed);
+        evicted
     }
 
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        self.store.lock().unwrap().map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -103,6 +244,9 @@ impl MeasurementCache {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
+            stale_hits_refused: self.stale_hits_refused.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            inserts: self.inserts.load(Ordering::Relaxed),
             saved_wallclock: *self.saved_wallclock.lock().unwrap(),
         }
     }
@@ -111,8 +255,9 @@ impl MeasurementCache {
 /// Backend decorator that consults the shared cache before executing.
 ///
 /// On a hit the cached measurement is returned with `wallclock = 0` (the
-/// session spends no time on it); on a miss the inner backend executes and
-/// the result is stored for every later probe of the same key.
+/// session spends no time on it); on a miss — including a stale-generation
+/// refusal — the inner backend executes and the result is stored (at the
+/// current generation) for every later probe of the same key.
 pub struct CachedBackend<'a, B: ProfilingBackend> {
     inner: B,
     cache: &'a MeasurementCache,
@@ -174,6 +319,10 @@ mod tests {
         CachedBackend::new(SimulatedBackend::new(job), cache, "pi4/arima".into(), 0.1)
     }
 
+    fn meas(limit: f64, rt: f64) -> Measurement {
+        Measurement { limit, mean_runtime: rt, samples: 1000, wallclock: rt * 1000.0 }
+    }
+
     #[test]
     fn second_probe_is_a_hit_with_zero_wallclock() {
         let cache = MeasurementCache::new();
@@ -185,6 +334,8 @@ mod tests {
         assert_eq!(m2.wallclock, 0.0, "hit must cost no profiling time");
         let s = cache.stats();
         assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(s.lookups(), 2);
+        assert_eq!(s.inserts, 1);
         assert!((s.saved_wallclock - m1.wallclock).abs() < 1e-12);
         assert!((s.hit_rate() - 0.5).abs() < 1e-12);
     }
@@ -264,6 +415,96 @@ mod tests {
     }
 
     #[test]
+    fn reconfigured_delta_cannot_alias_old_buckets() {
+        // Regression: `lookup` and `insert` used the caller-supplied
+        // `delta` for the bucket index, so a job reconfigured to a wider
+        // grid aliased old buckets — a probe at 0.8 with delta 0.2 landed
+        // in bucket 4 and was served the measurement taken at limit 0.4.
+        // The canonical per-label delta (first registration wins) keys
+        // every later call consistently.
+        let cache = MeasurementCache::new();
+        cache.insert("cam", 0.1, meas(0.4, 0.44)); // bucket 4 at delta 0.1
+        assert!(
+            cache.lookup("cam", 0.8, 0.2).is_none(),
+            "0.8 under the reconfigured width must not alias the 0.4 entry"
+        );
+        assert_eq!(cache.stats().stale_hits_refused, 0, "a width change is not staleness");
+        // The same limit still resolves through the canonical width.
+        let m = cache.lookup("cam", 0.4, 0.2).expect("canonical bucket still serves");
+        assert_eq!(m.mean_runtime, 0.44);
+        // Inserting at the new width quantizes with the canonical delta
+        // too: 0.8 -> bucket 8, a fresh entry rather than overwriting 0.4.
+        cache.insert("cam", 0.2, meas(0.8, 0.21));
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.lookup("cam", 0.4, 0.1).unwrap().mean_runtime, 0.44);
+        assert_eq!(cache.lookup("cam", 0.8, 0.1).unwrap().mean_runtime, 0.21);
+        // A different label registers its own canonical width.
+        cache.insert("lidar", 0.2, meas(0.8, 0.5));
+        assert_eq!(cache.lookup("lidar", 0.7, 0.2).unwrap().mean_runtime, 0.5);
+    }
+
+    #[test]
+    fn generation_bump_refuses_stale_hits_and_evicts() {
+        let cache = MeasurementCache::new();
+        cache.insert("cam", 0.1, meas(0.1, 1.0));
+        cache.insert("cam", 0.1, meas(0.2, 0.5));
+        assert!(cache.lookup("cam", 0.1, 0.1).is_some());
+        assert_eq!(cache.generation("cam"), 0);
+
+        assert_eq!(cache.bump_generation("cam"), 1);
+        // Pre-bump entries are refused: a miss plus a stale refusal.
+        assert!(cache.lookup("cam", 0.1, 0.1).is_none());
+        let s = cache.stats();
+        assert_eq!(s.stale_hits_refused, 1);
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(s.lookups(), 2);
+
+        // Re-inserting a bucket refreshes it to the current generation;
+        // the untouched bucket is reclaimed by evict_stale.
+        cache.insert("cam", 0.1, meas(0.1, 3.0));
+        assert_eq!(cache.lookup("cam", 0.1, 0.1).unwrap().mean_runtime, 3.0);
+        assert_eq!(cache.evict_stale(), 1, "only the stale 0.2 bucket is reclaimed");
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.stats().evictions, 1);
+        assert!(cache.stats().evictions <= cache.stats().inserts);
+        // Evicting again is a no-op: current-generation entries survive.
+        assert_eq!(cache.evict_stale(), 0);
+        assert!(cache.lookup("cam", 0.1, 0.1).is_some());
+    }
+
+    #[test]
+    fn generation_bump_is_per_label() {
+        let cache = MeasurementCache::new();
+        cache.insert("cam", 0.1, meas(0.3, 0.3));
+        cache.insert("lidar", 0.1, meas(0.3, 0.9));
+        cache.bump_generation("cam");
+        assert!(cache.lookup("cam", 0.3, 0.1).is_none(), "bumped label refuses");
+        assert!(cache.lookup("lidar", 0.3, 0.1).is_some(), "other labels unaffected");
+        assert_eq!(cache.evict_stale(), 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn cached_backend_re_executes_after_bump() {
+        // The drift path end-to-end: probe, bump, probe again — the second
+        // probe must re-execute (fresh wallclock) and repopulate the
+        // bucket at the new generation.
+        let cache = MeasurementCache::new();
+        let mut b = backend(&cache, 6);
+        let m1 = b.measure(0.5, 1000);
+        assert!(m1.wallclock > 0.0);
+        cache.bump_generation("pi4/arima");
+        let m2 = b.measure(0.5, 1000);
+        assert!(m2.wallclock > 0.0, "stale entry must not be served");
+        let m3 = b.measure(0.5, 1000);
+        assert_eq!(m3.wallclock, 0.0, "fresh-generation entry serves again");
+        assert_eq!(m3.mean_runtime, m2.mean_runtime);
+        let s = cache.stats();
+        assert_eq!(s.stale_hits_refused, 1);
+        assert_eq!((s.hits, s.misses), (1, 2));
+    }
+
+    #[test]
     fn concurrent_workers_account_stats_exactly() {
         // 8 workers × 100 probes over 10 buckets of one label. Regardless
         // of interleaving: every lookup is counted exactly once, the saved
@@ -295,7 +536,7 @@ mod tests {
             }
         });
         let stats = cache.stats();
-        assert_eq!(stats.hits + stats.misses, 800, "every lookup counted once");
+        assert_eq!(stats.lookups(), 800, "every lookup counted once");
         assert!(stats.misses >= 10, "each bucket misses at least once");
         assert!(stats.hits <= 790);
         assert_eq!(cache.len(), 10, "one entry per bucket");

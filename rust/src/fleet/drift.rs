@@ -1,0 +1,686 @@
+//! Drift-aware continuous profiling: the adaptive fleet loop.
+//!
+//! A fitted [`RuntimeModel`] is a snapshot — input rates shift, model
+//! versions change, co-located load comes and goes — and the paper's
+//! "short profiling phase" promise only holds if staleness is *detected*
+//! rather than scheduled away with fixed re-profiling rounds. LOS (Becker
+//! et al., 2021) re-evaluates placements periodically from local
+//! knowledge; Witt et al. (2018) argue black-box performance models must
+//! be continuously checked against observed-vs-predicted error. This
+//! module does both for the fleet:
+//!
+//! * a per-job [`DriftMonitor`] tracks a rolling SMAPE window of
+//!   observed-vs-predicted runtimes plus the stream's per-epoch peak rate,
+//!   and raises a typed [`DriftVerdict`] — `Stable`, `RateShift`, or
+//!   `ModelStale` — against configurable thresholds;
+//! * [`FleetEngine::run_adaptive`] replaces fixed rounds: after one cold
+//!   sweep it re-profiles **only** jobs whose verdict crossed a threshold,
+//!   warm-starting the refit from the stale fit, bumping the measurement
+//!   cache's label generation on `ModelStale` (so the re-profile executes
+//!   fresh probes instead of replaying poisoned ones), and re-entering
+//!   [`JobManager`] / [`super::migrate::rebalance`] so a downgraded job
+//!   can move nodes.
+//!
+//! ```text
+//!  epoch e:  ArrivalProcess::max_rate_in ─┐    ┌─ Stable     -> nothing
+//!            live probes vs model.eval ───┴─ DriftMonitor
+//!                                               ├─ RateShift  -> warm re-profile (cache replays)
+//!                                               └─ ModelStale -> bump gen + evict + re-profile
+//!                                          then: JobManager update -> plans -> rebalance
+//! ```
+
+use std::collections::{BTreeMap, VecDeque};
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::{JobManager, ManagedJob};
+use crate::fit::RuntimeModel;
+use crate::simulator::SimulatedJob;
+use crate::stats::smape_guarded;
+
+use super::cache::CacheStats;
+use super::migrate::{rebalance, FleetPlan};
+use super::placement::FleetJob;
+use super::worker::{self, ProfilePass};
+use super::{FleetEngine, FleetJobSpec, FleetSummary};
+
+/// Drift-detection thresholds.
+#[derive(Clone, Debug)]
+pub struct DriftConfig {
+    /// Rolling window length (observed-vs-predicted runtime pairs).
+    pub window: usize,
+    /// Pairs required before a `ModelStale` verdict may fire (guards the
+    /// first epochs against single-probe noise).
+    pub min_observations: usize,
+    /// Rolling SMAPE above this ⇒ `ModelStale`. 0.25 needs a sustained
+    /// ~1.7x runtime deviation — far above fit error + probe noise
+    /// (≲ 0.1 combined on the simulated nodes), far below a real regime
+    /// shift (a 3x slowdown scores 0.5).
+    pub smape_threshold: f64,
+    /// Relative peak-rate change above this ⇒ `RateShift`.
+    pub rate_threshold: f64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        Self { window: 12, min_observations: 4, smape_threshold: 0.25, rate_threshold: 0.25 }
+    }
+}
+
+/// What the monitor concluded about one job, one epoch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DriftVerdict {
+    /// Model and provisioning still describe the job.
+    Stable,
+    /// The stream's peak rate moved past the threshold: the model is fine
+    /// but the provisioning is not.
+    RateShift { provisioned_hz: f64, observed_hz: f64 },
+    /// Observed runtimes diverged from predictions: the fitted model no
+    /// longer describes the job.
+    ModelStale { rolling_smape: f64 },
+}
+
+impl DriftVerdict {
+    pub fn is_drift(&self) -> bool {
+        !matches!(self, DriftVerdict::Stable)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DriftVerdict::Stable => "stable",
+            DriftVerdict::RateShift { .. } => "rate-shift",
+            DriftVerdict::ModelStale { .. } => "model-stale",
+        }
+    }
+}
+
+/// Per-job drift tracker: a rolling observed-vs-predicted runtime window
+/// plus the latest peak-rate observation, judged against [`DriftConfig`].
+pub struct DriftMonitor {
+    cfg: DriftConfig,
+    provisioned_hz: f64,
+    observed_hz: f64,
+    /// `(observed, predicted)` runtime pairs, oldest first.
+    window: VecDeque<(f64, f64)>,
+}
+
+impl DriftMonitor {
+    pub fn new(cfg: DriftConfig, provisioned_hz: f64) -> Self {
+        Self { cfg, provisioned_hz, observed_hz: provisioned_hz, window: VecDeque::new() }
+    }
+
+    /// Record the stream's peak rate over the latest epoch window.
+    pub fn observe_rate(&mut self, hz: f64) {
+        self.observed_hz = hz;
+    }
+
+    /// Record one live runtime observation against the model's prediction.
+    pub fn observe_runtime(&mut self, observed: f64, predicted: f64) {
+        self.window.push_back((observed, predicted));
+        while self.window.len() > self.cfg.window {
+            self.window.pop_front();
+        }
+    }
+
+    /// SMAPE of the rolling window (0 while empty).
+    pub fn rolling_smape(&self) -> f64 {
+        if self.window.is_empty() {
+            return 0.0;
+        }
+        let observed: Vec<f64> = self.window.iter().map(|&(o, _)| o).collect();
+        let predicted: Vec<f64> = self.window.iter().map(|&(_, p)| p).collect();
+        smape_guarded(&observed, &predicted, 1e-9)
+    }
+
+    /// Judge the current state. Rate shifts outrank model staleness: a
+    /// rate change invalidates the provisioning regardless of model fit,
+    /// and re-provisioning is the cheaper response.
+    pub fn verdict(&self) -> DriftVerdict {
+        let rel = (self.observed_hz - self.provisioned_hz).abs() / self.provisioned_hz.max(1e-9);
+        if rel > self.cfg.rate_threshold {
+            return DriftVerdict::RateShift {
+                provisioned_hz: self.provisioned_hz,
+                observed_hz: self.observed_hz,
+            };
+        }
+        if self.window.len() >= self.cfg.min_observations {
+            let s = self.rolling_smape();
+            if s > self.cfg.smape_threshold {
+                return DriftVerdict::ModelStale { rolling_smape: s };
+            }
+        }
+        DriftVerdict::Stable
+    }
+
+    /// Re-arm after a re-profile: the window is cleared (old pairs judged
+    /// a dead model) and the provisioned rate becomes the observed one.
+    pub fn rearm(&mut self, provisioned_hz: f64) {
+        self.window.clear();
+        self.provisioned_hz = provisioned_hz;
+        self.observed_hz = provisioned_hz;
+    }
+}
+
+/// Stable fingerprint of a fitted model (FNV-1a over the member kind and
+/// the exact parameter bits) — how the scenario tests assert that a job's
+/// model was, or was not, touched.
+pub fn model_fingerprint(m: &RuntimeModel) -> u64 {
+    let params = [m.a, m.b, m.c, m.d]
+        .into_iter()
+        .flat_map(|v| v.to_bits().to_le_bytes());
+    crate::util::fnv1a(m.kind.name().bytes().chain(params))
+}
+
+/// An injected runtime regime change for one job (a model-version upgrade
+/// or a heavier input regime): from virtual tick `at_tick`, every observed
+/// per-sample runtime is scaled by `scale`.
+#[derive(Clone, Copy, Debug)]
+pub struct RuntimeShift {
+    pub at_tick: usize,
+    pub scale: f64,
+}
+
+/// Configuration of the adaptive loop.
+#[derive(Clone, Debug)]
+pub struct AdaptiveConfig {
+    /// Adaptation epochs after the cold sweep.
+    pub epochs: usize,
+    /// Virtual ticks per epoch. Epoch `e` observes runtime probes over
+    /// the window `[horizon + (e-1)·epoch_ticks, horizon + e·epoch_ticks)`;
+    /// the rate tracker looks back over `max(epoch_ticks, horizon)` ticks
+    /// ending at the epoch boundary, so epochs shorter than a periodic
+    /// stream's period cannot alias its trough into a rate-shift verdict
+    /// (the flip side: rate *drops* only register once the old peak ages
+    /// out of that lookback).
+    pub epoch_ticks: usize,
+    /// Live runtime probes per job per epoch.
+    pub probes_per_epoch: usize,
+    /// Samples averaged per live probe (tames per-sample noise).
+    pub probe_samples: usize,
+    pub drift: DriftConfig,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        Self {
+            epochs: 3,
+            epoch_ticks: 500,
+            probes_per_epoch: 6,
+            probe_samples: 400,
+            drift: DriftConfig::default(),
+        }
+    }
+}
+
+/// One drift-triggered re-profile.
+#[derive(Clone, Debug)]
+pub struct ReprofiledJob {
+    pub name: String,
+    pub verdict: DriftVerdict,
+    /// Rolling SMAPE at verdict time (pre-adaptation).
+    pub pre_smape: f64,
+    /// Rolling SMAPE over fresh probes of the new fit (post-adaptation).
+    pub post_smape: f64,
+    /// Probes the re-profile actually executed (cache misses; a
+    /// `RateShift` re-profile replays from the still-fresh cache).
+    pub executed_probes: u64,
+}
+
+/// One adaptation epoch's outcome.
+pub struct EpochReport {
+    pub epoch: usize,
+    /// Every job's verdict this epoch, in submission order.
+    pub verdicts: Vec<(String, DriftVerdict)>,
+    pub reprofiled: Vec<ReprofiledJob>,
+    /// Fleet-wide rebalanced plan — present only when something was
+    /// re-profiled (stable epochs change nothing).
+    pub plan: Option<FleetPlan>,
+}
+
+/// Final per-job state after the adaptive run.
+#[derive(Clone, Debug)]
+pub struct AdaptiveJobReport {
+    pub name: String,
+    pub label: String,
+    /// Drift-triggered re-profiles of this job (0 = untouched).
+    pub reprofiles: usize,
+    /// Fingerprint of the final model ([`model_fingerprint`]).
+    pub fingerprint: u64,
+    pub model: RuntimeModel,
+    pub rate_hz: f64,
+    /// CPU limit the job's node plan currently grants it.
+    pub limit: f64,
+}
+
+/// Everything a completed adaptive run reports.
+pub struct AdaptiveSummary {
+    /// The cold sweep every epoch adapted from.
+    pub initial: FleetSummary,
+    pub epochs: Vec<EpochReport>,
+    /// Final per-job state, in submission order.
+    pub jobs: Vec<AdaptiveJobReport>,
+    /// Cache statistics of the whole adaptive run (cold sweep included).
+    pub cache: CacheStats,
+    /// Probes executed during the adaptation epochs (cache misses — the
+    /// cost the drift gating actually paid).
+    pub adaptive_probe_executions: u64,
+}
+
+impl AdaptiveSummary {
+    /// Names of jobs re-profiled at least once, in first-event order.
+    pub fn reprofiled_names(&self) -> Vec<&str> {
+        let mut out: Vec<&str> = Vec::new();
+        for e in &self.epochs {
+            for r in &e.reprofiled {
+                if !out.contains(&r.name.as_str()) {
+                    out.push(&r.name);
+                }
+            }
+        }
+        out
+    }
+
+    /// What naive adaptation — re-profiling *every* job with invalidated
+    /// caches in each epoch that saw drift — would have executed: the
+    /// per-sweep probe count times the number of drift epochs.
+    pub fn naive_probe_executions(&self) -> u64 {
+        let per_sweep: u64 = self
+            .initial
+            .outcomes
+            .iter()
+            .map(|o| o.rounds.first().map_or(0, |r| r.steps.len()) as u64)
+            .sum();
+        let drift_epochs = self.epochs.iter().filter(|e| !e.reprofiled.is_empty()).count();
+        per_sweep * drift_epochs as u64
+    }
+
+    pub fn job(&self, name: &str) -> Option<&AdaptiveJobReport> {
+        self.jobs.iter().find(|j| j.name == name)
+    }
+}
+
+/// Mutable per-job state the adaptive loop carries across epochs.
+struct LiveJob {
+    spec: FleetJobSpec,
+    model: RuntimeModel,
+    rate_hz: f64,
+    limit: f64,
+    monitor: DriftMonitor,
+    /// Independent noise stream for live observations (distinct from the
+    /// profiling replays, so probes are fresh draws, not cached ones).
+    probe: SimulatedJob,
+    reprofiles: usize,
+}
+
+impl LiveJob {
+    /// The injected runtime scale active for an epoch starting at `tick`.
+    fn scale_at(&self, tick: usize) -> f64 {
+        match self.spec.runtime_shift {
+            Some(s) if tick >= s.at_tick => s.scale,
+            _ => 1.0,
+        }
+    }
+
+    /// Draw one live observation and feed the monitor.
+    fn probe_once(&mut self, samples: usize, scale: f64) {
+        let observed = self.probe.observe_mean(self.limit, samples) * scale;
+        self.monitor.observe_runtime(observed, self.model.eval(self.limit));
+    }
+}
+
+impl FleetEngine {
+    /// Drift-aware continuous profiling: one cold sweep, then `epochs`
+    /// adaptation rounds that re-profile **only** drifted jobs.
+    ///
+    /// Per epoch, per job: observe the stream's peak rate over the epoch
+    /// window and a handful of live runtimes against the model's
+    /// predictions; ask the [`DriftMonitor`] for a verdict. On drift:
+    /// `ModelStale` bumps the measurement cache's label generation and
+    /// evicts the stale entries (the re-profile must execute, not replay
+    /// poisoned measurements), `RateShift` keeps the cache (the behaviour
+    /// is unchanged — the warm re-profile replays at near-zero cost);
+    /// either way the session warm-starts from the stale fit, the job
+    /// re-enters its [`JobManager`] with the new model and rate, node
+    /// plans are recomputed, and the fleet is rebalanced so downgraded
+    /// jobs can move. With zero drift this performs zero re-profiles and
+    /// the returned `initial` summary is byte-identical to [`Self::run`].
+    pub fn run_adaptive(
+        &self,
+        specs: Vec<FleetJobSpec>,
+        acfg: &AdaptiveConfig,
+    ) -> Result<AdaptiveSummary> {
+        ensure!(acfg.epochs == 0 || acfg.epoch_ticks > 0, "adaptive epochs need epoch_ticks > 0");
+        ensure!(acfg.drift.window > 0, "drift window must be non-empty");
+        ensure!(
+            acfg.drift.min_observations <= acfg.drift.window,
+            "min_observations exceeds the rolling window"
+        );
+        // The measurement cache is shared per label (= job class): jobs of
+        // one class on one device replay each other's probes, so a runtime
+        // shift that applies to only some of them would let a drifted
+        // re-profile poison its undrifted siblings' entries (and vice
+        // versa). Reject such scenarios up front.
+        for a in &specs {
+            for b in &specs {
+                if a.label() != b.label() {
+                    continue;
+                }
+                let same = match (&a.runtime_shift, &b.runtime_shift) {
+                    (None, None) => true,
+                    (Some(x), Some(y)) => x.at_tick == y.at_tick && x.scale == y.scale,
+                    _ => false,
+                };
+                ensure!(
+                    same,
+                    "jobs '{}' and '{}' share cache label '{}' but have different \
+                     runtime shifts — a class drifts as a whole",
+                    a.name,
+                    b.name,
+                    a.label()
+                );
+            }
+        }
+        let stats_start = self.cache.stats();
+        let initial = self.run(specs.clone())?;
+        let stats_after_sweep = self.cache.stats();
+
+        // Mirror the cold sweep's per-node managers: the adaptive loop
+        // re-enters them in place instead of rebuilding the world.
+        let mut managers: BTreeMap<&'static str, JobManager> = BTreeMap::new();
+        let mut live: Vec<LiveJob> = Vec::with_capacity(initial.outcomes.len());
+        for o in &initial.outcomes {
+            let spec = specs
+                .iter()
+                .find(|s| s.name == o.name)
+                .expect("outcome names mirror submitted specs")
+                .clone();
+            managers
+                .entry(o.node.name)
+                .or_insert_with(|| JobManager::new(o.node.cores))
+                .register(ManagedJob {
+                    name: o.name.clone(),
+                    model: o.model.clone(),
+                    rate_hz: o.rate_hz,
+                    priority: o.priority,
+                });
+            let limit = initial
+                .assignment(&o.name)
+                .map(|a| a.adjustment.limit)
+                .unwrap_or(o.node.cores);
+            live.push(LiveJob {
+                monitor: DriftMonitor::new(acfg.drift.clone(), o.rate_hz),
+                probe: SimulatedJob::new(o.node, o.algo, spec.seed ^ 0x9E37_79B9_7F4A_7C15),
+                model: o.model.clone(),
+                rate_hz: o.rate_hz,
+                limit,
+                reprofiles: 0,
+                spec,
+            });
+        }
+
+        let mut epochs: Vec<EpochReport> = Vec::with_capacity(acfg.epochs);
+        for e in 1..=acfg.epochs {
+            let start = self.cfg.horizon + (e - 1) * acfg.epoch_ticks;
+            let end = start + acfg.epoch_ticks;
+
+            // Phase 1: observe every job, collect verdicts. The rate
+            // tracker looks back over at least the provisioning horizon:
+            // the provisioned rate is a peak over a horizon-length window,
+            // so comparing it against the peak of a shorter epoch window
+            // would alias the trough of a periodic (`Varying`) stream into
+            // a spurious RateShift. Rises register immediately; drops
+            // register once the old peak ages out of the lookback.
+            let lookback = acfg.epoch_ticks.max(self.cfg.horizon);
+            let mut verdicts: Vec<(String, DriftVerdict)> = Vec::with_capacity(live.len());
+            let mut drifted: Vec<usize> = Vec::new();
+            for (i, job) in live.iter_mut().enumerate() {
+                let rate_window = (end.saturating_sub(lookback), end);
+                job.monitor.observe_rate(
+                    job.spec
+                        .arrivals
+                        .max_rate_in(rate_window.0, rate_window.1)
+                        .max(1e-6),
+                );
+                // Probes are spread across the epoch window, each under
+                // the regime active at its own tick, so a mid-epoch
+                // runtime shift is partially visible this epoch instead of
+                // invisible until the next.
+                for k in 0..acfg.probes_per_epoch {
+                    let tick = start + k * acfg.epoch_ticks / acfg.probes_per_epoch.max(1);
+                    job.probe_once(acfg.probe_samples, job.scale_at(tick));
+                }
+                let verdict = job.monitor.verdict();
+                if verdict.is_drift() {
+                    drifted.push(i);
+                }
+                verdicts.push((job.spec.name.clone(), verdict));
+            }
+
+            // Phase 2: re-profile exactly the drifted jobs, warm-started.
+            let mut reprofiled: Vec<ReprofiledJob> = Vec::with_capacity(drifted.len());
+            for &i in &drifted {
+                let job = &mut live[i];
+                let verdict = verdicts[i].1;
+                let pre_smape = job.monitor.rolling_smape();
+                if matches!(verdict, DriftVerdict::ModelStale { .. }) {
+                    self.cache.bump_generation(&job.spec.label());
+                    self.cache.evict_stale();
+                }
+                let observed_hz = job.monitor.observed_hz;
+                let miss_before = self.cache.stats().misses;
+                let pass = ProfilePass {
+                    // Profile the regime current at the END of the observed
+                    // window — a shift that landed mid-epoch must not leave
+                    // the re-profile measuring the dead old regime.
+                    runtime_scale: Some(job.scale_at(end - 1)),
+                    prior: Some(job.model.clone()),
+                    // A stale model's cached probes are poisoned, so the
+                    // session searches warm from the old fit; a rate shift
+                    // leaves behaviour (and cache) intact, so the session
+                    // replays the cold sweep's decisions for free.
+                    session_warm: matches!(verdict, DriftVerdict::ModelStale { .. }),
+                    rate_hz: Some(observed_hz),
+                    rounds: Some(1),
+                };
+                let outcome =
+                    worker::profile_job_with(&job.spec, &self.cfg, &self.cache, 0, &pass)?;
+                let executed_probes = self.cache.stats().misses - miss_before;
+                job.model = outcome.model;
+                job.rate_hz = observed_hz;
+                job.reprofiles += 1;
+                let mgr = managers.get_mut(job.spec.node.name).expect("home manager exists");
+                mgr.update_model(&job.spec.name, job.model.clone());
+                mgr.update_rate(&job.spec.name, job.rate_hz);
+                reprofiled.push(ReprofiledJob {
+                    name: job.spec.name.clone(),
+                    verdict,
+                    pre_smape,
+                    post_smape: f64::NAN, // filled in phase 3
+                    executed_probes,
+                });
+            }
+
+            // Phase 3: with fresh models in the managers, recompute node
+            // plans, refresh every job's granted limit, rebalance the
+            // fleet, and re-arm + re-judge the re-profiled monitors.
+            let plan = if reprofiled.is_empty() {
+                None
+            } else {
+                let plans: BTreeMap<&str, crate::coordinator::CapacityPlan> =
+                    managers.iter().map(|(&n, m)| (n, m.plan())).collect();
+                for job in live.iter_mut() {
+                    if let Some(a) = plans[job.spec.node.name]
+                        .assignments
+                        .iter()
+                        .find(|a| a.name == job.spec.name)
+                    {
+                        job.limit = a.adjustment.limit;
+                    }
+                }
+                for (r, &i) in reprofiled.iter_mut().zip(&drifted) {
+                    let job = &mut live[i];
+                    let scale = job.scale_at(end - 1);
+                    job.monitor.rearm(job.rate_hz);
+                    for _ in 0..acfg.drift.min_observations {
+                        job.probe_once(acfg.probe_samples, scale);
+                    }
+                    r.post_smape = job.monitor.rolling_smape();
+                }
+                let fleet_jobs: Vec<FleetJob> = live
+                    .iter()
+                    .map(|j| FleetJob {
+                        name: j.spec.name.clone(),
+                        node: j.spec.node,
+                        model: j.model.clone(),
+                        rate_hz: j.rate_hz,
+                        priority: j.spec.priority,
+                    })
+                    .collect();
+                Some(rebalance(&fleet_jobs))
+            };
+            epochs.push(EpochReport { epoch: e, verdicts, reprofiled, plan });
+        }
+
+        let stats_end = self.cache.stats();
+        let jobs = live
+            .into_iter()
+            .map(|j| AdaptiveJobReport {
+                name: j.spec.name.clone(),
+                label: j.spec.label(),
+                reprofiles: j.reprofiles,
+                fingerprint: model_fingerprint(&j.model),
+                model: j.model,
+                rate_hz: j.rate_hz,
+                limit: j.limit,
+            })
+            .collect();
+        Ok(AdaptiveSummary {
+            initial,
+            epochs,
+            jobs,
+            cache: stats_end.delta_since(&stats_start),
+            adaptive_probe_executions: stats_end.misses - stats_after_sweep.misses,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fit::ModelKind;
+
+    fn cfg() -> DriftConfig {
+        DriftConfig::default()
+    }
+
+    fn model(a: f64) -> RuntimeModel {
+        RuntimeModel { kind: ModelKind::Full, a, b: 1.0, c: 0.001, d: 1.0, fit_cost: 0.0 }
+    }
+
+    #[test]
+    fn monitor_is_stable_on_accurate_predictions() {
+        let mut mon = DriftMonitor::new(cfg(), 4.0);
+        mon.observe_rate(4.0);
+        for _ in 0..20 {
+            mon.observe_runtime(0.102, 0.100); // 2% off: healthy fit noise
+        }
+        assert_eq!(mon.verdict(), DriftVerdict::Stable);
+        assert!(mon.rolling_smape() < 0.02);
+    }
+
+    #[test]
+    fn rate_shift_fires_past_the_threshold_and_outranks_staleness() {
+        let mut mon = DriftMonitor::new(cfg(), 4.0);
+        mon.observe_rate(4.9); // +22.5% < 25%
+        assert_eq!(mon.verdict(), DriftVerdict::Stable);
+        mon.observe_rate(5.2); // +30%
+        assert!(matches!(
+            mon.verdict(),
+            DriftVerdict::RateShift { provisioned_hz, observed_hz }
+                if provisioned_hz == 4.0 && observed_hz == 5.2
+        ));
+        // A rate drop of the same magnitude fires too.
+        mon.observe_rate(2.0);
+        assert!(matches!(mon.verdict(), DriftVerdict::RateShift { .. }));
+        // With a simultaneously stale model, the rate shift wins.
+        for _ in 0..12 {
+            mon.observe_runtime(0.3, 0.1);
+        }
+        assert!(matches!(mon.verdict(), DriftVerdict::RateShift { .. }));
+        mon.observe_rate(4.0);
+        assert!(matches!(mon.verdict(), DriftVerdict::ModelStale { .. }));
+    }
+
+    #[test]
+    fn staleness_needs_min_observations_and_a_real_deviation() {
+        let mut mon = DriftMonitor::new(cfg(), 4.0);
+        // Three wildly wrong pairs: below min_observations, still stable.
+        for _ in 0..3 {
+            mon.observe_runtime(0.5, 0.1);
+        }
+        assert_eq!(mon.verdict(), DriftVerdict::Stable, "needs min_observations");
+        mon.observe_runtime(0.5, 0.1);
+        let v = mon.verdict();
+        assert!(matches!(v, DriftVerdict::ModelStale { rolling_smape } if rolling_smape > 0.6));
+        assert!(v.is_drift());
+        assert_eq!(v.name(), "model-stale");
+    }
+
+    #[test]
+    fn window_rolls_and_rearm_clears() {
+        let mut mon = DriftMonitor::new(cfg(), 4.0);
+        // Fill the window with stale pairs, then push 12 accurate ones:
+        // the stale pairs must roll out entirely.
+        for _ in 0..12 {
+            mon.observe_runtime(0.5, 0.1);
+        }
+        assert!(mon.verdict().is_drift());
+        for _ in 0..12 {
+            mon.observe_runtime(0.1, 0.1);
+        }
+        assert_eq!(mon.verdict(), DriftVerdict::Stable);
+        assert!(mon.rolling_smape() < 1e-12);
+        // rearm resets both the window and the provisioned rate.
+        mon.observe_rate(9.0);
+        for _ in 0..12 {
+            mon.observe_runtime(0.5, 0.1);
+        }
+        mon.rearm(9.0);
+        assert_eq!(mon.verdict(), DriftVerdict::Stable);
+        assert_eq!(mon.rolling_smape(), 0.0);
+    }
+
+    #[test]
+    fn smape_of_a_3x_shift_clears_the_default_threshold() {
+        // The calibration the defaults rely on: a 3x regime shift scores
+        // |3m - m| / (3m + m) = 0.5, twice the 0.25 threshold, while a
+        // 20% fit error scores ~0.09, comfortably under it.
+        let mut mon = DriftMonitor::new(cfg(), 4.0);
+        for _ in 0..6 {
+            mon.observe_runtime(0.3, 0.1);
+        }
+        assert!((mon.rolling_smape() - 0.5).abs() < 1e-12);
+        let mut ok = DriftMonitor::new(cfg(), 4.0);
+        for _ in 0..6 {
+            ok.observe_runtime(0.12, 0.1);
+        }
+        assert!(ok.rolling_smape() < 0.1);
+        assert_eq!(ok.verdict(), DriftVerdict::Stable);
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_parameter_sensitive() {
+        let m = model(0.05);
+        assert_eq!(model_fingerprint(&m), model_fingerprint(&m.clone()));
+        let mut other = model(0.05);
+        other.a = 0.05 + 1e-15;
+        assert_ne!(model_fingerprint(&m), model_fingerprint(&other), "ulp-sensitive");
+        let mut kind = model(0.05);
+        kind.kind = ModelKind::PowerLaw;
+        assert_ne!(model_fingerprint(&m), model_fingerprint(&kind), "kind-sensitive");
+        // fit_cost is bookkeeping, not identity.
+        let mut cost = model(0.05);
+        cost.fit_cost = 123.0;
+        assert_eq!(model_fingerprint(&m), model_fingerprint(&cost));
+    }
+}

@@ -20,18 +20,29 @@
 //!                                     ▼
 //!                                  JobOutcome*N ──► per-node JobManager ──► CapacityPlan
 //! ```
+//!
+//! On top of the one-shot sweep, the [`drift`] module runs the engine
+//! *continuously*: [`FleetEngine::run_adaptive`] monitors every job's
+//! observed-vs-predicted runtime and stream rate, re-profiles only jobs
+//! whose [`DriftVerdict`] crosses a threshold, and ages the measurement
+//! cache by label generation so stale observations are never replayed.
 
 pub mod cache;
+pub mod drift;
 pub mod migrate;
 pub mod placement;
 pub mod queue;
 pub mod worker;
 
 pub use cache::{CacheStats, CachedBackend, MeasurementCache};
+pub use drift::{
+    model_fingerprint, AdaptiveConfig, AdaptiveJobReport, AdaptiveSummary, DriftConfig,
+    DriftMonitor, DriftVerdict, EpochReport, ReprofiledJob, RuntimeShift,
+};
 pub use migrate::{rebalance, rebalance_across, FleetMetrics, FleetPlan, Migration};
 pub use placement::{candidates_for, translate_model, FleetJob, PlacementCandidate};
 pub use queue::WorkQueue;
-pub use worker::{IncrementalModel, JobOutcome};
+pub use worker::{IncrementalModel, JobOutcome, ProfilePass, ScaledBackend};
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -44,6 +55,7 @@ use crate::strategies;
 use crate::stream::ArrivalProcess;
 
 /// One stream job registered with the fleet engine.
+#[derive(Clone)]
 pub struct FleetJobSpec {
     /// Unique job name (e.g. `"cam-03"`).
     pub name: String,
@@ -56,6 +68,9 @@ pub struct FleetJobSpec {
     pub priority: i32,
     /// The sensor stream's arrival process (drives the rate demand).
     pub arrivals: ArrivalProcess,
+    /// Injected runtime regime change (drift scenarios); `None` = the
+    /// job's behaviour never changes.
+    pub runtime_shift: Option<RuntimeShift>,
 }
 
 impl FleetJobSpec {
@@ -68,6 +83,7 @@ impl FleetJobSpec {
             seed,
             priority: 1,
             arrivals: ArrivalProcess::Fixed(2.0),
+            runtime_shift: None,
         }
     }
 
@@ -237,12 +253,7 @@ impl FleetEngine {
             .into_iter()
             .map(|(name, mgr)| (name.to_string(), mgr.plan()))
             .collect();
-        let cache_after = self.cache.stats();
-        let cache = CacheStats {
-            hits: cache_after.hits - cache_before.hits,
-            misses: cache_after.misses - cache_before.misses,
-            saved_wallclock: cache_after.saved_wallclock - cache_before.saved_wallclock,
-        };
+        let cache = self.cache.stats().delta_since(&cache_before);
         Ok(FleetSummary { outcomes, cache, plans })
     }
 
@@ -280,6 +291,7 @@ pub fn sim_fleet(n: usize, seed: u64) -> Vec<FleetJobSpec> {
                     hi: 1.5 + (i % 4) as f64,
                     period: 400.0,
                 },
+                runtime_shift: None,
             }
         })
         .collect()

@@ -11,8 +11,9 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::backend::{Measurement, SimulatedBackend};
+use crate::coordinator::backend::{Measurement, ProfilingBackend, SimulatedBackend};
 use crate::coordinator::{Profiler, SessionResult};
+use crate::earlystop::EarlyStopConfig;
 use crate::fit::{ProfilePoint, RuntimeModel};
 use crate::simulator::SimulatedJob;
 use crate::strategies::{self, grid_bucket};
@@ -33,6 +34,13 @@ pub struct IncrementalModel {
 impl IncrementalModel {
     pub fn new(delta: f64) -> Self {
         Self { delta, points: Vec::new(), model: RuntimeModel::identity(), refits: 0 }
+    }
+
+    /// Start from a stale fit instead of the neutral identity: the first
+    /// observation already refits warm from `prior`'s parameters — how a
+    /// drift-triggered re-profile reuses what the old model knew.
+    pub fn warm(delta: f64, prior: RuntimeModel) -> Self {
+        Self { delta, points: Vec::new(), model: prior, refits: 0 }
     }
 
     /// Fold one measurement in. A repeated probe of the same grid bucket
@@ -99,6 +107,77 @@ impl JobOutcome {
     }
 }
 
+/// Backend decorator that scales every observed runtime (and the wallclock
+/// spent observing it) by a constant factor — the injected regime shift of
+/// the drift scenarios: a model-version upgrade or a heavier input regime
+/// makes the same black box uniformly slower.
+pub struct ScaledBackend<B: ProfilingBackend> {
+    inner: B,
+    scale: f64,
+}
+
+impl<B: ProfilingBackend> ScaledBackend<B> {
+    pub fn new(inner: B, scale: f64) -> Self {
+        debug_assert!(scale > 0.0);
+        Self { inner, scale }
+    }
+
+    fn apply(&self, mut m: Measurement) -> Measurement {
+        m.mean_runtime *= self.scale;
+        m.wallclock *= self.scale;
+        m
+    }
+}
+
+impl<B: ProfilingBackend> ProfilingBackend for ScaledBackend<B> {
+    fn measure(&mut self, limit: f64, samples: usize) -> Measurement {
+        let m = self.inner.measure(limit, samples);
+        self.apply(m)
+    }
+
+    fn measure_early_stop(
+        &mut self,
+        limit: f64,
+        cfg: &EarlyStopConfig,
+        cap: usize,
+    ) -> Measurement {
+        let m = self.inner.measure_early_stop(limit, cfg, cap);
+        self.apply(m)
+    }
+
+    fn l_max(&self) -> f64 {
+        self.inner.l_max()
+    }
+
+    fn label(&self) -> String {
+        self.inner.label()
+    }
+}
+
+/// Options for a (re-)profiling pass beyond the cold-start defaults; the
+/// adaptive loop's seam into [`profile_job_with`].
+#[derive(Clone, Debug, Default)]
+pub struct ProfilePass {
+    /// Scale every observed runtime (the injected regime shift). `None` =
+    /// unshifted behaviour.
+    pub runtime_scale: Option<f64>,
+    /// Warm-start the incremental model from a stale fit instead of
+    /// fitting cold.
+    pub prior: Option<RuntimeModel>,
+    /// Additionally seed the *session's* own fits from `prior`
+    /// ([`Profiler::run_observed_from`]), steering which limits the
+    /// strategy picks. Leave `false` when the cached measurements are
+    /// still valid (a rate shift): the session then replays the cold
+    /// sweep's decisions byte-for-byte and the cache serves every probe.
+    pub session_warm: bool,
+    /// Provision for this arrival rate instead of the spec's horizon peak
+    /// (the drift monitor's current observation).
+    pub rate_hz: Option<f64>,
+    /// Sessions to run (`None` = the engine's configured `rounds`); a
+    /// drift-triggered re-profile runs exactly one.
+    pub rounds: Option<usize>,
+}
+
 /// Profile one job: `rounds` sessions through the shared cache, feeding the
 /// incremental model, then derive the rate the job must sustain.
 pub fn profile_job(
@@ -107,24 +186,49 @@ pub fn profile_job(
     cache: &MeasurementCache,
     worker: usize,
 ) -> Result<JobOutcome> {
+    profile_job_with(spec, cfg, cache, worker, &ProfilePass::default())
+}
+
+/// [`profile_job`] with explicit pass options — scaled (drifted) runtime
+/// behaviour, a warm-start prior, a rate override, and a round override.
+pub fn profile_job_with(
+    spec: &FleetJobSpec,
+    cfg: &FleetConfig,
+    cache: &MeasurementCache,
+    worker: usize,
+    pass: &ProfilePass,
+) -> Result<JobOutcome> {
     let label = spec.label();
-    let mut incremental = IncrementalModel::new(cfg.profiler.delta);
-    let mut rounds = Vec::with_capacity(cfg.rounds);
-    for _round in 0..cfg.rounds.max(1) {
+    let scale = pass.runtime_scale.unwrap_or(1.0);
+    let n_rounds = pass.rounds.unwrap_or(cfg.rounds).max(1);
+    let mut incremental = match &pass.prior {
+        Some(prior) => IncrementalModel::warm(cfg.profiler.delta, prior.clone()),
+        None => IncrementalModel::new(cfg.profiler.delta),
+    };
+    let mut rounds = Vec::with_capacity(n_rounds);
+    for _round in 0..n_rounds {
         // Same seed every round: the job's runtime distribution does not
         // change between rounds, and a deterministic replay is exactly what
-        // lets the cache absorb the whole re-profile.
+        // lets the cache absorb the whole re-profile. (Scaling by 1.0 is
+        // bit-exact, so the unshifted path is unchanged.)
         let job = SimulatedJob::new(spec.node, spec.algo, spec.seed);
-        let backend = SimulatedBackend::new(job);
+        let backend = ScaledBackend::new(SimulatedBackend::new(job), scale);
         let mut cached = CachedBackend::new(backend, cache, label.clone(), cfg.profiler.delta);
         let strategy = strategies::by_name(&cfg.strategy, spec.seed)
             .ok_or_else(|| anyhow!("unknown strategy '{}'", cfg.strategy))?;
         let mut profiler = Profiler::new(cfg.profiler.clone(), strategy);
-        let session =
-            profiler.run_observed(&mut cached, &mut |m: &Measurement| incremental.observe(m));
+        let session_prior = if pass.session_warm { pass.prior.as_ref() } else { None };
+        let session = profiler.run_observed_from(
+            &mut cached,
+            &mut |m: &Measurement| incremental.observe(m),
+            session_prior,
+        );
         rounds.push(session);
     }
-    let rate_hz = spec.arrivals.max_rate(cfg.horizon).max(1e-6);
+    let rate_hz = pass
+        .rate_hz
+        .unwrap_or_else(|| spec.arrivals.max_rate(cfg.horizon))
+        .max(1e-6);
     Ok(JobOutcome {
         index: 0, // assigned by the engine when results are collected
         name: spec.name.clone(),
@@ -190,6 +294,104 @@ mod tests {
                 "incremental fit much worse than cold at {r}: {incr_err} vs {cold_err}"
             );
         }
+    }
+
+    #[test]
+    fn scaled_backend_shifts_observed_runtimes() {
+        let job = SimulatedJob::new(node("pi4").unwrap(), Algo::Arima, 3);
+        let mut plain = SimulatedBackend::new(job);
+        let base = plain.measure(0.5, 1000);
+        let job = SimulatedJob::new(node("pi4").unwrap(), Algo::Arima, 3);
+        let mut scaled = ScaledBackend::new(SimulatedBackend::new(job), 3.0);
+        let m = scaled.measure(0.5, 1000);
+        assert!((m.mean_runtime - 3.0 * base.mean_runtime).abs() < 1e-12);
+        assert!((m.wallclock - 3.0 * base.wallclock).abs() < 1e-9);
+        assert_eq!(m.samples, base.samples);
+        assert_eq!(scaled.l_max(), 4.0);
+        // Scale 1.0 is bit-exact: the unshifted fleet path is unchanged.
+        let job = SimulatedJob::new(node("pi4").unwrap(), Algo::Arima, 3);
+        let mut unit = ScaledBackend::new(SimulatedBackend::new(job), 1.0);
+        let u = unit.measure(0.5, 1000);
+        assert_eq!(u.mean_runtime, base.mean_runtime);
+        assert_eq!(u.wallclock, base.wallclock);
+    }
+
+    #[test]
+    fn warm_incremental_starts_from_prior() {
+        let prior = RuntimeModel {
+            kind: crate::fit::ModelKind::Full,
+            a: 0.08,
+            b: 0.9,
+            c: 0.01,
+            d: 1.0,
+            fit_cost: 0.0,
+        };
+        let im = IncrementalModel::warm(0.1, prior.clone());
+        assert_eq!(im.refits(), 0);
+        assert!((im.model().eval(0.5) - prior.eval(0.5)).abs() < 1e-12);
+        // Observations then refit from that starting point.
+        let mut im = IncrementalModel::warm(0.1, prior);
+        for &r in &[0.2, 0.5, 1.0, 2.0, 4.0] {
+            im.observe(&meas(r, 0.08 * r.powf(-0.9) + 0.01));
+        }
+        assert_eq!(im.refits(), 5);
+        assert!(im.model().eval(0.3).is_finite());
+    }
+
+    #[test]
+    fn reprofile_pass_tracks_a_shifted_regime() {
+        // Cold profile, then a 3x regime shift: a warm single-round
+        // re-profile (through a bumped-generation cache) must land a model
+        // that predicts roughly 3x the old runtimes.
+        let cache = MeasurementCache::new();
+        let cfg = FleetConfig { workers: 1, rounds: 1, ..FleetConfig::default() };
+        let spec = FleetJobSpec::simulated("shifty", node("pi4").unwrap(), Algo::Arima, 17);
+        let cold = profile_job(&spec, &cfg, &cache, 0).unwrap();
+        cache.bump_generation(&spec.label());
+        let pass = ProfilePass {
+            runtime_scale: Some(3.0),
+            prior: Some(cold.model.clone()),
+            session_warm: true,
+            rate_hz: Some(6.0),
+            rounds: Some(1),
+        };
+        let hot = profile_job_with(&spec, &cfg, &cache, 0, &pass).unwrap();
+        assert_eq!(hot.rounds.len(), 1, "a re-profile runs exactly one session");
+        assert!((hot.rate_hz - 6.0).abs() < 1e-12, "rate override respected");
+        for &r in &[0.5, 1.0, 2.0] {
+            let ratio = hot.model.eval(r) / cold.model.eval(r);
+            assert!(
+                (2.0..4.5).contains(&ratio),
+                "re-profiled model should track the 3x shift at {r}: ratio {ratio}"
+            );
+        }
+        // The stale generation was refused, so the re-profile executed.
+        let s = cache.stats();
+        assert!(s.stale_hits_refused > 0);
+        assert!(hot.rounds[0].total_time > 0.0);
+    }
+
+    #[test]
+    fn rate_shift_reprofile_replays_the_cold_session_for_free() {
+        // prior set but session_warm = false: the session makes the cold
+        // sweep's exact decisions, so every probe hits the (still valid)
+        // cache and nothing re-executes.
+        let cache = MeasurementCache::new();
+        let cfg = FleetConfig { workers: 1, rounds: 1, ..FleetConfig::default() };
+        let spec = FleetJobSpec::simulated("rated", node("wally").unwrap(), Algo::Birch, 23);
+        let cold = profile_job(&spec, &cfg, &cache, 0).unwrap();
+        let misses_before = cache.stats().misses;
+        let pass = ProfilePass {
+            prior: Some(cold.model.clone()),
+            rate_hz: Some(9.0),
+            rounds: Some(1),
+            ..ProfilePass::default()
+        };
+        let re = profile_job_with(&spec, &cfg, &cache, 0, &pass).unwrap();
+        assert_eq!(cache.stats().misses, misses_before, "replay executes nothing");
+        assert_eq!(re.rounds[0].total_time, 0.0, "cache hits cost zero wallclock");
+        assert_eq!(re.rounds[0].steps.len(), cold.rounds[0].steps.len());
+        assert!((re.rate_hz - 9.0).abs() < 1e-12);
     }
 
     #[test]

@@ -17,7 +17,9 @@ use streamprof::coordinator::{
     ResourceAdjuster, SimulatedBackend,
 };
 use streamprof::earlystop::EarlyStopConfig;
-use streamprof::fleet::{sim_fleet, FleetConfig, FleetEngine};
+use streamprof::fleet::{
+    sim_fleet, AdaptiveConfig, DriftConfig, FleetConfig, FleetEngine, FleetJobSpec, RuntimeShift,
+};
 use streamprof::repro;
 use streamprof::runtime::{artifacts_available, default_artifacts_dir, Engine};
 use streamprof::simulator::{node, Algo, SimulatedJob, NODES};
@@ -65,6 +67,10 @@ fn print_help() {
          \u{20} fleet     [--jobs 12] [--workers 4] [--rounds 2] [--strategy nms]\n\
          \u{20}           [--samples 1000] [--steps 6] [--early-stop] [--seed 7]\n\
          \u{20}           [--horizon 1000] [--rebalance]\n\
+         \u{20}           [--adaptive] [--epochs 3] [--epoch-ticks 500]\n\
+         \u{20}           [--drift-threshold 0.25] [--rate-threshold 0.25]\n\
+         \u{20}           [--shift-at 1500] [--shift-rate 8.0] [--shift-jobs 2]\n\
+         \u{20}           [--stale-jobs 1] [--stale-scale 3.0]\n\
          \u{20} repro     <table1|fig2|fig3|fig4|fig5|fig6|fig7|all> [--full]\n\
          \u{20} artifacts                     AOT artifact status\n"
     );
@@ -248,6 +254,10 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let rounds = cfg.rounds;
     let engine = FleetEngine::new(cfg);
     let specs = sim_fleet(n_jobs, args.opt_u64("seed", 7));
+
+    if args.flag("adaptive") {
+        return cmd_fleet_adaptive(args, &engine, specs);
+    }
     let summary = engine.run(specs)?;
 
     let mut table = Table::new(&[
@@ -341,6 +351,93 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             100.0 * fm.utilization()
         );
     }
+    Ok(())
+}
+
+/// `streamprof fleet --adaptive`: drift-aware continuous profiling with
+/// injected rate and runtime shifts.
+fn cmd_fleet_adaptive(
+    args: &Args,
+    engine: &FleetEngine,
+    mut specs: Vec<FleetJobSpec>,
+) -> Result<()> {
+    let shift_at = args.opt_usize("shift-at", 1500);
+    let shift_rate = args.opt_f64("shift-rate", 8.0);
+    let shift_jobs = args.opt_usize("shift-jobs", 2).min(specs.len());
+    let stale_jobs = args.opt_usize("stale-jobs", 1).min(specs.len() - shift_jobs);
+    let stale_scale = args.opt_f64("stale-scale", 3.0);
+    for s in specs.iter_mut().take(shift_jobs) {
+        s.arrivals = s
+            .arrivals
+            .clone()
+            .with_shift_at(shift_at, ArrivalProcess::Fixed(shift_rate));
+    }
+    for s in specs.iter_mut().skip(shift_jobs).take(stale_jobs) {
+        s.runtime_shift = Some(RuntimeShift { at_tick: shift_at, scale: stale_scale });
+    }
+    let acfg = AdaptiveConfig {
+        epochs: args.opt_usize("epochs", 3),
+        epoch_ticks: args.opt_usize("epoch-ticks", 500),
+        drift: DriftConfig {
+            smape_threshold: args.opt_f64("drift-threshold", 0.25),
+            rate_threshold: args.opt_f64("rate-threshold", 0.25),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let summary = engine.run_adaptive(specs, &acfg)?;
+
+    for e in &summary.epochs {
+        let mut table = Table::new(&["job", "verdict", "reprofiled", "SMAPE pre -> post"])
+            .with_title(&format!("Adaptive epoch {}", e.epoch));
+        for (name, verdict) in &e.verdicts {
+            let re = e.reprofiled.iter().find(|r| &r.name == name);
+            table.rowd(&[
+                &name,
+                &verdict.name(),
+                &re.is_some(),
+                &match re {
+                    Some(r) => format!("{:.3} -> {:.3}", r.pre_smape, r.post_smape),
+                    None => "-".into(),
+                },
+            ]);
+        }
+        println!("{}", table.render());
+        if let Some(plan) = &e.plan {
+            let fm = &plan.metrics;
+            println!(
+                "  rebalanced: {}/{} jobs guaranteed, {} migration(s)",
+                fm.guaranteed_after,
+                fm.jobs,
+                plan.migrations.len()
+            );
+        }
+    }
+
+    let stats = summary.cache;
+    println!(
+        "measurement cache: {} hits / {} misses ({:.0}% hit rate), \
+         {} stale hits refused, {} stale entries evicted, {} inserts",
+        stats.hits,
+        stats.misses,
+        100.0 * stats.hit_rate(),
+        stats.stale_hits_refused,
+        stats.evictions,
+        stats.inserts
+    );
+    println!(
+        "probe executions during adaptation: {} (naive full re-profiling \
+         would have executed {})",
+        summary.adaptive_probe_executions,
+        summary.naive_probe_executions()
+    );
+    let reprofiled = summary.reprofiled_names();
+    println!(
+        "re-profiled {} of {} jobs: {}",
+        reprofiled.len(),
+        summary.jobs.len(),
+        if reprofiled.is_empty() { "-".to_string() } else { reprofiled.join(", ") }
+    );
     Ok(())
 }
 

@@ -105,12 +105,7 @@ pub struct GroundTruth {
 
 /// Deterministic per-(node, algo) parameter stream.
 fn param_rng(node: &NodeSpec, algo: Algo) -> Rng {
-    let mut h = 0xcbf29ce484222325u64; // FNV-1a
-    for b in node.name.bytes().chain(algo.name().bytes()) {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    Rng::new(h)
+    Rng::new(crate::util::fnv1a(node.name.bytes().chain(algo.name().bytes())))
 }
 
 impl GroundTruth {

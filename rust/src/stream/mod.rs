@@ -38,6 +38,9 @@ pub struct SensorStream {
     burst_scale: f64,
     /// Probability of starting an anomaly burst at any step.
     pub anomaly_rate: f64,
+    /// Regime change: from sample index `.0`, the varying part of every
+    /// metric (seasonality + noise) is scaled by `.1`.
+    regime_shift: Option<(usize, f64)>,
 }
 
 impl SensorStream {
@@ -67,6 +70,7 @@ impl SensorStream {
             burst_left: 0,
             burst_scale: 0.0,
             anomaly_rate: 0.0,
+            regime_shift: None,
         }
     }
 
@@ -74,6 +78,21 @@ impl SensorStream {
     pub fn with_anomalies(mut self, rate: f64) -> Self {
         self.anomaly_rate = rate;
         self
+    }
+
+    /// Inject a regime change: from sample index `at`, seasonality and
+    /// noise are scaled by `scale` (> 1 = heavier inputs). This is the
+    /// stream-side drift knob — a black-box model consuming a heavier
+    /// regime slows down, which is exactly what the fleet's
+    /// [`crate::fleet::DriftMonitor`] must detect and re-profile.
+    pub fn with_regime_shift_at(mut self, at: usize, scale: f64) -> Self {
+        self.regime_shift = Some((at, scale));
+        self
+    }
+
+    /// Whether the generator has passed its regime-change point.
+    pub fn in_shifted_regime(&self) -> bool {
+        matches!(self.regime_shift, Some((at, _)) if self.t >= at)
     }
 
     /// Whether the generator is currently inside an anomaly burst.
@@ -92,17 +111,19 @@ impl SensorStream {
             self.burst_left -= 1;
         }
         let t = self.t as f64;
+        let regime = match self.regime_shift {
+            Some((at, scale)) if self.t >= at => scale,
+            _ => 1.0,
+        };
         self.t += 1;
         let anomaly = if self.burst_left > 0 { self.burst_scale } else { 0.0 };
         self.metrics
             .iter()
             .map(|m| {
-                let v = m.base
-                    + m.trend * t
-                    + m.amp1 * (m.freq1 * t + m.phase1).sin()
+                let varying = m.amp1 * (m.freq1 * t + m.phase1).sin()
                     + m.amp2 * (m.freq2 * t + m.phase2).sin()
-                    + m.noise * self.rng.normal()
-                    + anomaly * m.noise * 20.0;
+                    + m.noise * self.rng.normal();
+                let v = m.base + m.trend * t + regime * varying + anomaly * m.noise * 20.0;
                 v as f32
             })
             .collect()
@@ -132,9 +153,25 @@ pub enum ArrivalProcess {
     /// given period (in samples) — the paper's "changing sample arrival
     /// rates" scenario.
     Varying { lo: f64, hi: f64, period: f64 },
+    /// A regime change at sample index `at`: `before` governs indices
+    /// `< at`, `after` governs the rest (indices stay absolute, so phases
+    /// of a `Varying` tail remain aligned with the global clock). Built
+    /// with [`ArrivalProcess::with_shift_at`]; shifts nest.
+    Shifted {
+        before: Box<ArrivalProcess>,
+        at: usize,
+        after: Box<ArrivalProcess>,
+    },
 }
 
 impl ArrivalProcess {
+    /// Inject a rate shift: from sample index `at` on, arrivals follow
+    /// `after` instead of `self` — the drift-injection knob of the
+    /// adaptive fleet loop and its scenario tests.
+    pub fn with_shift_at(self, at: usize, after: ArrivalProcess) -> ArrivalProcess {
+        ArrivalProcess::Shifted { before: Box::new(self), at, after: Box::new(after) }
+    }
+
     /// Arrival rate (Hz) at sample index `i`.
     pub fn rate_at(&self, i: usize) -> f64 {
         match self {
@@ -144,6 +181,13 @@ impl ArrivalProcess {
                 let amp = 0.5 * (hi - lo);
                 mid + amp * (std::f64::consts::TAU * i as f64 / period).sin()
             }
+            ArrivalProcess::Shifted { before, at, after } => {
+                if i < *at {
+                    before.rate_at(i)
+                } else {
+                    after.rate_at(i)
+                }
+            }
         }
     }
 
@@ -152,16 +196,28 @@ impl ArrivalProcess {
         1.0 / self.rate_at(i)
     }
 
+    /// Tightest per-sample runtime budget over the window `[start, end)` —
+    /// what an adaptive epoch observes of the live stream.
+    pub fn min_gap_in(&self, start: usize, end: usize) -> f64 {
+        (start..end).map(|i| self.gap_at(i)).fold(f64::INFINITY, f64::min)
+    }
+
     /// The tightest per-sample runtime budget over the whole horizon —
     /// the just-in-time constraint the adjuster must satisfy.
     pub fn min_gap(&self, horizon: usize) -> f64 {
-        (0..horizon).map(|i| self.gap_at(i)).fold(f64::INFINITY, f64::min)
+        self.min_gap_in(0, horizon)
+    }
+
+    /// Peak arrival rate (Hz) over the window `[start, end)` (0 for an
+    /// empty window) — the drift monitor's per-epoch rate observation.
+    pub fn max_rate_in(&self, start: usize, end: usize) -> f64 {
+        1.0 / self.min_gap_in(start, end)
     }
 
     /// Peak arrival rate (Hz) over the horizon — the rate a fleet job's
     /// guaranteed allocation must sustain (0 for an empty horizon).
     pub fn max_rate(&self, horizon: usize) -> f64 {
-        1.0 / self.min_gap(horizon)
+        self.max_rate_in(0, horizon)
     }
 }
 
@@ -241,5 +297,62 @@ mod tests {
         let p = ArrivalProcess::Fixed(10.0);
         assert_eq!(p.rate_at(0), 10.0);
         assert_eq!(p.gap_at(123), 0.1);
+    }
+
+    #[test]
+    fn shifted_arrival_switches_regime_at_the_tick() {
+        let p = ArrivalProcess::Fixed(2.0).with_shift_at(100, ArrivalProcess::Fixed(8.0));
+        assert_eq!(p.rate_at(0), 2.0);
+        assert_eq!(p.rate_at(99), 2.0);
+        assert_eq!(p.rate_at(100), 8.0);
+        assert_eq!(p.rate_at(5000), 8.0);
+        // Windowed peaks see exactly the regime they cover.
+        assert_eq!(p.max_rate_in(0, 100), 2.0);
+        assert_eq!(p.max_rate_in(100, 200), 8.0);
+        assert_eq!(p.max_rate_in(50, 150), 8.0);
+        // Whole-horizon peak spans both regimes.
+        assert_eq!(p.max_rate(200), 8.0);
+        assert_eq!(p.max_rate(100), 2.0);
+        assert_eq!(p.max_rate_in(10, 10), 0.0, "empty window has no rate demand");
+    }
+
+    #[test]
+    fn shifted_varying_tail_keeps_absolute_phase() {
+        // The post-shift Varying process must agree with an unshifted copy
+        // at the same absolute index (phases stay on the global clock).
+        let tail = ArrivalProcess::Varying { lo: 4.0, hi: 12.0, period: 128.0 };
+        let p = ArrivalProcess::Fixed(1.0).with_shift_at(64, tail.clone());
+        for i in [64usize, 100, 200, 333] {
+            assert_eq!(p.rate_at(i), tail.rate_at(i), "index {i}");
+        }
+        // Shifts nest: a second shift overrides the first from its tick on.
+        let q = p.clone().with_shift_at(256, ArrivalProcess::Fixed(20.0));
+        assert_eq!(q.rate_at(0), 1.0);
+        assert_eq!(q.rate_at(100), tail.rate_at(100));
+        assert_eq!(q.rate_at(256), 20.0);
+    }
+
+    #[test]
+    fn regime_shift_scales_stream_variability() {
+        // Same seed, with and without the regime knob: identical before
+        // the shift, visibly heavier after it.
+        let mut calm = SensorStream::new(11);
+        let mut shifted = SensorStream::new(11).with_regime_shift_at(500, 4.0);
+        assert_eq!(calm.generate(500), shifted.generate(500), "pre-shift identical");
+        assert!(shifted.in_shifted_regime(), "next sample starts the new regime");
+        let spread = |xs: &[f32]| {
+            let n = xs.len() as f64;
+            let mean = xs.iter().map(|&v| v as f64).sum::<f64>() / n;
+            (xs.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n).sqrt()
+        };
+        let calm_post = calm.generate(1000);
+        let shifted_post = shifted.generate(1000);
+        assert!(shifted.in_shifted_regime());
+        assert!(
+            spread(&shifted_post) > 2.0 * spread(&calm_post),
+            "post-shift spread must grow: {} vs {}",
+            spread(&shifted_post),
+            spread(&calm_post)
+        );
     }
 }

@@ -17,3 +17,27 @@ pub use csv::CsvWriter;
 pub use json::Json;
 pub use rng::Rng;
 pub use table::Table;
+
+/// FNV-1a over a byte stream — the crate's one stable, dependency-free
+/// hash (seed derivation, model fingerprints).
+pub fn fnv1a(bytes: impl IntoIterator<Item = u8>) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::fnv1a;
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // Published FNV-1a 64-bit test vectors.
+        assert_eq!(fnv1a(std::iter::empty::<u8>()), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a".iter().copied()), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a(b"foobar".iter().copied()), 0x85944171f73967e8);
+    }
+}

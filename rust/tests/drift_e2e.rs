@@ -1,0 +1,362 @@
+//! Deterministic drift-scenario harness for the adaptive fleet loop.
+//!
+//! Every scenario runs a single-worker engine (fully deterministic: the
+//! cold sweep, the live probes, and the strategy replays all draw from
+//! seeded PRNGs) with drift injected at a known virtual tick, and asserts
+//! the adaptive loop's contract: exactly the drifted jobs re-profile,
+//! rolling SMAPE returns under the threshold, stable jobs' models stay
+//! bit-identical (checked by fit fingerprint), and the whole adaptation
+//! costs less than naively re-profiling the fleet.
+
+use streamprof::coordinator::ProfilerConfig;
+use streamprof::fleet::{
+    model_fingerprint, sim_fleet, AdaptiveConfig, DriftVerdict, FleetConfig, FleetEngine,
+    FleetJobSpec, RuntimeShift,
+};
+use streamprof::simulator::{node, Algo};
+use streamprof::stream::ArrivalProcess;
+
+/// Deterministic single-worker engine config shared by the scenarios.
+fn quiet_cfg() -> FleetConfig {
+    FleetConfig {
+        workers: 1,
+        rounds: 2,
+        strategy: "nms".to_string(),
+        profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
+        horizon: 1000,
+    }
+}
+
+/// Four jobs with distinct cache labels, all on fixed 2 Hz streams.
+fn quad_fleet() -> Vec<FleetJobSpec> {
+    vec![
+        FleetJobSpec::simulated("cam-a", node("pi4").unwrap(), Algo::Arima, 101),
+        FleetJobSpec::simulated("cam-b", node("wally").unwrap(), Algo::Birch, 102),
+        FleetJobSpec::simulated("cam-c", node("e2high").unwrap(), Algo::Lstm, 103),
+        FleetJobSpec::simulated("cam-d", node("e216").unwrap(), Algo::Arima, 104),
+    ]
+}
+
+#[test]
+fn rate_shift_reprofiles_exactly_the_shifted_jobs() {
+    // cam-a and cam-c jump from 2 Hz to 8 Hz at tick 1500 — the start of
+    // epoch 2 (horizon 1000 + one 500-tick epoch). The loop must
+    // re-profile exactly those two, re-provision them at the new rate,
+    // and leave cam-b/cam-d byte-untouched.
+    let mut specs = quad_fleet();
+    for i in [0usize, 2] {
+        specs[i].arrivals = ArrivalProcess::Fixed(2.0)
+            .with_shift_at(1500, ArrivalProcess::Fixed(8.0));
+    }
+    let engine = FleetEngine::new(quiet_cfg());
+    let acfg = AdaptiveConfig::default();
+    let summary = engine.run_adaptive(specs, &acfg).expect("adaptive run");
+
+    assert_eq!(summary.epochs.len(), 3);
+    // Epoch 1 ends at tick 1500: still the old regime, nothing fires.
+    assert!(summary.epochs[0].reprofiled.is_empty(), "no drift before the shift");
+    assert!(summary.epochs[0].verdicts.iter().all(|(_, v)| !v.is_drift()));
+    assert!(summary.epochs[0].plan.is_none(), "stable epochs do not re-plan");
+
+    // Epoch 2 observes the shifted window: exactly cam-a and cam-c fire.
+    let e2 = &summary.epochs[1];
+    let mut fired: Vec<&str> = e2.reprofiled.iter().map(|r| r.name.as_str()).collect();
+    fired.sort_unstable();
+    assert_eq!(fired, vec!["cam-a", "cam-c"], "exactly the shifted jobs re-profile");
+    for r in &e2.reprofiled {
+        assert!(
+            matches!(
+                r.verdict,
+                DriftVerdict::RateShift { provisioned_hz, observed_hz }
+                    if (provisioned_hz - 2.0).abs() < 1e-9 && (observed_hz - 8.0).abs() < 1e-9
+            ),
+            "{}: verdict {:?}",
+            r.name,
+            r.verdict
+        );
+        // The runtime behaviour never changed: the still-valid cache
+        // replays the whole re-profile session for free.
+        assert_eq!(r.executed_probes, 0, "{}: rate shift must replay the cache", r.name);
+        // Rolling SMAPE ends under the threshold (the model was and
+        // remains accurate; the shift was provisioning, not behaviour).
+        assert!(
+            r.post_smape < acfg.drift.smape_threshold,
+            "{}: post SMAPE {:.3}",
+            r.name,
+            r.post_smape
+        );
+    }
+    let plan = e2.plan.as_ref().expect("a drift epoch re-plans the fleet");
+    assert_eq!(plan.metrics.jobs, 4);
+
+    // Re-provisioned at the observed rate, with a larger granted limit.
+    for name in ["cam-a", "cam-c"] {
+        let job = summary.job(name).unwrap();
+        assert!((job.rate_hz - 8.0).abs() < 1e-9, "{name} re-provisioned at 8 Hz");
+        assert_eq!(job.reprofiles, 1);
+        let cold_limit = summary.initial.assignment(name).unwrap().adjustment.limit;
+        assert!(
+            job.limit > cold_limit,
+            "{name}: a 4x faster stream needs more CPU ({} -> {})",
+            cold_limit,
+            job.limit
+        );
+    }
+
+    // Epoch 3: the adapted fleet is stable again.
+    assert!(summary.epochs[2].reprofiled.is_empty());
+    assert!(summary.epochs[2].verdicts.iter().all(|(_, v)| !v.is_drift()));
+
+    // Stable jobs' fits are untouched — assert by fingerprint.
+    for name in ["cam-b", "cam-d"] {
+        let job = summary.job(name).unwrap();
+        assert_eq!(job.reprofiles, 0);
+        let initial = summary
+            .initial
+            .outcomes
+            .iter()
+            .find(|o| o.name == name)
+            .unwrap();
+        assert_eq!(
+            job.fingerprint,
+            model_fingerprint(&initial.model),
+            "{name}: stable model must stay bit-identical"
+        );
+        assert!((job.rate_hz - 2.0).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn model_stale_reprofiles_ages_the_cache_and_recovers_smape() {
+    // cam-c's runtime behaviour turns 3x slower at tick 1500 (a model
+    // upgrade). The monitor must flag it ModelStale, the cache must age
+    // out its generation, and the warm re-profile must pull the rolling
+    // SMAPE back under the threshold — touching nobody else.
+    let mut specs = quad_fleet();
+    specs[2].runtime_shift = Some(RuntimeShift { at_tick: 1500, scale: 3.0 });
+    let engine = FleetEngine::new(quiet_cfg());
+    let acfg = AdaptiveConfig::default();
+    let summary = engine.run_adaptive(specs, &acfg).expect("adaptive run");
+
+    assert!(summary.epochs[0].reprofiled.is_empty());
+    let e2 = &summary.epochs[1];
+    assert_eq!(e2.reprofiled.len(), 1, "only the shifted job re-profiles");
+    let r = &e2.reprofiled[0];
+    assert_eq!(r.name, "cam-c");
+    assert!(matches!(
+        r.verdict,
+        DriftVerdict::ModelStale { rolling_smape } if rolling_smape > acfg.drift.smape_threshold
+    ));
+    assert!(r.pre_smape > acfg.drift.smape_threshold, "pre SMAPE {:.3}", r.pre_smape);
+    assert!(
+        r.post_smape < acfg.drift.smape_threshold,
+        "post SMAPE {:.3} must recover under the threshold",
+        r.post_smape
+    );
+    assert!(r.post_smape < r.pre_smape);
+    assert!(r.executed_probes > 0, "a bumped generation cannot replay");
+
+    // The stale generation was reclaimed, and the loop executed far fewer
+    // probes than naive full re-profiling of all four jobs.
+    assert!(summary.cache.evictions > 0, "stale entries must be evicted");
+    assert!(summary.cache.evictions <= summary.cache.inserts);
+    assert!(
+        summary.adaptive_probe_executions < summary.naive_probe_executions(),
+        "adaptive {} vs naive {}",
+        summary.adaptive_probe_executions,
+        summary.naive_probe_executions()
+    );
+
+    // The refit tracks the 3x shift; the untouched jobs do not move.
+    let cold = summary
+        .initial
+        .outcomes
+        .iter()
+        .find(|o| o.name == "cam-c")
+        .unwrap();
+    let hot = summary.job("cam-c").unwrap();
+    assert_ne!(hot.fingerprint, model_fingerprint(&cold.model), "stale fit was replaced");
+    for &r_eval in &[0.5, 1.0, 2.0] {
+        let ratio = hot.model.eval(r_eval) / cold.model.eval(r_eval);
+        assert!((2.0..4.5).contains(&ratio), "3x shift tracked at {r_eval}: ratio {ratio}");
+    }
+    for name in ["cam-a", "cam-b", "cam-d"] {
+        let job = summary.job(name).unwrap();
+        let initial = summary
+            .initial
+            .outcomes
+            .iter()
+            .find(|o| o.name == name)
+            .unwrap();
+        assert_eq!(job.reprofiles, 0);
+        assert_eq!(job.fingerprint, model_fingerprint(&initial.model), "{name} untouched");
+    }
+    // Epoch 3 is quiet: the adapted model describes the new regime.
+    assert!(summary.epochs[2].reprofiled.is_empty());
+    assert!(summary.epochs[2].verdicts.iter().all(|(_, v)| !v.is_drift()));
+}
+
+#[test]
+fn zero_drift_is_a_byte_identical_noop() {
+    // Adversarial guard against threshold jitter: with default thresholds
+    // and zero injected drift, `run_adaptive` must perform zero
+    // re-profiles, execute zero adaptation probes, and report a cold
+    // sweep byte-identical to a plain `run` of the same specs.
+    let specs = sim_fleet(6, 5);
+    let plain = FleetEngine::new(quiet_cfg()).run(specs.clone()).expect("plain run");
+    let summary = FleetEngine::new(quiet_cfg())
+        .run_adaptive(specs, &AdaptiveConfig::default())
+        .expect("adaptive run");
+
+    assert!(summary.reprofiled_names().is_empty(), "zero re-profiles");
+    assert_eq!(summary.adaptive_probe_executions, 0, "zero probes executed");
+    assert_eq!(summary.naive_probe_executions(), 0, "no drift epoch at all");
+    for e in &summary.epochs {
+        assert!(e.verdicts.iter().all(|(_, v)| matches!(v, DriftVerdict::Stable)));
+        assert!(e.plan.is_none());
+    }
+    for job in &summary.jobs {
+        assert_eq!(job.reprofiles, 0);
+    }
+
+    // Byte-identical cold sweep: models, rates, sessions, plans, stats.
+    let adaptive = &summary.initial;
+    assert_eq!(plain.outcomes.len(), adaptive.outcomes.len());
+    for (a, b) in plain.outcomes.iter().zip(&adaptive.outcomes) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.model.kind, b.model.kind);
+        for (x, y) in [
+            (a.model.a, b.model.a),
+            (a.model.b, b.model.b),
+            (a.model.c, b.model.c),
+            (a.model.d, b.model.d),
+            (a.rate_hz, b.rate_hz),
+        ] {
+            assert_eq!(x.to_bits(), y.to_bits(), "{}: parameter drift", a.name);
+        }
+        assert_eq!(a.rounds.len(), b.rounds.len());
+        for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+            assert_eq!(ra.steps.len(), rb.steps.len());
+            for (sa, sb) in ra.steps.iter().zip(&rb.steps) {
+                assert_eq!(sa.limit.to_bits(), sb.limit.to_bits());
+                assert_eq!(sa.mean_runtime.to_bits(), sb.mean_runtime.to_bits());
+            }
+            assert_eq!(ra.total_time.to_bits(), rb.total_time.to_bits());
+        }
+    }
+    assert_eq!(plain.plans.len(), adaptive.plans.len());
+    for ((na, pa), (nb, pb)) in plain.plans.iter().zip(&adaptive.plans) {
+        assert_eq!(na, nb);
+        assert_eq!(pa.total_assigned.to_bits(), pb.total_assigned.to_bits());
+        assert_eq!(pa.assignments.len(), pb.assignments.len());
+        for (aa, ab) in pa.assignments.iter().zip(&pb.assignments) {
+            assert_eq!(aa.name, ab.name);
+            assert_eq!(aa.guaranteed, ab.guaranteed);
+            assert_eq!(aa.adjustment.limit.to_bits(), ab.adjustment.limit.to_bits());
+        }
+    }
+    assert_eq!(plain.cache.hits, adaptive.cache.hits);
+    assert_eq!(plain.cache.misses, adaptive.cache.misses);
+    assert_eq!(plain.cache.inserts, adaptive.cache.inserts);
+    assert_eq!(plain.cache.stale_hits_refused, 0);
+    assert_eq!(adaptive.cache.stale_hits_refused, 0);
+    assert_eq!(adaptive.cache.evictions, 0);
+    assert_eq!(
+        plain.cache.saved_wallclock.to_bits(),
+        adaptive.cache.saved_wallclock.to_bits()
+    );
+}
+
+#[test]
+fn sub_period_epochs_do_not_alias_varying_troughs_into_rate_shifts() {
+    // Epochs much shorter than the arrival period: the rate tracker's
+    // horizon-length lookback must keep windowed peaks comparable to the
+    // provisioned peak — otherwise every trough epoch would fire a false
+    // RateShift and re-provision jobs at trough rates.
+    let mut specs = quad_fleet();
+    for s in specs.iter_mut() {
+        s.arrivals = ArrivalProcess::Varying { lo: 1.0, hi: 6.0, period: 400.0 };
+    }
+    let engine = FleetEngine::new(quiet_cfg());
+    let acfg = AdaptiveConfig { epochs: 5, epoch_ticks: 100, ..AdaptiveConfig::default() };
+    let summary = engine.run_adaptive(specs, &acfg).expect("adaptive run");
+    assert!(summary.reprofiled_names().is_empty(), "no drift injected, none may fire");
+    for e in &summary.epochs {
+        assert!(
+            e.verdicts.iter().all(|(_, v)| !v.is_drift()),
+            "epoch {}: trough aliased into a verdict",
+            e.epoch
+        );
+    }
+}
+
+#[test]
+fn mismatched_runtime_shift_within_a_shared_label_is_rejected() {
+    // Two replicas of one class share a cache label; letting only one of
+    // them drift would poison the other's replays, so the adaptive loop
+    // refuses the scenario outright.
+    let pi4 = node("pi4").unwrap();
+    let mut specs = vec![
+        FleetJobSpec::simulated("twin-a", pi4, Algo::Arima, 7),
+        FleetJobSpec::simulated("twin-b", pi4, Algo::Arima, 7),
+    ];
+    specs[0].runtime_shift = Some(RuntimeShift { at_tick: 1500, scale: 3.0 });
+    let engine = FleetEngine::new(quiet_cfg());
+    let err = engine
+        .run_adaptive(specs, &AdaptiveConfig::default())
+        .expect_err("mismatched class drift must be rejected");
+    assert!(err.to_string().contains("share cache label"), "{err:#}");
+}
+
+#[test]
+fn rate_shift_can_downgrade_and_migrate_via_rebalance() {
+    // A drift epoch re-enters migrate::rebalance: when the shifted job's
+    // home node can no longer guarantee everyone, the epoch plan may move
+    // shed jobs to idle capacity. Here four 2 Hz pi4 streams jump to
+    // 18 Hz (each then needs ≥ 1.1 CPU on the 4-core Pi — or is outright
+    // infeasible there — while costing ~0.3 CPU on wally) while wally
+    // idles: the epoch's fleet plan must migrate the overflow out.
+    let pi4 = node("pi4").unwrap();
+    let wally = node("wally").unwrap();
+    let mut specs: Vec<FleetJobSpec> = (0..4)
+        .map(|i| {
+            // One seed for all four: same class on the same device type
+            // shares runtime behaviour (and cache label), per the fleet
+            // engine's labeling convention.
+            let mut s = FleetJobSpec::simulated(&format!("edge-{i}"), pi4, Algo::Arima, 300);
+            s.arrivals = ArrivalProcess::Fixed(2.0)
+                .with_shift_at(1500, ArrivalProcess::Fixed(18.0));
+            s
+        })
+        .collect();
+    specs.push(FleetJobSpec::simulated("anchor", wally, Algo::Birch, 305));
+
+    let engine = FleetEngine::new(quiet_cfg());
+    let summary = engine
+        .run_adaptive(specs, &AdaptiveConfig::default())
+        .expect("adaptive run");
+    let e2 = &summary.epochs[1];
+    assert_eq!(e2.reprofiled.len(), 4, "all four shifted streams fire");
+    let plan = e2.plan.as_ref().expect("drift epoch re-plans");
+    assert_eq!(plan.metrics.jobs, 5);
+    assert!(
+        plan.metrics.guaranteed_after >= plan.metrics.guaranteed_before,
+        "rebalance never loses guarantees: {:?}",
+        plan.metrics
+    );
+    // The re-provisioned demand exceeds pi4's 4 cores, so the baseline
+    // must shed and the rebalance must migrate at least one job out.
+    assert!(
+        !plan.migrations.is_empty(),
+        "over-subscribed home node must shed into idle capacity: {:?}",
+        plan.metrics
+    );
+    for m in &plan.migrations {
+        assert_eq!(m.from, "pi4");
+        assert_eq!(m.to, "wally");
+    }
+    // The anchor stays guaranteed at home throughout.
+    let (home, anchor) = plan.assignment("anchor").unwrap();
+    assert_eq!(home, "wally");
+    assert!(anchor.guaranteed);
+}

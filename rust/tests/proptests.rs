@@ -3,10 +3,14 @@
 //! fitting, early stopping, placement, adjustment — with seeds derived from
 //! a deterministic PRNG so failures are reproducible.
 
-use streamprof::coordinator::{Profiler, ProfilerConfig, ResourceAdjuster, SimulatedBackend};
+use std::collections::HashMap;
+
+use streamprof::coordinator::{
+    Measurement, Profiler, ProfilerConfig, ResourceAdjuster, SimulatedBackend,
+};
 use streamprof::earlystop::{EarlyStopConfig, EarlyStopMonitor};
 use streamprof::fit::{ModelKind, ProfilePoint, RuntimeModel};
-use streamprof::fleet::{rebalance, FleetJob};
+use streamprof::fleet::{rebalance, FleetJob, MeasurementCache};
 use streamprof::simulator::{Algo, SimulatedJob, NODES};
 use streamprof::strategies::{self, initial_limits};
 use streamprof::util::Rng;
@@ -288,6 +292,165 @@ fn prop_fleet_placement_invariants() {
             assert_eq!((&x.job, x.from, x.to), (&y.job, y.from, y.to));
             assert!((x.limit - y.limit).abs() < 1e-12, "case {case}");
         }
+    }
+}
+
+/// Property: measurement-cache generation aging, checked against an exact
+/// reference model under randomized interleavings of insert / lookup /
+/// bump / evict (with adversarially varying caller-supplied bucket
+/// widths, which the canonical per-label width must neutralize):
+///   * a generation bump never lets `lookup` serve a pre-bump measurement,
+///   * `evict_stale` reclaims exactly the stale entries and never a
+///     current-generation one,
+///   * `stats()` totals stay consistent: `hits + misses == lookups`,
+///     `hits`/`stale_hits_refused` match the reference exactly, and
+///     `evictions <= inserts`.
+#[test]
+fn prop_cache_aging_matches_reference_model() {
+    let mut rng = Rng::new(0xCAC4E);
+    const LABELS: [&str; 3] = ["cam", "lidar", "mic"];
+    for case in 0..CASES {
+        let cache = MeasurementCache::new();
+        let mut gens = [0u64; 3];
+        // Reference store: (label, bucket) -> (generation, tag).
+        let mut reference: HashMap<(usize, i64), (u64, f64)> = HashMap::new();
+        let mut lookups = 0u64;
+        let mut hits = 0u64;
+        let mut stale = 0u64;
+        // Register every label's canonical width (0.1) up front, so the
+        // later adversarial widths exercise canonicalization.
+        for (li, label) in LABELS.iter().enumerate() {
+            let tag = (case * 1_000_000 + li as u64) as f64;
+            cache.insert(label, 0.1, tagged(0.1, tag));
+            reference.insert((li, 1), (0, tag));
+        }
+        for step in 0..240u64 {
+            let li = rng.below(3);
+            let label = LABELS[li];
+            let bucket = 1 + rng.below(8) as i64;
+            let limit = bucket as f64 * 0.1;
+            // The caller "reconfigures" its width at random; the cache
+            // must keep keying by the canonical 0.1.
+            let width = [0.1, 0.2, 0.05][rng.below(3)];
+            match rng.below(10) {
+                0..=3 => {
+                    let tag = (case * 1_000_000 + 1000 + step) as f64;
+                    cache.insert(label, width, tagged(limit, tag));
+                    reference.insert((li, bucket), (gens[li], tag));
+                }
+                4..=7 => {
+                    lookups += 1;
+                    let got = cache.lookup(label, limit, width).map(|m| m.mean_runtime);
+                    let entry = reference.get(&(li, bucket));
+                    let want = entry.and_then(|&(g, tag)| (g == gens[li]).then_some(tag));
+                    assert_eq!(
+                        got, want,
+                        "case {case} step {step}: {label} bucket {bucket} served wrong entry"
+                    );
+                    match entry {
+                        Some(_) if want.is_some() => hits += 1,
+                        Some(_) => stale += 1,
+                        None => {}
+                    }
+                }
+                8 => {
+                    gens[li] += 1;
+                    assert_eq!(cache.bump_generation(label), gens[li]);
+                }
+                _ => {
+                    let removed = cache.evict_stale();
+                    let before = reference.len();
+                    reference.retain(|&(l, _), &mut (g, _)| g == gens[l]);
+                    assert_eq!(
+                        removed,
+                        before - reference.len(),
+                        "case {case} step {step}: evict count diverged from reference"
+                    );
+                }
+            }
+        }
+        let s = cache.stats();
+        assert_eq!(s.lookups(), lookups, "case {case}: every lookup counted exactly once");
+        assert_eq!(s.hits, hits, "case {case}");
+        assert_eq!(s.stale_hits_refused, stale, "case {case}");
+        assert!(s.stale_hits_refused <= s.misses, "case {case}: refusals are misses");
+        assert!(s.evictions <= s.inserts, "case {case}: evictions bounded by inserts");
+        // Final sweep: evict, then every current-generation reference
+        // entry must still be served — evict_stale never over-reclaims.
+        cache.evict_stale();
+        reference.retain(|&(l, _), &mut (g, _)| g == gens[l]);
+        assert_eq!(cache.len(), reference.len());
+        for (&(li, bucket), &(g, tag)) in &reference {
+            assert_eq!(g, gens[li], "reference retains only current entries");
+            let got = cache.lookup(LABELS[li], bucket as f64 * 0.1, 0.1);
+            assert_eq!(got.map(|m| m.mean_runtime), Some(tag), "case {case}");
+        }
+    }
+}
+
+fn tagged(limit: f64, tag: f64) -> Measurement {
+    Measurement { limit, mean_runtime: tag, samples: 1, wallclock: 1.0 }
+}
+
+/// Property: cache stats stay consistent under genuinely concurrent
+/// insert / lookup / bump / evict interleavings, and `evict_stale` leaves
+/// no stale entry behind regardless of interleaving.
+#[test]
+fn prop_cache_stats_consistent_under_concurrent_aging() {
+    for case in 0..8u64 {
+        let cache = MeasurementCache::new();
+        let total_lookups: u64 = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..6u64)
+                .map(|w| {
+                    let cache = &cache;
+                    s.spawn(move || {
+                        let mut rng = Rng::new(case * 1000 + w + 1);
+                        let mut lookups = 0u64;
+                        for _ in 0..200 {
+                            let label = ["a", "b"][rng.below(2)];
+                            let limit = (1 + rng.below(6)) as f64 * 0.1;
+                            match rng.below(8) {
+                                0..=4 => {
+                                    lookups += 1;
+                                    if cache.lookup(label, limit, 0.1).is_none() {
+                                        cache.insert(label, 0.1, tagged(limit, 1.0));
+                                    }
+                                }
+                                5 => cache.insert(label, 0.1, tagged(limit, 2.0)),
+                                6 => {
+                                    cache.bump_generation(label);
+                                }
+                                _ => {
+                                    cache.evict_stale();
+                                }
+                            }
+                            std::thread::yield_now();
+                        }
+                        lookups
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).sum()
+        });
+        let s = cache.stats();
+        assert_eq!(s.lookups(), total_lookups, "case {case}: lookups counted exactly once");
+        assert!(s.stale_hits_refused <= s.misses, "case {case}");
+        assert!(s.evictions <= s.inserts, "case {case}");
+        assert!(s.hits <= s.lookups(), "case {case}");
+        // After a quiescent evict, a full sweep over every bucket must not
+        // encounter a single stale entry.
+        cache.evict_stale();
+        let refused_before = cache.stats().stale_hits_refused;
+        for label in ["a", "b"] {
+            for b in 1..=6i64 {
+                cache.lookup(label, b as f64 * 0.1, 0.1);
+            }
+        }
+        assert_eq!(
+            cache.stats().stale_hits_refused,
+            refused_before,
+            "case {case}: evict_stale left a stale entry behind"
+        );
     }
 }
 
