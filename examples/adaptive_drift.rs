@@ -16,7 +16,7 @@
 
 use streamprof::coordinator::ProfilerConfig;
 use streamprof::fleet::{
-    model_fingerprint, AdaptiveConfig, DriftVerdict, FleetConfig, FleetEngine, FleetJobSpec,
+    model_fingerprint, AdaptiveConfig, DriftVerdict, FleetConfig, FleetJobSpec, FleetSession,
     RuntimeShift,
 };
 use streamprof::simulator::{node, Algo};
@@ -46,15 +46,19 @@ fn main() -> anyhow::Result<()> {
         .with_shift_at(shift_tick, ArrivalProcess::Fixed(8.0));
     specs[2].runtime_shift = Some(RuntimeShift { at_tick: shift_tick, scale: 3.0 });
 
-    let engine = FleetEngine::new(FleetConfig {
-        workers: 2,
-        rounds: 2,
-        strategy: "nms".to_string(),
-        profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
-        horizon: 1000,
-    });
     let acfg = AdaptiveConfig::default(); // 3 epochs x 500 ticks from tick 1000
-    let summary = engine.run_adaptive(specs, &acfg)?;
+    let report = FleetSession::builder()
+        .config(FleetConfig {
+            workers: 2,
+            rounds: 2,
+            strategy: "nms".to_string(),
+            profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
+            horizon: 1000,
+        })
+        .jobs(specs)
+        .adaptive(acfg.clone())
+        .run()?;
+    let summary = report.adaptive.as_ref().expect("adaptive stage ran");
 
     println!(
         "cold sweep: {} jobs profiled, {:.0}s of profiling wallclock executed\n",

@@ -15,7 +15,7 @@
 //! ```
 
 use streamprof::coordinator::ProfilerConfig;
-use streamprof::fleet::{rebalance_across, FleetConfig, FleetEngine, FleetJobSpec};
+use streamprof::fleet::{rebalance_across, FleetConfig, FleetJobSpec, FleetSession};
 use streamprof::simulator::{node, Algo};
 use streamprof::stream::ArrivalProcess;
 use streamprof::util::Table;
@@ -36,14 +36,17 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
 
-    let engine = FleetEngine::new(FleetConfig {
-        workers: 4,
-        rounds: 1,
-        strategy: "nms".to_string(),
-        profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
-        horizon: 1000,
-    });
-    let summary = engine.run(specs)?;
+    let report = FleetSession::builder()
+        .config(FleetConfig {
+            workers: 4,
+            rounds: 1,
+            strategy: "nms".to_string(),
+            profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
+            horizon: 1000,
+        })
+        .jobs(specs)
+        .run()?;
+    let summary = report.summary();
 
     // Baseline: the Pi alone. Everything it cannot guarantee just loses.
     let (_, pi_plan) = &summary.plans[0];

@@ -1,9 +1,9 @@
 //! Fleet profiling: the paper's motivating edge-fleet scenario, driven by
-//! the concurrent fleet engine.
+//! the composable `FleetSession` pipeline.
 //!
 //! A heterogeneous fleet (all seven Table-I machine types) runs the three
 //! IFTM anomaly-detection jobs — one job per (device, algorithm) pair, 21
-//! jobs total. The fleet engine shards the profiling sessions across a
+//! jobs total. The session shards the profiling sessions across a
 //! 4-worker pool, all probing through a shared measurement cache keyed by
 //! `(device/algo, cpu-limit bucket)`; the second profiling round (the
 //! periodic re-profile of the adaptive loop) replays from the cache at
@@ -16,13 +16,17 @@
 //! ```
 
 use streamprof::coordinator::{smape_vs_dataset, ProfilerConfig};
-use streamprof::fleet::{FleetConfig, FleetEngine, FleetJobSpec};
+use streamprof::fleet::{FleetConfig, FleetJobSpec, FleetSession};
 use streamprof::simulator::{Algo, SimulatedJob, NODES};
 use streamprof::stream::ArrivalProcess;
 use streamprof::util::Table;
 
 fn main() -> anyhow::Result<()> {
     // One job per (device, algorithm) pair, all fed 2 Hz sensor streams.
+    // The roster is kept alongside the specs so the report's outcomes
+    // (returned in submission order) can be scored against each pair's
+    // independent ground truth below.
+    let mut roster = Vec::new();
     let mut specs = Vec::new();
     for node in NODES {
         for algo in Algo::ALL {
@@ -33,19 +37,23 @@ fn main() -> anyhow::Result<()> {
                 7,
             );
             spec.arrivals = ArrivalProcess::Fixed(2.0);
+            roster.push(algo);
             specs.push(spec);
         }
     }
     let n_jobs = specs.len();
 
-    let engine = FleetEngine::new(FleetConfig {
-        workers: 4,
-        rounds: 2,
-        strategy: "nms".to_string(),
-        profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
-        horizon: 1000,
-    });
-    let summary = engine.run(specs)?;
+    let report = FleetSession::builder()
+        .config(FleetConfig {
+            workers: 4,
+            rounds: 2,
+            strategy: "nms".to_string(),
+            profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
+            horizon: 1000,
+        })
+        .jobs(specs)
+        .run()?;
+    let summary = report.summary();
 
     let mut table = Table::new(&[
         "device",
@@ -59,14 +67,16 @@ fn main() -> anyhow::Result<()> {
     .with_title(&format!(
         "Fleet profiling — {n_jobs} jobs, 4 workers, NMS, 2 rounds, 2 Hz streams"
     ));
-    for o in &summary.outcomes {
+    for (i, o) in summary.outcomes.iter().enumerate() {
         // Independent acquisition sweep as ground truth for the SMAPE.
-        let truth = SimulatedJob::new(o.node, o.algo, 1007).acquire_dataset(10_000);
+        let algo = roster[i];
+        assert!(o.label.ends_with(algo.name()), "outcomes arrive in submission order");
+        let truth = SimulatedJob::new(o.node, algo, 1007).acquire_dataset(10_000);
         let smape = smape_vs_dataset(&o.model, &truth);
         let a = summary.assignment(&o.name).expect("planned");
         table.rowd(&[
             &o.node.name,
-            &o.algo.name(),
+            &o.label,
             &o.worker,
             &format!("{:.0}s", o.executed_wallclock()),
             &format!("{smape:.3}"),

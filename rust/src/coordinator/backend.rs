@@ -8,9 +8,26 @@
 //!     used by the experiment harness).
 //!   * [`PjrtBackend`] — the real AOT-compiled IFTM jobs under the
 //!     duty-cycle throttle on the local machine.
+//!
+//! ## Backend factories
+//!
+//! The fleet layer never holds a backend directly: a profiling session is
+//! replayed (re-profiling rounds, drift-triggered re-profiles), and each
+//! replay needs a *fresh* backend whose observation stream is
+//! deterministic per build. [`BackendFactory`] is that seam — an
+//! object-safe, `Send + Sync` recipe a
+//! [`crate::fleet::FleetJobSpec`] carries instead of baked-in simulator
+//! fields, so the simulated nodes ([`SimBackendFactory`]) and the real
+//! PJRT runtime ([`EngineBackendFactory`], stub or `--features pjrt`)
+//! plug into the same pipeline.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
 
 use crate::earlystop::{EarlyStopConfig, EarlyStopMonitor};
-use crate::simulator::SimulatedJob;
+use crate::simulator::{Algo, NodeSpec, SimulatedJob};
 use crate::stream::SensorStream;
 use crate::workloads::{PjrtJob, StreamJob};
 
@@ -44,6 +61,158 @@ pub trait ProfilingBackend {
 
     /// Label for logs.
     fn label(&self) -> String;
+}
+
+/// Forward the trait through boxes so factory-built backends
+/// (`Box<dyn ProfilingBackend>`) compose with the generic decorators
+/// (`ScaledBackend`, `CachedBackend`) exactly like concrete ones.
+impl<B: ProfilingBackend + ?Sized> ProfilingBackend for Box<B> {
+    fn measure(&mut self, limit: f64, samples: usize) -> Measurement {
+        (**self).measure(limit, samples)
+    }
+
+    fn measure_early_stop(
+        &mut self,
+        limit: f64,
+        cfg: &EarlyStopConfig,
+        cap: usize,
+    ) -> Measurement {
+        (**self).measure_early_stop(limit, cfg, cap)
+    }
+
+    fn l_max(&self) -> f64 {
+        (**self).l_max()
+    }
+
+    fn label(&self) -> String {
+        (**self).label()
+    }
+}
+
+/// Object-safe recipe for profiling backends: how the fleet layer measures
+/// a job without knowing what executes it.
+///
+/// Contract:
+///
+/// * **Determinism per build** — repeated [`BackendFactory::build`] calls
+///   must replay the same observation stream (same seed, same state), so a
+///   re-profiling round makes the same probes and the measurement cache
+///   can absorb it. Backends whose observations are inherently live (the
+///   real PJRT runtime) satisfy this vacuously — their "replay" is a fresh
+///   measurement of the same black box.
+/// * **Independent probes** — [`BackendFactory::probe`] returns an
+///   observation source for *live* drift monitoring, drawing fresh
+///   samples rather than replaying the profiling stream. The default
+///   implementation reuses [`BackendFactory::build`].
+/// * **Stable label** — [`BackendFactory::label`] names the job class for
+///   the measurement cache: factories with equal labels must describe
+///   interchangeable runtime behaviour.
+pub trait BackendFactory: Send + Sync {
+    /// Build a fresh backend for one profiling session.
+    fn build(&self) -> Result<Box<dyn ProfilingBackend>>;
+
+    /// Build an independent observation source for live drift probes.
+    fn probe(&self) -> Result<Box<dyn ProfilingBackend>> {
+        self.build()
+    }
+
+    /// Measurement-cache label of the job class this factory measures.
+    fn label(&self) -> String;
+}
+
+/// Seed salt separating the live-probe observation stream from the
+/// profiling replays (the drift monitor must see fresh draws, not the
+/// cached session's).
+pub const PROBE_SEED_SALT: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// [`BackendFactory`] over the Table-I node models: each build replays the
+/// same seeded [`SimulatedJob`], so profiling rounds are deterministic and
+/// cache-absorbable.
+pub struct SimBackendFactory {
+    node: &'static NodeSpec,
+    algo: Algo,
+    seed: u64,
+}
+
+impl SimBackendFactory {
+    pub fn new(node: &'static NodeSpec, algo: Algo, seed: u64) -> Self {
+        Self { node, algo, seed }
+    }
+
+    /// The factory behind every shared reference (`Arc<dyn BackendFactory>`)
+    /// a [`crate::fleet::FleetJobSpec`] carries.
+    pub fn shared(node: &'static NodeSpec, algo: Algo, seed: u64) -> Arc<dyn BackendFactory> {
+        Arc::new(Self::new(node, algo, seed))
+    }
+}
+
+impl BackendFactory for SimBackendFactory {
+    fn build(&self) -> Result<Box<dyn ProfilingBackend>> {
+        Ok(Box::new(SimulatedBackend::new(SimulatedJob::new(self.node, self.algo, self.seed))))
+    }
+
+    fn probe(&self) -> Result<Box<dyn ProfilingBackend>> {
+        Ok(Box::new(SimulatedBackend::new(SimulatedJob::new(
+            self.node,
+            self.algo,
+            self.seed ^ PROBE_SEED_SALT,
+        ))))
+    }
+
+    fn label(&self) -> String {
+        format!("{}/{}", self.node.name, self.algo.name())
+    }
+}
+
+/// [`BackendFactory`] over the PJRT runtime: each build loads the named
+/// AOT artifact through [`crate::runtime::Engine`] and feeds it a seeded
+/// [`SensorStream`]. Compiles against the stub engine too (the default
+/// build), where [`BackendFactory::build`] surfaces the stub's actionable
+/// "rebuild with `--features pjrt`" error — the fleet pipeline itself
+/// makes no simulator assumption.
+pub struct EngineBackendFactory {
+    artifacts_dir: PathBuf,
+    /// Artifact name from the manifest (e.g. `"arima"`, `"lstm_batch8"`).
+    artifact: String,
+    stream_seed: u64,
+    /// Assignable core budget of the machine executing the artifacts.
+    cores: f64,
+}
+
+impl EngineBackendFactory {
+    pub fn new(artifacts_dir: PathBuf, artifact: &str, stream_seed: u64, cores: f64) -> Self {
+        Self { artifacts_dir, artifact: artifact.to_string(), stream_seed, cores }
+    }
+
+    pub fn shared(
+        artifacts_dir: PathBuf,
+        artifact: &str,
+        stream_seed: u64,
+        cores: f64,
+    ) -> Arc<dyn BackendFactory> {
+        Arc::new(Self::new(artifacts_dir, artifact, stream_seed, cores))
+    }
+
+    fn load(&self, stream_seed: u64) -> Result<Box<dyn ProfilingBackend>> {
+        let engine = crate::runtime::Engine::new(&self.artifacts_dir)
+            .with_context(|| format!("loading PJRT engine for artifact '{}'", self.artifact))?;
+        let job = PjrtJob::load_named(&engine, &self.artifact)?;
+        Ok(Box::new(PjrtBackend::new(job, SensorStream::new(stream_seed), self.cores)))
+    }
+}
+
+impl BackendFactory for EngineBackendFactory {
+    fn build(&self) -> Result<Box<dyn ProfilingBackend>> {
+        self.load(self.stream_seed)
+    }
+
+    fn probe(&self) -> Result<Box<dyn ProfilingBackend>> {
+        self.load(self.stream_seed ^ PROBE_SEED_SALT)
+    }
+
+    fn label(&self) -> String {
+        format!("pjrt/{}", self.artifact)
+    }
 }
 
 /// Simulated node backend.
@@ -235,5 +404,48 @@ mod tests {
         let b = SimulatedBackend::new(SimulatedJob::new(node("e216").unwrap(), Algo::Birch, 1));
         assert_eq!(b.l_max(), 16.0);
         assert!(b.label().contains("e216"));
+    }
+
+    #[test]
+    fn sim_factory_builds_are_deterministic_replays() {
+        let f = SimBackendFactory::new(node("pi4").unwrap(), Algo::Arima, 42);
+        assert_eq!(f.label(), "pi4/arima");
+        let m1 = f.build().unwrap().measure(0.5, 1000);
+        let m2 = f.build().unwrap().measure(0.5, 1000);
+        assert_eq!(m1.mean_runtime.to_bits(), m2.mean_runtime.to_bits(), "fresh build replays");
+        assert_eq!(f.build().unwrap().l_max(), 4.0);
+    }
+
+    #[test]
+    fn sim_factory_probe_stream_is_independent_of_builds() {
+        let f = SimBackendFactory::new(node("pi4").unwrap(), Algo::Arima, 42);
+        let built = f.build().unwrap().measure(0.5, 1000);
+        let probed = f.probe().unwrap().measure(0.5, 1000);
+        // Distinct seeded streams: same distribution, different draws.
+        assert_ne!(built.mean_runtime.to_bits(), probed.mean_runtime.to_bits());
+        // The probe source matches the drift loop's historical derivation.
+        let mut legacy =
+            SimulatedJob::new(node("pi4").unwrap(), Algo::Arima, 42 ^ PROBE_SEED_SALT);
+        assert_eq!(probed.mean_runtime.to_bits(), legacy.observe_mean(0.5, 1000).to_bits());
+    }
+
+    #[test]
+    fn factories_are_object_safe_and_shareable() {
+        let wally = node("wally").unwrap();
+        let f: Arc<dyn BackendFactory> = SimBackendFactory::shared(wally, Algo::Lstm, 7);
+        assert_eq!(f.label(), "wally/lstm");
+        // Boxed backends forward the trait (the decorator seam).
+        let mut b: Box<dyn ProfilingBackend> = f.build().unwrap();
+        let m = b.measure(1.0, 500);
+        assert!(m.mean_runtime > 0.0 && m.wallclock > 0.0);
+    }
+
+    #[test]
+    #[cfg(not(feature = "pjrt"))]
+    fn engine_factory_surfaces_the_stub_error() {
+        let f = EngineBackendFactory::new(PathBuf::from("/nonexistent"), "arima", 1, 4.0);
+        assert_eq!(f.label(), "pjrt/arima");
+        let err = f.build().err().expect("stub engine cannot build");
+        assert!(format!("{err:#}").contains("pjrt"), "{err:#}");
     }
 }

@@ -11,6 +11,9 @@ pub mod manager;
 pub mod profiler;
 
 pub use adjuster::{Adjustment, ResourceAdjuster};
+pub use backend::{
+    BackendFactory, EngineBackendFactory, Measurement, PjrtBackend, ProfilingBackend,
+    SimBackendFactory, SimulatedBackend,
+};
 pub use manager::{Assignment, CapacityPlan, JobManager, ManagedJob};
-pub use backend::{Measurement, PjrtBackend, ProfilingBackend, SimulatedBackend};
 pub use profiler::{smape_vs_dataset, Profiler, ProfilerConfig, SessionResult, StepRecord};

@@ -31,14 +31,26 @@
 //! (at `delta = 0.2` a probe at 0.8 lands in bucket 4, the bucket a
 //! `delta = 0.1` probe at 0.4 already occupies) and serve measurements
 //! from the wrong limitation.
+//!
+//! ## Persistence
+//!
+//! [`MeasurementCache::snapshot`] serializes every entry plus the
+//! per-label generations through [`crate::util::json`], and
+//! [`MeasurementCache::restore`] merges a snapshot back — refusing
+//! entries stamped newer than the snapshot header declares — so
+//! measurements survive engine restarts
+//! (`streamprof fleet --cache-file f.json`).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use anyhow::{bail, ensure, Result};
+
 use crate::coordinator::backend::{Measurement, ProfilingBackend};
 use crate::earlystop::EarlyStopConfig;
 use crate::strategies::grid_bucket;
+use crate::util::json::Json;
 
 /// Cache key: job label (e.g. `"pi4/arima"`) + limitation-grid bucket
 /// (quantized with the label's canonical `delta`).
@@ -249,6 +261,177 @@ impl MeasurementCache {
             inserts: self.inserts.load(Ordering::Relaxed),
             saved_wallclock: *self.saved_wallclock.lock().unwrap(),
         }
+    }
+
+    /// Serialize every entry plus the per-label aging state as a
+    /// [`Json`] tree — the persistence surface behind
+    /// `streamprof fleet --cache-file f.json`. Deterministic output
+    /// (labels and buckets sorted); runtime counters (`stats`) are *not*
+    /// part of the snapshot — they describe a process, not the data.
+    pub fn snapshot(&self) -> Json {
+        let store = self.store.lock().unwrap();
+        let mut labels: Vec<(&String, &LabelState)> = store.labels.iter().collect();
+        labels.sort_by(|x, y| x.0.cmp(y.0));
+        let mut label_docs = Vec::with_capacity(labels.len());
+        for (label, st) in labels {
+            let mut fields = vec![
+                ("label", Json::str(label)),
+                ("generation", Json::num(st.generation as f64)),
+            ];
+            if let Some(d) = st.delta {
+                fields.push(("delta", Json::num(d)));
+            }
+            label_docs.push(Json::obj(fields));
+        }
+        let mut entries: Vec<(&CacheKey, &Entry)> = store.map.iter().collect();
+        entries.sort_by(|x, y| x.0.cmp(y.0));
+        let mut entry_docs = Vec::with_capacity(entries.len());
+        for ((label, bucket), e) in entries {
+            entry_docs.push(Json::obj([
+                ("label", Json::str(label)),
+                ("bucket", Json::num(*bucket as f64)),
+                ("generation", Json::num(e.generation as f64)),
+                ("limit", Json::num(e.m.limit)),
+                ("mean_runtime", Json::num(e.m.mean_runtime)),
+                ("samples", Json::num(e.m.samples as f64)),
+                ("wallclock", Json::num(e.m.wallclock)),
+            ]));
+        }
+        Json::obj([
+            ("version", Json::num(1.0)),
+            ("labels", Json::Arr(label_docs)),
+            ("entries", Json::Arr(entry_docs)),
+        ])
+    }
+
+    /// Merge a [`Self::snapshot`] back in. Returns the number of entries
+    /// restored.
+    ///
+    /// Validation: the snapshot header declares each label's generation,
+    /// and an entry stamped with a **newer** generation than its label
+    /// declares is refused outright (a corrupt or hand-edited snapshot —
+    /// restoring it would serve measurements the aging protocol says were
+    /// never valid). Older-generation entries restore as stale: `lookup`
+    /// keeps refusing them and `evict_stale` can reclaim them.
+    ///
+    /// Merge policy when the cache is not empty: a label's canonical
+    /// bucket width must agree with the snapshot's, generations merge to
+    /// the max of both sides, and occupied buckets keep their live entry
+    /// (the process's own measurements are never overwritten). Restored
+    /// entries count as `inserts`, so `evictions ≤ inserts` still holds
+    /// after a restore-then-age cycle. A failed restore is atomic: every
+    /// check (field types included) runs before the first mutation, so an
+    /// `Err` leaves the live cache exactly as it was.
+    pub fn restore(&self, snap: &Json) -> Result<usize> {
+        let version = snap.get("version").and_then(Json::as_f64).unwrap_or(0.0);
+        ensure!(version == 1.0, "unsupported cache snapshot version {version}");
+        // Strict field readers: a wrong-typed field is a corrupt snapshot
+        // and must refuse, never coerce to a default measurement.
+        let num = |v: &Json, key: &str| -> Result<f64> {
+            v.req(key)
+                .map_err(anyhow::Error::msg)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("field '{key}' is not a number"))
+        };
+        let uint = |v: &Json, key: &str| -> Result<u64> {
+            let n = num(v, key)?;
+            ensure!(n >= 0.0 && n.fract() == 0.0, "field '{key}' is not a whole number: {n}");
+            Ok(n as u64)
+        };
+        let text = |v: &Json, key: &str| -> Result<String> {
+            let s = v
+                .req(key)
+                .map_err(anyhow::Error::msg)?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("field '{key}' is not a string"))?;
+            ensure!(!s.is_empty(), "field '{key}' is empty");
+            Ok(s.to_string())
+        };
+        fn list<'a>(snap: &'a Json, key: &str) -> Result<&'a [Json]> {
+            snap.req(key)
+                .map_err(anyhow::Error::msg)?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("field '{key}' is not an array"))
+        }
+        // Parse + validate the whole snapshot before touching the store.
+        let mut header: HashMap<String, (Option<f64>, u64)> = HashMap::new();
+        for l in list(snap, "labels")? {
+            let label = text(l, "label")?;
+            let generation = uint(l, "generation")?;
+            let delta = match l.get("delta") {
+                None => None,
+                Some(_) => Some(num(l, "delta")?),
+            };
+            if let Some(d) = delta {
+                ensure!(d > 0.0 && d.is_finite(), "label '{label}': bad delta {d}");
+            }
+            header.insert(label, (delta, generation));
+        }
+        struct Restored {
+            label: String,
+            bucket: i64,
+            generation: u64,
+            m: Measurement,
+        }
+        let mut restored: Vec<Restored> = Vec::new();
+        for e in list(snap, "entries")? {
+            let label = text(e, "label")?;
+            let Some(&(delta, declared)) = header.get(&label) else {
+                bail!("entry label '{label}' missing from the snapshot header");
+            };
+            ensure!(delta.is_some(), "label '{label}' has entries but no canonical delta");
+            let generation = uint(e, "generation")?;
+            ensure!(
+                generation <= declared,
+                "entry '{label}' is stamped generation {generation} but the snapshot \
+                 header declares {declared} — refusing a snapshot newer than itself"
+            );
+            let bucket = num(e, "bucket")?;
+            ensure!(bucket.fract() == 0.0, "entry '{label}': bad bucket {bucket}");
+            restored.push(Restored {
+                bucket: bucket as i64,
+                generation,
+                m: Measurement {
+                    limit: num(e, "limit")?,
+                    mean_runtime: num(e, "mean_runtime")?,
+                    samples: uint(e, "samples")? as usize,
+                    wallclock: num(e, "wallclock")?,
+                },
+                label,
+            });
+        }
+
+        // Validate the merge against the live store BEFORE mutating
+        // anything: a failed restore must leave the cache untouched.
+        let mut store = self.store.lock().unwrap();
+        for (label, (delta, _)) in &header {
+            if let Some(st) = store.labels.get(label) {
+                if let (Some(live), Some(snap)) = (st.delta, *delta) {
+                    ensure!(
+                        live == snap,
+                        "label '{label}': snapshot delta {snap} conflicts with live {live}"
+                    );
+                }
+            }
+        }
+        for (label, (delta, generation)) in &header {
+            let st = store.labels.entry(label.clone()).or_default();
+            if st.delta.is_none() {
+                st.delta = *delta;
+            }
+            st.generation = st.generation.max(*generation);
+        }
+        let mut count = 0usize;
+        for r in restored {
+            if let std::collections::hash_map::Entry::Vacant(slot) =
+                store.map.entry((r.label, r.bucket))
+            {
+                slot.insert(Entry { m: r.m, generation: r.generation });
+                count += 1;
+            }
+        }
+        self.inserts.fetch_add(count as u64, Ordering::Relaxed);
+        Ok(count)
     }
 }
 
@@ -548,6 +731,155 @@ mod tests {
         );
         let rate = stats.hit_rate();
         assert!((0.0..=1.0).contains(&rate));
+    }
+
+    #[test]
+    fn snapshot_roundtrips_entries_generations_and_deltas() {
+        let cache = MeasurementCache::new();
+        cache.insert("cam", 0.1, meas(0.4, 0.44));
+        cache.insert("cam", 0.1, meas(0.8, 0.21));
+        cache.insert("lidar", 0.2, meas(0.6, 0.5));
+        cache.bump_generation("lidar");
+        cache.insert("lidar", 0.2, meas(0.8, 0.3)); // gen 1
+        let text = crate::util::json::to_string(&cache.snapshot());
+
+        let fresh = MeasurementCache::new();
+        let snap = crate::util::json::parse(&text).expect("snapshot parses");
+        let n = fresh.restore(&snap).expect("restore");
+        assert_eq!(n, 4);
+        assert_eq!(fresh.len(), 4);
+        assert_eq!(fresh.stats().inserts, 4, "restored entries count as inserts");
+        // Bit-exact measurements at the canonical widths.
+        let restored = fresh.lookup("cam", 0.4, 0.1).unwrap();
+        assert_eq!(restored.mean_runtime.to_bits(), 0.44f64.to_bits());
+        assert_eq!(fresh.lookup("cam", 0.8, 0.1).unwrap().mean_runtime, 0.21);
+        // Generations survive: lidar's pre-bump entry is still stale.
+        assert_eq!(fresh.generation("lidar"), 1);
+        assert!(fresh.lookup("lidar", 0.6, 0.2).is_none(), "stale entry stays refused");
+        assert!(fresh.lookup("lidar", 0.8, 0.2).is_some(), "current-gen entry serves");
+        assert_eq!(fresh.evict_stale(), 1);
+        assert!(fresh.stats().evictions <= fresh.stats().inserts);
+        // The canonical delta was restored too: the aliasing guard holds.
+        assert!(fresh.lookup("cam", 0.8, 0.2).is_some(), "canonical width 0.1 still keys");
+    }
+
+    #[test]
+    fn restore_refuses_entries_newer_than_the_header_declares() {
+        let cache = MeasurementCache::new();
+        cache.insert("cam", 0.1, meas(0.4, 0.44));
+        let mut snap = cache.snapshot();
+        // Forge the entry one generation past the header's declaration.
+        if let Json::Obj(root) = &mut snap {
+            let Some(Json::Arr(entries)) = root.get_mut("entries") else { panic!() };
+            let Json::Obj(e) = &mut entries[0] else { panic!() };
+            e.insert("generation".into(), Json::num(1.0));
+        }
+        let err = MeasurementCache::new().restore(&snap).expect_err("must refuse");
+        assert!(err.to_string().contains("newer"), "{err:#}");
+        // Version and width conflicts are refused too.
+        let bad_version = crate::util::json::parse("{\"version\":2}").unwrap();
+        assert!(MeasurementCache::new().restore(&bad_version).is_err());
+        let live = MeasurementCache::new();
+        live.insert("cam", 0.2, meas(0.4, 1.0));
+        let err = live.restore(&cache.snapshot()).expect_err("width conflict");
+        assert!(err.to_string().contains("delta"), "{err:#}");
+    }
+
+    #[test]
+    fn failed_restore_leaves_the_live_cache_untouched() {
+        // Snapshot with TWO labels: "aaa" merges cleanly, "cam" conflicts
+        // on the canonical width. Whatever order the merge visits them,
+        // the failed restore must not have bumped "aaa"'s generation, and
+        // no snapshot entry may have landed.
+        let old = MeasurementCache::new();
+        old.insert("aaa", 0.1, meas(0.4, 0.44));
+        old.bump_generation("aaa");
+        old.insert("aaa", 0.1, meas(0.6, 0.5));
+        old.insert("cam", 0.1, meas(0.4, 0.44));
+        let snap = old.snapshot();
+
+        let live = MeasurementCache::new();
+        live.insert("aaa", 0.1, meas(0.2, 1.0)); // gen 0, clean merge target
+        live.insert("cam", 0.2, meas(0.4, 1.0)); // conflicting width
+        let err = live.restore(&snap).expect_err("width conflict must refuse");
+        assert!(err.to_string().contains("delta"), "{err:#}");
+        assert_eq!(live.generation("aaa"), 0, "failed restore must not merge generations");
+        assert_eq!(live.len(), 2, "failed restore must not add entries");
+        assert!(live.lookup("aaa", 0.2, 0.1).is_some(), "live entry still serves");
+    }
+
+    #[test]
+    fn restore_refuses_wrong_typed_fields() {
+        let cache = MeasurementCache::new();
+        cache.insert("cam", 0.1, meas(0.4, 0.44));
+        let corrupt = |key: &str, value: Json| {
+            let mut snap = cache.snapshot();
+            let Json::Obj(root) = &mut snap else { panic!() };
+            let Some(Json::Arr(entries)) = root.get_mut("entries") else { panic!() };
+            let Json::Obj(e) = &mut entries[0] else { panic!() };
+            e.insert(key.to_string(), value);
+            snap
+        };
+        // A string where a number belongs must refuse, not coerce to 0.
+        let snap = corrupt("mean_runtime", Json::str("0.44"));
+        let err = MeasurementCache::new().restore(&snap).expect_err("string runtime");
+        assert!(err.to_string().contains("mean_runtime"), "{err:#}");
+        let snap = corrupt("bucket", Json::str("4"));
+        assert!(MeasurementCache::new().restore(&snap).is_err(), "string bucket");
+        let snap = corrupt("samples", Json::num(0.5));
+        assert!(MeasurementCache::new().restore(&snap).is_err(), "fractional samples");
+        // A missing field refuses too.
+        let mut snap = cache.snapshot();
+        let Json::Obj(root) = &mut snap else { panic!() };
+        let Some(Json::Arr(entries)) = root.get_mut("entries") else { panic!() };
+        let Json::Obj(e) = &mut entries[0] else { panic!() };
+        e.remove("limit");
+        assert!(MeasurementCache::new().restore(&snap).is_err(), "missing limit");
+        // And wrong-typed top-level collections (not silently empty).
+        let text = "{\"version\":1,\"labels\":[],\"entries\":\"junk\"}";
+        let snap = crate::util::json::parse(text).unwrap();
+        let err = MeasurementCache::new().restore(&snap).expect_err("non-array entries");
+        assert!(err.to_string().contains("entries"), "{err:#}");
+    }
+
+    #[test]
+    fn restore_merges_without_overwriting_live_entries() {
+        let old = MeasurementCache::new();
+        old.insert("cam", 0.1, meas(0.4, 0.44));
+        old.insert("cam", 0.1, meas(0.8, 0.21));
+        let snap = old.snapshot();
+
+        let live = MeasurementCache::new();
+        live.insert("cam", 0.1, meas(0.4, 9.0)); // fresher local measurement
+        live.bump_generation("cam"); // live is one generation ahead
+        live.insert("cam", 0.1, meas(0.4, 9.5));
+        assert_eq!(live.restore(&snap).unwrap(), 1, "only the vacant 0.8 bucket restores");
+        assert_eq!(live.lookup("cam", 0.4, 0.1).unwrap().mean_runtime, 9.5, "live entry wins");
+        assert_eq!(live.generation("cam"), 1, "generations merge to the max");
+        // The restored gen-0 entry is stale under the live generation.
+        assert!(live.lookup("cam", 0.8, 0.1).is_none());
+    }
+
+    #[test]
+    fn restored_cache_replays_probes_for_a_backend() {
+        // The --cache-file contract end-to-end: profile, snapshot to text,
+        // restore into a new process's cache, re-profile — every probe
+        // replays.
+        let cache = MeasurementCache::new();
+        let mut b = backend(&cache, 8);
+        let m1 = b.measure(0.5, 1000);
+        b.measure(1.0, 1000);
+        let text = crate::util::json::to_string(&cache.snapshot());
+
+        let next = MeasurementCache::new();
+        next.restore(&crate::util::json::parse(&text).unwrap()).unwrap();
+        let mut b2 = backend(&next, 8);
+        let r = b2.measure(0.5, 1000);
+        assert_eq!(r.mean_runtime.to_bits(), m1.mean_runtime.to_bits());
+        assert_eq!(r.wallclock, 0.0, "restored entry serves at zero cost");
+        let s = next.stats();
+        assert_eq!((s.hits, s.misses), (1, 0));
+        assert!((s.hit_rate() - 1.0).abs() < 1e-12);
     }
 
     #[test]

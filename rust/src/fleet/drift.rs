@@ -13,13 +13,16 @@
 //!   observed-vs-predicted runtimes plus the stream's per-epoch peak rate,
 //!   and raises a typed [`DriftVerdict`] — `Stable`, `RateShift`, or
 //!   `ModelStale` — against configurable thresholds;
-//! * [`FleetEngine::run_adaptive`] replaces fixed rounds: after one cold
+//! * the adaptive stage of [`super::FleetSession`] (née
+//!   `FleetEngine::run_adaptive`) replaces fixed rounds: after one cold
 //!   sweep it re-profiles **only** jobs whose verdict crossed a threshold,
 //!   warm-starting the refit from the stale fit, bumping the measurement
 //!   cache's label generation on `ModelStale` (so the re-profile executes
 //!   fresh probes instead of replaying poisoned ones), and re-entering
 //!   [`JobManager`] / [`super::migrate::rebalance`] so a downgraded job
-//!   can move nodes.
+//!   can move nodes. Live probes come from each job's
+//!   [`super::BackendFactory::probe`] source, so drift monitoring makes no
+//!   simulator assumption either.
 //!
 //! ```text
 //!  epoch e:  ArrivalProcess::max_rate_in ─┐    ┌─ Stable     -> nothing
@@ -33,16 +36,16 @@ use std::collections::{BTreeMap, VecDeque};
 
 use anyhow::{ensure, Result};
 
+use crate::coordinator::backend::ProfilingBackend;
 use crate::coordinator::{JobManager, ManagedJob};
 use crate::fit::RuntimeModel;
-use crate::simulator::SimulatedJob;
 use crate::stats::smape_guarded;
 
-use super::cache::CacheStats;
+use super::cache::{CacheStats, MeasurementCache};
 use super::migrate::{rebalance, FleetPlan};
 use super::placement::FleetJob;
 use super::worker::{self, ProfilePass};
-use super::{FleetEngine, FleetJobSpec, FleetSummary};
+use super::{FleetConfig, FleetEngine, FleetJobSpec, FleetSummary};
 
 /// Drift-detection thresholds.
 #[derive(Clone, Debug)]
@@ -306,9 +309,12 @@ struct LiveJob {
     rate_hz: f64,
     limit: f64,
     monitor: DriftMonitor,
-    /// Independent noise stream for live observations (distinct from the
-    /// profiling replays, so probes are fresh draws, not cached ones).
-    probe: SimulatedJob,
+    /// Independent observation source for live probes
+    /// ([`super::BackendFactory::probe`]) — distinct from the profiling
+    /// replays, so probes are fresh draws, not cached ones. `None` when
+    /// the adaptive run has zero epochs: no probe is ever drawn, so no
+    /// backend is built (a PJRT probe costs a full engine load).
+    probe: Option<Box<dyn ProfilingBackend>>,
     reprofiles: usize,
 }
 
@@ -323,245 +329,262 @@ impl LiveJob {
 
     /// Draw one live observation and feed the monitor.
     fn probe_once(&mut self, samples: usize, scale: f64) {
-        let observed = self.probe.observe_mean(self.limit, samples) * scale;
+        let probe = self.probe.as_mut().expect("probes are only drawn when epochs > 0");
+        let observed = probe.measure(self.limit, samples).mean_runtime * scale;
         self.monitor.observe_runtime(observed, self.model.eval(self.limit));
     }
 }
 
 impl FleetEngine {
-    /// Drift-aware continuous profiling: one cold sweep, then `epochs`
-    /// adaptation rounds that re-profile **only** drifted jobs.
-    ///
-    /// Per epoch, per job: observe the stream's peak rate over the epoch
-    /// window and a handful of live runtimes against the model's
-    /// predictions; ask the [`DriftMonitor`] for a verdict. On drift:
-    /// `ModelStale` bumps the measurement cache's label generation and
-    /// evicts the stale entries (the re-profile must execute, not replay
-    /// poisoned measurements), `RateShift` keeps the cache (the behaviour
-    /// is unchanged — the warm re-profile replays at near-zero cost);
-    /// either way the session warm-starts from the stale fit, the job
-    /// re-enters its [`JobManager`] with the new model and rate, node
-    /// plans are recomputed, and the fleet is rebalanced so downgraded
-    /// jobs can move. With zero drift this performs zero re-profiles and
-    /// the returned `initial` summary is byte-identical to [`Self::run`].
+    /// Drift-aware continuous profiling over the engine's cache.
+    #[deprecated(note = "use `FleetSession::builder().jobs(..).adaptive(..).run()`")]
     pub fn run_adaptive(
         &self,
         specs: Vec<FleetJobSpec>,
         acfg: &AdaptiveConfig,
     ) -> Result<AdaptiveSummary> {
-        ensure!(acfg.epochs == 0 || acfg.epoch_ticks > 0, "adaptive epochs need epoch_ticks > 0");
-        ensure!(acfg.drift.window > 0, "drift window must be non-empty");
-        ensure!(
-            acfg.drift.min_observations <= acfg.drift.window,
-            "min_observations exceeds the rolling window"
-        );
-        // The measurement cache is shared per label (= job class): jobs of
-        // one class on one device replay each other's probes, so a runtime
-        // shift that applies to only some of them would let a drifted
-        // re-profile poison its undrifted siblings' entries (and vice
-        // versa). Reject such scenarios up front.
-        for a in &specs {
-            for b in &specs {
-                if a.label() != b.label() {
-                    continue;
-                }
-                let same = match (&a.runtime_shift, &b.runtime_shift) {
-                    (None, None) => true,
-                    (Some(x), Some(y)) => x.at_tick == y.at_tick && x.scale == y.scale,
-                    _ => false,
-                };
-                ensure!(
-                    same,
-                    "jobs '{}' and '{}' share cache label '{}' but have different \
-                     runtime shifts — a class drifts as a whole",
-                    a.name,
-                    b.name,
-                    a.label()
-                );
-            }
-        }
-        let stats_start = self.cache.stats();
-        let initial = self.run(specs.clone())?;
-        let stats_after_sweep = self.cache.stats();
+        run_adaptive_loop(self.config(), self.cache(), specs, acfg)
+    }
+}
 
-        // Mirror the cold sweep's per-node managers: the adaptive loop
-        // re-enters them in place instead of rebuilding the world.
-        let mut managers: BTreeMap<&'static str, JobManager> = BTreeMap::new();
-        let mut live: Vec<LiveJob> = Vec::with_capacity(initial.outcomes.len());
-        for o in &initial.outcomes {
-            let spec = specs
-                .iter()
-                .find(|s| s.name == o.name)
-                .expect("outcome names mirror submitted specs")
-                .clone();
-            managers
-                .entry(o.node.name)
-                .or_insert_with(|| JobManager::new(o.node.cores))
-                .register(ManagedJob {
-                    name: o.name.clone(),
-                    model: o.model.clone(),
-                    rate_hz: o.rate_hz,
-                    priority: o.priority,
-                });
-            let limit = initial
-                .assignment(&o.name)
-                .map(|a| a.adjustment.limit)
-                .unwrap_or(o.node.cores);
-            live.push(LiveJob {
-                monitor: DriftMonitor::new(acfg.drift.clone(), o.rate_hz),
-                probe: SimulatedJob::new(o.node, o.algo, spec.seed ^ 0x9E37_79B9_7F4A_7C15),
+/// Drift-aware continuous profiling: one cold sweep, then `epochs`
+/// adaptation rounds that re-profile **only** drifted jobs — the adaptive
+/// stage behind [`super::FleetSession`].
+///
+/// Per epoch, per job: observe the stream's peak rate over the epoch
+/// window and a handful of live runtimes against the model's
+/// predictions; ask the [`DriftMonitor`] for a verdict. On drift:
+/// `ModelStale` bumps the measurement cache's label generation and
+/// evicts the stale entries (the re-profile must execute, not replay
+/// poisoned measurements), `RateShift` keeps the cache (the behaviour
+/// is unchanged — the warm re-profile replays at near-zero cost);
+/// either way the session warm-starts from the stale fit, the job
+/// re-enters its [`JobManager`] with the new model and rate, node
+/// plans are recomputed, and the fleet is rebalanced so downgraded
+/// jobs can move. With zero drift this performs zero re-profiles and
+/// the returned `initial` summary is byte-identical to the plain sweep.
+pub(crate) fn run_adaptive_loop(
+    cfg: &FleetConfig,
+    cache: &MeasurementCache,
+    specs: Vec<FleetJobSpec>,
+    acfg: &AdaptiveConfig,
+) -> Result<AdaptiveSummary> {
+    ensure!(acfg.epochs == 0 || acfg.epoch_ticks > 0, "adaptive epochs need epoch_ticks > 0");
+    ensure!(acfg.drift.window > 0, "drift window must be non-empty");
+    ensure!(
+        acfg.drift.min_observations <= acfg.drift.window,
+        "min_observations exceeds the rolling window"
+    );
+    // The measurement cache is shared per label (= job class): jobs of
+    // one class on one device replay each other's probes, so a runtime
+    // shift that applies to only some of them would let a drifted
+    // re-profile poison its undrifted siblings' entries (and vice
+    // versa). Reject such scenarios up front.
+    for a in &specs {
+        for b in &specs {
+            if a.label() != b.label() {
+                continue;
+            }
+            let same = match (&a.runtime_shift, &b.runtime_shift) {
+                (None, None) => true,
+                (Some(x), Some(y)) => x.at_tick == y.at_tick && x.scale == y.scale,
+                _ => false,
+            };
+            ensure!(
+                same,
+                "jobs '{}' and '{}' share cache label '{}' but have different \
+                 runtime shifts — a class drifts as a whole",
+                a.name,
+                b.name,
+                a.label()
+            );
+        }
+    }
+    let stats_start = cache.stats();
+    let initial = super::run_sweep(cfg, cache, specs.clone())?;
+    let stats_after_sweep = cache.stats();
+
+    // Mirror the cold sweep's per-node managers: the adaptive loop
+    // re-enters them in place instead of rebuilding the world.
+    let mut managers: BTreeMap<&'static str, JobManager> = BTreeMap::new();
+    let mut live: Vec<LiveJob> = Vec::with_capacity(initial.outcomes.len());
+    for o in &initial.outcomes {
+        let spec = specs
+            .iter()
+            .find(|s| s.name == o.name)
+            .expect("outcome names mirror submitted specs")
+            .clone();
+        managers
+            .entry(o.node.name)
+            .or_insert_with(|| JobManager::new(o.node.cores))
+            .register(ManagedJob {
+                name: o.name.clone(),
                 model: o.model.clone(),
                 rate_hz: o.rate_hz,
-                limit,
-                reprofiles: 0,
-                spec,
+                priority: o.priority,
+            });
+        let limit = initial
+            .assignment(&o.name)
+            .map(|a| a.adjustment.limit)
+            .unwrap_or(o.node.cores);
+        let probe = match acfg.epochs {
+            0 => None,
+            _ => Some(spec.backend.probe()?),
+        };
+        live.push(LiveJob {
+            monitor: DriftMonitor::new(acfg.drift.clone(), o.rate_hz),
+            probe,
+            model: o.model.clone(),
+            rate_hz: o.rate_hz,
+            limit,
+            reprofiles: 0,
+            spec,
+        });
+    }
+
+    let mut epochs: Vec<EpochReport> = Vec::with_capacity(acfg.epochs);
+    for e in 1..=acfg.epochs {
+        let start = cfg.horizon + (e - 1) * acfg.epoch_ticks;
+        let end = start + acfg.epoch_ticks;
+
+        // Phase 1: observe every job, collect verdicts. The rate
+        // tracker looks back over at least the provisioning horizon:
+        // the provisioned rate is a peak over a horizon-length window,
+        // so comparing it against the peak of a shorter epoch window
+        // would alias the trough of a periodic (`Varying`) stream into
+        // a spurious RateShift. Rises register immediately; drops
+        // register once the old peak ages out of the lookback.
+        let lookback = acfg.epoch_ticks.max(cfg.horizon);
+        let mut verdicts: Vec<(String, DriftVerdict)> = Vec::with_capacity(live.len());
+        let mut drifted: Vec<usize> = Vec::new();
+        for (i, job) in live.iter_mut().enumerate() {
+            let rate_window = (end.saturating_sub(lookback), end);
+            job.monitor.observe_rate(
+                job.spec
+                    .arrivals
+                    .max_rate_in(rate_window.0, rate_window.1)
+                    .max(1e-6),
+            );
+            // Probes are spread across the epoch window, each under
+            // the regime active at its own tick, so a mid-epoch
+            // runtime shift is partially visible this epoch instead of
+            // invisible until the next.
+            for k in 0..acfg.probes_per_epoch {
+                let tick = start + k * acfg.epoch_ticks / acfg.probes_per_epoch.max(1);
+                job.probe_once(acfg.probe_samples, job.scale_at(tick));
+            }
+            let verdict = job.monitor.verdict();
+            if verdict.is_drift() {
+                drifted.push(i);
+            }
+            verdicts.push((job.spec.name.clone(), verdict));
+        }
+
+        // Phase 2: re-profile exactly the drifted jobs, warm-started.
+        let mut reprofiled: Vec<ReprofiledJob> = Vec::with_capacity(drifted.len());
+        for &i in &drifted {
+            let job = &mut live[i];
+            let verdict = verdicts[i].1;
+            let pre_smape = job.monitor.rolling_smape();
+            if matches!(verdict, DriftVerdict::ModelStale { .. }) {
+                cache.bump_generation(&job.spec.label());
+                cache.evict_stale();
+            }
+            let observed_hz = job.monitor.observed_hz;
+            let miss_before = cache.stats().misses;
+            let pass = ProfilePass {
+                // Profile the regime current at the END of the observed
+                // window — a shift that landed mid-epoch must not leave
+                // the re-profile measuring the dead old regime.
+                runtime_scale: Some(job.scale_at(end - 1)),
+                prior: Some(job.model.clone()),
+                // A stale model's cached probes are poisoned, so the
+                // session searches warm from the old fit; a rate shift
+                // leaves behaviour (and cache) intact, so the session
+                // replays the cold sweep's decisions for free.
+                session_warm: matches!(verdict, DriftVerdict::ModelStale { .. }),
+                rate_hz: Some(observed_hz),
+                rounds: Some(1),
+            };
+            let outcome =
+                worker::profile_job_with(&job.spec, cfg, cache, 0, &pass)?;
+            let executed_probes = cache.stats().misses - miss_before;
+            job.model = outcome.model;
+            job.rate_hz = observed_hz;
+            job.reprofiles += 1;
+            let mgr = managers.get_mut(job.spec.node.name).expect("home manager exists");
+            mgr.update_model(&job.spec.name, job.model.clone());
+            mgr.update_rate(&job.spec.name, job.rate_hz);
+            reprofiled.push(ReprofiledJob {
+                name: job.spec.name.clone(),
+                verdict,
+                pre_smape,
+                post_smape: f64::NAN, // filled in phase 3
+                executed_probes,
             });
         }
 
-        let mut epochs: Vec<EpochReport> = Vec::with_capacity(acfg.epochs);
-        for e in 1..=acfg.epochs {
-            let start = self.cfg.horizon + (e - 1) * acfg.epoch_ticks;
-            let end = start + acfg.epoch_ticks;
-
-            // Phase 1: observe every job, collect verdicts. The rate
-            // tracker looks back over at least the provisioning horizon:
-            // the provisioned rate is a peak over a horizon-length window,
-            // so comparing it against the peak of a shorter epoch window
-            // would alias the trough of a periodic (`Varying`) stream into
-            // a spurious RateShift. Rises register immediately; drops
-            // register once the old peak ages out of the lookback.
-            let lookback = acfg.epoch_ticks.max(self.cfg.horizon);
-            let mut verdicts: Vec<(String, DriftVerdict)> = Vec::with_capacity(live.len());
-            let mut drifted: Vec<usize> = Vec::new();
-            for (i, job) in live.iter_mut().enumerate() {
-                let rate_window = (end.saturating_sub(lookback), end);
-                job.monitor.observe_rate(
-                    job.spec
-                        .arrivals
-                        .max_rate_in(rate_window.0, rate_window.1)
-                        .max(1e-6),
-                );
-                // Probes are spread across the epoch window, each under
-                // the regime active at its own tick, so a mid-epoch
-                // runtime shift is partially visible this epoch instead of
-                // invisible until the next.
-                for k in 0..acfg.probes_per_epoch {
-                    let tick = start + k * acfg.epoch_ticks / acfg.probes_per_epoch.max(1);
-                    job.probe_once(acfg.probe_samples, job.scale_at(tick));
-                }
-                let verdict = job.monitor.verdict();
-                if verdict.is_drift() {
-                    drifted.push(i);
-                }
-                verdicts.push((job.spec.name.clone(), verdict));
-            }
-
-            // Phase 2: re-profile exactly the drifted jobs, warm-started.
-            let mut reprofiled: Vec<ReprofiledJob> = Vec::with_capacity(drifted.len());
-            for &i in &drifted {
-                let job = &mut live[i];
-                let verdict = verdicts[i].1;
-                let pre_smape = job.monitor.rolling_smape();
-                if matches!(verdict, DriftVerdict::ModelStale { .. }) {
-                    self.cache.bump_generation(&job.spec.label());
-                    self.cache.evict_stale();
-                }
-                let observed_hz = job.monitor.observed_hz;
-                let miss_before = self.cache.stats().misses;
-                let pass = ProfilePass {
-                    // Profile the regime current at the END of the observed
-                    // window — a shift that landed mid-epoch must not leave
-                    // the re-profile measuring the dead old regime.
-                    runtime_scale: Some(job.scale_at(end - 1)),
-                    prior: Some(job.model.clone()),
-                    // A stale model's cached probes are poisoned, so the
-                    // session searches warm from the old fit; a rate shift
-                    // leaves behaviour (and cache) intact, so the session
-                    // replays the cold sweep's decisions for free.
-                    session_warm: matches!(verdict, DriftVerdict::ModelStale { .. }),
-                    rate_hz: Some(observed_hz),
-                    rounds: Some(1),
-                };
-                let outcome =
-                    worker::profile_job_with(&job.spec, &self.cfg, &self.cache, 0, &pass)?;
-                let executed_probes = self.cache.stats().misses - miss_before;
-                job.model = outcome.model;
-                job.rate_hz = observed_hz;
-                job.reprofiles += 1;
-                let mgr = managers.get_mut(job.spec.node.name).expect("home manager exists");
-                mgr.update_model(&job.spec.name, job.model.clone());
-                mgr.update_rate(&job.spec.name, job.rate_hz);
-                reprofiled.push(ReprofiledJob {
-                    name: job.spec.name.clone(),
-                    verdict,
-                    pre_smape,
-                    post_smape: f64::NAN, // filled in phase 3
-                    executed_probes,
-                });
-            }
-
-            // Phase 3: with fresh models in the managers, recompute node
-            // plans, refresh every job's granted limit, rebalance the
-            // fleet, and re-arm + re-judge the re-profiled monitors.
-            let plan = if reprofiled.is_empty() {
-                None
-            } else {
-                let plans: BTreeMap<&str, crate::coordinator::CapacityPlan> =
-                    managers.iter().map(|(&n, m)| (n, m.plan())).collect();
-                for job in live.iter_mut() {
-                    if let Some(a) = plans[job.spec.node.name]
-                        .assignments
-                        .iter()
-                        .find(|a| a.name == job.spec.name)
-                    {
-                        job.limit = a.adjustment.limit;
-                    }
-                }
-                for (r, &i) in reprofiled.iter_mut().zip(&drifted) {
-                    let job = &mut live[i];
-                    let scale = job.scale_at(end - 1);
-                    job.monitor.rearm(job.rate_hz);
-                    for _ in 0..acfg.drift.min_observations {
-                        job.probe_once(acfg.probe_samples, scale);
-                    }
-                    r.post_smape = job.monitor.rolling_smape();
-                }
-                let fleet_jobs: Vec<FleetJob> = live
+        // Phase 3: with fresh models in the managers, recompute node
+        // plans, refresh every job's granted limit, rebalance the
+        // fleet, and re-arm + re-judge the re-profiled monitors.
+        let plan = if reprofiled.is_empty() {
+            None
+        } else {
+            let plans: BTreeMap<&str, crate::coordinator::CapacityPlan> =
+                managers.iter().map(|(&n, m)| (n, m.plan())).collect();
+            for job in live.iter_mut() {
+                if let Some(a) = plans[job.spec.node.name]
+                    .assignments
                     .iter()
-                    .map(|j| FleetJob {
-                        name: j.spec.name.clone(),
-                        node: j.spec.node,
-                        model: j.model.clone(),
-                        rate_hz: j.rate_hz,
-                        priority: j.spec.priority,
-                    })
-                    .collect();
-                Some(rebalance(&fleet_jobs))
-            };
-            epochs.push(EpochReport { epoch: e, verdicts, reprofiled, plan });
-        }
-
-        let stats_end = self.cache.stats();
-        let jobs = live
-            .into_iter()
-            .map(|j| AdaptiveJobReport {
-                name: j.spec.name.clone(),
-                label: j.spec.label(),
-                reprofiles: j.reprofiles,
-                fingerprint: model_fingerprint(&j.model),
-                model: j.model,
-                rate_hz: j.rate_hz,
-                limit: j.limit,
-            })
-            .collect();
-        Ok(AdaptiveSummary {
-            initial,
-            epochs,
-            jobs,
-            cache: stats_end.delta_since(&stats_start),
-            adaptive_probe_executions: stats_end.misses - stats_after_sweep.misses,
-        })
+                    .find(|a| a.name == job.spec.name)
+                {
+                    job.limit = a.adjustment.limit;
+                }
+            }
+            for (r, &i) in reprofiled.iter_mut().zip(&drifted) {
+                let job = &mut live[i];
+                let scale = job.scale_at(end - 1);
+                job.monitor.rearm(job.rate_hz);
+                for _ in 0..acfg.drift.min_observations {
+                    job.probe_once(acfg.probe_samples, scale);
+                }
+                r.post_smape = job.monitor.rolling_smape();
+            }
+            let fleet_jobs: Vec<FleetJob> = live
+                .iter()
+                .map(|j| FleetJob {
+                    name: j.spec.name.clone(),
+                    node: j.spec.node,
+                    model: j.model.clone(),
+                    rate_hz: j.rate_hz,
+                    priority: j.spec.priority,
+                })
+                .collect();
+            Some(rebalance(&fleet_jobs))
+        };
+        epochs.push(EpochReport { epoch: e, verdicts, reprofiled, plan });
     }
+
+    let stats_end = cache.stats();
+    let jobs = live
+        .into_iter()
+        .map(|j| AdaptiveJobReport {
+            name: j.spec.name.clone(),
+            label: j.spec.label(),
+            reprofiles: j.reprofiles,
+            fingerprint: model_fingerprint(&j.model),
+            model: j.model,
+            rate_hz: j.rate_hz,
+            limit: j.limit,
+        })
+        .collect();
+    Ok(AdaptiveSummary {
+        initial,
+        epochs,
+        jobs,
+        cache: stats_end.delta_since(&stats_start),
+        adaptive_probe_executions: stats_end.misses - stats_after_sweep.misses,
+    })
 }
 
 #[cfg(test)]

@@ -15,14 +15,34 @@
 //! ```text
 //!  FleetJobSpec*N ──► WorkQueue ──► worker pool (scoped threads)
 //!                                     │  Profiler::run_observed
-//!                                     │   ├─ CachedBackend ──► MeasurementCache
+//!                                     │   ├─ BackendFactory::build ─► CachedBackend ─► cache
 //!                                     │   └─ IncrementalModel (warm refits)
 //!                                     ▼
 //!                                  JobOutcome*N ──► per-node JobManager ──► CapacityPlan
 //! ```
 //!
-//! On top of the one-shot sweep, the [`drift`] module runs the engine
-//! *continuously*: [`FleetEngine::run_adaptive`] monitors every job's
+//! ## The session API
+//!
+//! [`FleetSession`] is the public entry point: one composable pipeline
+//! that runs the sweep and optionally layers rebalancing and the adaptive
+//! drift loop on top, over **any** [`BackendFactory`] — the paper's
+//! black-box claim made a type-level contract. The former
+//! `FleetEngine::run` / `run_rebalanced` / `run_adaptive` trio remains as
+//! deprecated shims for one release:
+//!
+//! ```no_run
+//! use streamprof::fleet::{sim_fleet, AdaptiveConfig, FleetSession};
+//!
+//! let report = FleetSession::builder()
+//!     .jobs(sim_fleet(12, 7))
+//!     .rebalance(true)
+//!     .adaptive(AdaptiveConfig::default())
+//!     .run()?;
+//! # anyhow::Ok(())
+//! ```
+//!
+//! On top of the one-shot sweep, the [`drift`] module runs the fleet
+//! *continuously*: the adaptive stage monitors every job's
 //! observed-vs-predicted runtime and stream rate, re-profiles only jobs
 //! whose [`DriftVerdict`] crosses a threshold, and ages the measurement
 //! cache by label generation so stale observations are never replayed.
@@ -32,7 +52,12 @@ pub mod drift;
 pub mod migrate;
 pub mod placement;
 pub mod queue;
+pub mod session;
 pub mod worker;
+
+// The factory abstraction lives with the backends (coordinator); it is
+// re-exported here because it is fleet vocabulary.
+pub use crate::coordinator::backend::{BackendFactory, EngineBackendFactory, SimBackendFactory};
 
 pub use cache::{CacheStats, CachedBackend, MeasurementCache};
 pub use drift::{
@@ -42,27 +67,36 @@ pub use drift::{
 pub use migrate::{rebalance, rebalance_across, FleetMetrics, FleetPlan, Migration};
 pub use placement::{candidates_for, translate_model, FleetJob, PlacementCandidate};
 pub use queue::WorkQueue;
-pub use worker::{IncrementalModel, JobOutcome, ProfilePass, ScaledBackend};
+pub use session::{FleetReport, FleetSession, FleetSessionBuilder};
+pub use worker::{IncrementalModel, JobOutcome, ProfilePass, ScaledBackend, ScaledBackendFactory};
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
-use anyhow::{ensure, Result};
+use anyhow::{ensure, Context, Result};
 
 use crate::coordinator::{Assignment, CapacityPlan, JobManager, ManagedJob, ProfilerConfig};
-use crate::simulator::{Algo, NodeSpec, NODES};
+use crate::simulator::{node, Algo, NodeSpec, NODES};
 use crate::strategies;
 use crate::stream::ArrivalProcess;
 
-/// One stream job registered with the fleet engine.
+/// One stream job registered with the fleet.
+///
+/// The spec is backend-agnostic: *how* the job is measured lives behind
+/// the [`BackendFactory`]; the spec itself carries only the fleet-level
+/// facts — the placement home, the stream's arrival process, priority,
+/// and the strategy seed.
 #[derive(Clone)]
 pub struct FleetJobSpec {
     /// Unique job name (e.g. `"cam-03"`).
     pub name: String,
-    /// Device the job runs on.
+    /// Placement home: the node whose [`JobManager`] the fitted model
+    /// enters (and the calibration anchor for cross-node translation).
     pub node: &'static NodeSpec,
-    pub algo: Algo,
-    /// Seed of the job's simulated runtime behaviour.
+    /// How to measure the job — simulated, PJRT, or anything else.
+    pub backend: Arc<dyn BackendFactory>,
+    /// Seed of the selection strategy's own randomness (the backend
+    /// carries its own observation seed).
     pub seed: u64,
     /// Larger = more important when the node is over-subscribed.
     pub priority: i32,
@@ -74,12 +108,14 @@ pub struct FleetJobSpec {
 }
 
 impl FleetJobSpec {
-    /// Spec with a fixed 2 Hz stream and default priority.
+    /// Simulated-backend spec with a fixed 2 Hz stream and default
+    /// priority — the migration-friendly constructor every pre-session
+    /// call site already used.
     pub fn simulated(name: &str, node: &'static NodeSpec, algo: Algo, seed: u64) -> Self {
         Self {
             name: name.to_string(),
             node,
-            algo,
+            backend: SimBackendFactory::shared(node, algo, seed),
             seed,
             priority: 1,
             arrivals: ArrivalProcess::Fixed(2.0),
@@ -87,10 +123,32 @@ impl FleetJobSpec {
         }
     }
 
-    /// Measurement-cache label: jobs of the same class on the same device
-    /// type share runtime behaviour, so they share cache entries.
+    /// Spec over an arbitrary [`BackendFactory`] — no simulator types at
+    /// the call site. `home` names the placement node (Table-I registry);
+    /// the stream defaults to fixed 2 Hz and priority 1, both plain
+    /// fields to override.
+    pub fn with_backend(
+        name: &str,
+        home: &str,
+        backend: Arc<dyn BackendFactory>,
+        seed: u64,
+    ) -> Result<Self> {
+        let node = node(home).with_context(|| format!("unknown placement node '{home}'"))?;
+        Ok(Self {
+            name: name.to_string(),
+            node,
+            backend,
+            seed,
+            priority: 1,
+            arrivals: ArrivalProcess::Fixed(2.0),
+            runtime_shift: None,
+        })
+    }
+
+    /// Measurement-cache label: jobs whose factories report the same
+    /// label share runtime behaviour, so they share cache entries.
     pub fn label(&self) -> String {
-        format!("{}/{}", self.node.name, self.algo.name())
+        self.backend.label()
     }
 }
 
@@ -123,7 +181,7 @@ impl Default for FleetConfig {
     }
 }
 
-/// Everything a completed fleet run reports.
+/// Everything a completed fleet sweep reports.
 pub struct FleetSummary {
     /// Per-job outcomes in submission order.
     pub outcomes: Vec<JobOutcome>,
@@ -167,7 +225,81 @@ impl FleetSummary {
     }
 }
 
-/// The fleet profiling engine.
+/// Profile every job across the worker pool and derive per-node capacity
+/// plans from the fitted models — the sweep stage shared by
+/// [`FleetSession::run`] and the deprecated [`FleetEngine`] shims.
+pub(crate) fn run_sweep(
+    cfg: &FleetConfig,
+    cache: &MeasurementCache,
+    specs: Vec<FleetJobSpec>,
+) -> Result<FleetSummary> {
+    ensure!(!specs.is_empty(), "fleet run needs at least one job spec");
+    ensure!(
+        strategies::by_name(&cfg.strategy, 0).is_some(),
+        "unknown strategy '{}'",
+        cfg.strategy
+    );
+    ensure!(cfg.profiler.max_steps >= cfg.profiler.n_initial, "profiler max_steps < n_initial");
+    // Snapshot so the summary reports THIS run's cache behaviour even
+    // when the cache is reused across runs.
+    let cache_before = cache.stats();
+    let n_workers = cfg.workers.clamp(1, specs.len());
+    let n_jobs = specs.len();
+    let queue = WorkQueue::new(specs.into_iter().enumerate());
+    let results: Mutex<Vec<JobOutcome>> = Mutex::new(Vec::with_capacity(n_jobs));
+    let failures: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for w in 0..n_workers {
+            let queue = &queue;
+            let results = &results;
+            let failures = &failures;
+            s.spawn(move || {
+                while let Some((index, spec)) = queue.pop() {
+                    match worker::profile_job(&spec, cfg, cache, w) {
+                        Ok(mut outcome) => {
+                            outcome.index = index;
+                            results.lock().unwrap().push(outcome);
+                        }
+                        Err(e) => {
+                            failures.lock().unwrap().push(format!("{}: {e:#}", spec.name));
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let failures = failures.into_inner().unwrap();
+    ensure!(failures.is_empty(), "fleet workers failed: {}", failures.join("; "));
+    let mut outcomes = results.into_inner().unwrap();
+    outcomes.sort_by_key(|o| o.index);
+
+    // Feed the fitted models into per-node managers: this is where the
+    // fleet engine hands over to the adaptive-adjustment layer.
+    let mut managers: BTreeMap<&'static str, JobManager> = BTreeMap::new();
+    for o in &outcomes {
+        managers
+            .entry(o.node.name)
+            .or_insert_with(|| JobManager::new(o.node.cores))
+            .register(ManagedJob {
+                name: o.name.clone(),
+                model: o.model.clone(),
+                rate_hz: o.rate_hz,
+                priority: o.priority,
+            });
+    }
+    let plans = managers
+        .into_iter()
+        .map(|(name, mgr)| (name.to_string(), mgr.plan()))
+        .collect();
+    let cache = cache.stats().delta_since(&cache_before);
+    Ok(FleetSummary { outcomes, cache, plans })
+}
+
+/// The pre-session fleet engine: a config plus a persistent cache.
+///
+/// Superseded by [`FleetSession`] — the three run methods survive as
+/// deprecated shims for one release so downstream call sites migrate
+/// mechanically.
 pub struct FleetEngine {
     cfg: FleetConfig,
     cache: MeasurementCache,
@@ -182,87 +314,26 @@ impl FleetEngine {
         &self.cfg
     }
 
-    /// Cache statistics so far (accumulates across `run` calls).
+    /// The engine's persistent measurement cache.
+    pub fn cache(&self) -> &MeasurementCache {
+        &self.cache
+    }
+
+    /// Cache statistics so far (accumulates across runs).
     pub fn cache_stats(&self) -> CacheStats {
         self.cache.stats()
     }
 
-    /// Profile every job across the worker pool and derive per-node
-    /// capacity plans from the fitted models.
+    /// Profile every job and derive per-node capacity plans.
+    #[deprecated(note = "use `FleetSession::builder().config(..).jobs(..).run()`")]
     pub fn run(&self, specs: Vec<FleetJobSpec>) -> Result<FleetSummary> {
-        ensure!(!specs.is_empty(), "fleet run needs at least one job spec");
-        ensure!(
-            strategies::by_name(&self.cfg.strategy, 0).is_some(),
-            "unknown strategy '{}'",
-            self.cfg.strategy
-        );
-        ensure!(
-            self.cfg.profiler.max_steps >= self.cfg.profiler.n_initial,
-            "profiler max_steps < n_initial"
-        );
-        // Snapshot so the summary reports THIS run's cache behaviour even
-        // when the engine (and its cache) is reused across runs.
-        let cache_before = self.cache.stats();
-        let n_workers = self.cfg.workers.clamp(1, specs.len());
-        let n_jobs = specs.len();
-        let queue = WorkQueue::new(specs.into_iter().enumerate());
-        let results: Mutex<Vec<JobOutcome>> = Mutex::new(Vec::with_capacity(n_jobs));
-        let failures: Mutex<Vec<String>> = Mutex::new(Vec::new());
-        std::thread::scope(|s| {
-            for w in 0..n_workers {
-                let queue = &queue;
-                let results = &results;
-                let failures = &failures;
-                let cache = &self.cache;
-                let cfg = &self.cfg;
-                s.spawn(move || {
-                    while let Some((index, spec)) = queue.pop() {
-                        match worker::profile_job(&spec, cfg, cache, w) {
-                            Ok(mut outcome) => {
-                                outcome.index = index;
-                                results.lock().unwrap().push(outcome);
-                            }
-                            Err(e) => {
-                                failures.lock().unwrap().push(format!("{}: {e:#}", spec.name));
-                            }
-                        }
-                    }
-                });
-            }
-        });
-        let failures = failures.into_inner().unwrap();
-        ensure!(failures.is_empty(), "fleet workers failed: {}", failures.join("; "));
-        let mut outcomes = results.into_inner().unwrap();
-        outcomes.sort_by_key(|o| o.index);
-
-        // Feed the fitted models into per-node managers: this is where the
-        // fleet engine hands over to the adaptive-adjustment layer.
-        let mut managers: BTreeMap<&'static str, JobManager> = BTreeMap::new();
-        for o in &outcomes {
-            managers
-                .entry(o.node.name)
-                .or_insert_with(|| JobManager::new(o.node.cores))
-                .register(ManagedJob {
-                    name: o.name.clone(),
-                    model: o.model.clone(),
-                    rate_hz: o.rate_hz,
-                    priority: o.priority,
-                });
-        }
-        let plans = managers
-            .into_iter()
-            .map(|(name, mgr)| (name.to_string(), mgr.plan()))
-            .collect();
-        let cache = self.cache.stats().delta_since(&cache_before);
-        Ok(FleetSummary { outcomes, cache, plans })
+        run_sweep(&self.cfg, &self.cache, specs)
     }
 
-    /// Profile every job, then rebalance: shed jobs migrate to
-    /// under-subscribed nodes via cross-node model translation. Returns the
-    /// profiling summary (whose per-node plans are the no-migration
-    /// baseline) together with the fleet-wide plan.
+    /// Profile every job, then rebalance shed jobs across the fleet.
+    #[deprecated(note = "use `FleetSession::builder().jobs(..).rebalance(true).run()`")]
     pub fn run_rebalanced(&self, specs: Vec<FleetJobSpec>) -> Result<(FleetSummary, FleetPlan)> {
-        let summary = self.run(specs)?;
+        let summary = run_sweep(&self.cfg, &self.cache, specs)?;
         let plan = summary.rebalanced();
         Ok((summary, plan))
     }
@@ -277,14 +348,16 @@ pub fn sim_fleet(n: usize, seed: u64) -> Vec<FleetJobSpec> {
         .map(|i| {
             let node = &NODES[i % NODES.len()];
             let algo = Algo::ALL[i % Algo::ALL.len()];
+            let name = format!("job-{i:02}");
+            // Per-job seed hashed from (fleet seed, name) — NOT the job's
+            // roster position, so inserting or reordering jobs cannot
+            // reshuffle every later job's runtime behaviour.
+            let job_seed =
+                crate::util::fnv1a(seed.to_le_bytes().into_iter().chain(name.bytes()));
             FleetJobSpec {
-                name: format!("job-{i:02}"),
                 node,
-                algo,
-                // Same class on the same device type shares runtime
-                // behaviour (and cache entries); distinct classes get
-                // distinct seeds.
-                seed: seed.wrapping_add((i % 21) as u64 * 7919),
+                backend: SimBackendFactory::shared(node, algo, job_seed),
+                seed: job_seed,
                 priority: 1 + (i % 3) as i32,
                 arrivals: ArrivalProcess::Varying {
                     lo: 0.5,
@@ -292,6 +365,7 @@ pub fn sim_fleet(n: usize, seed: u64) -> Vec<FleetJobSpec> {
                     period: 400.0,
                 },
                 runtime_shift: None,
+                name,
             }
         })
         .collect()
@@ -313,15 +387,41 @@ mod tests {
     }
 
     #[test]
+    fn sim_fleet_seeds_are_name_stable_not_positional() {
+        // Regression: seeds used to derive from the roster position
+        // (`i % 21`), so job-21 aliased job-00's noise stream and any
+        // insertion reshuffled every later job's behaviour.
+        let long = sim_fleet(22, 7);
+        assert_ne!(long[21].seed, long[0].seed, "same class, distinct stream");
+        let short = sim_fleet(5, 7);
+        for i in 0..5 {
+            assert_eq!(long[i].seed, short[i].seed, "seed depends on the name alone");
+        }
+        let other = sim_fleet(5, 8);
+        assert_ne!(short[0].seed, other[0].seed, "fleet seed still matters");
+    }
+
+    #[test]
+    fn with_backend_resolves_the_placement_home_by_name() {
+        let factory = SimBackendFactory::shared(node("pi4").unwrap(), Algo::Arima, 3);
+        let spec = FleetJobSpec::with_backend("cam", "pi4", factory, 3).unwrap();
+        assert_eq!(spec.node.name, "pi4");
+        assert_eq!(spec.label(), "pi4/arima");
+        let missing = SimBackendFactory::shared(node("pi4").unwrap(), Algo::Arima, 3);
+        assert!(FleetJobSpec::with_backend("cam", "gcp-tpu", missing, 3).is_err());
+    }
+
+    #[test]
     fn summary_cache_stats_are_per_run_not_lifetime() {
-        let engine = FleetEngine::new(FleetConfig { workers: 1, rounds: 1, ..Default::default() });
-        let first = engine.run(sim_fleet(2, 3)).unwrap();
+        let cfg = FleetConfig { workers: 1, rounds: 1, ..Default::default() };
+        let cache = MeasurementCache::new();
+        let first = run_sweep(&cfg, &cache, sim_fleet(2, 3)).unwrap();
         assert_eq!(first.cache.hits, 0, "distinct labels, single round: no hits");
         assert!(first.cache.misses > 0);
-        // Same specs again on the same engine: a full cache replay. The
+        // Same specs again through the same cache: a full replay. The
         // second summary must report only this run's (all-hit) stats, not
         // the blended lifetime counters.
-        let second = engine.run(sim_fleet(2, 3)).unwrap();
+        let second = run_sweep(&cfg, &cache, sim_fleet(2, 3)).unwrap();
         assert_eq!(second.cache.misses, 0, "replay run must not re-execute");
         assert_eq!(second.cache.hits, first.cache.misses);
         assert!((second.hit_rate() - 1.0).abs() < 1e-12);
@@ -329,16 +429,29 @@ mod tests {
 
     #[test]
     fn empty_fleet_is_an_error() {
-        let engine = FleetEngine::new(FleetConfig::default());
-        assert!(engine.run(Vec::new()).is_err());
+        let cache = MeasurementCache::new();
+        assert!(run_sweep(&FleetConfig::default(), &cache, Vec::new()).is_err());
     }
 
     #[test]
     fn unknown_strategy_is_an_error() {
-        let engine = FleetEngine::new(FleetConfig {
-            strategy: "hillclimb".into(),
-            ..FleetConfig::default()
-        });
-        assert!(engine.run(sim_fleet(2, 1)).is_err());
+        let cfg = FleetConfig { strategy: "hillclimb".into(), ..FleetConfig::default() };
+        let cache = MeasurementCache::new();
+        assert!(run_sweep(&cfg, &cache, sim_fleet(2, 1)).is_err());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_engine_shims_still_run() {
+        // The one-release migration contract: the old entry points keep
+        // working and agree with the session pipeline (the full
+        // equivalence guard lives in tests/fleet_e2e.rs).
+        let engine = FleetEngine::new(FleetConfig { workers: 1, rounds: 1, ..Default::default() });
+        let summary = engine.run(sim_fleet(2, 3)).unwrap();
+        assert_eq!(summary.outcomes.len(), 2);
+        assert!(engine.cache_stats().inserts > 0);
+        let (summary, plan) = engine.run_rebalanced(sim_fleet(2, 3)).unwrap();
+        assert_eq!(summary.outcomes.len(), 2);
+        assert_eq!(plan.metrics.jobs, 2);
     }
 }

@@ -1,0 +1,533 @@
+//! The composable fleet pipeline: one builder for sweep / rebalance /
+//! adaptive over any [`BackendFactory`](super::BackendFactory).
+//!
+//! The pre-session `FleetEngine` exposed three divergent entry points
+//! (`run`, `run_rebalanced`, `run_adaptive`) that each rebuilt their own
+//! plumbing. [`FleetSession`] collapses them into one pipeline whose
+//! stages compose:
+//!
+//! ```text
+//!  builder: jobs + config + cache ──► sweep ──► [adaptive epochs] ──► [rebalance]
+//!                                        └────────── FleetReport ◄─────────┘
+//! ```
+//!
+//! * the **sweep** profiles every [`FleetJobSpec`] through the shared
+//!   [`MeasurementCache`] and plans each node;
+//! * the **adaptive** stage (opt-in via [`AdaptiveConfig`]) replaces the
+//!   sweep's fixed rounds with drift-gated re-profiling;
+//! * the **rebalance** stage (opt-in) migrates shed jobs across nodes —
+//!   from the final models, so it composes with adaptation.
+//!
+//! The unified [`FleetReport`] serializes through [`crate::util::json`]
+//! (`streamprof fleet --out report.json`), giving the fleet layer a
+//! stable machine-readable surface for the first time.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::CapacityPlan;
+use crate::fit::RuntimeModel;
+use crate::util::json::Json;
+
+use super::cache::{CacheStats, MeasurementCache};
+use super::drift::{
+    model_fingerprint, run_adaptive_loop, AdaptiveConfig, AdaptiveSummary, DriftVerdict,
+};
+use super::migrate::{rebalance, FleetPlan};
+use super::placement::FleetJob;
+use super::{run_sweep, FleetConfig, FleetJobSpec, FleetSummary};
+
+/// Builder for a [`FleetSession`] — the single public entry point of the
+/// fleet layer.
+///
+/// ```no_run
+/// use streamprof::fleet::{sim_fleet, AdaptiveConfig, FleetSession};
+///
+/// let report = FleetSession::builder()
+///     .jobs(sim_fleet(12, 7))
+///     .rebalance(true)
+///     .adaptive(AdaptiveConfig::default())
+///     .run()?;
+/// println!("{}/{} probes hit the cache", report.cache.hits, report.cache.lookups());
+/// # anyhow::Ok(())
+/// ```
+#[derive(Default)]
+pub struct FleetSessionBuilder {
+    cfg: FleetConfig,
+    specs: Vec<FleetJobSpec>,
+    rebalance: bool,
+    adaptive: Option<AdaptiveConfig>,
+    cache: Option<Arc<MeasurementCache>>,
+}
+
+impl FleetSessionBuilder {
+    /// Engine configuration (workers, rounds, strategy, profiler, horizon).
+    pub fn config(mut self, cfg: FleetConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Append job specs to the roster.
+    pub fn jobs(mut self, specs: impl IntoIterator<Item = FleetJobSpec>) -> Self {
+        self.specs.extend(specs);
+        self
+    }
+
+    /// Append one job spec.
+    pub fn job(mut self, spec: FleetJobSpec) -> Self {
+        self.specs.push(spec);
+        self
+    }
+
+    /// Enable the rebalance stage: migrate shed jobs across nodes after
+    /// profiling (and after adaptation, when both are enabled).
+    pub fn rebalance(mut self, enabled: bool) -> Self {
+        self.rebalance = enabled;
+        self
+    }
+
+    /// Enable the adaptive stage: drift-gated continuous re-profiling
+    /// after the cold sweep.
+    pub fn adaptive(mut self, acfg: AdaptiveConfig) -> Self {
+        self.adaptive = Some(acfg);
+        self
+    }
+
+    /// Share (or persist) a measurement cache across sessions — the seam
+    /// behind `--cache-file`: restore a snapshot into a cache, hand it to
+    /// every session, snapshot it again on exit.
+    pub fn cache(mut self, cache: Arc<MeasurementCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Finalize into a reusable [`FleetSession`].
+    pub fn build(self) -> FleetSession {
+        FleetSession {
+            cfg: self.cfg,
+            specs: self.specs,
+            rebalance: self.rebalance,
+            adaptive: self.adaptive,
+            cache: self.cache.unwrap_or_default(),
+        }
+    }
+
+    /// Build and run once — the one-liner for the common case.
+    pub fn run(self) -> Result<FleetReport> {
+        self.build().run()
+    }
+}
+
+/// A configured fleet pipeline. Reusable: every [`FleetSession::run`]
+/// replays the roster through the session's persistent cache (a second
+/// run replays measurements at a ~100% hit rate).
+pub struct FleetSession {
+    cfg: FleetConfig,
+    specs: Vec<FleetJobSpec>,
+    rebalance: bool,
+    adaptive: Option<AdaptiveConfig>,
+    cache: Arc<MeasurementCache>,
+}
+
+impl FleetSession {
+    pub fn builder() -> FleetSessionBuilder {
+        FleetSessionBuilder::default()
+    }
+
+    /// The session's measurement cache (shared with whoever passed it in).
+    pub fn cache(&self) -> &Arc<MeasurementCache> {
+        &self.cache
+    }
+
+    pub fn config(&self) -> &FleetConfig {
+        &self.cfg
+    }
+
+    /// Run the configured pipeline: sweep, then the optional adaptive and
+    /// rebalance stages. With default stages (no adaptive, no rebalance)
+    /// the summary is byte-identical to the deprecated `FleetEngine::run`
+    /// on the same specs — enforced by `tests/fleet_e2e.rs`.
+    pub fn run(&self) -> Result<FleetReport> {
+        let before = self.cache.stats();
+        let (sweep, adaptive) = match &self.adaptive {
+            Some(acfg) => {
+                (None, Some(run_adaptive_loop(&self.cfg, &self.cache, self.specs.clone(), acfg)?))
+            }
+            None => (Some(run_sweep(&self.cfg, &self.cache, self.specs.clone())?), None),
+        };
+        let plan = if self.rebalance {
+            Some(match (&sweep, &adaptive) {
+                // After adaptation, rebalance from the *final* models and
+                // rates, not the cold sweep's.
+                (_, Some(ad)) => rebalance(&self.final_fleet_jobs(ad)),
+                (Some(s), None) => s.rebalanced(),
+                (None, None) => unreachable!("one of sweep/adaptive always runs"),
+            })
+        } else {
+            None
+        };
+        let cache = self.cache.stats().delta_since(&before);
+        Ok(FleetReport { sweep, adaptive, plan, cache })
+    }
+
+    /// The placement view of the adaptive run's final per-job state.
+    fn final_fleet_jobs(&self, ad: &AdaptiveSummary) -> Vec<FleetJob> {
+        ad.jobs
+            .iter()
+            .map(|j| {
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == j.name)
+                    .expect("adaptive reports mirror submitted specs");
+                FleetJob {
+                    name: j.name.clone(),
+                    node: spec.node,
+                    model: j.model.clone(),
+                    rate_hz: j.rate_hz,
+                    priority: spec.priority,
+                }
+            })
+            .collect()
+    }
+}
+
+/// Everything one [`FleetSession::run`] produced: the sweep summary,
+/// the optional rebalanced fleet plan, the optional adaptive summary, and
+/// this run's cache statistics. Serializes via [`FleetReport::to_json`].
+pub struct FleetReport {
+    /// The sweep summary when the adaptive stage was off (otherwise the
+    /// cold sweep lives in `adaptive.initial`; use [`FleetReport::summary`]).
+    sweep: Option<FleetSummary>,
+    /// Present when the adaptive stage ran.
+    pub adaptive: Option<AdaptiveSummary>,
+    /// Present when the rebalance stage ran.
+    pub plan: Option<FleetPlan>,
+    /// Cache statistics of this run (sweep + adaptation), as a delta —
+    /// the session's cache itself persists across runs.
+    pub cache: CacheStats,
+}
+
+impl FleetReport {
+    /// The profiling sweep every stage built on (the cold sweep when the
+    /// adaptive stage ran).
+    pub fn summary(&self) -> &FleetSummary {
+        self.sweep
+            .as_ref()
+            .unwrap_or_else(|| &self.adaptive.as_ref().expect("sweep or adaptive").initial)
+    }
+
+    /// Fraction of this run's probes served from the measurement cache.
+    pub fn hit_rate(&self) -> f64 {
+        self.cache.hit_rate()
+    }
+
+    /// Serialize the whole report as a [`Json`] tree (stable field names;
+    /// non-finite numbers become `null`). `streamprof fleet --out f.json`
+    /// writes exactly this.
+    pub fn to_json(&self) -> Json {
+        let mut root = vec![
+            ("version", Json::Num(1.0)),
+            ("pjrt_enabled", Json::Bool(crate::runtime::pjrt_enabled())),
+            ("summary", summary_json(self.summary())),
+            ("cache", stats_json(&self.cache)),
+        ];
+        if let Some(plan) = &self.plan {
+            root.push(("rebalance", fleet_plan_json(plan)));
+        }
+        if let Some(ad) = &self.adaptive {
+            root.push(("adaptive", adaptive_json(ad)));
+        }
+        Json::obj(root)
+    }
+}
+
+/// Hex fingerprint: `u64` does not survive a round-trip through JSON's
+/// f64 numbers, so fingerprints serialize as strings.
+fn fingerprint_json(model: &RuntimeModel) -> Json {
+    Json::str(&format!("{:016x}", model_fingerprint(model)))
+}
+
+fn model_json(m: &RuntimeModel) -> Json {
+    Json::obj([
+        ("kind", Json::str(m.kind.name())),
+        ("a", Json::num(m.a)),
+        ("b", Json::num(m.b)),
+        ("c", Json::num(m.c)),
+        ("d", Json::num(m.d)),
+        ("fingerprint", fingerprint_json(m)),
+    ])
+}
+
+fn stats_json(c: &CacheStats) -> Json {
+    Json::obj([
+        ("hits", Json::num(c.hits as f64)),
+        ("misses", Json::num(c.misses as f64)),
+        ("stale_hits_refused", Json::num(c.stale_hits_refused as f64)),
+        ("evictions", Json::num(c.evictions as f64)),
+        ("inserts", Json::num(c.inserts as f64)),
+        ("saved_wallclock", Json::num(c.saved_wallclock)),
+        ("hit_rate", Json::num(c.hit_rate())),
+    ])
+}
+
+fn node_plan_json(node: &str, plan: &CapacityPlan) -> Json {
+    let mut assignments = Vec::with_capacity(plan.assignments.len());
+    for a in &plan.assignments {
+        assignments.push(Json::obj([
+            ("name", Json::str(&a.name)),
+            ("limit", Json::num(a.adjustment.limit)),
+            ("predicted_runtime", Json::num(a.adjustment.predicted_runtime)),
+            ("guaranteed", Json::Bool(a.guaranteed)),
+        ]));
+    }
+    Json::obj([
+        ("node", Json::str(node)),
+        ("capacity", Json::num(plan.capacity)),
+        ("total_assigned", Json::num(plan.total_assigned)),
+        ("assignments", Json::Arr(assignments)),
+    ])
+}
+
+fn summary_json(s: &FleetSummary) -> Json {
+    let mut outcomes = Vec::with_capacity(s.outcomes.len());
+    for o in &s.outcomes {
+        outcomes.push(Json::obj([
+            ("name", Json::str(&o.name)),
+            ("label", Json::str(&o.label)),
+            ("node", Json::str(o.node.name)),
+            ("worker", Json::num(o.worker as f64)),
+            ("rate_hz", Json::num(o.rate_hz)),
+            ("priority", Json::num(o.priority as f64)),
+            ("points", Json::num(o.points as f64)),
+            ("refits", Json::num(o.refits as f64)),
+            ("executed_wallclock", Json::num(o.executed_wallclock())),
+            ("model", model_json(&o.model)),
+        ]));
+    }
+    let mut plans = Vec::with_capacity(s.plans.len());
+    for (n, p) in &s.plans {
+        plans.push(node_plan_json(n, p));
+    }
+    Json::obj([
+        ("outcomes", Json::Arr(outcomes)),
+        ("plans", Json::Arr(plans)),
+        ("cache", stats_json(&s.cache)),
+    ])
+}
+
+fn fleet_plan_json(p: &FleetPlan) -> Json {
+    let mut plans = Vec::with_capacity(p.plans.len());
+    for (n, pl) in &p.plans {
+        plans.push(node_plan_json(n, pl));
+    }
+    let mut migrations = Vec::with_capacity(p.migrations.len());
+    for m in &p.migrations {
+        migrations.push(Json::obj([
+            ("job", Json::str(&m.job)),
+            ("from", Json::str(m.from)),
+            ("to", Json::str(m.to)),
+            ("priority", Json::num(m.priority as f64)),
+            ("limit", Json::num(m.limit)),
+            ("slack_after", Json::num(m.slack_after)),
+        ]));
+    }
+    let metrics = Json::obj([
+        ("jobs", Json::num(p.metrics.jobs as f64)),
+        ("guaranteed_before", Json::num(p.metrics.guaranteed_before as f64)),
+        ("guaranteed_after", Json::num(p.metrics.guaranteed_after as f64)),
+        ("total_capacity", Json::num(p.metrics.total_capacity)),
+        ("total_assigned", Json::num(p.metrics.total_assigned)),
+        ("utilization", Json::num(p.metrics.utilization())),
+    ]);
+    Json::obj([
+        ("plans", Json::Arr(plans)),
+        ("migrations", Json::Arr(migrations)),
+        ("metrics", metrics),
+    ])
+}
+
+fn verdict_json(v: &DriftVerdict) -> Json {
+    let mut fields = vec![("kind", Json::str(v.name()))];
+    match v {
+        DriftVerdict::Stable => {}
+        DriftVerdict::RateShift { provisioned_hz, observed_hz } => {
+            fields.push(("provisioned_hz", Json::num(*provisioned_hz)));
+            fields.push(("observed_hz", Json::num(*observed_hz)));
+        }
+        DriftVerdict::ModelStale { rolling_smape } => {
+            fields.push(("rolling_smape", Json::num(*rolling_smape)));
+        }
+    }
+    Json::obj(fields)
+}
+
+fn adaptive_json(a: &AdaptiveSummary) -> Json {
+    let mut epochs = Vec::with_capacity(a.epochs.len());
+    for e in &a.epochs {
+        let mut verdicts = Vec::with_capacity(e.verdicts.len());
+        for (name, v) in &e.verdicts {
+            verdicts.push(Json::obj([
+                ("job", Json::str(name)),
+                ("verdict", verdict_json(v)),
+            ]));
+        }
+        let mut reprofiled = Vec::with_capacity(e.reprofiled.len());
+        for r in &e.reprofiled {
+            reprofiled.push(Json::obj([
+                ("name", Json::str(&r.name)),
+                ("verdict", verdict_json(&r.verdict)),
+                ("pre_smape", Json::num(r.pre_smape)),
+                ("post_smape", Json::num(r.post_smape)),
+                ("executed_probes", Json::num(r.executed_probes as f64)),
+            ]));
+        }
+        let mut fields = vec![
+            ("epoch", Json::num(e.epoch as f64)),
+            ("verdicts", Json::Arr(verdicts)),
+            ("reprofiled", Json::Arr(reprofiled)),
+        ];
+        if let Some(plan) = &e.plan {
+            fields.push(("plan", fleet_plan_json(plan)));
+        }
+        epochs.push(Json::obj(fields));
+    }
+    let mut jobs = Vec::with_capacity(a.jobs.len());
+    for j in &a.jobs {
+        jobs.push(Json::obj([
+            ("name", Json::str(&j.name)),
+            ("label", Json::str(&j.label)),
+            ("reprofiles", Json::num(j.reprofiles as f64)),
+            ("rate_hz", Json::num(j.rate_hz)),
+            ("limit", Json::num(j.limit)),
+            ("model", model_json(&j.model)),
+        ]));
+    }
+    Json::obj([
+        ("epochs", Json::Arr(epochs)),
+        ("jobs", Json::Arr(jobs)),
+        ("adaptive_probe_executions", Json::num(a.adaptive_probe_executions as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ProfilerConfig;
+    use crate::fleet::sim_fleet;
+    use crate::util::json;
+
+    fn quick_cfg() -> FleetConfig {
+        FleetConfig {
+            workers: 2,
+            rounds: 1,
+            profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
+            horizon: 500,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn builder_composes_jobs_and_stages() {
+        let session = FleetSession::builder()
+            .config(quick_cfg())
+            .jobs(sim_fleet(2, 3))
+            .job(sim_fleet(3, 3).pop().unwrap())
+            .rebalance(true)
+            .build();
+        assert_eq!(session.specs.len(), 3);
+        assert!(session.rebalance);
+        assert!(session.adaptive.is_none());
+        assert_eq!(session.config().workers, 2);
+    }
+
+    #[test]
+    fn session_runs_are_cache_replays() {
+        let session = FleetSession::builder()
+            .config(quick_cfg())
+            .jobs(sim_fleet(3, 5))
+            .build();
+        let first = session.run().unwrap();
+        assert_eq!(first.cache.hits, 0, "cold run, distinct labels, one round");
+        assert!(first.summary().executed_wallclock() > 0.0);
+        let second = session.run().unwrap();
+        assert_eq!(second.cache.misses, 0, "second run replays the session cache");
+        assert!((second.hit_rate() - 1.0).abs() < 1e-12);
+        assert_eq!(second.summary().executed_wallclock(), 0.0);
+    }
+
+    #[test]
+    fn rebalance_stage_matches_summary_rebalanced() {
+        let report = FleetSession::builder()
+            .config(quick_cfg())
+            .jobs(sim_fleet(6, 7))
+            .rebalance(true)
+            .run()
+            .unwrap();
+        let plan = report.plan.as_ref().expect("rebalance stage ran");
+        let again = report.summary().rebalanced();
+        assert_eq!(plan.metrics.jobs, again.metrics.jobs);
+        assert_eq!(plan.metrics.guaranteed_after, again.metrics.guaranteed_after);
+        assert_eq!(plan.migrations.len(), again.migrations.len());
+    }
+
+    #[test]
+    fn adaptive_stage_with_zero_epochs_composes_with_rebalance() {
+        // epochs = 0: the adaptive stage degenerates to the cold sweep, so
+        // the composed rebalance must equal the sweep-only rebalance.
+        let base = FleetSession::builder()
+            .config(quick_cfg())
+            .jobs(sim_fleet(4, 9))
+            .rebalance(true)
+            .run()
+            .unwrap();
+        let composed = FleetSession::builder()
+            .config(quick_cfg())
+            .jobs(sim_fleet(4, 9))
+            .rebalance(true)
+            .adaptive(AdaptiveConfig { epochs: 0, ..Default::default() })
+            .run()
+            .unwrap();
+        let ad = composed.adaptive.as_ref().expect("adaptive stage ran");
+        assert!(ad.epochs.is_empty());
+        let (a, b) = (base.plan.unwrap(), composed.plan.unwrap());
+        assert_eq!(a.metrics.guaranteed_after, b.metrics.guaranteed_after);
+        assert_eq!(a.guaranteed_jobs(), b.guaranteed_jobs());
+    }
+
+    #[test]
+    fn report_json_parses_back() {
+        let report = FleetSession::builder()
+            .config(quick_cfg())
+            .jobs(sim_fleet(3, 11))
+            .rebalance(true)
+            .adaptive(AdaptiveConfig { epochs: 1, ..Default::default() })
+            .run()
+            .unwrap();
+        let tree = report.to_json();
+        let text = json::to_string(&tree);
+        let parsed = json::parse(&text).expect("report JSON must parse back");
+        assert_eq!(parsed, tree, "round-trip preserves the tree");
+        assert_eq!(parsed.get("version").unwrap().as_usize(), Some(1));
+        let outcomes = parsed
+            .get("summary")
+            .unwrap()
+            .get("outcomes")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        assert_eq!(outcomes.len(), 3);
+        assert!(parsed.get("rebalance").is_some());
+        assert!(parsed.get("adaptive").is_some());
+        // Fingerprints are strings (u64 does not survive f64 JSON numbers).
+        let fp = outcomes[0]
+            .get("model")
+            .unwrap()
+            .get("fingerprint")
+            .unwrap()
+            .as_str()
+            .unwrap();
+        assert_eq!(fp.len(), 16);
+    }
+}

@@ -9,13 +9,14 @@
 //! [`IncrementalModel`], which refits warm from the previous parameters
 //! instead of from scratch.
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::backend::{Measurement, ProfilingBackend, SimulatedBackend};
+use crate::coordinator::backend::{BackendFactory, Measurement, ProfilingBackend};
 use crate::coordinator::{Profiler, SessionResult};
 use crate::earlystop::EarlyStopConfig;
 use crate::fit::{ProfilePoint, RuntimeModel};
-use crate::simulator::SimulatedJob;
 use crate::strategies::{self, grid_bucket};
 
 use super::cache::{CachedBackend, MeasurementCache};
@@ -81,10 +82,11 @@ pub struct JobOutcome {
     /// stable order after the pool finishes out of order).
     pub index: usize,
     pub name: String,
-    /// Cache label: `node/algo`.
+    /// Measurement-cache label reported by the job's [`BackendFactory`]
+    /// (e.g. `"pi4/arima"`, `"pjrt/lstm"`).
     pub label: String,
+    /// Placement home the fitted model was registered on.
     pub node: &'static crate::simulator::NodeSpec,
-    pub algo: crate::simulator::Algo,
     /// One session per profiling round, in order.
     pub rounds: Vec<SessionResult>,
     /// Incrementally refit model over all rounds.
@@ -154,6 +156,44 @@ impl<B: ProfilingBackend> ProfilingBackend for ScaledBackend<B> {
     }
 }
 
+/// [`BackendFactory`] decorator scaling every backend the inner factory
+/// builds (probes included) — how a uniformly-slower variant of a job
+/// class (heavier input regime, model-version upgrade) plugs into the
+/// fleet pipeline without a dedicated backend type.
+///
+/// The label is suffixed with the scale: a scaled variant does **not**
+/// describe runtime behaviour interchangeable with its base class, so it
+/// must not share the base class's cache entries (the factory contract).
+pub struct ScaledBackendFactory {
+    inner: Arc<dyn BackendFactory>,
+    scale: f64,
+}
+
+impl ScaledBackendFactory {
+    pub fn new(inner: Arc<dyn BackendFactory>, scale: f64) -> Self {
+        debug_assert!(scale > 0.0);
+        Self { inner, scale }
+    }
+
+    pub fn shared(inner: Arc<dyn BackendFactory>, scale: f64) -> Arc<dyn BackendFactory> {
+        Arc::new(Self::new(inner, scale))
+    }
+}
+
+impl BackendFactory for ScaledBackendFactory {
+    fn build(&self) -> Result<Box<dyn ProfilingBackend>> {
+        Ok(Box::new(ScaledBackend::new(self.inner.build()?, self.scale)))
+    }
+
+    fn probe(&self) -> Result<Box<dyn ProfilingBackend>> {
+        Ok(Box::new(ScaledBackend::new(self.inner.probe()?, self.scale)))
+    }
+
+    fn label(&self) -> String {
+        format!("{}@x{}", self.inner.label(), self.scale)
+    }
+}
+
 /// Options for a (re-)profiling pass beyond the cold-start defaults; the
 /// adaptive loop's seam into [`profile_job_with`].
 #[derive(Clone, Debug, Default)]
@@ -207,12 +247,11 @@ pub fn profile_job_with(
     };
     let mut rounds = Vec::with_capacity(n_rounds);
     for _round in 0..n_rounds {
-        // Same seed every round: the job's runtime distribution does not
-        // change between rounds, and a deterministic replay is exactly what
-        // lets the cache absorb the whole re-profile. (Scaling by 1.0 is
-        // bit-exact, so the unshifted path is unchanged.)
-        let job = SimulatedJob::new(spec.node, spec.algo, spec.seed);
-        let backend = ScaledBackend::new(SimulatedBackend::new(job), scale);
+        // A fresh factory build every round: the factory contract makes
+        // builds deterministic replays, which is exactly what lets the
+        // cache absorb the whole re-profile. (Scaling by 1.0 is bit-exact,
+        // so the unshifted path is unchanged.)
+        let backend = ScaledBackend::new(spec.backend.build()?, scale);
         let mut cached = CachedBackend::new(backend, cache, label.clone(), cfg.profiler.delta);
         let strategy = strategies::by_name(&cfg.strategy, spec.seed)
             .ok_or_else(|| anyhow!("unknown strategy '{}'", cfg.strategy))?;
@@ -234,7 +273,6 @@ pub fn profile_job_with(
         name: spec.name.clone(),
         label,
         node: spec.node,
-        algo: spec.algo,
         model: incremental.model().clone(),
         points: incremental.points().len(),
         refits: incremental.refits(),
@@ -248,10 +286,25 @@ pub fn profile_job_with(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::simulator::{node, Algo};
+    use crate::coordinator::backend::{SimBackendFactory, SimulatedBackend};
+    use crate::simulator::{node, Algo, SimulatedJob};
 
     fn meas(limit: f64, rt: f64) -> Measurement {
         Measurement { limit, mean_runtime: rt, samples: 1000, wallclock: rt * 1000.0 }
+    }
+
+    #[test]
+    fn scaled_factory_wraps_builds_and_probes() {
+        let inner = SimBackendFactory::shared(node("pi4").unwrap(), Algo::Arima, 3);
+        let base = inner.build().unwrap().measure(0.5, 1000);
+        let scaled = ScaledBackendFactory::shared(inner, 3.0);
+        // The label must NOT alias the base class: scaled measurements in
+        // the shared cache would otherwise poison the unscaled replicas.
+        assert_eq!(scaled.label(), "pi4/arima@x3");
+        let m = scaled.build().unwrap().measure(0.5, 1000);
+        assert!((m.mean_runtime - 3.0 * base.mean_runtime).abs() < 1e-12);
+        let p = scaled.probe().unwrap().measure(0.5, 1000);
+        assert_ne!(p.mean_runtime.to_bits(), m.mean_runtime.to_bits(), "probe draws fresh");
     }
 
     #[test]

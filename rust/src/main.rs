@@ -10,6 +10,8 @@
 //!
 //! Run `streamprof` with no arguments for usage.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Context, Result};
 
 use streamprof::coordinator::{
@@ -18,14 +20,15 @@ use streamprof::coordinator::{
 };
 use streamprof::earlystop::EarlyStopConfig;
 use streamprof::fleet::{
-    sim_fleet, AdaptiveConfig, DriftConfig, FleetConfig, FleetEngine, FleetJobSpec, RuntimeShift,
+    sim_fleet, AdaptiveConfig, DriftConfig, FleetConfig, FleetJobSpec, FleetReport,
+    FleetSession, MeasurementCache, RuntimeShift,
 };
 use streamprof::repro;
 use streamprof::runtime::{artifacts_available, default_artifacts_dir, Engine};
 use streamprof::simulator::{node, Algo, SimulatedJob, NODES};
 use streamprof::strategies;
 use streamprof::stream::{ArrivalProcess, SensorStream};
-use streamprof::util::{logging, Args, CsvWriter, Table};
+use streamprof::util::{json, logging, Args, CsvWriter, Table};
 use streamprof::workloads::PjrtJob;
 
 fn main() {
@@ -71,6 +74,7 @@ fn print_help() {
          \u{20}           [--drift-threshold 0.25] [--rate-threshold 0.25]\n\
          \u{20}           [--shift-at 1500] [--shift-rate 8.0] [--shift-jobs 2]\n\
          \u{20}           [--stale-jobs 1] [--stale-scale 3.0]\n\
+         \u{20}           [--out report.json] [--cache-file cache.json]\n\
          \u{20} repro     <table1|fig2|fig3|fig4|fig5|fig6|fig7|all> [--full]\n\
          \u{20} artifacts                     AOT artifact status\n"
     );
@@ -252,18 +256,96 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     };
     let workers = cfg.workers;
     let rounds = cfg.rounds;
-    let engine = FleetEngine::new(cfg);
-    let specs = sim_fleet(n_jobs, args.opt_u64("seed", 7));
-
-    if args.flag("adaptive") {
-        return cmd_fleet_adaptive(args, &engine, specs);
+    let mut specs = sim_fleet(n_jobs, args.opt_u64("seed", 7));
+    let adaptive = args.flag("adaptive");
+    if adaptive {
+        inject_drift(args, &mut specs);
     }
-    let summary = engine.run(specs)?;
 
+    // One shared cache for the session, optionally restored from (and
+    // saved back to) --cache-file.
+    let cache = Arc::new(MeasurementCache::new());
+    let cache_file = args.opt("cache-file").map(str::to_string);
+    if let Some(path) = &cache_file {
+        if std::path::Path::new(path).exists() {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading cache file {path}"))?;
+            let snap = json::parse(&text)
+                .map_err(anyhow::Error::msg)
+                .with_context(|| format!("parsing cache file {path}"))?;
+            let n = cache
+                .restore(&snap)
+                .with_context(|| format!("restoring cache file {path}"))?;
+            println!("cache: restored {n} measurements from {path}");
+        }
+    }
+
+    let mut builder = FleetSession::builder()
+        .config(cfg)
+        .jobs(specs)
+        .rebalance(args.flag("rebalance"))
+        .cache(cache.clone());
+    if adaptive {
+        builder = builder.adaptive(AdaptiveConfig {
+            epochs: args.opt_usize("epochs", 3),
+            epoch_ticks: args.opt_usize("epoch-ticks", 500),
+            drift: DriftConfig {
+                smape_threshold: args.opt_f64("drift-threshold", 0.25),
+                rate_threshold: args.opt_f64("rate-threshold", 0.25),
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+    }
+    let report = builder.run()?;
+
+    if let Some(summary) = &report.adaptive {
+        print_fleet_adaptive(summary);
+    } else {
+        print_fleet_sweep(&report, n_jobs, workers, rounds);
+    }
+    if let Some(fleet_plan) = &report.plan {
+        print_fleet_plan(fleet_plan);
+    }
+
+    if let Some(out) = args.opt("out") {
+        std::fs::write(out, json::to_string(&report.to_json()))
+            .with_context(|| format!("writing report to {out}"))?;
+        println!("wrote {out}");
+    }
+    if let Some(path) = &cache_file {
+        std::fs::write(path, json::to_string(&cache.snapshot()))
+            .with_context(|| format!("writing cache file {path}"))?;
+        println!("cache: saved {} measurements to {path}", cache.len());
+    }
+    Ok(())
+}
+
+/// `--adaptive` scenario knobs: shift some streams' rates and some jobs'
+/// runtime behaviour at a virtual tick.
+fn inject_drift(args: &Args, specs: &mut [FleetJobSpec]) {
+    let shift_at = args.opt_usize("shift-at", 1500);
+    let shift_rate = args.opt_f64("shift-rate", 8.0);
+    let shift_jobs = args.opt_usize("shift-jobs", 2).min(specs.len());
+    let stale_jobs = args.opt_usize("stale-jobs", 1).min(specs.len() - shift_jobs);
+    let stale_scale = args.opt_f64("stale-scale", 3.0);
+    for s in specs.iter_mut().take(shift_jobs) {
+        s.arrivals = s
+            .arrivals
+            .clone()
+            .with_shift_at(shift_at, ArrivalProcess::Fixed(shift_rate));
+    }
+    for s in specs.iter_mut().skip(shift_jobs).take(stale_jobs) {
+        s.runtime_shift = Some(RuntimeShift { at_tick: shift_at, scale: stale_scale });
+    }
+}
+
+fn print_fleet_sweep(report: &FleetReport, n_jobs: usize, workers: usize, rounds: usize) {
+    let summary = report.summary();
     let mut table = Table::new(&[
         "job",
         "device",
-        "algo",
+        "class",
         "worker",
         "probes",
         "refits",
@@ -283,7 +365,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         table.rowd(&[
             &o.name,
             &o.node.name,
-            &o.algo.name(),
+            &o.label,
             &o.worker,
             &o.points,
             &o.refits,
@@ -309,84 +391,52 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     }
     println!("{}", plans.render());
 
-    let stats = summary.cache;
+    let stats = report.cache;
     println!(
         "measurement cache: {} hits / {} misses ({:.0}% hit rate), \
          {:.0}s of profiling wallclock saved, {:.0}s executed",
         stats.hits,
         stats.misses,
-        100.0 * summary.hit_rate(),
+        100.0 * report.hit_rate(),
         stats.saved_wallclock,
         summary.executed_wallclock()
     );
+}
 
-    if args.flag("rebalance") {
-        let fleet_plan = summary.rebalanced();
-        let mut moves = Table::new(&["job", "prio", "from", "to", "limit", "slack after"])
-            .with_title("Shed-job migrations (cross-node placement via translated models)");
-        for m in &fleet_plan.migrations {
-            moves.rowd(&[
-                &m.job,
-                &m.priority,
-                &m.from,
-                &m.to,
-                &format!("{:.1}", m.limit),
-                &format!("{:.1}", m.slack_after),
-            ]);
-        }
-        if fleet_plan.migrations.is_empty() {
-            println!("rebalance: no feasible migration (fleet already balanced)");
-        } else {
-            println!("{}", moves.render());
-        }
-        let fm = &fleet_plan.metrics;
-        println!(
-            "fleet plan: {}/{} jobs guaranteed (was {} before migration), \
-             {:.1}/{:.1} CPUs assigned ({:.0}% utilization)",
-            fm.guaranteed_after,
-            fm.jobs,
-            fm.guaranteed_before,
-            fm.total_assigned,
-            fm.total_capacity,
-            100.0 * fm.utilization()
-        );
+fn print_fleet_plan(fleet_plan: &streamprof::fleet::FleetPlan) {
+    let mut moves = Table::new(&["job", "prio", "from", "to", "limit", "slack after"])
+        .with_title("Shed-job migrations (cross-node placement via translated models)");
+    for m in &fleet_plan.migrations {
+        moves.rowd(&[
+            &m.job,
+            &m.priority,
+            &m.from,
+            &m.to,
+            &format!("{:.1}", m.limit),
+            &format!("{:.1}", m.slack_after),
+        ]);
     }
-    Ok(())
+    if fleet_plan.migrations.is_empty() {
+        println!("rebalance: no feasible migration (fleet already balanced)");
+    } else {
+        println!("{}", moves.render());
+    }
+    let fm = &fleet_plan.metrics;
+    println!(
+        "fleet plan: {}/{} jobs guaranteed (was {} before migration), \
+         {:.1}/{:.1} CPUs assigned ({:.0}% utilization)",
+        fm.guaranteed_after,
+        fm.jobs,
+        fm.guaranteed_before,
+        fm.total_assigned,
+        fm.total_capacity,
+        100.0 * fm.utilization()
+    );
 }
 
 /// `streamprof fleet --adaptive`: drift-aware continuous profiling with
 /// injected rate and runtime shifts.
-fn cmd_fleet_adaptive(
-    args: &Args,
-    engine: &FleetEngine,
-    mut specs: Vec<FleetJobSpec>,
-) -> Result<()> {
-    let shift_at = args.opt_usize("shift-at", 1500);
-    let shift_rate = args.opt_f64("shift-rate", 8.0);
-    let shift_jobs = args.opt_usize("shift-jobs", 2).min(specs.len());
-    let stale_jobs = args.opt_usize("stale-jobs", 1).min(specs.len() - shift_jobs);
-    let stale_scale = args.opt_f64("stale-scale", 3.0);
-    for s in specs.iter_mut().take(shift_jobs) {
-        s.arrivals = s
-            .arrivals
-            .clone()
-            .with_shift_at(shift_at, ArrivalProcess::Fixed(shift_rate));
-    }
-    for s in specs.iter_mut().skip(shift_jobs).take(stale_jobs) {
-        s.runtime_shift = Some(RuntimeShift { at_tick: shift_at, scale: stale_scale });
-    }
-    let acfg = AdaptiveConfig {
-        epochs: args.opt_usize("epochs", 3),
-        epoch_ticks: args.opt_usize("epoch-ticks", 500),
-        drift: DriftConfig {
-            smape_threshold: args.opt_f64("drift-threshold", 0.25),
-            rate_threshold: args.opt_f64("rate-threshold", 0.25),
-            ..Default::default()
-        },
-        ..Default::default()
-    };
-    let summary = engine.run_adaptive(specs, &acfg)?;
-
+fn print_fleet_adaptive(summary: &streamprof::fleet::AdaptiveSummary) {
     for e in &summary.epochs {
         let mut table = Table::new(&["job", "verdict", "reprofiled", "SMAPE pre -> post"])
             .with_title(&format!("Adaptive epoch {}", e.epoch));
@@ -438,7 +488,6 @@ fn cmd_fleet_adaptive(
         summary.jobs.len(),
         if reprofiled.is_empty() { "-".to_string() } else { reprofiled.join(", ") }
     );
-    Ok(())
 }
 
 fn cmd_repro(args: &Args) -> Result<()> {

@@ -37,3 +37,11 @@ pub fn default_artifacts_dir() -> PathBuf {
 pub fn artifacts_available() -> bool {
     default_artifacts_dir().join("manifest.json").exists()
 }
+
+/// True when the crate was built with the real PJRT engine
+/// (`--features pjrt`); false means [`Engine::new`] is the stub that
+/// fails with an actionable message. Recorded in fleet reports so a
+/// serialized run states which execution substrate produced it.
+pub const fn pjrt_enabled() -> bool {
+    cfg!(feature = "pjrt")
+}

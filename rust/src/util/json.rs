@@ -20,6 +20,28 @@ pub enum Json {
 }
 
 impl Json {
+    /// Number constructor for emitters: non-finite values (which JSON
+    /// cannot represent) become `null` instead of producing an unparsable
+    /// document.
+    pub fn num(v: f64) -> Json {
+        if v.is_finite() {
+            Json::Num(v)
+        } else {
+            Json::Null
+        }
+    }
+
+    /// String constructor (owning).
+    pub fn str(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+
+    /// Object constructor from `(key, value)` pairs (keys sort
+    /// lexicographically in the map; duplicate keys keep the last value).
+    pub fn obj(pairs: impl IntoIterator<Item = (&'static str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -247,6 +269,7 @@ fn write_value(v: &Json, out: &mut String) {
     match v {
         Json::Null => out.push_str("null"),
         Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Json::Num(n) if !n.is_finite() => out.push_str("null"),
         Json::Num(n) => {
             if n.fract() == 0.0 && n.abs() < 1e15 {
                 let _ = write!(out, "{}", *n as i64);
@@ -351,5 +374,40 @@ mod tests {
     fn unicode_passthrough() {
         let v = parse("\"héllo→\"").unwrap();
         assert_eq!(v.as_str(), Some("héllo→"));
+    }
+
+    #[test]
+    fn constructors_build_parseable_trees() {
+        let v = Json::obj([
+            ("name", Json::str("cam-01")),
+            ("rate", Json::num(2.5)),
+            ("bad", Json::num(f64::NAN)),
+        ]);
+        assert_eq!(v.get("bad"), Some(&Json::Null), "non-finite maps to null");
+        let text = to_string(&v);
+        let back = parse(&text).unwrap();
+        assert_eq!(back.get("name").unwrap().as_str(), Some("cam-01"));
+        assert!((back.get("rate").unwrap().as_f64().unwrap() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn writer_never_emits_non_finite_numbers() {
+        // A raw Json::Num(NaN/inf) (bypassing Json::num) must still write
+        // valid JSON.
+        let v = Json::Arr(vec![Json::Num(f64::NAN), Json::Num(f64::INFINITY), Json::Num(1.0)]);
+        let text = to_string(&v);
+        assert_eq!(text, "[null,null,1]");
+        assert!(parse(&text).is_ok());
+    }
+
+    #[test]
+    fn float_roundtrip_is_bit_exact() {
+        // Cache persistence relies on measurements surviving the snapshot:
+        // Display for f64 prints a shortest-roundtrip representation.
+        for &x in &[0.1 + 0.2, 1.0 / 3.0, 6.02214076e23, 5e-324, 0.062_537_128_4] {
+            let text = to_string(&Json::Num(x));
+            let back = parse(&text).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x} -> {text}");
+        }
     }
 }

@@ -10,8 +10,8 @@
 
 use streamprof::coordinator::ProfilerConfig;
 use streamprof::fleet::{
-    model_fingerprint, sim_fleet, AdaptiveConfig, DriftVerdict, FleetConfig, FleetEngine,
-    FleetJobSpec, RuntimeShift,
+    model_fingerprint, sim_fleet, AdaptiveConfig, AdaptiveSummary, DriftVerdict, FleetConfig,
+    FleetJobSpec, FleetSession, RuntimeShift,
 };
 use streamprof::simulator::{node, Algo};
 use streamprof::stream::ArrivalProcess;
@@ -25,6 +25,19 @@ fn quiet_cfg() -> FleetConfig {
         profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
         horizon: 1000,
     }
+}
+
+/// Run the adaptive session pipeline and unwrap its summary.
+fn run_adaptive(
+    specs: Vec<FleetJobSpec>,
+    acfg: &AdaptiveConfig,
+) -> anyhow::Result<AdaptiveSummary> {
+    let report = FleetSession::builder()
+        .config(quiet_cfg())
+        .jobs(specs)
+        .adaptive(acfg.clone())
+        .run()?;
+    Ok(report.adaptive.expect("adaptive stage ran"))
 }
 
 /// Four jobs with distinct cache labels, all on fixed 2 Hz streams.
@@ -48,9 +61,8 @@ fn rate_shift_reprofiles_exactly_the_shifted_jobs() {
         specs[i].arrivals = ArrivalProcess::Fixed(2.0)
             .with_shift_at(1500, ArrivalProcess::Fixed(8.0));
     }
-    let engine = FleetEngine::new(quiet_cfg());
     let acfg = AdaptiveConfig::default();
-    let summary = engine.run_adaptive(specs, &acfg).expect("adaptive run");
+    let summary = run_adaptive(specs, &acfg).expect("adaptive run");
 
     assert_eq!(summary.epochs.len(), 3);
     // Epoch 1 ends at tick 1500: still the old regime, nothing fires.
@@ -134,9 +146,8 @@ fn model_stale_reprofiles_ages_the_cache_and_recovers_smape() {
     // SMAPE back under the threshold — touching nobody else.
     let mut specs = quad_fleet();
     specs[2].runtime_shift = Some(RuntimeShift { at_tick: 1500, scale: 3.0 });
-    let engine = FleetEngine::new(quiet_cfg());
     let acfg = AdaptiveConfig::default();
-    let summary = engine.run_adaptive(specs, &acfg).expect("adaptive run");
+    let summary = run_adaptive(specs, &acfg).expect("adaptive run");
 
     assert!(summary.epochs[0].reprofiled.is_empty());
     let e2 = &summary.epochs[1];
@@ -203,10 +214,13 @@ fn zero_drift_is_a_byte_identical_noop() {
     // re-profiles, execute zero adaptation probes, and report a cold
     // sweep byte-identical to a plain `run` of the same specs.
     let specs = sim_fleet(6, 5);
-    let plain = FleetEngine::new(quiet_cfg()).run(specs.clone()).expect("plain run");
-    let summary = FleetEngine::new(quiet_cfg())
-        .run_adaptive(specs, &AdaptiveConfig::default())
-        .expect("adaptive run");
+    let plain_report = FleetSession::builder()
+        .config(quiet_cfg())
+        .jobs(specs.clone())
+        .run()
+        .expect("plain run");
+    let plain = plain_report.summary();
+    let summary = run_adaptive(specs, &AdaptiveConfig::default()).expect("adaptive run");
 
     assert!(summary.reprofiled_names().is_empty(), "zero re-profiles");
     assert_eq!(summary.adaptive_probe_executions, 0, "zero probes executed");
@@ -277,9 +291,8 @@ fn sub_period_epochs_do_not_alias_varying_troughs_into_rate_shifts() {
     for s in specs.iter_mut() {
         s.arrivals = ArrivalProcess::Varying { lo: 1.0, hi: 6.0, period: 400.0 };
     }
-    let engine = FleetEngine::new(quiet_cfg());
     let acfg = AdaptiveConfig { epochs: 5, epoch_ticks: 100, ..AdaptiveConfig::default() };
-    let summary = engine.run_adaptive(specs, &acfg).expect("adaptive run");
+    let summary = run_adaptive(specs, &acfg).expect("adaptive run");
     assert!(summary.reprofiled_names().is_empty(), "no drift injected, none may fire");
     for e in &summary.epochs {
         assert!(
@@ -301,9 +314,7 @@ fn mismatched_runtime_shift_within_a_shared_label_is_rejected() {
         FleetJobSpec::simulated("twin-b", pi4, Algo::Arima, 7),
     ];
     specs[0].runtime_shift = Some(RuntimeShift { at_tick: 1500, scale: 3.0 });
-    let engine = FleetEngine::new(quiet_cfg());
-    let err = engine
-        .run_adaptive(specs, &AdaptiveConfig::default())
+    let err = run_adaptive(specs, &AdaptiveConfig::default())
         .expect_err("mismatched class drift must be rejected");
     assert!(err.to_string().contains("share cache label"), "{err:#}");
 }
@@ -331,10 +342,7 @@ fn rate_shift_can_downgrade_and_migrate_via_rebalance() {
         .collect();
     specs.push(FleetJobSpec::simulated("anchor", wally, Algo::Birch, 305));
 
-    let engine = FleetEngine::new(quiet_cfg());
-    let summary = engine
-        .run_adaptive(specs, &AdaptiveConfig::default())
-        .expect("adaptive run");
+    let summary = run_adaptive(specs, &AdaptiveConfig::default()).expect("adaptive run");
     let e2 = &summary.epochs[1];
     assert_eq!(e2.reprofiled.len(), 4, "all four shifted streams fire");
     let plan = e2.plan.as_ref().expect("drift epoch re-plans");

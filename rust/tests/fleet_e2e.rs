@@ -1,13 +1,23 @@
-//! End-to-end fleet engine run: N simulated jobs sharded over a worker
-//! pool, probing through the shared measurement cache, with incremental
-//! refits feeding per-node capacity plans. Mirrors the acceptance bar for
-//! the fleet subsystem: ≥ 8 jobs on a 4-worker pool must finish with a
-//! ≥ 30% measurement-cache hit rate.
+//! End-to-end fleet session run: N jobs sharded over a worker pool,
+//! probing through the shared measurement cache, with incremental refits
+//! feeding per-node capacity plans. Mirrors the acceptance bar for the
+//! fleet subsystem: ≥ 8 jobs on a 4-worker pool must finish with a ≥ 30%
+//! measurement-cache hit rate — plus the api-redesign guards: the
+//! session's default pipeline is byte-identical to the deprecated
+//! `FleetEngine::run`, and a non-simulator `BackendFactory` plugs into
+//! the same builder.
+
+use std::sync::Arc;
 
 use streamprof::coordinator::ProfilerConfig;
-use streamprof::fleet::{sim_fleet, FleetConfig, FleetEngine, FleetJobSpec};
+use streamprof::fleet::{
+    model_fingerprint, sim_fleet, EngineBackendFactory, FleetConfig, FleetEngine, FleetJobSpec,
+    FleetSession, MeasurementCache,
+};
+use streamprof::runtime::{artifacts_available, default_artifacts_dir, pjrt_enabled};
 use streamprof::simulator::{node, Algo};
 use streamprof::stream::ArrivalProcess;
+use streamprof::util::json;
 
 fn quick_cfg(workers: usize, rounds: usize) -> FleetConfig {
     FleetConfig {
@@ -21,8 +31,12 @@ fn quick_cfg(workers: usize, rounds: usize) -> FleetConfig {
 
 #[test]
 fn eight_jobs_on_four_workers_hit_the_cache() {
-    let engine = FleetEngine::new(quick_cfg(4, 2));
-    let summary = engine.run(sim_fleet(8, 7)).expect("fleet run");
+    let report = FleetSession::builder()
+        .config(quick_cfg(4, 2))
+        .jobs(sim_fleet(8, 7))
+        .run()
+        .expect("fleet run");
+    let summary = report.summary();
     assert_eq!(summary.outcomes.len(), 8);
     // Submission order restored after the pool finishes out of order.
     for (i, o) in summary.outcomes.iter().enumerate() {
@@ -41,11 +55,112 @@ fn eight_jobs_on_four_workers_hit_the_cache() {
 }
 
 #[test]
+#[allow(deprecated)]
+fn session_default_pipeline_is_byte_identical_to_engine_run() {
+    // The api-redesign acceptance guard: collapsing run/run_rebalanced/
+    // run_adaptive into the session pipeline must not move any numbers.
+    let legacy = FleetEngine::new(quick_cfg(4, 2)).run(sim_fleet(8, 7)).expect("legacy run");
+    let report = FleetSession::builder()
+        .config(quick_cfg(4, 2))
+        .jobs(sim_fleet(8, 7))
+        .run()
+        .expect("session run");
+    let new = report.summary();
+
+    assert_eq!(legacy.outcomes.len(), new.outcomes.len());
+    for (a, b) in legacy.outcomes.iter().zip(&new.outcomes) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.label, b.label);
+        assert_eq!(
+            model_fingerprint(&a.model),
+            model_fingerprint(&b.model),
+            "{}: fit fingerprint moved",
+            a.name
+        );
+        assert_eq!(a.rate_hz.to_bits(), b.rate_hz.to_bits());
+        assert_eq!(a.points, b.points);
+        assert_eq!(a.refits, b.refits);
+        assert_eq!(a.rounds.len(), b.rounds.len());
+        for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+            assert_eq!(ra.steps.len(), rb.steps.len());
+            assert_eq!(ra.total_time.to_bits(), rb.total_time.to_bits());
+        }
+    }
+    assert_eq!(legacy.plans.len(), new.plans.len());
+    for ((na, pa), (nb, pb)) in legacy.plans.iter().zip(&new.plans) {
+        assert_eq!(na, nb);
+        assert_eq!(pa.assignments.len(), pb.assignments.len());
+        for (x, y) in pa.assignments.iter().zip(&pb.assignments) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.guaranteed, y.guaranteed);
+            assert_eq!(x.adjustment.limit.to_bits(), y.adjustment.limit.to_bits());
+        }
+    }
+    assert_eq!(legacy.cache.hits, report.cache.hits);
+    assert_eq!(legacy.cache.misses, report.cache.misses);
+    assert_eq!(legacy.cache.inserts, report.cache.inserts);
+    assert_eq!(legacy.cache.stale_hits_refused, report.cache.stale_hits_refused);
+    assert_eq!(
+        legacy.cache.saved_wallclock.to_bits(),
+        report.cache.saved_wallclock.to_bits()
+    );
+}
+
+#[test]
+fn stub_engine_backend_plugs_into_the_session() {
+    // The builder accepts a PJRT backend factory with no simulator types
+    // at the call site (the placement home is a *name*). Without the
+    // `pjrt` feature the stub engine refuses to build, and that error
+    // must surface through the session — proving the pipeline reached
+    // the backend without assuming the simulator.
+    let factory = EngineBackendFactory::shared(default_artifacts_dir(), "arima", 1, 4.0);
+    let spec = FleetJobSpec::with_backend("pjrt-arima", "wally", factory, 1).expect("home node");
+    assert_eq!(spec.label(), "pjrt/arima");
+    let result = FleetSession::builder().config(quick_cfg(1, 1)).job(spec).run();
+    if pjrt_enabled() && artifacts_available() {
+        let report = result.expect("real PJRT fleet run");
+        assert_eq!(report.summary().outcomes[0].label, "pjrt/arima");
+    } else {
+        let err = result.expect_err("stub engine (or missing artifacts) cannot execute");
+        let text = format!("{err:#}");
+        assert!(text.contains("pjrt-arima"), "failure names the job: {text}");
+    }
+}
+
+#[test]
+#[cfg_attr(not(feature = "pjrt"), ignore = "requires PJRT artifacts")]
+fn pjrt_fleet_session_profiles_real_artifacts() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let factory = EngineBackendFactory::shared(default_artifacts_dir(), "arima", 1, 2.0);
+    let spec = FleetJobSpec::with_backend("pjrt-arima", "wally", factory, 1).expect("home node");
+    let cfg = FleetConfig {
+        workers: 1,
+        rounds: 2,
+        profiler: ProfilerConfig { samples: 40, n_initial: 2, max_steps: 4, ..Default::default() },
+        horizon: 100,
+        ..Default::default()
+    };
+    let report = FleetSession::builder().config(cfg).job(spec).run().expect("pjrt fleet run");
+    let summary = report.summary();
+    assert_eq!(summary.outcomes.len(), 1);
+    assert_eq!(summary.outcomes[0].label, "pjrt/arima");
+    assert!(summary.outcomes[0].model.eval(1.0).is_finite());
+    assert!(report.cache.inserts > 0, "real probes populate the shared cache");
+}
+
+#[test]
 fn work_queue_drains_with_more_jobs_than_workers() {
     // 12 jobs on 3 workers: every job must be profiled exactly once and
     // the worker ids span the pool.
-    let engine = FleetEngine::new(quick_cfg(3, 1));
-    let summary = engine.run(sim_fleet(12, 3)).expect("fleet run");
+    let report = FleetSession::builder()
+        .config(quick_cfg(3, 1))
+        .jobs(sim_fleet(12, 3))
+        .run()
+        .expect("fleet run");
+    let summary = report.summary();
     assert_eq!(summary.outcomes.len(), 12);
     assert!(summary.outcomes.iter().all(|o| o.worker < 3));
     let mut names: Vec<&str> = summary.outcomes.iter().map(|o| o.name.as_str()).collect();
@@ -59,13 +174,14 @@ fn replicas_of_one_job_class_share_cache_entries() {
     // Two replicas of the same (device, algo) class: the second replica's
     // probes reuse the first one's measurements even within a single
     // round, because they share the cache label.
-    let engine = FleetEngine::new(FleetConfig { workers: 1, rounds: 1, ..quick_cfg(1, 1) });
     let pi4 = node("pi4").unwrap();
-    let specs = vec![
-        FleetJobSpec::simulated("cam-a", pi4, Algo::Lstm, 5),
-        FleetJobSpec::simulated("cam-b", pi4, Algo::Lstm, 5),
-    ];
-    let summary = engine.run(specs).expect("fleet run");
+    let report = FleetSession::builder()
+        .config(quick_cfg(1, 1))
+        .job(FleetJobSpec::simulated("cam-a", pi4, Algo::Lstm, 5))
+        .job(FleetJobSpec::simulated("cam-b", pi4, Algo::Lstm, 5))
+        .run()
+        .expect("fleet run");
+    let summary = report.summary();
     let stats = summary.cache;
     assert!(stats.hits > 0, "replica probes must hit the shared cache");
     // Both replicas end with usable models and assignments on the node.
@@ -77,8 +193,12 @@ fn replicas_of_one_job_class_share_cache_entries() {
 
 #[test]
 fn capacity_plans_cover_every_job_and_respect_capacity() {
-    let engine = FleetEngine::new(quick_cfg(4, 2));
-    let summary = engine.run(sim_fleet(10, 11)).expect("fleet run");
+    let report = FleetSession::builder()
+        .config(quick_cfg(4, 2))
+        .jobs(sim_fleet(10, 11))
+        .run()
+        .expect("fleet run");
+    let summary = report.summary();
     let planned: usize = summary.plans.iter().map(|(_, p)| p.assignments.len()).sum();
     assert_eq!(planned, 10, "every job appears in exactly one node plan");
     for (node_name, plan) in &summary.plans {
@@ -114,8 +234,14 @@ fn rebalance_migrates_shed_jobs_to_under_subscribed_nodes() {
     specs.push(FleetJobSpec::simulated("light-wally", wally, Algo::Arima, 3));
     specs.push(FleetJobSpec::simulated("light-e216", e216, Algo::Birch, 4));
 
-    let engine = FleetEngine::new(quick_cfg(2, 1));
-    let (summary, plan) = engine.run_rebalanced(specs).expect("fleet run");
+    let report = FleetSession::builder()
+        .config(quick_cfg(2, 1))
+        .jobs(specs)
+        .rebalance(true)
+        .run()
+        .expect("fleet run");
+    let summary = report.summary();
+    let plan = report.plan.as_ref().expect("rebalance stage ran");
 
     // The no-migration baseline really is over-subscribed: pi4 shed jobs.
     let baseline_guaranteed: Vec<String> = summary
@@ -160,17 +286,57 @@ fn rebalance_migrates_shed_jobs_to_under_subscribed_nodes() {
 #[test]
 fn varying_arrivals_drive_rate_demand() {
     // A job with a faster stream must register a higher rate demand.
-    let engine = FleetEngine::new(quick_cfg(2, 1));
     let wally = node("wally").unwrap();
     let mut slow = FleetJobSpec::simulated("slow", wally, Algo::Arima, 1);
     slow.arrivals = ArrivalProcess::Fixed(1.0);
     let mut fast = FleetJobSpec::simulated("fast", wally, Algo::Arima, 1);
     fast.arrivals = ArrivalProcess::Varying { lo: 2.0, hi: 8.0, period: 100.0 };
-    let summary = engine.run(vec![slow, fast]).expect("fleet run");
+    let report = FleetSession::builder()
+        .config(quick_cfg(2, 1))
+        .jobs([slow, fast])
+        .run()
+        .expect("fleet run");
+    let summary = report.summary();
     let rate = |n: &str| summary.outcomes.iter().find(|o| o.name == n).unwrap().rate_hz;
     assert!((rate("slow") - 1.0).abs() < 1e-9);
     assert!(rate("fast") > 7.0);
     // The faster job needs at least as much CPU.
     let limit = |n: &str| summary.assignment(n).unwrap().adjustment.limit;
     assert!(limit("fast") >= limit("slow"));
+}
+
+#[test]
+fn report_out_and_cache_file_round_trip() {
+    // The CLI contract behind `--out report.json --cache-file cache.json`:
+    // the emitted report parses back, and a cache snapshot restored into a
+    // fresh session replays the whole roster (≥ 50% hit rate immediately).
+    let cache = Arc::new(MeasurementCache::new());
+    let report = FleetSession::builder()
+        .config(quick_cfg(2, 1))
+        .jobs(sim_fleet(4, 13))
+        .cache(cache.clone())
+        .run()
+        .expect("cold run");
+    let report_text = json::to_string(&report.to_json());
+    let parsed = json::parse(&report_text).expect("report parses back");
+    assert_eq!(parsed.get("version").unwrap().as_usize(), Some(1));
+
+    let snapshot_text = json::to_string(&cache.snapshot());
+    let restored = Arc::new(MeasurementCache::new());
+    let n = restored
+        .restore(&json::parse(&snapshot_text).expect("snapshot parses"))
+        .expect("snapshot restores");
+    assert!(n > 0);
+    let rerun = FleetSession::builder()
+        .config(quick_cfg(2, 1))
+        .jobs(sim_fleet(4, 13))
+        .cache(restored)
+        .run()
+        .expect("warm run");
+    assert!(
+        rerun.hit_rate() >= 0.5,
+        "restored cache must replay the re-run: hit rate {:.2}",
+        rerun.hit_rate()
+    );
+    assert_eq!(rerun.summary().executed_wallclock(), 0.0, "full replay");
 }
