@@ -1,0 +1,93 @@
+//! The always-on fleet daemon end-to-end: mid-run arrivals, an injected
+//! drift verdict, and a retirement — all on one deterministic virtual clock.
+//!
+//! Six stream jobs arrive at tick 0 and are profiled by the coalesced
+//! bootstrap replan. Two more jobs arrive mid-run at tick 600 and merge
+//! into the live sweep with a localized replan — the six already-profiled
+//! jobs replay from the measurement cache instead of re-executing. At
+//! tick 900 an external monitor reports `job-02`'s model stale: its cache
+//! generation ages out and the job re-profiles warm from its prior fit.
+//! At tick 1200 `job-05` retires, and the drained report (plus the
+//! cross-node rebalancing plan) covers exactly the seven survivors.
+//!
+//! ```bash
+//! cargo run --release --example fleet_daemon
+//! ```
+
+use streamprof::coordinator::ProfilerConfig;
+use streamprof::fleet::{sim_fleet, DriftVerdict, FleetConfig, FleetDaemon};
+use streamprof::util::Table;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = FleetConfig {
+        workers: 2,
+        rounds: 1,
+        strategy: "nms".to_string(),
+        profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
+        horizon: 500,
+    };
+    let roster = sim_fleet(6, 7);
+    let mut daemon = FleetDaemon::builder().config(cfg).jobs(roster).rebalance(true).build();
+
+    // Tick 0: six arrivals coalesce into a single bootstrap replan.
+    daemon.run_until(0)?;
+    assert_eq!(daemon.metrics().replans, 1, "arrivals coalesce into one replan");
+
+    // Tick 600: two more jobs arrive mid-run. Simulated rosters are
+    // prefix-stable in the seed, so these are jobs 6 and 7 of the same
+    // fleet the batch run would have profiled with `--jobs 8`.
+    for job in sim_fleet(8, 7).into_iter().skip(6) {
+        daemon.submit_at(job, 600);
+    }
+    let misses_before = daemon.cache().stats().misses;
+    daemon.run_until(600)?;
+    assert_eq!(daemon.metrics().replans, 2, "one localized replan for the pair");
+    assert!(daemon.cache().stats().misses > misses_before, "the new jobs executed probes");
+
+    // Tick 900: an external monitor declares job-02's model stale. Its
+    // cache generation ages out and the job re-profiles warm.
+    let evictions_before = daemon.cache().stats().evictions;
+    daemon.observe_verdict_at("job-02", DriftVerdict::ModelStale { rolling_smape: 0.9 }, 900);
+    daemon.run_until(900)?;
+    assert!(daemon.cache().stats().evictions > evictions_before, "stale generation aged out");
+    assert_eq!(daemon.metrics().verdicts, 1, "one external verdict observed");
+
+    // Tick 1200: job-05 retires; the next replan drops it from the plans.
+    daemon.retire_at("job-05", 1200);
+    daemon.run_until(1200)?;
+
+    let journal = daemon.journal().to_vec();
+    let metrics = daemon.metrics();
+    let report = daemon.drain()?;
+
+    let mut timeline = Table::new(&["tick", "event", "detail"]).with_title(&format!(
+        "Daemon journal — {} events, {} replans",
+        metrics.events_processed,
+        metrics.replans
+    ));
+    for entry in &journal {
+        timeline.rowd(&[&entry.at, &entry.kind, &entry.detail]);
+    }
+    println!("{}", timeline.render());
+
+    let sweep = report.summary();
+    assert_eq!(sweep.outcomes.len(), 7, "eight arrivals minus one retirement");
+    assert!(sweep.outcomes.iter().all(|o| o.name != "job-05"), "job-05 left the report");
+    let plan = report.plan.as_ref().expect("rebalance was requested");
+    assert_eq!(plan.metrics.jobs, 7, "the fleet plan covers the survivors");
+
+    let stats = report.cache;
+    println!(
+        "drained: {} jobs profiled, {} hits / {} misses, {:.0}s of wallclock saved",
+        sweep.outcomes.len(),
+        stats.hits,
+        stats.misses,
+        stats.saved_wallclock
+    );
+    println!(
+        "fleet plan: {}/{} jobs guaranteed after rebalancing",
+        plan.metrics.guaranteed_after,
+        plan.metrics.jobs
+    );
+    Ok(())
+}

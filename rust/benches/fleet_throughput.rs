@@ -1,0 +1,150 @@
+//! Fleet daemon throughput — the first fleet-scale baseline (hand-rolled
+//! harness; criterion is not in the offline vendor set).
+//!
+//! Spins the event-driven fleet daemon over simulated rosters of 1k, 10k,
+//! and 100k jobs and measures, per tier:
+//!   * jobs profiled per second of real wallclock (the bootstrap sweep),
+//!   * virtual profiling wallclock saved by the sharded measurement cache,
+//!     plus its hit rate (rosters cycle 21 node/algo labels, so almost the
+//!     whole fleet replays cached probes),
+//!   * p99 verdict-to-replan latency — real time from an external drift
+//!     verdict landing in the event queue to the localized replan that
+//!     re-profiles the job against its observed rate.
+//!
+//! Results land in BENCH_fleet.json, committed at the repository root as
+//! the standing baseline; regenerate on quiet hardware with:
+//!
+//! ```bash
+//! cargo bench --bench fleet_throughput -- --tier all --out ../BENCH_fleet.json
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use streamprof::coordinator::ProfilerConfig;
+use streamprof::fleet::{sim_fleet, DriftVerdict, FleetConfig, FleetDaemon, MeasurementCache};
+use streamprof::util::{json, Args, Json, Table};
+
+/// Verdict cycles timed per tier (each is one verdict -> replan round trip).
+const VERDICT_CYCLES: usize = 32;
+
+struct TierResult {
+    tier: &'static str,
+    jobs: usize,
+    jobs_per_sec: f64,
+    sweep_s: f64,
+    saved_s: f64,
+    hit_rate: f64,
+    p99_ms: f64,
+}
+
+impl TierResult {
+    fn to_json(&self) -> Json {
+        Json::obj([
+            ("tier", Json::str(self.tier)),
+            ("jobs", Json::num(self.jobs as f64)),
+            ("jobs_per_sec", Json::num(self.jobs_per_sec)),
+            ("sweep_wallclock_s", Json::num(self.sweep_s)),
+            ("cache_saved_wallclock_s", Json::num(self.saved_s)),
+            ("hit_rate", Json::num(self.hit_rate)),
+            ("verdicts", Json::num(VERDICT_CYCLES as f64)),
+            ("p99_verdict_to_replan_ms", Json::num(self.p99_ms)),
+        ])
+    }
+}
+
+fn run_tier(tier: &'static str, jobs: usize) -> Result<TierResult> {
+    let cfg = FleetConfig {
+        workers: 8,
+        rounds: 1,
+        strategy: "nms".to_string(),
+        profiler: ProfilerConfig { samples: 64, max_steps: 4, ..Default::default() },
+        horizon: 1000,
+    };
+    let cache = Arc::new(MeasurementCache::new());
+    let mut daemon = FleetDaemon::builder()
+        .config(cfg)
+        .jobs(sim_fleet(jobs, 7))
+        .rebalance(false)
+        .cache(cache.clone())
+        .build();
+
+    // Bootstrap sweep: the whole roster arrives at tick 0 and one
+    // coalesced replan profiles it (cold labels execute, the rest replay).
+    let t0 = Instant::now();
+    daemon.run_until(0)?;
+    let sweep_s = t0.elapsed().as_secs_f64().max(1e-9);
+
+    // Verdict-to-replan latency: an external rate-shift verdict lands and
+    // the daemon re-profiles just that job against the observed rate.
+    let mut lat_ms = Vec::with_capacity(VERDICT_CYCLES);
+    for k in 0..VERDICT_CYCLES {
+        let job = format!("job-{:02}", k % jobs);
+        let verdict = DriftVerdict::RateShift {
+            provisioned_hz: 2.0,
+            observed_hz: 4.0 + (k % 5) as f64,
+        };
+        let tick = 1000 + k as u64;
+        let t = Instant::now();
+        daemon.observe_verdict_at(&job, verdict, tick);
+        daemon.run_until(tick)?;
+        lat_ms.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    lat_ms.sort_by(f64::total_cmp);
+    let p99 = lat_ms[((lat_ms.len() as f64 * 0.99).ceil() as usize).saturating_sub(1)];
+
+    let stats = cache.stats();
+    Ok(TierResult {
+        tier,
+        jobs,
+        jobs_per_sec: jobs as f64 / sweep_s,
+        sweep_s,
+        saved_s: stats.saved_wallclock,
+        hit_rate: stats.hit_rate(),
+        p99_ms: p99,
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse_from(std::env::args().skip(1));
+    let tier = args.opt_or("tier", "1k");
+    let out = args.opt_or("out", "../BENCH_fleet.json");
+    let tiers: &[(&'static str, usize)] = match tier.as_str() {
+        "1k" => &[("1k", 1000)],
+        "10k" => &[("10k", 10_000)],
+        "100k" => &[("100k", 100_000)],
+        "all" => &[("1k", 1000), ("10k", 10_000), ("100k", 100_000)],
+        other => bail!("unknown --tier '{other}' (1k|10k|100k|all)"),
+    };
+
+    let mut results = Vec::new();
+    for &(name, jobs) in tiers {
+        results.push(run_tier(name, jobs)?);
+    }
+
+    let mut table = Table::new(&["tier", "jobs", "jobs/s", "saved (s)", "hit rate", "p99 (ms)"])
+        .with_title("Fleet daemon throughput");
+    for r in &results {
+        table.rowd(&[
+            &r.tier,
+            &r.jobs,
+            &format!("{:.0}", r.jobs_per_sec),
+            &format!("{:.1}", r.saved_s),
+            &format!("{:.2}", r.hit_rate),
+            &format!("{:.3}", r.p99_ms),
+        ]);
+    }
+    println!("{}", table.render());
+
+    let doc = Json::obj([
+        ("version", Json::num(1.0)),
+        ("bench", Json::str("fleet_throughput")),
+        ("measured", Json::Bool(true)),
+        ("tiers", Json::Arr(results.iter().map(TierResult::to_json).collect())),
+    ]);
+    std::fs::write(&out, json::to_string(&doc)).with_context(|| format!("writing {out}"))?;
+    println!("[bench] wrote {out}");
+    Ok(())
+}

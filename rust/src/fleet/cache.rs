@@ -10,6 +10,19 @@
 //! job; a hit is returned with `wallclock = 0` (nothing ran) while the
 //! wallclock it *would* have cost is accumulated as `saved_wallclock`.
 //!
+//! ## Lock-striped shards
+//!
+//! The map is split into [`SHARD_COUNT`] shards, each behind its own
+//! mutex, keyed by the FNV-1a hash of the job label. Every label lives in
+//! exactly one shard, so the per-label invariants (canonical width,
+//! generation aging, exact stats accounting) are still serialized by a
+//! single lock — but probe replay for *different* job classes no longer
+//! serializes on one global mutex, which is what lets a worker pool drain
+//! a large roster without convoying. Counters are plain fields under each
+//! shard's lock and are aggregated on read ([`MeasurementCache::stats`]
+//! locks the shards in index order), so the aggregate satisfies the same
+//! exactness invariants as the old single-lock implementation.
+//!
 //! ## Generation-based aging
 //!
 //! Measurements go stale: when a job class drifts (model upgrade, heavier
@@ -34,23 +47,29 @@
 //!
 //! ## Persistence
 //!
-//! [`MeasurementCache::snapshot`] serializes every entry plus the
-//! per-label generations through [`crate::util::json`], and
-//! [`MeasurementCache::restore`] merges a snapshot back — refusing
-//! entries stamped newer than the snapshot header declares — so
-//! measurements survive engine restarts
-//! (`streamprof fleet --cache-file f.json`).
+//! [`MeasurementCache::snapshot`] serializes every entry, the per-label
+//! generations, *and* the lifetime runtime counters (version 2) through
+//! [`crate::util::json`]; [`MeasurementCache::restore`] merges a snapshot
+//! back — refusing entries stamped newer than the snapshot header declares
+//! — so measurements **and their amortization history** survive engine
+//! restarts (`streamprof fleet --cache-file f.json`). Version-1 snapshots
+//! (pre-stats) still restore, with zeroed carried counters.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 
 use anyhow::{bail, ensure, Result};
 
 use crate::coordinator::backend::{Measurement, ProfilingBackend};
 use crate::earlystop::EarlyStopConfig;
 use crate::strategies::grid_bucket;
+use crate::util::fnv1a;
 use crate::util::json::Json;
+
+/// Number of lock stripes. Labels hash onto stripes, so any fleet with
+/// more than a handful of distinct job classes spreads its probe replay
+/// across independent locks.
+const SHARD_COUNT: usize = 8;
 
 /// Cache key: job label (e.g. `"pi4/arima"`) + limitation-grid bucket
 /// (quantized with the label's canonical `delta`).
@@ -118,15 +137,17 @@ struct LabelState {
     generation: u64,
 }
 
-/// Both maps behind one lock: entries and label states are read/written
-/// together on every path, and a single mutex rules out lock-order bugs.
+/// One lock stripe: entries, label states, and the counters for every
+/// operation this stripe served. All three live behind the stripe's
+/// mutex, so per-label accounting is exact without atomics.
 #[derive(Default)]
-struct Store {
+struct Shard {
     map: HashMap<CacheKey, Entry>,
     labels: HashMap<String, LabelState>,
+    stats: CacheStats,
 }
 
-impl Store {
+impl Shard {
     /// The label's canonical delta (registering `delta` if first contact)
     /// and current generation.
     fn label_state(&mut self, label: &str, delta: f64) -> (f64, u64) {
@@ -135,15 +156,11 @@ impl Store {
     }
 }
 
-/// Thread-safe measurement cache shared by every fleet worker.
+/// Thread-safe, lock-striped measurement cache shared by every fleet
+/// worker. The public API, snapshot compatibility, and generation
+/// semantics are identical to the former single-mutex implementation.
 pub struct MeasurementCache {
-    store: Mutex<Store>,
-    hits: AtomicU64,
-    misses: AtomicU64,
-    stale_hits_refused: AtomicU64,
-    evictions: AtomicU64,
-    inserts: AtomicU64,
-    saved_wallclock: Mutex<f64>,
+    shards: [Mutex<Shard>; SHARD_COUNT],
 }
 
 impl Default for MeasurementCache {
@@ -154,15 +171,38 @@ impl Default for MeasurementCache {
 
 impl MeasurementCache {
     pub fn new() -> Self {
-        Self {
-            store: Mutex::new(Store::default()),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-            stale_hits_refused: AtomicU64::new(0),
-            evictions: AtomicU64::new(0),
-            inserts: AtomicU64::new(0),
-            saved_wallclock: Mutex::new(0.0),
+        Self { shards: std::array::from_fn(|_| Mutex::new(Shard::default())) }
+    }
+
+    /// The stripe a label lives on. Deterministic (FNV-1a), so snapshots
+    /// taken by one process shard identically in the next.
+    fn shard_index(label: &str) -> usize {
+        fnv1a(label.bytes()) as usize % SHARD_COUNT
+    }
+
+    fn shard(&self, label: &str) -> MutexGuard<'_, Shard> {
+        self.shards[Self::shard_index(label)].lock().unwrap()
+    }
+
+    /// Every stripe guard, acquired in index order — the one lock order
+    /// used by whole-cache operations (stats/snapshot/restore), which
+    /// rules out deadlock between them.
+    fn lock_all(&self) -> Vec<MutexGuard<'_, Shard>> {
+        self.shards.iter().map(|s| s.lock().unwrap()).collect()
+    }
+
+    /// Aggregate stripe counters in index order (deterministic f64 sum).
+    fn sum_stats(guards: &[MutexGuard<'_, Shard>]) -> CacheStats {
+        let mut total = CacheStats::default();
+        for g in guards {
+            total.hits += g.stats.hits;
+            total.misses += g.stats.misses;
+            total.stale_hits_refused += g.stats.stale_hits_refused;
+            total.evictions += g.stats.evictions;
+            total.inserts += g.stats.inserts;
+            total.saved_wallclock += g.stats.saved_wallclock;
         }
+        total
     }
 
     /// Look up a measurement, recording a hit or miss. Only entries of the
@@ -170,26 +210,26 @@ impl MeasurementCache {
     /// (a miss, plus `stale_hits_refused`) so the caller re-executes. On a
     /// hit the original run's wallclock is credited to `saved_wallclock`.
     pub fn lookup(&self, label: &str, limit: f64, delta: f64) -> Option<Measurement> {
-        let mut store = self.store.lock().unwrap();
-        let (delta, generation) = store.label_state(label, delta);
+        let mut shard = self.shard(label);
+        let (delta, generation) = shard.label_state(label, delta);
         let key = (label.to_string(), grid_bucket(limit, delta));
-        let found = match store.map.get(&key) {
-            Some(e) if e.generation == generation => Some(e.m),
+        let entry = shard.map.get(&key).map(|e| (e.m, e.generation));
+        let found = match entry {
+            Some((m, stamped)) if stamped == generation => Some(m),
             Some(_) => {
-                self.stale_hits_refused.fetch_add(1, Ordering::Relaxed);
+                shard.stats.stale_hits_refused += 1;
                 None
             }
             None => None,
         };
         match found {
             Some(m) => {
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                drop(store);
-                *self.saved_wallclock.lock().unwrap() += m.wallclock;
+                shard.stats.hits += 1;
+                shard.stats.saved_wallclock += m.wallclock;
                 Some(m)
             }
             None => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
+                shard.stats.misses += 1;
                 None
             }
         }
@@ -200,11 +240,11 @@ impl MeasurementCache {
     /// is a valid sample). The entry is stamped with the label's current
     /// generation; overwriting a stale entry refreshes it.
     pub fn insert(&self, label: &str, delta: f64, m: Measurement) {
-        let mut store = self.store.lock().unwrap();
-        let (delta, generation) = store.label_state(label, delta);
+        let mut shard = self.shard(label);
+        let (delta, generation) = shard.label_state(label, delta);
         let key = (label.to_string(), grid_bucket(m.limit, delta));
-        store.map.insert(key, Entry { m, generation });
-        self.inserts.fetch_add(1, Ordering::Relaxed);
+        shard.map.insert(key, Entry { m, generation });
+        shard.stats.inserts += 1;
     }
 
     /// Age out a label: bump its generation so every existing entry of the
@@ -212,40 +252,39 @@ impl MeasurementCache {
     /// `evict_stale`). Returns the new generation. Called by the adaptive
     /// loop when a drift verdict invalidates a job class's measurements.
     pub fn bump_generation(&self, label: &str) -> u64 {
-        let mut store = self.store.lock().unwrap();
-        let st = store.labels.entry(label.to_string()).or_default();
+        let mut shard = self.shard(label);
+        let st = shard.labels.entry(label.to_string()).or_default();
         st.generation += 1;
         st.generation
     }
 
     /// The current generation of a label (0 until first bumped).
     pub fn generation(&self, label: &str) -> u64 {
-        self.store
-            .lock()
-            .unwrap()
-            .labels
-            .get(label)
-            .map_or(0, |st| st.generation)
+        self.shard(label).labels.get(label).map_or(0, |st| st.generation)
     }
 
     /// Reclaim every entry whose stamped generation is behind its label's
     /// current generation. Current-generation entries are never evicted.
     /// Returns the number of entries reclaimed.
     pub fn evict_stale(&self) -> usize {
-        let mut store = self.store.lock().unwrap();
-        let Store { map, labels } = &mut *store;
-        let before = map.len();
-        map.retain(|(label, _), e| match labels.get(label) {
-            Some(st) => e.generation == st.generation,
-            None => true,
-        });
-        let evicted = before - map.len();
-        self.evictions.fetch_add(evicted as u64, Ordering::Relaxed);
+        let mut evicted = 0usize;
+        for stripe in &self.shards {
+            let mut shard = stripe.lock().unwrap();
+            let Shard { map, labels, stats } = &mut *shard;
+            let before = map.len();
+            map.retain(|(label, _), e| match labels.get(label) {
+                Some(st) => e.generation == st.generation,
+                None => true,
+            });
+            let reclaimed = before - map.len();
+            stats.evictions += reclaimed as u64;
+            evicted += reclaimed;
+        }
         evicted
     }
 
     pub fn len(&self) -> usize {
-        self.store.lock().unwrap().map.len()
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -253,24 +292,21 @@ impl MeasurementCache {
     }
 
     pub fn stats(&self) -> CacheStats {
-        CacheStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            stale_hits_refused: self.stale_hits_refused.load(Ordering::Relaxed),
-            evictions: self.evictions.load(Ordering::Relaxed),
-            inserts: self.inserts.load(Ordering::Relaxed),
-            saved_wallclock: *self.saved_wallclock.lock().unwrap(),
-        }
+        Self::sum_stats(&self.lock_all())
     }
 
-    /// Serialize every entry plus the per-label aging state as a
-    /// [`Json`] tree — the persistence surface behind
-    /// `streamprof fleet --cache-file f.json`. Deterministic output
-    /// (labels and buckets sorted); runtime counters (`stats`) are *not*
-    /// part of the snapshot — they describe a process, not the data.
+    /// Serialize every entry, the per-label aging state, and the lifetime
+    /// runtime counters as a [`Json`] tree — the persistence surface
+    /// behind `streamprof fleet --cache-file f.json`. Deterministic output
+    /// (labels and buckets sorted, stripe counters summed in index order).
+    /// Version 2: the `stats` block carries hit/miss/eviction counters and
+    /// the saved wallclock, so a restarted daemon keeps its amortization
+    /// history.
     pub fn snapshot(&self) -> Json {
-        let store = self.store.lock().unwrap();
-        let mut labels: Vec<(&String, &LabelState)> = store.labels.iter().collect();
+        let guards = self.lock_all();
+        let stats = Self::sum_stats(&guards);
+        let mut labels: Vec<(&String, &LabelState)> =
+            guards.iter().flat_map(|g| g.labels.iter()).collect();
         labels.sort_by(|x, y| x.0.cmp(y.0));
         let mut label_docs = Vec::with_capacity(labels.len());
         for (label, st) in labels {
@@ -283,7 +319,8 @@ impl MeasurementCache {
             }
             label_docs.push(Json::obj(fields));
         }
-        let mut entries: Vec<(&CacheKey, &Entry)> = store.map.iter().collect();
+        let mut entries: Vec<(&CacheKey, &Entry)> =
+            guards.iter().flat_map(|g| g.map.iter()).collect();
         entries.sort_by(|x, y| x.0.cmp(y.0));
         let mut entry_docs = Vec::with_capacity(entries.len());
         for ((label, bucket), e) in entries {
@@ -298,7 +335,18 @@ impl MeasurementCache {
             ]));
         }
         Json::obj([
-            ("version", Json::num(1.0)),
+            ("version", Json::num(2.0)),
+            (
+                "stats",
+                Json::obj([
+                    ("hits", Json::num(stats.hits as f64)),
+                    ("misses", Json::num(stats.misses as f64)),
+                    ("stale_hits_refused", Json::num(stats.stale_hits_refused as f64)),
+                    ("evictions", Json::num(stats.evictions as f64)),
+                    ("inserts", Json::num(stats.inserts as f64)),
+                    ("saved_wallclock", Json::num(stats.saved_wallclock)),
+                ]),
+            ),
             ("labels", Json::Arr(label_docs)),
             ("entries", Json::Arr(entry_docs)),
         ])
@@ -319,12 +367,19 @@ impl MeasurementCache {
     /// the max of both sides, and occupied buckets keep their live entry
     /// (the process's own measurements are never overwritten). Restored
     /// entries count as `inserts`, so `evictions ≤ inserts` still holds
-    /// after a restore-then-age cycle. A failed restore is atomic: every
-    /// check (field types included) runs before the first mutation, so an
-    /// `Err` leaves the live cache exactly as it was.
+    /// after a restore-then-age cycle. A version-2 snapshot's `stats`
+    /// block is folded **additively** into the live counters (the restored
+    /// process keeps its lifetime amortization history; per-run reporting
+    /// goes through [`CacheStats::delta_since`] and is unaffected).
+    /// Version-1 snapshots carry no stats and fold zeros. A failed restore
+    /// is atomic: every check (field types included) runs before the first
+    /// mutation, so an `Err` leaves the live cache exactly as it was.
     pub fn restore(&self, snap: &Json) -> Result<usize> {
         let version = snap.get("version").and_then(Json::as_f64).unwrap_or(0.0);
-        ensure!(version == 1.0, "unsupported cache snapshot version {version}");
+        ensure!(
+            version == 1.0 || version == 2.0,
+            "unsupported cache snapshot version {version}"
+        );
         // Strict field readers: a wrong-typed field is a corrupt snapshot
         // and must refuse, never coerce to a default measurement.
         let num = |v: &Json, key: &str| -> Result<f64> {
@@ -353,7 +408,41 @@ impl MeasurementCache {
                 .as_arr()
                 .ok_or_else(|| anyhow::anyhow!("field '{key}' is not an array"))
         }
-        // Parse + validate the whole snapshot before touching the store.
+        // A version-2 snapshot must carry a consistent stats block; the
+        // carried counters themselves must satisfy the invariants a live
+        // cache maintains, or the merged aggregate would violate them.
+        let carried = if version == 2.0 {
+            let s = snap.req("stats").map_err(anyhow::Error::msg)?;
+            let stats = CacheStats {
+                hits: uint(s, "hits")?,
+                misses: uint(s, "misses")?,
+                stale_hits_refused: uint(s, "stale_hits_refused")?,
+                evictions: uint(s, "evictions")?,
+                inserts: uint(s, "inserts")?,
+                saved_wallclock: num(s, "saved_wallclock")?,
+            };
+            ensure!(
+                stats.saved_wallclock.is_finite() && stats.saved_wallclock >= 0.0,
+                "field 'saved_wallclock' is not a non-negative time: {}",
+                stats.saved_wallclock
+            );
+            ensure!(
+                stats.evictions <= stats.inserts,
+                "snapshot stats: evictions {} exceed inserts {}",
+                stats.evictions,
+                stats.inserts
+            );
+            ensure!(
+                stats.stale_hits_refused <= stats.misses,
+                "snapshot stats: stale refusals {} exceed misses {}",
+                stats.stale_hits_refused,
+                stats.misses
+            );
+            stats
+        } else {
+            CacheStats::default()
+        };
+        // Parse + validate the whole snapshot before touching any stripe.
         let mut header: HashMap<String, (Option<f64>, u64)> = HashMap::new();
         for l in list(snap, "labels")? {
             let label = text(l, "label")?;
@@ -402,10 +491,12 @@ impl MeasurementCache {
         }
 
         // Validate the merge against the live store BEFORE mutating
-        // anything: a failed restore must leave the cache untouched.
-        let mut store = self.store.lock().unwrap();
+        // anything: a failed restore must leave the cache untouched. All
+        // stripes are held (in index order) for the whole merge, so the
+        // restore is atomic across shards too.
+        let mut guards = self.lock_all();
         for (label, (delta, _)) in &header {
-            if let Some(st) = store.labels.get(label) {
+            if let Some(st) = guards[Self::shard_index(label)].labels.get(label) {
                 if let (Some(live), Some(snap)) = (st.delta, *delta) {
                     ensure!(
                         live == snap,
@@ -415,7 +506,8 @@ impl MeasurementCache {
             }
         }
         for (label, (delta, generation)) in &header {
-            let st = store.labels.entry(label.clone()).or_default();
+            let shard = &mut guards[Self::shard_index(label)];
+            let st = shard.labels.entry(label.clone()).or_default();
             if st.delta.is_none() {
                 st.delta = *delta;
             }
@@ -423,14 +515,24 @@ impl MeasurementCache {
         }
         let mut count = 0usize;
         for r in restored {
+            let shard = &mut guards[Self::shard_index(&r.label)];
             if let std::collections::hash_map::Entry::Vacant(slot) =
-                store.map.entry((r.label, r.bucket))
+                shard.map.entry((r.label, r.bucket))
             {
                 slot.insert(Entry { m: r.m, generation: r.generation });
                 count += 1;
             }
         }
-        self.inserts.fetch_add(count as u64, Ordering::Relaxed);
+        // Fold the carried counters (and the restored entries, which count
+        // as inserts) into stripe 0; `stats()` sums the stripes, so where
+        // the carry lands is invisible to every reader.
+        let s = &mut guards[0].stats;
+        s.hits += carried.hits;
+        s.misses += carried.misses;
+        s.stale_hits_refused += carried.stale_hits_refused;
+        s.evictions += carried.evictions;
+        s.inserts += carried.inserts + count as u64;
+        s.saved_wallclock += carried.saved_wallclock;
         Ok(count)
     }
 }
@@ -734,6 +836,29 @@ mod tests {
     }
 
     #[test]
+    fn stats_aggregate_across_label_shards() {
+        // Labels hash onto different stripes; the aggregated stats must
+        // account every operation exactly once regardless of which stripe
+        // served it, and aging must stay per-label across stripes.
+        let cache = MeasurementCache::new();
+        for i in 0..32 {
+            let label = format!("node-{i:02}/algo");
+            cache.insert(&label, 0.1, meas(0.4, 0.5));
+            assert!(cache.lookup(&label, 0.4, 0.1).is_some());
+            assert!(cache.lookup(&label, 0.8, 0.1).is_none());
+        }
+        let s = cache.stats();
+        assert_eq!(s.inserts, 32);
+        assert_eq!((s.hits, s.misses), (32, 32));
+        assert_eq!(s.lookups(), 64);
+        assert_eq!(cache.len(), 32);
+        assert!((s.saved_wallclock - 32.0 * 500.0).abs() < 1e-9);
+        cache.bump_generation("node-00/algo");
+        assert_eq!(cache.evict_stale(), 1, "only the bumped label's entry is reclaimed");
+        assert_eq!(cache.len(), 31);
+    }
+
+    #[test]
     fn snapshot_roundtrips_entries_generations_and_deltas() {
         let cache = MeasurementCache::new();
         cache.insert("cam", 0.1, meas(0.4, 0.44));
@@ -748,7 +873,7 @@ mod tests {
         let n = fresh.restore(&snap).expect("restore");
         assert_eq!(n, 4);
         assert_eq!(fresh.len(), 4);
-        assert_eq!(fresh.stats().inserts, 4, "restored entries count as inserts");
+        assert_eq!(fresh.stats().inserts, 8, "4 carried in the stats block + 4 restored");
         // Bit-exact measurements at the canonical widths.
         let restored = fresh.lookup("cam", 0.4, 0.1).unwrap();
         assert_eq!(restored.mean_runtime.to_bits(), 0.44f64.to_bits());
@@ -761,6 +886,92 @@ mod tests {
         assert!(fresh.stats().evictions <= fresh.stats().inserts);
         // The canonical delta was restored too: the aliasing guard holds.
         assert!(fresh.lookup("cam", 0.8, 0.2).is_some(), "canonical width 0.1 still keys");
+    }
+
+    #[test]
+    fn snapshot_v2_carries_runtime_stats() {
+        // The PR 4 caveat, closed: hit/miss/saved-wallclock counters ride
+        // the snapshot and restore additively, so a restarted daemon keeps
+        // its lifetime amortization history.
+        let cache = MeasurementCache::new();
+        let mut b = backend(&cache, 11);
+        b.measure(0.5, 1000);
+        b.measure(0.5, 1000); // hit
+        b.measure(1.0, 1000); // miss
+        let before = cache.stats();
+        assert_eq!((before.hits, before.misses, before.inserts), (1, 2, 2));
+        assert!(before.saved_wallclock > 0.0);
+
+        let text = crate::util::json::to_string(&cache.snapshot());
+        let next = MeasurementCache::new();
+        let n = next.restore(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(n, 2);
+        let s = next.stats();
+        assert_eq!(s.hits, before.hits);
+        assert_eq!(s.misses, before.misses);
+        assert_eq!(s.stale_hits_refused, before.stale_hits_refused);
+        assert_eq!(s.evictions, before.evictions);
+        assert_eq!(s.inserts, before.inserts + 2, "carried + restored-as-inserts");
+        assert_eq!(s.saved_wallclock.to_bits(), before.saved_wallclock.to_bits());
+    }
+
+    #[test]
+    fn restore_reads_v1_snapshots_without_stats() {
+        // Pre-v2 snapshots declare version 1 and carry no stats block;
+        // they must still restore, with zeroed carried counters (restored
+        // entries still count as inserts).
+        let cache = MeasurementCache::new();
+        let mut b = backend(&cache, 12);
+        b.measure(0.5, 1000);
+        b.measure(0.5, 1000);
+        let mut snap = cache.snapshot();
+        let Json::Obj(root) = &mut snap else { panic!() };
+        root.insert("version".into(), Json::num(1.0));
+        root.remove("stats");
+        let next = MeasurementCache::new();
+        assert_eq!(next.restore(&snap).unwrap(), 1);
+        let s = next.stats();
+        assert_eq!((s.hits, s.misses, s.inserts), (0, 0, 1));
+        assert_eq!(s.saved_wallclock, 0.0);
+        assert!(next.lookup("pi4/arima", 0.5, 0.1).is_some(), "entries restore without stats");
+    }
+
+    #[test]
+    fn restore_refuses_corrupt_stats_blocks() {
+        let cache = MeasurementCache::new();
+        cache.insert("cam", 0.1, meas(0.4, 0.44));
+        let corrupt = |key: &str, value: Json| {
+            let mut snap = cache.snapshot();
+            let Json::Obj(root) = &mut snap else { panic!() };
+            let Some(Json::Obj(stats)) = root.get_mut("stats") else { panic!() };
+            stats.insert(key.to_string(), value);
+            snap
+        };
+        // Wrong-typed counters refuse, never coerce.
+        let err = MeasurementCache::new()
+            .restore(&corrupt("hits", Json::str("3")))
+            .expect_err("string hits");
+        assert!(err.to_string().contains("hits"), "{err:#}");
+        assert!(MeasurementCache::new().restore(&corrupt("misses", Json::num(1.5))).is_err());
+        assert!(MeasurementCache::new()
+            .restore(&corrupt("saved_wallclock", Json::num(-1.0)))
+            .is_err());
+        // Counters that violate the cache invariants are forged.
+        let err = MeasurementCache::new()
+            .restore(&corrupt("evictions", Json::num(99.0)))
+            .expect_err("forged evictions");
+        assert!(err.to_string().contains("evictions"), "{err:#}");
+        // A version-2 snapshot without the stats block is refused outright.
+        let text = "{\"version\":2,\"labels\":[],\"entries\":[]}";
+        let no_stats = crate::util::json::parse(text).unwrap();
+        let err = MeasurementCache::new().restore(&no_stats).expect_err("v2 requires stats");
+        assert!(err.to_string().contains("stats"), "{err:#}");
+        // A refused stats block is atomic like every other refusal.
+        let live = MeasurementCache::new();
+        live.insert("lidar", 0.1, meas(0.2, 1.0));
+        assert!(live.restore(&corrupt("hits", Json::str("3"))).is_err());
+        assert_eq!(live.stats().hits, 0, "failed restore must not fold carried stats");
+        assert_eq!(live.len(), 1);
     }
 
     #[test]
@@ -777,7 +988,7 @@ mod tests {
         let err = MeasurementCache::new().restore(&snap).expect_err("must refuse");
         assert!(err.to_string().contains("newer"), "{err:#}");
         // Version and width conflicts are refused too.
-        let bad_version = crate::util::json::parse("{\"version\":2}").unwrap();
+        let bad_version = crate::util::json::parse("{\"version\":3}").unwrap();
         assert!(MeasurementCache::new().restore(&bad_version).is_err());
         let live = MeasurementCache::new();
         live.insert("cam", 0.2, meas(0.4, 1.0));
@@ -864,7 +1075,7 @@ mod tests {
     fn restored_cache_replays_probes_for_a_backend() {
         // The --cache-file contract end-to-end: profile, snapshot to text,
         // restore into a new process's cache, re-profile — every probe
-        // replays.
+        // replays, and the new process starts from the carried counters.
         let cache = MeasurementCache::new();
         let mut b = backend(&cache, 8);
         let m1 = b.measure(0.5, 1000);
@@ -873,13 +1084,15 @@ mod tests {
 
         let next = MeasurementCache::new();
         next.restore(&crate::util::json::parse(&text).unwrap()).unwrap();
+        let carried = next.stats();
+        assert_eq!((carried.hits, carried.misses), (0, 2), "snapshot stats restored");
         let mut b2 = backend(&next, 8);
         let r = b2.measure(0.5, 1000);
         assert_eq!(r.mean_runtime.to_bits(), m1.mean_runtime.to_bits());
         assert_eq!(r.wallclock, 0.0, "restored entry serves at zero cost");
-        let s = next.stats();
-        assert_eq!((s.hits, s.misses), (1, 0));
-        assert!((s.hit_rate() - 1.0).abs() < 1e-12);
+        let run = next.stats().delta_since(&carried);
+        assert_eq!((run.hits, run.misses), (1, 0));
+        assert!((run.hit_rate() - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,795 @@
+//! The always-on fleet engine: a deterministic, event-driven control loop
+//! over the same sweep / adaptive / rebalance pipeline the batch
+//! [`FleetSession`](super::FleetSession) runs — but long-lived, on a
+//! virtual clock, replanning incrementally as the world changes.
+//!
+//! ```text
+//!  submit/retire/observe_verdict ──► BinaryHeap<FleetEvent>  (virtual time)
+//!                                        │ step / run_until / drain
+//!                                        ▼
+//!   JobArrival ──┐                 coalesced Replan ──► run_sweep (newcomers)
+//!   JobDeparture ├─► roster edits ─► plan_capacity    profile_job_with (drift)
+//!   DriftVerdict ┘                                    rebalance (on drain)
+//!   EpochTick ────► AdaptiveLoop::run_epoch (drift-gated re-profiling)
+//! ```
+//!
+//! Determinism is load-bearing: events are ordered by `(tick, class,
+//! submission seq)` and the clock only moves when an event is popped, so
+//! a schedule replayed twice produces bit-identical reports. Replans are
+//! a *later* class than every other event, which both coalesces the
+//! replan work of a burst of same-tick arrivals into one sweep and makes
+//! the batch session a provable special case: replaying a whole roster
+//! as arrivals at `t = 0` and draining performs exactly one bootstrap
+//! sweep over the full roster — byte-identical to
+//! [`FleetSession::run`](super::FleetSession::run), which is now
+//! implemented as exactly that wrapper (enforced by `tests/fleet_e2e.rs`).
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::fit::RuntimeModel;
+
+use super::cache::{CacheStats, MeasurementCache};
+use super::drift::{AdaptiveConfig, AdaptiveLoop, AdaptiveSummary, DriftVerdict};
+use super::migrate::rebalance;
+use super::placement::FleetJob;
+use super::session::FleetReport;
+use super::worker::{self, JobOutcome, ProfilePass};
+use super::{plan_capacity, run_sweep, FleetConfig, FleetJobSpec};
+
+/// One event on the daemon's virtual-time schedule.
+///
+/// Events are what the outside world (or the daemon itself) feeds the
+/// loop; [`FleetDaemon::step`] pops them in deterministic order and
+/// reacts. `Replan` is special: it is scheduled *by* the daemon whenever
+/// roster or model state changed, coalesced so a burst of same-tick
+/// changes is replanned once.
+pub enum FleetEvent {
+    /// A job joins the fleet (boxed: specs carry a backend handle).
+    JobArrival(Box<FleetJobSpec>),
+    /// The named job leaves the fleet.
+    JobDeparture(String),
+    /// An external monitor's drift verdict for the named job. Drift
+    /// verdicts queue a warm re-profile and a replan; `Stable` verdicts
+    /// are recorded and dropped.
+    DriftVerdict {
+        /// Name of the judged job.
+        job: String,
+        /// What the monitor concluded.
+        verdict: DriftVerdict,
+    },
+    /// One adaptation epoch boundary (scheduled at build time when the
+    /// adaptive stage is configured).
+    EpochTick {
+        /// Epoch number, counted from 1.
+        epoch: usize,
+    },
+    /// Record of probes a re-profile actually executed (also emitted
+    /// into the journal by the daemon's own replans).
+    ProbeCompletion {
+        /// Name of the re-profiled job.
+        job: String,
+        /// Probes that missed the cache and executed.
+        executed: u64,
+    },
+    /// Re-plan request: profile pending work, recompute node plans.
+    Replan,
+}
+
+impl FleetEvent {
+    /// Stable journal/display tag of the event kind.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            FleetEvent::JobArrival(_) => "arrival",
+            FleetEvent::JobDeparture(_) => "departure",
+            FleetEvent::DriftVerdict { .. } => "verdict",
+            FleetEvent::EpochTick { .. } => "epoch-tick",
+            FleetEvent::ProbeCompletion { .. } => "probe-completion",
+            FleetEvent::Replan => "replan",
+        }
+    }
+}
+
+/// Heap key: virtual tick, then event class (replans sort after every
+/// same-tick mutation they coalesce), then submission order.
+struct Scheduled {
+    at: u64,
+    class: u8,
+    seq: u64,
+    event: FleetEvent,
+}
+
+impl Scheduled {
+    fn key(&self) -> (u64, u8, u64) {
+        (self.at, self.class, self.seq)
+    }
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.key() == other.key()
+    }
+}
+
+impl Eq for Scheduled {}
+
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.key().cmp(&other.key())
+    }
+}
+
+/// One line of the daemon's append-only event journal.
+#[derive(Clone, Debug)]
+pub struct JournalEntry {
+    /// Virtual tick the event was handled at.
+    pub at: u64,
+    /// Event kind tag ([`FleetEvent::kind`] vocabulary).
+    pub kind: &'static str,
+    /// Human-readable detail.
+    pub detail: String,
+}
+
+/// Monotonic counters over everything the daemon processed.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DaemonMetrics {
+    /// Events popped off the schedule.
+    pub events_processed: u64,
+    /// Job arrivals handled.
+    pub arrivals: u64,
+    /// Job departures handled.
+    pub departures: u64,
+    /// Drift verdicts handled (stable ones included).
+    pub verdicts: u64,
+    /// Replans performed (the bootstrap sweep counts as the first).
+    pub replans: u64,
+}
+
+/// Re-profiling work queued for the next replan.
+struct PendingWork {
+    spec: FleetJobSpec,
+    /// `None` = fresh arrival (full cold profile); `Some` = drift
+    /// verdict (warm single-round re-profile).
+    verdict: Option<DriftVerdict>,
+}
+
+/// Builder for a [`FleetDaemon`] — deliberately the same vocabulary as
+/// [`FleetSession::builder`](super::FleetSession::builder)
+/// (`config` / `jobs` / `job` / `rebalance` / `adaptive` / `cache`), so
+/// a batch call site migrates by swapping the type and choosing when
+/// events fire.
+#[derive(Default)]
+pub struct FleetDaemonBuilder {
+    cfg: FleetConfig,
+    specs: Vec<FleetJobSpec>,
+    rebalance: bool,
+    adaptive: Option<AdaptiveConfig>,
+    cache: Option<Arc<MeasurementCache>>,
+}
+
+impl FleetDaemonBuilder {
+    /// Engine configuration (workers, rounds, strategy, profiler, horizon).
+    pub fn config(mut self, cfg: FleetConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Append job specs to the initial roster (arrivals at `t = 0`).
+    pub fn jobs(mut self, specs: impl IntoIterator<Item = FleetJobSpec>) -> Self {
+        self.specs.extend(specs);
+        self
+    }
+
+    /// Append one job spec to the initial roster.
+    pub fn job(mut self, spec: FleetJobSpec) -> Self {
+        self.specs.push(spec);
+        self
+    }
+
+    /// Enable the rebalance stage: [`FleetDaemon::drain`] migrates shed
+    /// jobs across nodes from the final models.
+    pub fn rebalance(mut self, enabled: bool) -> Self {
+        self.rebalance = enabled;
+        self
+    }
+
+    /// Enable the adaptive stage: the bootstrap replan arms the
+    /// drift-gated adaptive loop and schedules one `EpochTick` per epoch.
+    pub fn adaptive(mut self, acfg: AdaptiveConfig) -> Self {
+        self.adaptive = Some(acfg);
+        self
+    }
+
+    /// Share (or persist) a measurement cache across daemons and
+    /// sessions — the seam behind `--cache-file`.
+    pub fn cache(mut self, cache: Arc<MeasurementCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Finalize: schedule the initial roster as arrivals at `t = 0`
+    /// followed by the bootstrap replan. Nothing runs until the daemon
+    /// is stepped or drained.
+    pub fn build(self) -> FleetDaemon {
+        let cache = self.cache.unwrap_or_default();
+        let stats_at_build = cache.stats();
+        let mut daemon = FleetDaemon {
+            cfg: self.cfg,
+            rebalance: self.rebalance,
+            adaptive: self.adaptive,
+            cache,
+            stats_at_build,
+            sweep_base: stats_at_build,
+            clock: 0,
+            seq: 0,
+            heap: BinaryHeap::new(),
+            roster: Vec::new(),
+            pending: Vec::new(),
+            bootstrapped: false,
+            replan_queued: false,
+            sweep: None,
+            next_index: 0,
+            adaptive_loop: None,
+            extras: Vec::new(),
+            journal: Vec::new(),
+            metrics: DaemonMetrics::default(),
+        };
+        for spec in self.specs {
+            daemon.schedule(0, FleetEvent::JobArrival(Box::new(spec)));
+        }
+        // The bootstrap replan is unconditional: an empty roster must
+        // fail exactly like the batch sweep does, on drain.
+        daemon.replan_queued = true;
+        daemon.schedule(0, FleetEvent::Replan);
+        daemon
+    }
+}
+
+/// The long-lived, event-driven fleet engine.
+///
+/// Feed it [`FleetEvent`]s (directly or via the [`FleetDaemon::submit`] /
+/// [`FleetDaemon::retire`] / [`FleetDaemon::observe_verdict`] helpers),
+/// advance virtual time with [`FleetDaemon::step`] or
+/// [`FleetDaemon::run_until`], and finish with [`FleetDaemon::drain`],
+/// which plays out every remaining event and assembles the same
+/// [`FleetReport`] the batch session returns.
+pub struct FleetDaemon {
+    cfg: FleetConfig,
+    rebalance: bool,
+    adaptive: Option<AdaptiveConfig>,
+    cache: Arc<MeasurementCache>,
+    /// Cache stats when the daemon was built — the report's delta base.
+    stats_at_build: CacheStats,
+    /// Cache stats immediately before the bootstrap sweep — the sweep
+    /// summary's delta base (mirrors `run_sweep`'s own snapshot).
+    sweep_base: CacheStats,
+    clock: u64,
+    seq: u64,
+    heap: BinaryHeap<Reverse<Scheduled>>,
+    /// Current fleet roster, in arrival order.
+    roster: Vec<FleetJobSpec>,
+    pending: Vec<PendingWork>,
+    bootstrapped: bool,
+    replan_queued: bool,
+    /// Live sweep state (sweep mode; adaptive mode keeps its state in
+    /// `adaptive_loop`).
+    sweep: Option<super::FleetSummary>,
+    next_index: usize,
+    adaptive_loop: Option<AdaptiveLoop>,
+    /// Adaptive-mode outcomes for jobs the loop does not track: mid-run
+    /// arrivals and externally-verdicted re-profiles (override by name).
+    extras: Vec<JobOutcome>,
+    journal: Vec<JournalEntry>,
+    metrics: DaemonMetrics,
+}
+
+impl FleetDaemon {
+    /// Start building a daemon.
+    pub fn builder() -> FleetDaemonBuilder {
+        FleetDaemonBuilder::default()
+    }
+
+    /// The daemon's measurement cache (shared with whoever passed it in).
+    pub fn cache(&self) -> &Arc<MeasurementCache> {
+        &self.cache
+    }
+
+    /// Current virtual time (the tick of the last handled event).
+    pub fn now(&self) -> u64 {
+        self.clock
+    }
+
+    /// Events still on the schedule.
+    pub fn pending_events(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// The append-only journal of every handled event.
+    pub fn journal(&self) -> &[JournalEntry] {
+        &self.journal
+    }
+
+    /// Counters over everything processed so far.
+    pub fn metrics(&self) -> DaemonMetrics {
+        self.metrics
+    }
+
+    /// Submit a job now (arrival at the current tick).
+    pub fn submit(&mut self, spec: FleetJobSpec) {
+        let at = self.clock;
+        self.submit_at(spec, at);
+    }
+
+    /// Submit a job at virtual tick `at` (clamped to now if in the past).
+    pub fn submit_at(&mut self, spec: FleetJobSpec, at: u64) {
+        self.schedule(at, FleetEvent::JobArrival(Box::new(spec)));
+    }
+
+    /// Retire a job now (departure at the current tick).
+    pub fn retire(&mut self, name: &str) {
+        let at = self.clock;
+        self.retire_at(name, at);
+    }
+
+    /// Retire a job at virtual tick `at` (clamped to now if in the past).
+    pub fn retire_at(&mut self, name: &str, at: u64) {
+        self.schedule(at, FleetEvent::JobDeparture(name.to_string()));
+    }
+
+    /// Report an external drift verdict for a job now.
+    pub fn observe_verdict(&mut self, job: &str, verdict: DriftVerdict) {
+        let at = self.clock;
+        self.observe_verdict_at(job, verdict, at);
+    }
+
+    /// Report an external drift verdict at virtual tick `at`.
+    pub fn observe_verdict_at(&mut self, job: &str, verdict: DriftVerdict, at: u64) {
+        self.schedule(at, FleetEvent::DriftVerdict { job: job.to_string(), verdict });
+    }
+
+    /// Handle the next scheduled event. Returns `false` once the
+    /// schedule is empty.
+    pub fn step(&mut self) -> Result<bool> {
+        match self.heap.pop() {
+            Some(Reverse(s)) => {
+                self.handle(s.at, s.event)?;
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
+
+    /// Handle every event scheduled at or before virtual tick `t`;
+    /// returns how many events were processed.
+    pub fn run_until(&mut self, t: u64) -> Result<usize> {
+        let mut handled = 0;
+        while self.heap.peek().is_some_and(|Reverse(s)| s.at <= t) {
+            let Reverse(s) = self.heap.pop().expect("peeked event exists");
+            self.handle(s.at, s.event)?;
+            handled += 1;
+        }
+        self.clock = self.clock.max(t);
+        Ok(handled)
+    }
+
+    /// Play out every remaining event and assemble the final report —
+    /// the daemon's terminal operation, mirroring what the batch
+    /// session returns for the equivalent schedule.
+    pub fn drain(mut self) -> Result<FleetReport> {
+        while self.step()? {}
+        let adaptive = match self.adaptive_loop.take() {
+            Some(al) => Some(al.finish(&self.cache)),
+            None => None,
+        };
+        let plan = if self.rebalance {
+            Some(match (&self.sweep, &adaptive) {
+                // After adaptation, rebalance from the *final* models
+                // and rates, not the cold sweep's.
+                (_, Some(ad)) => rebalance(&self.final_fleet_jobs(ad)),
+                (Some(s), None) => s.rebalanced(),
+                (None, None) => unreachable!("the bootstrap replan always ran one of the two"),
+            })
+        } else {
+            None
+        };
+        let cache = self.cache.stats().delta_since(&self.stats_at_build);
+        Ok(FleetReport::assemble(self.sweep, adaptive, plan, cache))
+    }
+
+    fn schedule(&mut self, at: u64, event: FleetEvent) {
+        let class = match event {
+            FleetEvent::Replan => 1,
+            _ => 0,
+        };
+        let at = at.max(self.clock);
+        self.seq += 1;
+        self.heap.push(Reverse(Scheduled { at, class, seq: self.seq, event }));
+    }
+
+    /// Schedule a coalesced replan at the current tick: one replan
+    /// absorbs every same-tick mutation queued before it.
+    fn schedule_replan(&mut self) {
+        if !self.replan_queued {
+            self.replan_queued = true;
+            let at = self.clock;
+            self.schedule(at, FleetEvent::Replan);
+        }
+    }
+
+    fn record(&mut self, kind: &'static str, detail: String) {
+        self.journal.push(JournalEntry { at: self.clock, kind, detail });
+    }
+
+    fn handle(&mut self, at: u64, event: FleetEvent) -> Result<()> {
+        self.clock = self.clock.max(at);
+        self.metrics.events_processed += 1;
+        match event {
+            FleetEvent::JobArrival(spec) => self.on_arrival(*spec),
+            FleetEvent::JobDeparture(name) => self.on_departure(&name),
+            FleetEvent::DriftVerdict { job, verdict } => self.on_verdict(&job, verdict),
+            FleetEvent::EpochTick { epoch } => self.on_epoch_tick(epoch)?,
+            FleetEvent::ProbeCompletion { job, executed } => {
+                self.record("probe-completion", format!("{job}: {executed} probes executed"));
+            }
+            FleetEvent::Replan => self.on_replan()?,
+        }
+        Ok(())
+    }
+
+    fn on_arrival(&mut self, spec: FleetJobSpec) {
+        self.metrics.arrivals += 1;
+        self.record("arrival", format!("{} ({}) on {}", spec.name, spec.label(), spec.node.name));
+        if self.bootstrapped {
+            self.pending.push(PendingWork { spec: spec.clone(), verdict: None });
+        }
+        self.roster.push(spec);
+        self.schedule_replan();
+    }
+
+    fn on_departure(&mut self, name: &str) {
+        self.metrics.departures += 1;
+        self.record("departure", name.to_string());
+        self.roster.retain(|s| s.name != name);
+        self.pending.retain(|w| w.spec.name != name);
+        self.extras.retain(|o| o.name != name);
+        if let Some(sweep) = &mut self.sweep {
+            sweep.outcomes.retain(|o| o.name != name);
+        }
+        if self.bootstrapped {
+            self.schedule_replan();
+        }
+    }
+
+    fn on_verdict(&mut self, job: &str, verdict: DriftVerdict) {
+        self.metrics.verdicts += 1;
+        self.record("verdict", format!("{job}: {}", verdict.name()));
+        if !verdict.is_drift() {
+            return;
+        }
+        let Some(spec) = self.roster.iter().find(|s| s.name == job).cloned() else {
+            return;
+        };
+        if matches!(verdict, DriftVerdict::ModelStale { .. }) {
+            // Stale model ⇒ poisoned measurements: age the label so the
+            // re-profile executes instead of replaying them.
+            self.cache.bump_generation(&spec.label());
+            self.cache.evict_stale();
+        }
+        self.pending.push(PendingWork { spec, verdict: Some(verdict) });
+        self.schedule_replan();
+    }
+
+    fn on_epoch_tick(&mut self, epoch: usize) -> Result<()> {
+        self.record("epoch-tick", format!("epoch {epoch}"));
+        let Some(al) = self.adaptive_loop.as_mut() else {
+            return Ok(());
+        };
+        let report = al.run_epoch(&self.cache)?;
+        let mut entries: Vec<(&'static str, String)> = Vec::new();
+        for (name, v) in &report.verdicts {
+            if v.is_drift() {
+                entries.push(("verdict", format!("{name}: {}", v.name())));
+            }
+        }
+        for r in &report.reprofiled {
+            let detail = format!("{}: {} probes executed", r.name, r.executed_probes);
+            entries.push(("probe-completion", detail));
+        }
+        let replanned = report.plan.is_some();
+        for (kind, detail) in entries {
+            self.journal.push(JournalEntry { at: self.clock, kind, detail });
+        }
+        if replanned {
+            self.metrics.replans += 1;
+        }
+        Ok(())
+    }
+
+    fn on_replan(&mut self) -> Result<()> {
+        self.replan_queued = false;
+        self.metrics.replans += 1;
+        if !self.bootstrapped {
+            self.bootstrapped = true;
+            self.record("replan", format!("bootstrap over {} jobs", self.roster.len()));
+            match self.adaptive.clone() {
+                Some(acfg) => {
+                    let al =
+                        AdaptiveLoop::start(&self.cfg, &self.cache, self.roster.clone(), &acfg)?;
+                    for e in 1..=acfg.epochs {
+                        let at = (self.cfg.horizon + e * acfg.epoch_ticks) as u64;
+                        self.schedule(at, FleetEvent::EpochTick { epoch: e });
+                    }
+                    self.adaptive_loop = Some(al);
+                }
+                None => {
+                    self.sweep_base = self.cache.stats();
+                    let sweep = run_sweep(&self.cfg, &self.cache, self.roster.clone())?;
+                    self.next_index = sweep.outcomes.len();
+                    self.sweep = Some(sweep);
+                }
+            }
+        } else {
+            self.record("replan", format!("{} pending updates", self.pending.len()));
+        }
+        let work = std::mem::take(&mut self.pending);
+        for w in work {
+            self.apply_pending(w)?;
+        }
+        if let Some(sweep) = &mut self.sweep {
+            sweep.plans = plan_capacity(&sweep.outcomes);
+            sweep.cache = self.cache.stats().delta_since(&self.sweep_base);
+        }
+        Ok(())
+    }
+
+    /// Profile one pending unit of work: a fresh arrival cold (the full
+    /// configured rounds) or a drift verdict warm (one round, primed
+    /// from the job's current model — exactly the adaptive loop's pass).
+    fn apply_pending(&mut self, work: PendingWork) -> Result<()> {
+        let PendingWork { spec, verdict } = work;
+        if !self.roster.iter().any(|s| s.name == spec.name) {
+            return Ok(()); // retired while queued
+        }
+        let pass = match verdict {
+            None => ProfilePass::default(),
+            Some(v) => ProfilePass {
+                runtime_scale: None,
+                prior: self.model_of(&spec.name),
+                session_warm: matches!(v, DriftVerdict::ModelStale { .. }),
+                rate_hz: match v {
+                    DriftVerdict::RateShift { observed_hz, .. } => Some(observed_hz),
+                    _ => None,
+                },
+                rounds: Some(1),
+            },
+        };
+        let miss_before = self.cache.stats().misses;
+        let outcome = worker::profile_job_with(&spec, &self.cfg, &self.cache, 0, &pass)?;
+        let executed = self.cache.stats().misses - miss_before;
+        self.record("probe-completion", format!("{}: {executed} probes executed", spec.name));
+        self.merge_outcome(outcome);
+        Ok(())
+    }
+
+    /// The job's current fitted model, wherever it last landed.
+    fn model_of(&self, name: &str) -> Option<RuntimeModel> {
+        if let Some(x) = self.extras.iter().find(|o| o.name == name) {
+            return Some(x.model.clone());
+        }
+        self.sweep
+            .as_ref()
+            .and_then(|s| s.outcomes.iter().find(|o| o.name == name))
+            .map(|o| o.model.clone())
+    }
+
+    /// Fold a freshly profiled outcome into the live state: replace by
+    /// name keeping the original submission index, or append with the
+    /// next index so the outcome order stays the arrival order.
+    fn merge_outcome(&mut self, mut outcome: JobOutcome) {
+        if let Some(sweep) = &mut self.sweep {
+            if let Some(old) = sweep.outcomes.iter_mut().find(|o| o.name == outcome.name) {
+                outcome.index = old.index;
+                *old = outcome;
+            } else {
+                outcome.index = self.next_index;
+                self.next_index += 1;
+                sweep.outcomes.push(outcome);
+            }
+        } else if let Some(old) = self.extras.iter_mut().find(|o| o.name == outcome.name) {
+            *old = outcome;
+        } else {
+            self.extras.push(outcome);
+        }
+    }
+
+    /// The placement view of the fleet's final per-job state in adaptive
+    /// mode: the loop's final models, overridden by any later external
+    /// re-profile (`extras`), restricted to jobs still on the roster,
+    /// plus mid-run arrivals the loop never tracked.
+    fn final_fleet_jobs(&self, ad: &AdaptiveSummary) -> Vec<FleetJob> {
+        let mut jobs: Vec<FleetJob> = Vec::new();
+        for j in &ad.jobs {
+            let Some(spec) = self.roster.iter().find(|s| s.name == j.name) else {
+                continue; // retired after the bootstrap
+            };
+            if let Some(x) = self.extras.iter().find(|o| o.name == j.name) {
+                jobs.push(FleetJob::from(x));
+            } else {
+                jobs.push(FleetJob {
+                    name: j.name.clone(),
+                    node: spec.node,
+                    model: j.model.clone(),
+                    rate_hz: j.rate_hz,
+                    priority: spec.priority,
+                });
+            }
+        }
+        for x in &self.extras {
+            let tracked = ad.jobs.iter().any(|j| j.name == x.name);
+            let live = self.roster.iter().any(|s| s.name == x.name);
+            if !tracked && live {
+                jobs.push(FleetJob::from(x));
+            }
+        }
+        jobs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{CapacityPlan, ProfilerConfig};
+    use crate::fleet::{sim_fleet, FleetSummary};
+
+    fn planned(sweep: &FleetSummary, job: &str) -> bool {
+        let in_plan = |p: &CapacityPlan| p.assignments.iter().any(|a| a.name == job);
+        sweep.plans.iter().any(|(_, p)| in_plan(p))
+    }
+
+    fn quick_cfg() -> FleetConfig {
+        FleetConfig {
+            workers: 2,
+            rounds: 1,
+            profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
+            horizon: 500,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn empty_roster_fails_like_the_batch_sweep() {
+        let err = FleetDaemon::builder().config(quick_cfg()).build().drain().unwrap_err();
+        assert!(err.to_string().contains("at least one job spec"), "got: {err:#}");
+    }
+
+    #[test]
+    fn events_process_in_virtual_time_order_not_submission_order() {
+        let mut d = FleetDaemon::builder().config(quick_cfg()).jobs(sim_fleet(2, 7)).build();
+        let tail: Vec<_> = sim_fleet(4, 7).into_iter().skip(2).collect();
+        let mut tail = tail.into_iter();
+        // Submitted later-tick first: the schedule must reorder them.
+        d.submit_at(tail.next().unwrap(), 300); // job-02
+        d.submit_at(tail.next().unwrap(), 100); // job-03
+        assert_eq!(d.run_until(50).unwrap(), 3, "2 arrivals + the coalesced bootstrap replan");
+        let arrivals: Vec<&str> = d
+            .journal()
+            .iter()
+            .filter(|e| e.kind == "arrival")
+            .map(|e| e.detail.split_whitespace().next().unwrap())
+            .collect();
+        assert_eq!(arrivals, ["job-00", "job-01"]);
+        assert_eq!(d.now(), 50, "run_until advances the clock even when idle");
+        d.run_until(400).unwrap();
+        let arrivals: Vec<&str> = d
+            .journal()
+            .iter()
+            .filter(|e| e.kind == "arrival")
+            .map(|e| e.detail.split_whitespace().next().unwrap())
+            .collect();
+        assert_eq!(arrivals, ["job-00", "job-01", "job-03", "job-02"], "time order wins");
+        let report = d.drain().unwrap();
+        assert_eq!(report.summary().outcomes.len(), 4);
+    }
+
+    #[test]
+    fn mid_run_arrivals_merge_into_the_live_sweep_in_arrival_order() {
+        let mut d = FleetDaemon::builder().config(quick_cfg()).jobs(sim_fleet(3, 7)).build();
+        d.run_until(0).unwrap();
+        assert_eq!(d.metrics().replans, 1, "bootstrap replan ran");
+        let extra = sim_fleet(4, 7).pop().unwrap();
+        d.submit_at(extra, 600);
+        d.run_until(600).unwrap();
+        assert_eq!(d.metrics().replans, 2, "arrival triggered a second replan");
+        let sweep = d.sweep.as_ref().expect("sweep mode");
+        let names: Vec<&str> = sweep.outcomes.iter().map(|o| o.name.as_str()).collect();
+        assert_eq!(names, ["job-00", "job-01", "job-02", "job-03"]);
+        assert!(planned(sweep, "job-03"), "newcomer entered the node plans");
+        let report = d.drain().unwrap();
+        assert_eq!(report.summary().outcomes.len(), 4);
+    }
+
+    #[test]
+    fn departures_leave_the_plans_and_report() {
+        let mut d = FleetDaemon::builder().config(quick_cfg()).jobs(sim_fleet(3, 7)).build();
+        d.run_until(0).unwrap();
+        d.retire_at("job-01", 500);
+        d.run_until(500).unwrap();
+        assert_eq!(d.metrics().departures, 1);
+        let sweep = d.sweep.as_ref().expect("sweep mode");
+        assert_eq!(sweep.outcomes.len(), 2);
+        assert!(!planned(sweep, "job-01"), "departed job must leave the node plans");
+        let report = d.drain().unwrap();
+        assert_eq!(report.summary().outcomes.len(), 2);
+    }
+
+    #[test]
+    fn stale_verdict_reprofiles_warm_with_an_aged_cache() {
+        let mut d = FleetDaemon::builder().config(quick_cfg()).jobs(sim_fleet(2, 7)).build();
+        d.run_until(0).unwrap();
+        let cold = d.cache.stats();
+        d.observe_verdict_at("job-00", DriftVerdict::ModelStale { rolling_smape: 0.9 }, 700);
+        d.run_until(700).unwrap();
+        let after = d.cache.stats();
+        assert!(after.evictions > cold.evictions, "stale label entries evicted");
+        assert!(after.misses > cold.misses, "re-profile executed fresh probes");
+        let probes: Vec<&JournalEntry> = d
+            .journal()
+            .iter()
+            .filter(|e| e.kind == "probe-completion")
+            .collect();
+        assert_eq!(probes.len(), 1);
+        assert!(probes[0].detail.starts_with("job-00:"));
+        // Stable and unknown-job verdicts are recorded but change nothing.
+        d.observe_verdict_at("job-01", DriftVerdict::Stable, 800);
+        d.observe_verdict_at(
+            "job-99",
+            DriftVerdict::RateShift { provisioned_hz: 2.0, observed_hz: 8.0 },
+            800,
+        );
+        d.run_until(800).unwrap();
+        assert_eq!(d.metrics().verdicts, 3);
+        assert_eq!(d.metrics().replans, 2, "neither late verdict queued work");
+        let report = d.drain().unwrap();
+        assert_eq!(report.summary().outcomes.len(), 2);
+    }
+
+    #[test]
+    fn rate_shift_verdict_replans_against_the_observed_rate() {
+        let mut d = FleetDaemon::builder()
+            .config(quick_cfg())
+            .jobs(sim_fleet(2, 7))
+            .rebalance(true)
+            .build();
+        d.run_until(0).unwrap();
+        let verdict = DriftVerdict::RateShift { provisioned_hz: 2.0, observed_hz: 9.0 };
+        d.observe_verdict_at("job-01", verdict, 400);
+        d.run_until(400).unwrap();
+        let sweep = d.sweep.as_ref().expect("sweep mode");
+        let job = sweep.outcomes.iter().find(|o| o.name == "job-01").unwrap();
+        assert_eq!(job.rate_hz, 9.0, "re-profile provisioned for the observed rate");
+        assert_eq!(job.index, 1, "in-place update keeps the submission index");
+        let report = d.drain().unwrap();
+        let plan = report.plan.expect("rebalance stage ran");
+        assert_eq!(plan.metrics.jobs, 2);
+    }
+
+    #[test]
+    fn past_events_clamp_to_the_current_tick() {
+        let mut d = FleetDaemon::builder().config(quick_cfg()).jobs(sim_fleet(1, 7)).build();
+        d.run_until(900).unwrap();
+        let late = sim_fleet(2, 7).pop().unwrap();
+        d.submit_at(late, 100); // in the past: clamps to t = 900
+        assert_eq!(d.run_until(899).unwrap(), 0);
+        assert!(d.run_until(900).unwrap() > 0);
+        assert_eq!(d.sweep.as_ref().unwrap().outcomes.len(), 2);
+    }
+}

@@ -13,8 +13,8 @@
 //!   observed-vs-predicted runtimes plus the stream's per-epoch peak rate,
 //!   and raises a typed [`DriftVerdict`] — `Stable`, `RateShift`, or
 //!   `ModelStale` — against configurable thresholds;
-//! * the adaptive stage of [`super::FleetSession`] (née
-//!   `FleetEngine::run_adaptive`) replaces fixed rounds: after one cold
+//! * the adaptive stage of [`super::FleetSession`] and
+//!   [`super::FleetDaemon`] replaces fixed rounds: after one cold
 //!   sweep it re-profiles **only** jobs whose verdict crossed a threshold,
 //!   warm-starting the refit from the stale fit, bumping the measurement
 //!   cache's label generation on `ModelStale` (so the re-profile executes
@@ -45,7 +45,7 @@ use super::cache::{CacheStats, MeasurementCache};
 use super::migrate::{rebalance, FleetPlan};
 use super::placement::FleetJob;
 use super::worker::{self, ProfilePass};
-use super::{FleetConfig, FleetEngine, FleetJobSpec, FleetSummary};
+use super::{FleetConfig, FleetJobSpec, FleetSummary};
 
 /// Drift-detection thresholds.
 #[derive(Clone, Debug)]
@@ -335,21 +335,15 @@ impl LiveJob {
     }
 }
 
-impl FleetEngine {
-    /// Drift-aware continuous profiling over the engine's cache.
-    #[deprecated(note = "use `FleetSession::builder().jobs(..).adaptive(..).run()`")]
-    pub fn run_adaptive(
-        &self,
-        specs: Vec<FleetJobSpec>,
-        acfg: &AdaptiveConfig,
-    ) -> Result<AdaptiveSummary> {
-        run_adaptive_loop(self.config(), self.cache(), specs, acfg)
-    }
-}
-
 /// Drift-aware continuous profiling: one cold sweep, then `epochs`
 /// adaptation rounds that re-profile **only** drifted jobs — the adaptive
-/// stage behind [`super::FleetSession`].
+/// stage behind [`super::FleetSession`] and [`super::FleetDaemon`].
+///
+/// [`AdaptiveLoop::start`] validates the scenario and runs the cold
+/// sweep; each [`AdaptiveLoop::run_epoch`] call performs one adaptation
+/// epoch (the daemon fires one per `EpochTick` event, the batch session
+/// replays them back-to-back); [`AdaptiveLoop::finish`] consumes the
+/// loop into an [`AdaptiveSummary`].
 ///
 /// Per epoch, per job: observe the stream's peak rate over the epoch
 /// window and a handful of live runtimes against the model's
@@ -362,90 +356,118 @@ impl FleetEngine {
 /// re-enters its [`JobManager`] with the new model and rate, node
 /// plans are recomputed, and the fleet is rebalanced so downgraded
 /// jobs can move. With zero drift this performs zero re-profiles and
-/// the returned `initial` summary is byte-identical to the plain sweep.
-pub(crate) fn run_adaptive_loop(
-    cfg: &FleetConfig,
-    cache: &MeasurementCache,
-    specs: Vec<FleetJobSpec>,
-    acfg: &AdaptiveConfig,
-) -> Result<AdaptiveSummary> {
-    ensure!(acfg.epochs == 0 || acfg.epoch_ticks > 0, "adaptive epochs need epoch_ticks > 0");
-    ensure!(acfg.drift.window > 0, "drift window must be non-empty");
-    ensure!(
-        acfg.drift.min_observations <= acfg.drift.window,
-        "min_observations exceeds the rolling window"
-    );
-    // The measurement cache is shared per label (= job class): jobs of
-    // one class on one device replay each other's probes, so a runtime
-    // shift that applies to only some of them would let a drifted
-    // re-profile poison its undrifted siblings' entries (and vice
-    // versa). Reject such scenarios up front.
-    for a in &specs {
-        for b in &specs {
-            if a.label() != b.label() {
-                continue;
-            }
-            let same = match (&a.runtime_shift, &b.runtime_shift) {
-                (None, None) => true,
-                (Some(x), Some(y)) => x.at_tick == y.at_tick && x.scale == y.scale,
-                _ => false,
-            };
-            ensure!(
-                same,
-                "jobs '{}' and '{}' share cache label '{}' but have different \
-                 runtime shifts — a class drifts as a whole",
-                a.name,
-                b.name,
-                a.label()
-            );
-        }
-    }
-    let stats_start = cache.stats();
-    let initial = super::run_sweep(cfg, cache, specs.clone())?;
-    let stats_after_sweep = cache.stats();
+/// the `initial` summary is byte-identical to the plain sweep.
+pub(crate) struct AdaptiveLoop {
+    cfg: FleetConfig,
+    acfg: AdaptiveConfig,
+    managers: BTreeMap<&'static str, JobManager>,
+    live: Vec<LiveJob>,
+    epochs: Vec<EpochReport>,
+    initial: FleetSummary,
+    stats_start: CacheStats,
+    stats_after_sweep: CacheStats,
+}
 
-    // Mirror the cold sweep's per-node managers: the adaptive loop
-    // re-enters them in place instead of rebuilding the world.
-    let mut managers: BTreeMap<&'static str, JobManager> = BTreeMap::new();
-    let mut live: Vec<LiveJob> = Vec::with_capacity(initial.outcomes.len());
-    for o in &initial.outcomes {
-        let spec = specs
-            .iter()
-            .find(|s| s.name == o.name)
-            .expect("outcome names mirror submitted specs")
-            .clone();
-        managers
-            .entry(o.node.name)
-            .or_insert_with(|| JobManager::new(o.node.cores))
-            .register(ManagedJob {
-                name: o.name.clone(),
+impl AdaptiveLoop {
+    /// Validate the scenario, run the cold sweep, and arm one
+    /// [`DriftMonitor`] per job.
+    pub(crate) fn start(
+        cfg: &FleetConfig,
+        cache: &MeasurementCache,
+        specs: Vec<FleetJobSpec>,
+        acfg: &AdaptiveConfig,
+    ) -> Result<Self> {
+        ensure!(acfg.epochs == 0 || acfg.epoch_ticks > 0, "adaptive epochs need epoch_ticks > 0");
+        ensure!(acfg.drift.window > 0, "drift window must be non-empty");
+        ensure!(
+            acfg.drift.min_observations <= acfg.drift.window,
+            "min_observations exceeds the rolling window"
+        );
+        // The measurement cache is shared per label (= job class): jobs of
+        // one class on one device replay each other's probes, so a runtime
+        // shift that applies to only some of them would let a drifted
+        // re-profile poison its undrifted siblings' entries (and vice
+        // versa). Reject such scenarios up front.
+        for a in &specs {
+            for b in &specs {
+                if a.label() != b.label() {
+                    continue;
+                }
+                let same = match (&a.runtime_shift, &b.runtime_shift) {
+                    (None, None) => true,
+                    (Some(x), Some(y)) => x.at_tick == y.at_tick && x.scale == y.scale,
+                    _ => false,
+                };
+                ensure!(
+                    same,
+                    "jobs '{}' and '{}' share cache label '{}' but have different \
+                     runtime shifts — a class drifts as a whole",
+                    a.name,
+                    b.name,
+                    a.label()
+                );
+            }
+        }
+        let stats_start = cache.stats();
+        let initial = super::run_sweep(cfg, cache, specs.clone())?;
+        let stats_after_sweep = cache.stats();
+
+        // Mirror the cold sweep's per-node managers: the adaptive loop
+        // re-enters them in place instead of rebuilding the world.
+        let mut managers: BTreeMap<&'static str, JobManager> = BTreeMap::new();
+        let mut live: Vec<LiveJob> = Vec::with_capacity(initial.outcomes.len());
+        for o in &initial.outcomes {
+            let spec = specs
+                .iter()
+                .find(|s| s.name == o.name)
+                .expect("outcome names mirror submitted specs")
+                .clone();
+            managers
+                .entry(o.node.name)
+                .or_insert_with(|| JobManager::new(o.node.cores))
+                .register(ManagedJob {
+                    name: o.name.clone(),
+                    model: o.model.clone(),
+                    rate_hz: o.rate_hz,
+                    priority: o.priority,
+                });
+            let limit = initial
+                .assignment(&o.name)
+                .map(|a| a.adjustment.limit)
+                .unwrap_or(o.node.cores);
+            let probe = match acfg.epochs {
+                0 => None,
+                _ => Some(spec.backend.probe()?),
+            };
+            live.push(LiveJob {
+                monitor: DriftMonitor::new(acfg.drift.clone(), o.rate_hz),
+                probe,
                 model: o.model.clone(),
                 rate_hz: o.rate_hz,
-                priority: o.priority,
+                limit,
+                reprofiles: 0,
+                spec,
             });
-        let limit = initial
-            .assignment(&o.name)
-            .map(|a| a.adjustment.limit)
-            .unwrap_or(o.node.cores);
-        let probe = match acfg.epochs {
-            0 => None,
-            _ => Some(spec.backend.probe()?),
-        };
-        live.push(LiveJob {
-            monitor: DriftMonitor::new(acfg.drift.clone(), o.rate_hz),
-            probe,
-            model: o.model.clone(),
-            rate_hz: o.rate_hz,
-            limit,
-            reprofiles: 0,
-            spec,
-        });
+        }
+        Ok(Self {
+            cfg: cfg.clone(),
+            acfg: acfg.clone(),
+            managers,
+            live,
+            epochs: Vec::with_capacity(acfg.epochs),
+            initial,
+            stats_start,
+            stats_after_sweep,
+        })
     }
 
-    let mut epochs: Vec<EpochReport> = Vec::with_capacity(acfg.epochs);
-    for e in 1..=acfg.epochs {
-        let start = cfg.horizon + (e - 1) * acfg.epoch_ticks;
-        let end = start + acfg.epoch_ticks;
+    /// Run the next adaptation epoch (numbered from 1) and return its
+    /// report. Errors once all configured epochs have run.
+    pub(crate) fn run_epoch(&mut self, cache: &MeasurementCache) -> Result<&EpochReport> {
+        let e = self.epochs.len() + 1;
+        ensure!(e <= self.acfg.epochs, "adaptive loop already ran every configured epoch");
+        let start = self.cfg.horizon + (e - 1) * self.acfg.epoch_ticks;
+        let end = start + self.acfg.epoch_ticks;
 
         // Phase 1: observe every job, collect verdicts. The rate
         // tracker looks back over at least the provisioning horizon:
@@ -454,10 +476,10 @@ pub(crate) fn run_adaptive_loop(
         // would alias the trough of a periodic (`Varying`) stream into
         // a spurious RateShift. Rises register immediately; drops
         // register once the old peak ages out of the lookback.
-        let lookback = acfg.epoch_ticks.max(cfg.horizon);
-        let mut verdicts: Vec<(String, DriftVerdict)> = Vec::with_capacity(live.len());
+        let lookback = self.acfg.epoch_ticks.max(self.cfg.horizon);
+        let mut verdicts: Vec<(String, DriftVerdict)> = Vec::with_capacity(self.live.len());
         let mut drifted: Vec<usize> = Vec::new();
-        for (i, job) in live.iter_mut().enumerate() {
+        for (i, job) in self.live.iter_mut().enumerate() {
             let rate_window = (end.saturating_sub(lookback), end);
             job.monitor.observe_rate(
                 job.spec
@@ -469,9 +491,9 @@ pub(crate) fn run_adaptive_loop(
             // the regime active at its own tick, so a mid-epoch
             // runtime shift is partially visible this epoch instead of
             // invisible until the next.
-            for k in 0..acfg.probes_per_epoch {
-                let tick = start + k * acfg.epoch_ticks / acfg.probes_per_epoch.max(1);
-                job.probe_once(acfg.probe_samples, job.scale_at(tick));
+            for k in 0..self.acfg.probes_per_epoch {
+                let tick = start + k * self.acfg.epoch_ticks / self.acfg.probes_per_epoch.max(1);
+                job.probe_once(self.acfg.probe_samples, job.scale_at(tick));
             }
             let verdict = job.monitor.verdict();
             if verdict.is_drift() {
@@ -483,7 +505,7 @@ pub(crate) fn run_adaptive_loop(
         // Phase 2: re-profile exactly the drifted jobs, warm-started.
         let mut reprofiled: Vec<ReprofiledJob> = Vec::with_capacity(drifted.len());
         for &i in &drifted {
-            let job = &mut live[i];
+            let job = &mut self.live[i];
             let verdict = verdicts[i].1;
             let pre_smape = job.monitor.rolling_smape();
             if matches!(verdict, DriftVerdict::ModelStale { .. }) {
@@ -507,12 +529,12 @@ pub(crate) fn run_adaptive_loop(
                 rounds: Some(1),
             };
             let outcome =
-                worker::profile_job_with(&job.spec, cfg, cache, 0, &pass)?;
+                worker::profile_job_with(&job.spec, &self.cfg, cache, 0, &pass)?;
             let executed_probes = cache.stats().misses - miss_before;
             job.model = outcome.model;
             job.rate_hz = observed_hz;
             job.reprofiles += 1;
-            let mgr = managers.get_mut(job.spec.node.name).expect("home manager exists");
+            let mgr = self.managers.get_mut(job.spec.node.name).expect("home manager exists");
             mgr.update_model(&job.spec.name, job.model.clone());
             mgr.update_rate(&job.spec.name, job.rate_hz);
             reprofiled.push(ReprofiledJob {
@@ -531,8 +553,8 @@ pub(crate) fn run_adaptive_loop(
             None
         } else {
             let plans: BTreeMap<&str, crate::coordinator::CapacityPlan> =
-                managers.iter().map(|(&n, m)| (n, m.plan())).collect();
-            for job in live.iter_mut() {
+                self.managers.iter().map(|(&n, m)| (n, m.plan())).collect();
+            for job in self.live.iter_mut() {
                 if let Some(a) = plans[job.spec.node.name]
                     .assignments
                     .iter()
@@ -542,15 +564,16 @@ pub(crate) fn run_adaptive_loop(
                 }
             }
             for (r, &i) in reprofiled.iter_mut().zip(&drifted) {
-                let job = &mut live[i];
+                let job = &mut self.live[i];
                 let scale = job.scale_at(end - 1);
                 job.monitor.rearm(job.rate_hz);
-                for _ in 0..acfg.drift.min_observations {
-                    job.probe_once(acfg.probe_samples, scale);
+                for _ in 0..self.acfg.drift.min_observations {
+                    job.probe_once(self.acfg.probe_samples, scale);
                 }
                 r.post_smape = job.monitor.rolling_smape();
             }
-            let fleet_jobs: Vec<FleetJob> = live
+            let fleet_jobs: Vec<FleetJob> = self
+                .live
                 .iter()
                 .map(|j| FleetJob {
                     name: j.spec.name.clone(),
@@ -562,29 +585,35 @@ pub(crate) fn run_adaptive_loop(
                 .collect();
             Some(rebalance(&fleet_jobs))
         };
-        epochs.push(EpochReport { epoch: e, verdicts, reprofiled, plan });
+        self.epochs.push(EpochReport { epoch: e, verdicts, reprofiled, plan });
+        Ok(self.epochs.last().expect("epoch report just pushed"))
     }
 
-    let stats_end = cache.stats();
-    let jobs = live
-        .into_iter()
-        .map(|j| AdaptiveJobReport {
-            name: j.spec.name.clone(),
-            label: j.spec.label(),
-            reprofiles: j.reprofiles,
-            fingerprint: model_fingerprint(&j.model),
-            model: j.model,
-            rate_hz: j.rate_hz,
-            limit: j.limit,
-        })
-        .collect();
-    Ok(AdaptiveSummary {
-        initial,
-        epochs,
-        jobs,
-        cache: stats_end.delta_since(&stats_start),
-        adaptive_probe_executions: stats_end.misses - stats_after_sweep.misses,
-    })
+    /// Consume the loop into its summary: final per-job state plus the
+    /// cache traffic attributable to this adaptive run.
+    pub(crate) fn finish(self, cache: &MeasurementCache) -> AdaptiveSummary {
+        let stats_end = cache.stats();
+        let jobs = self
+            .live
+            .into_iter()
+            .map(|j| AdaptiveJobReport {
+                name: j.spec.name.clone(),
+                label: j.spec.label(),
+                reprofiles: j.reprofiles,
+                fingerprint: model_fingerprint(&j.model),
+                model: j.model,
+                rate_hz: j.rate_hz,
+                limit: j.limit,
+            })
+            .collect();
+        AdaptiveSummary {
+            initial: self.initial,
+            epochs: self.epochs,
+            jobs,
+            cache: stats_end.delta_since(&self.stats_start),
+            adaptive_probe_executions: stats_end.misses - self.stats_after_sweep.misses,
+        }
+    }
 }
 
 #[cfg(test)]

@@ -22,6 +22,12 @@
 //! next candidate is tried. The shed set is fixed up front and residuals
 //! only shrink, so one pass over the ordered shed jobs reaches the
 //! fixpoint.
+//!
+//! Both front-ends reuse this pass unchanged: the batch session runs it
+//! once after the sweep, and the event-driven [`super::FleetDaemon`] runs
+//! it at the end of every coalesced replan — each localized replan ends
+//! with a fresh fleet-wide [`FleetPlan`], so mid-stream arrivals and
+//! drift verdicts can trigger migrations too.
 
 use std::collections::BTreeMap;
 

@@ -13,22 +13,21 @@
 //! [`CapacityPlan`]s that close the paper's adaptive-adjustment loop.
 //!
 //! ```text
-//!  FleetJobSpec*N ──► WorkQueue ──► worker pool (scoped threads)
-//!                                     │  Profiler::run_observed
-//!                                     │   ├─ BackendFactory::build ─► CachedBackend ─► cache
-//!                                     │   └─ IncrementalModel (warm refits)
-//!                                     ▼
-//!                                  JobOutcome*N ──► per-node JobManager ──► CapacityPlan
+//!  FleetJobSpec*N ──► WorkQueue (striped) ──► worker pool (scoped threads)
+//!                                               │  Profiler::run_observed
+//!                                               │   ├─ BackendFactory::build ─► CachedBackend
+//!                                               │   │      ─► cache (sharded)
+//!                                               │   └─ IncrementalModel (warm refits)
+//!                                               ▼
+//!                                            JobOutcome*N ──► per-node JobManager ──► CapacityPlan
 //! ```
 //!
-//! ## The session API
+//! ## The session and daemon APIs
 //!
-//! [`FleetSession`] is the public entry point: one composable pipeline
+//! [`FleetSession`] is the batch entry point: one composable pipeline
 //! that runs the sweep and optionally layers rebalancing and the adaptive
 //! drift loop on top, over **any** [`BackendFactory`] — the paper's
-//! black-box claim made a type-level contract. The former
-//! `FleetEngine::run` / `run_rebalanced` / `run_adaptive` trio remains as
-//! deprecated shims for one release:
+//! black-box claim made a type-level contract:
 //!
 //! ```no_run
 //! use streamprof::fleet::{sim_fleet, AdaptiveConfig, FleetSession};
@@ -41,6 +40,13 @@
 //! # anyhow::Ok(())
 //! ```
 //!
+//! [`FleetDaemon`] is the long-lived, event-driven form of the same
+//! engine: jobs arrive and retire mid-run, drift verdicts trigger
+//! localized replans, and the whole schedule plays out on a deterministic
+//! virtual clock. The session is a thin wrapper that replays its roster
+//! as arrivals at `t = 0` and drains the daemon, so the two are
+//! equivalent by construction.
+//!
 //! On top of the one-shot sweep, the [`drift`] module runs the fleet
 //! *continuously*: the adaptive stage monitors every job's
 //! observed-vs-predicted runtime and stream rate, re-profiles only jobs
@@ -48,6 +54,7 @@
 //! cache by label generation so stale observations are never replayed.
 
 pub mod cache;
+pub mod daemon;
 pub mod drift;
 pub mod migrate;
 pub mod placement;
@@ -60,6 +67,7 @@ pub mod worker;
 pub use crate::coordinator::backend::{BackendFactory, EngineBackendFactory, SimBackendFactory};
 
 pub use cache::{CacheStats, CachedBackend, MeasurementCache};
+pub use daemon::{DaemonMetrics, FleetDaemon, FleetDaemonBuilder, FleetEvent, JournalEntry};
 pub use drift::{
     model_fingerprint, AdaptiveConfig, AdaptiveJobReport, AdaptiveSummary, DriftConfig,
     DriftMonitor, DriftVerdict, EpochReport, ReprofiledJob, RuntimeShift,
@@ -225,9 +233,32 @@ impl FleetSummary {
     }
 }
 
+/// Register every outcome's fitted model with its home node's manager and
+/// derive the per-node capacity plans (sorted by node name) — the
+/// planning tail of [`run_sweep`], reused by [`FleetDaemon`] when a
+/// localized replan recomputes plans over a merged outcome set.
+pub(crate) fn plan_capacity(outcomes: &[JobOutcome]) -> Vec<(String, CapacityPlan)> {
+    let mut managers: BTreeMap<&'static str, JobManager> = BTreeMap::new();
+    for o in outcomes {
+        managers
+            .entry(o.node.name)
+            .or_insert_with(|| JobManager::new(o.node.cores))
+            .register(ManagedJob {
+                name: o.name.clone(),
+                model: o.model.clone(),
+                rate_hz: o.rate_hz,
+                priority: o.priority,
+            });
+    }
+    managers
+        .into_iter()
+        .map(|(name, mgr)| (name.to_string(), mgr.plan()))
+        .collect()
+}
+
 /// Profile every job across the worker pool and derive per-node capacity
 /// plans from the fitted models — the sweep stage shared by
-/// [`FleetSession::run`] and the deprecated [`FleetEngine`] shims.
+/// [`FleetSession::run`] and [`FleetDaemon`] replans.
 pub(crate) fn run_sweep(
     cfg: &FleetConfig,
     cache: &MeasurementCache,
@@ -245,7 +276,10 @@ pub(crate) fn run_sweep(
     let cache_before = cache.stats();
     let n_workers = cfg.workers.clamp(1, specs.len());
     let n_jobs = specs.len();
-    let queue = WorkQueue::new(specs.into_iter().enumerate());
+    // One lane per worker: each worker drains its own slice of the
+    // roster and steals from the others once it runs dry, so pops never
+    // serialize on a single queue mutex.
+    let queue = WorkQueue::striped(specs.into_iter().enumerate(), n_workers);
     let results: Mutex<Vec<JobOutcome>> = Mutex::new(Vec::with_capacity(n_jobs));
     let failures: Mutex<Vec<String>> = Mutex::new(Vec::new());
     std::thread::scope(|s| {
@@ -254,7 +288,7 @@ pub(crate) fn run_sweep(
             let results = &results;
             let failures = &failures;
             s.spawn(move || {
-                while let Some((index, spec)) = queue.pop() {
+                while let Some((index, spec)) = queue.pop_for(w) {
                     match worker::profile_job(&spec, cfg, cache, w) {
                         Ok(mut outcome) => {
                             outcome.index = index;
@@ -275,68 +309,9 @@ pub(crate) fn run_sweep(
 
     // Feed the fitted models into per-node managers: this is where the
     // fleet engine hands over to the adaptive-adjustment layer.
-    let mut managers: BTreeMap<&'static str, JobManager> = BTreeMap::new();
-    for o in &outcomes {
-        managers
-            .entry(o.node.name)
-            .or_insert_with(|| JobManager::new(o.node.cores))
-            .register(ManagedJob {
-                name: o.name.clone(),
-                model: o.model.clone(),
-                rate_hz: o.rate_hz,
-                priority: o.priority,
-            });
-    }
-    let plans = managers
-        .into_iter()
-        .map(|(name, mgr)| (name.to_string(), mgr.plan()))
-        .collect();
+    let plans = plan_capacity(&outcomes);
     let cache = cache.stats().delta_since(&cache_before);
     Ok(FleetSummary { outcomes, cache, plans })
-}
-
-/// The pre-session fleet engine: a config plus a persistent cache.
-///
-/// Superseded by [`FleetSession`] — the three run methods survive as
-/// deprecated shims for one release so downstream call sites migrate
-/// mechanically.
-pub struct FleetEngine {
-    cfg: FleetConfig,
-    cache: MeasurementCache,
-}
-
-impl FleetEngine {
-    pub fn new(cfg: FleetConfig) -> Self {
-        Self { cfg, cache: MeasurementCache::new() }
-    }
-
-    pub fn config(&self) -> &FleetConfig {
-        &self.cfg
-    }
-
-    /// The engine's persistent measurement cache.
-    pub fn cache(&self) -> &MeasurementCache {
-        &self.cache
-    }
-
-    /// Cache statistics so far (accumulates across runs).
-    pub fn cache_stats(&self) -> CacheStats {
-        self.cache.stats()
-    }
-
-    /// Profile every job and derive per-node capacity plans.
-    #[deprecated(note = "use `FleetSession::builder().config(..).jobs(..).run()`")]
-    pub fn run(&self, specs: Vec<FleetJobSpec>) -> Result<FleetSummary> {
-        run_sweep(&self.cfg, &self.cache, specs)
-    }
-
-    /// Profile every job, then rebalance shed jobs across the fleet.
-    #[deprecated(note = "use `FleetSession::builder().jobs(..).rebalance(true).run()`")]
-    pub fn run_rebalanced(&self, specs: Vec<FleetJobSpec>) -> Result<(FleetSummary, FleetPlan)> {
-        let summary = run_sweep(&self.cfg, &self.cache, specs)?;
-        let plan = summary.rebalanced();
-        Ok((summary, plan))
-    }
 }
 
 /// Build a synthetic fleet of `n` jobs cycling through the Table-I node
@@ -438,20 +413,5 @@ mod tests {
         let cfg = FleetConfig { strategy: "hillclimb".into(), ..FleetConfig::default() };
         let cache = MeasurementCache::new();
         assert!(run_sweep(&cfg, &cache, sim_fleet(2, 1)).is_err());
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_engine_shims_still_run() {
-        // The one-release migration contract: the old entry points keep
-        // working and agree with the session pipeline (the full
-        // equivalence guard lives in tests/fleet_e2e.rs).
-        let engine = FleetEngine::new(FleetConfig { workers: 1, rounds: 1, ..Default::default() });
-        let summary = engine.run(sim_fleet(2, 3)).unwrap();
-        assert_eq!(summary.outcomes.len(), 2);
-        assert!(engine.cache_stats().inserts > 0);
-        let (summary, plan) = engine.run_rebalanced(sim_fleet(2, 3)).unwrap();
-        assert_eq!(summary.outcomes.len(), 2);
-        assert_eq!(plan.metrics.jobs, 2);
     }
 }

@@ -1,30 +1,67 @@
 //! Shared work queue for the fleet worker pool.
 //!
 //! Deliberately minimal: profiling tasks are coarse (seconds to minutes of
-//! simulated work each), so a mutex-guarded deque is far below contention
-//! range and keeps the pool dependency-free. Workers pull until the queue
+//! simulated work each), so mutex-guarded deques are far below contention
+//! range and keep the pool dependency-free. Workers pull until the queue
 //! is drained; there is no re-enqueue, so termination is trivial.
+//!
+//! [`WorkQueue::new`] builds a single global FIFO (the original shape).
+//! [`WorkQueue::striped`] splits the backlog round-robin across one lane
+//! per worker, and [`WorkQueue::pop_for`] serves a worker from its home
+//! lane first, **stealing** from the other lanes in cyclic order once it
+//! runs dry — so a large roster drains without every pop serializing on
+//! one mutex, mirroring the measurement cache's lock striping.
 
 use std::collections::VecDeque;
 use std::sync::Mutex;
 
-/// A multi-consumer FIFO drained by the worker pool.
+/// A multi-consumer FIFO (optionally striped into per-worker lanes with
+/// work stealing) drained by the worker pool.
 pub struct WorkQueue<T> {
-    inner: Mutex<VecDeque<T>>,
+    lanes: Vec<Mutex<VecDeque<T>>>,
 }
 
 impl<T> WorkQueue<T> {
+    /// One global FIFO lane: strict arrival order under a single consumer.
     pub fn new<I: IntoIterator<Item = T>>(items: I) -> Self {
-        Self { inner: Mutex::new(items.into_iter().collect()) }
+        Self::striped(items, 1)
     }
 
-    /// Pop the next task; `None` once the queue is drained.
+    /// Distribute `items` round-robin across `stripes` lanes (clamped to
+    /// at least one). Item `i` lands in lane `i % stripes`, so a pool
+    /// whose worker `w` calls [`Self::pop_for`]`(w)` starts on disjoint
+    /// slices of the backlog.
+    pub fn striped<I: IntoIterator<Item = T>>(items: I, stripes: usize) -> Self {
+        let n = stripes.max(1);
+        let mut lanes: Vec<VecDeque<T>> = (0..n).map(|_| VecDeque::new()).collect();
+        for (i, item) in items.into_iter().enumerate() {
+            lanes[i % n].push_back(item);
+        }
+        Self { lanes: lanes.into_iter().map(Mutex::new).collect() }
+    }
+
+    /// Pop the next task; `None` once the queue is drained. Equivalent to
+    /// `pop_for(0)` — strict FIFO on an unstriped queue.
     pub fn pop(&self) -> Option<T> {
-        self.inner.lock().unwrap().pop_front()
+        self.pop_for(0)
+    }
+
+    /// Pop from `worker`'s home lane, stealing from the other lanes in
+    /// cyclic order once it is empty. `None` only when every lane is
+    /// drained.
+    pub fn pop_for(&self, worker: usize) -> Option<T> {
+        let n = self.lanes.len();
+        let home = worker % n;
+        for k in 0..n {
+            if let Some(item) = self.lanes[(home + k) % n].lock().unwrap().pop_front() {
+                return Some(item);
+            }
+        }
+        None
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        self.lanes.iter().map(|l| l.lock().unwrap().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -70,6 +107,55 @@ mod tests {
         let mut items: Vec<u32> = taken.iter().map(|&(_, i)| i).collect();
         items.sort_unstable();
         assert_eq!(items, (0..32).collect::<Vec<_>>(), "each task exactly once");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn striped_lanes_serve_home_worker_in_fifo_order() {
+        // 8 items over 3 lanes: lane 0 = {0,3,6}, lane 1 = {1,4,7},
+        // lane 2 = {2,5}. Each worker drains its home lane FIFO first.
+        let q = WorkQueue::striped(0..8, 3);
+        assert_eq!(q.len(), 8);
+        assert_eq!(q.pop_for(1), Some(1));
+        assert_eq!(q.pop_for(1), Some(4));
+        assert_eq!(q.pop_for(2), Some(2));
+        assert_eq!(q.pop_for(0), Some(0));
+        assert_eq!(q.pop_for(3), Some(3), "worker ids wrap onto the lane count");
+    }
+
+    #[test]
+    fn exhausted_worker_steals_from_the_next_lane() {
+        let q = WorkQueue::striped(0..4, 2); // lane 0 = {0,2}, lane 1 = {1,3}
+        assert_eq!(q.pop_for(0), Some(0));
+        assert_eq!(q.pop_for(0), Some(2));
+        // Home lane dry: steal lane 1's backlog, oldest first.
+        assert_eq!(q.pop_for(0), Some(1));
+        assert_eq!(q.pop_for(0), Some(3));
+        assert_eq!(q.pop_for(0), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn striped_concurrent_drain_consumes_each_task_once() {
+        // 64 tasks, 4 workers on their own lanes with stealing: the drain
+        // must cover every task exactly once even when fast workers steal.
+        let q = WorkQueue::striped(0..64u32, 4);
+        let taken: Mutex<Vec<u32>> = Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            for w in 0..4 {
+                let q = &q;
+                let taken = &taken;
+                s.spawn(move || {
+                    while let Some(item) = q.pop_for(w) {
+                        taken.lock().unwrap().push(item);
+                        std::thread::yield_now();
+                    }
+                });
+            }
+        });
+        let mut items = taken.into_inner().unwrap();
+        items.sort_unstable();
+        assert_eq!(items, (0..64).collect::<Vec<_>>(), "each task exactly once");
         assert!(q.is_empty());
     }
 }

@@ -1,10 +1,8 @@
 //! The composable fleet pipeline: one builder for sweep / rebalance /
 //! adaptive over any [`BackendFactory`](super::BackendFactory).
 //!
-//! The pre-session `FleetEngine` exposed three divergent entry points
-//! (`run`, `run_rebalanced`, `run_adaptive`) that each rebuilt their own
-//! plumbing. [`FleetSession`] collapses them into one pipeline whose
-//! stages compose:
+//! [`FleetSession`] is the batch form of the fleet engine — one pipeline
+//! whose stages compose:
 //!
 //! ```text
 //!  builder: jobs + config + cache ──► sweep ──► [adaptive epochs] ──► [rebalance]
@@ -20,7 +18,13 @@
 //!
 //! The unified [`FleetReport`] serializes through [`crate::util::json`]
 //! (`streamprof fleet --out report.json`), giving the fleet layer a
-//! stable machine-readable surface for the first time.
+//! stable machine-readable surface.
+//!
+//! Since the daemon landed, the session is a thin wrapper over
+//! [`FleetDaemon`]: [`FleetSession::run`] replays the roster as arrivals
+//! at `t = 0` and drains the event loop, so batch runs and event-driven
+//! runs are the same engine by construction (`tests/fleet_e2e.rs` pins
+//! the equivalence byte-for-byte).
 
 use std::sync::Arc;
 
@@ -31,12 +35,10 @@ use crate::fit::RuntimeModel;
 use crate::util::json::Json;
 
 use super::cache::{CacheStats, MeasurementCache};
-use super::drift::{
-    model_fingerprint, run_adaptive_loop, AdaptiveConfig, AdaptiveSummary, DriftVerdict,
-};
-use super::migrate::{rebalance, FleetPlan};
-use super::placement::FleetJob;
-use super::{run_sweep, FleetConfig, FleetJobSpec, FleetSummary};
+use super::daemon::FleetDaemon;
+use super::drift::{model_fingerprint, AdaptiveConfig, AdaptiveSummary, DriftVerdict};
+use super::migrate::FleetPlan;
+use super::{FleetConfig, FleetJobSpec, FleetSummary};
 
 /// Builder for a [`FleetSession`] — the single public entry point of the
 /// fleet layer.
@@ -145,51 +147,21 @@ impl FleetSession {
     }
 
     /// Run the configured pipeline: sweep, then the optional adaptive and
-    /// rebalance stages. With default stages (no adaptive, no rebalance)
-    /// the summary is byte-identical to the deprecated `FleetEngine::run`
-    /// on the same specs — enforced by `tests/fleet_e2e.rs`.
+    /// rebalance stages. Implemented as a replay through the event-driven
+    /// [`FleetDaemon`]: every spec arrives at `t = 0` and the daemon is
+    /// drained, which performs exactly one bootstrap sweep (or adaptive
+    /// run) over the full roster — byte-identical to the pre-daemon batch
+    /// pipeline, and provably the same engine the always-on form runs.
     pub fn run(&self) -> Result<FleetReport> {
-        let before = self.cache.stats();
-        let (sweep, adaptive) = match &self.adaptive {
-            Some(acfg) => {
-                (None, Some(run_adaptive_loop(&self.cfg, &self.cache, self.specs.clone(), acfg)?))
-            }
-            None => (Some(run_sweep(&self.cfg, &self.cache, self.specs.clone())?), None),
-        };
-        let plan = if self.rebalance {
-            Some(match (&sweep, &adaptive) {
-                // After adaptation, rebalance from the *final* models and
-                // rates, not the cold sweep's.
-                (_, Some(ad)) => rebalance(&self.final_fleet_jobs(ad)),
-                (Some(s), None) => s.rebalanced(),
-                (None, None) => unreachable!("one of sweep/adaptive always runs"),
-            })
-        } else {
-            None
-        };
-        let cache = self.cache.stats().delta_since(&before);
-        Ok(FleetReport { sweep, adaptive, plan, cache })
-    }
-
-    /// The placement view of the adaptive run's final per-job state.
-    fn final_fleet_jobs(&self, ad: &AdaptiveSummary) -> Vec<FleetJob> {
-        ad.jobs
-            .iter()
-            .map(|j| {
-                let spec = self
-                    .specs
-                    .iter()
-                    .find(|s| s.name == j.name)
-                    .expect("adaptive reports mirror submitted specs");
-                FleetJob {
-                    name: j.name.clone(),
-                    node: spec.node,
-                    model: j.model.clone(),
-                    rate_hz: j.rate_hz,
-                    priority: spec.priority,
-                }
-            })
-            .collect()
+        let mut builder = FleetDaemon::builder()
+            .config(self.cfg.clone())
+            .jobs(self.specs.iter().cloned())
+            .rebalance(self.rebalance)
+            .cache(self.cache.clone());
+        if let Some(acfg) = &self.adaptive {
+            builder = builder.adaptive(acfg.clone());
+        }
+        builder.build().drain()
     }
 }
 
@@ -210,6 +182,17 @@ pub struct FleetReport {
 }
 
 impl FleetReport {
+    /// Assemble a report from the pipeline's pieces — the daemon's drain
+    /// path and the session wrapper both end here.
+    pub(crate) fn assemble(
+        sweep: Option<FleetSummary>,
+        adaptive: Option<AdaptiveSummary>,
+        plan: Option<FleetPlan>,
+        cache: CacheStats,
+    ) -> Self {
+        Self { sweep, adaptive, plan, cache }
+    }
+
     /// The profiling sweep every stage built on (the cold sweep when the
     /// adaptive stage ran).
     pub fn summary(&self) -> &FleetSummary {

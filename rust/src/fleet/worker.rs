@@ -2,7 +2,9 @@
 //! measurement cache with incremental model refits.
 //!
 //! A worker repeatedly pulls job tasks from the [`super::queue::WorkQueue`]
-//! and runs `rounds` profiling sessions per job (round 0 is the cold
+//! — its own striped lane first, stealing from the other lanes only once
+//! that lane is dry — and runs `rounds` profiling sessions per job (round
+//! 0 is the cold
 //! profile; later rounds are the periodic re-profiles of the paper's
 //! adaptive loop, which the cache turns into near-free replays). Every
 //! measurement — cached or executed — lands in the job's

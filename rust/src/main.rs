@@ -20,8 +20,8 @@ use streamprof::coordinator::{
 };
 use streamprof::earlystop::EarlyStopConfig;
 use streamprof::fleet::{
-    sim_fleet, AdaptiveConfig, DriftConfig, FleetConfig, FleetJobSpec, FleetReport,
-    FleetSession, MeasurementCache, RuntimeShift,
+    sim_fleet, AdaptiveConfig, DriftConfig, DriftVerdict, FleetConfig, FleetDaemon,
+    FleetJobSpec, FleetReport, FleetSession, MeasurementCache, RuntimeShift,
 };
 use streamprof::repro;
 use streamprof::runtime::{artifacts_available, default_artifacts_dir, Engine};
@@ -74,6 +74,7 @@ fn print_help() {
          \u{20}           [--drift-threshold 0.25] [--rate-threshold 0.25]\n\
          \u{20}           [--shift-at 1500] [--shift-rate 8.0] [--shift-jobs 2]\n\
          \u{20}           [--stale-jobs 1] [--stale-scale 3.0]\n\
+         \u{20}           [--daemon] [--events \"@0 submit 12, @600 retire job-01\"]\n\
          \u{20}           [--out report.json] [--cache-file cache.json]\n\
          \u{20} repro     <table1|fig2|fig3|fig4|fig5|fig6|fig7|all> [--full]\n\
          \u{20} artifacts                     AOT artifact status\n"
@@ -276,8 +277,19 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             let n = cache
                 .restore(&snap)
                 .with_context(|| format!("restoring cache file {path}"))?;
-            println!("cache: restored {n} measurements from {path}");
+            let s = cache.stats();
+            println!(
+                "cache: restored {n} measurements from {path} \
+                 (lifetime: {} hits, {} misses, {:.2}s saved)",
+                s.hits,
+                s.misses,
+                s.saved_wallclock
+            );
         }
+    }
+
+    if args.flag("daemon") {
+        return cmd_fleet_daemon(args, cfg, cache, cache_file.as_deref());
     }
 
     let mut builder = FleetSession::builder()
@@ -308,12 +320,123 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         print_fleet_plan(fleet_plan);
     }
 
+    write_fleet_outputs(args, &report, &cache, cache_file.as_deref())
+}
+
+/// `streamprof fleet --daemon`: replay an `--events` timeline through the
+/// long-lived [`FleetDaemon`] and print its journal plus the drained report.
+///
+/// The spec is a comma-separated list of clauses, each `@<tick> <verb> ...`:
+///
+/// ```text
+/// @0 submit 4, @500 submit 2, @700 verdict job-00 model-stale, @900 retire job-01
+/// ```
+///
+/// `submit <n>` extends the simulated roster by `n` jobs (rosters are
+/// prefix-stable in the seed, so `@0 submit 4, @500 submit 2` profiles the
+/// same six jobs as a batch `--jobs 6` run — just two arrivals late).
+fn cmd_fleet_daemon(
+    args: &Args,
+    cfg: FleetConfig,
+    cache: Arc<MeasurementCache>,
+    cache_file: Option<&str>,
+) -> Result<()> {
+    if args.flag("adaptive") {
+        bail!("--daemon replaces --adaptive: drive drift with `verdict` events instead");
+    }
+    let workers = cfg.workers;
+    let rounds = cfg.rounds;
+    let seed = args.opt_u64("seed", 7);
+    let spec = args.opt_or("events", &format!("@0 submit {}", args.opt_usize("jobs", 12)));
+    let mut daemon = FleetDaemon::builder()
+        .config(cfg)
+        .rebalance(args.flag("rebalance"))
+        .cache(cache.clone())
+        .build();
+
+    let mut last = 0u64;
+    let mut total = 0usize;
+    for clause in spec.split(',') {
+        let toks: Vec<&str> = clause.split_whitespace().collect();
+        if toks.is_empty() {
+            continue;
+        }
+        let tick = toks[0]
+            .strip_prefix('@')
+            .with_context(|| format!("--events clause '{}' lacks @<tick>", clause.trim()))?;
+        let at: u64 = tick.parse().context("bad --events tick")?;
+        last = last.max(at);
+        match toks.get(1).copied() {
+            Some("submit") => {
+                let n: usize = toks
+                    .get(2)
+                    .context("submit needs a job count")?
+                    .parse()
+                    .context("submit needs a numeric job count")?;
+                for job in sim_fleet(total + n, seed).into_iter().skip(total) {
+                    daemon.submit_at(job, at);
+                }
+                total += n;
+            }
+            Some("retire") => {
+                let name = toks.get(2).context("retire needs a job name")?;
+                daemon.retire_at(name, at);
+            }
+            Some("verdict") => {
+                let name = toks.get(2).context("verdict needs a job name")?;
+                let kind = toks.get(3).context("verdict needs a kind")?;
+                daemon.observe_verdict_at(name, parse_verdict(kind)?, at);
+            }
+            _ => bail!("bad --events clause '{}' (submit|retire|verdict)", clause.trim()),
+        }
+    }
+
+    daemon.run_until(last)?;
+    let journal = daemon.journal().to_vec();
+    let metrics = daemon.metrics();
+    let report = daemon.drain()?;
+
+    let mut timeline = Table::new(&["tick", "event", "detail"]).with_title(&format!(
+        "Fleet daemon timeline — {} events, {} replans",
+        metrics.events_processed,
+        metrics.replans
+    ));
+    for entry in &journal {
+        timeline.rowd(&[&entry.at, &entry.kind, &entry.detail]);
+    }
+    println!("{}", timeline.render());
+
+    let jobs = report.summary().outcomes.len();
+    print_fleet_sweep(&report, jobs, workers, rounds);
+    if let Some(fleet_plan) = &report.plan {
+        print_fleet_plan(fleet_plan);
+    }
+    write_fleet_outputs(args, &report, &cache, cache_file)
+}
+
+/// Map an `--events` verdict kind onto a representative [`DriftVerdict`].
+fn parse_verdict(kind: &str) -> Result<DriftVerdict> {
+    Ok(match kind {
+        "model-stale" => DriftVerdict::ModelStale { rolling_smape: 1.0 },
+        "rate-shift" => DriftVerdict::RateShift { provisioned_hz: 2.0, observed_hz: 8.0 },
+        other => bail!("unknown verdict kind '{other}' (model-stale|rate-shift)"),
+    })
+}
+
+/// Shared tail of the batch and daemon fleet paths: `--out` report dump
+/// plus `--cache-file` snapshot save.
+fn write_fleet_outputs(
+    args: &Args,
+    report: &FleetReport,
+    cache: &MeasurementCache,
+    cache_file: Option<&str>,
+) -> Result<()> {
     if let Some(out) = args.opt("out") {
         std::fs::write(out, json::to_string(&report.to_json()))
             .with_context(|| format!("writing report to {out}"))?;
         println!("wrote {out}");
     }
-    if let Some(path) = &cache_file {
+    if let Some(path) = cache_file {
         std::fs::write(path, json::to_string(&cache.snapshot()))
             .with_context(|| format!("writing cache file {path}"))?;
         println!("cache: saved {} measurements to {path}", cache.len());

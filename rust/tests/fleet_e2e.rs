@@ -2,16 +2,16 @@
 //! probing through the shared measurement cache, with incremental refits
 //! feeding per-node capacity plans. Mirrors the acceptance bar for the
 //! fleet subsystem: ≥ 8 jobs on a 4-worker pool must finish with a ≥ 30%
-//! measurement-cache hit rate — plus the api-redesign guards: the
-//! session's default pipeline is byte-identical to the deprecated
-//! `FleetEngine::run`, and a non-simulator `BackendFactory` plugs into
-//! the same builder.
+//! measurement-cache hit rate — plus the api-redesign guards: the batch
+//! session's `run()` is provably an event replay of the long-lived
+//! `FleetDaemon` (every arrival at tick 0, then drain), and a
+//! non-simulator `BackendFactory` plugs into the same builder.
 
 use std::sync::Arc;
 
 use streamprof::coordinator::ProfilerConfig;
 use streamprof::fleet::{
-    model_fingerprint, sim_fleet, EngineBackendFactory, FleetConfig, FleetEngine, FleetJobSpec,
+    model_fingerprint, sim_fleet, EngineBackendFactory, FleetConfig, FleetDaemon, FleetJobSpec,
     FleetSession, MeasurementCache,
 };
 use streamprof::runtime::{artifacts_available, default_artifacts_dir, pjrt_enabled};
@@ -55,20 +55,27 @@ fn eight_jobs_on_four_workers_hit_the_cache() {
 }
 
 #[test]
-#[allow(deprecated)]
-fn session_default_pipeline_is_byte_identical_to_engine_run() {
-    // The api-redesign acceptance guard: collapsing run/run_rebalanced/
-    // run_adaptive into the session pipeline must not move any numbers.
-    let legacy = FleetEngine::new(quick_cfg(4, 2)).run(sim_fleet(8, 7)).expect("legacy run");
+fn session_run_is_byte_identical_to_daemon_event_replay() {
+    // The api-redesign acceptance guard: the batch session is a thin
+    // wrapper over the event-driven daemon ("replay every arrival at
+    // tick 0, drain"), so driving the daemon by hand through its event
+    // queue must not move any numbers.
     let report = FleetSession::builder()
         .config(quick_cfg(4, 2))
         .jobs(sim_fleet(8, 7))
         .run()
         .expect("session run");
-    let new = report.summary();
+    let batch = report.summary();
 
-    assert_eq!(legacy.outcomes.len(), new.outcomes.len());
-    for (a, b) in legacy.outcomes.iter().zip(&new.outcomes) {
+    let mut daemon = FleetDaemon::builder().config(quick_cfg(4, 2)).build();
+    for spec in sim_fleet(8, 7) {
+        daemon.submit(spec);
+    }
+    let replay = daemon.drain().expect("daemon drain");
+    let event = replay.summary();
+
+    assert_eq!(batch.outcomes.len(), event.outcomes.len());
+    for (a, b) in batch.outcomes.iter().zip(&event.outcomes) {
         assert_eq!(a.name, b.name);
         assert_eq!(a.label, b.label);
         assert_eq!(
@@ -86,8 +93,8 @@ fn session_default_pipeline_is_byte_identical_to_engine_run() {
             assert_eq!(ra.total_time.to_bits(), rb.total_time.to_bits());
         }
     }
-    assert_eq!(legacy.plans.len(), new.plans.len());
-    for ((na, pa), (nb, pb)) in legacy.plans.iter().zip(&new.plans) {
+    assert_eq!(batch.plans.len(), event.plans.len());
+    for ((na, pa), (nb, pb)) in batch.plans.iter().zip(&event.plans) {
         assert_eq!(na, nb);
         assert_eq!(pa.assignments.len(), pb.assignments.len());
         for (x, y) in pa.assignments.iter().zip(&pb.assignments) {
@@ -96,13 +103,34 @@ fn session_default_pipeline_is_byte_identical_to_engine_run() {
             assert_eq!(x.adjustment.limit.to_bits(), y.adjustment.limit.to_bits());
         }
     }
-    assert_eq!(legacy.cache.hits, report.cache.hits);
-    assert_eq!(legacy.cache.misses, report.cache.misses);
-    assert_eq!(legacy.cache.inserts, report.cache.inserts);
-    assert_eq!(legacy.cache.stale_hits_refused, report.cache.stale_hits_refused);
+    assert_eq!(report.cache.hits, replay.cache.hits);
+    assert_eq!(report.cache.misses, replay.cache.misses);
+    assert_eq!(report.cache.inserts, replay.cache.inserts);
+    assert_eq!(report.cache.stale_hits_refused, replay.cache.stale_hits_refused);
     assert_eq!(
-        legacy.cache.saved_wallclock.to_bits(),
-        report.cache.saved_wallclock.to_bits()
+        report.cache.saved_wallclock.to_bits(),
+        replay.cache.saved_wallclock.to_bits()
+    );
+}
+
+#[test]
+fn single_worker_reports_serialize_byte_identically() {
+    // With one worker even the racy `worker` field is deterministic, so
+    // the emitted JSON documents must match byte for byte.
+    let session = FleetSession::builder()
+        .config(quick_cfg(1, 2))
+        .jobs(sim_fleet(6, 7))
+        .run()
+        .expect("session run");
+    let mut daemon = FleetDaemon::builder().config(quick_cfg(1, 2)).build();
+    for spec in sim_fleet(6, 7) {
+        daemon.submit(spec);
+    }
+    let replay = daemon.drain().expect("daemon drain");
+    assert_eq!(
+        json::to_string(&session.to_json()),
+        json::to_string(&replay.to_json()),
+        "batch and event-replay reports diverge"
     );
 }
 

@@ -454,6 +454,80 @@ fn prop_cache_stats_consistent_under_concurrent_aging() {
     }
 }
 
+/// Property: the lock-striped shards aggregate into the same global stats
+/// invariants a single-lock cache guaranteed — exact lookup and insert
+/// accounting, refusals bounded by misses, evictions bounded by inserts —
+/// even when the labels span every shard and every operation interleaves
+/// across threads; and a quiescent `delta_since` over the aggregated
+/// counters is exact.
+#[test]
+fn prop_sharded_stats_aggregate_like_a_single_lock() {
+    let labels: Vec<String> = (0..16).map(|i| format!("node{}/algo{}", i % 8, i % 3)).collect();
+    for case in 0..8u64 {
+        let cache = MeasurementCache::new();
+        let labels = &labels;
+        let (total_lookups, total_inserts) = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8u64)
+                .map(|w| {
+                    let cache = &cache;
+                    s.spawn(move || {
+                        let mut rng = Rng::new(case * 7919 + w + 1);
+                        let (mut lookups, mut inserts) = (0u64, 0u64);
+                        for _ in 0..200 {
+                            let label = &labels[rng.below(16)];
+                            let limit = (1 + rng.below(6)) as f64 * 0.1;
+                            match rng.below(10) {
+                                0..=4 => {
+                                    lookups += 1;
+                                    cache.lookup(label, limit, 0.1);
+                                }
+                                5..=7 => {
+                                    inserts += 1;
+                                    cache.insert(label, 0.1, tagged(limit, 1.0));
+                                }
+                                8 => {
+                                    cache.bump_generation(label);
+                                }
+                                _ => {
+                                    cache.evict_stale();
+                                }
+                            }
+                            std::thread::yield_now();
+                        }
+                        (lookups, inserts)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .fold((0, 0), |(l, i), (dl, di)| (l + dl, i + di))
+        });
+        let s = cache.stats();
+        assert_eq!(s.lookups(), total_lookups, "case {case}: lookup lost between shards");
+        assert_eq!(s.inserts, total_inserts, "case {case}: insert lost between shards");
+        assert!(s.stale_hits_refused <= s.misses, "case {case}: refusals are misses");
+        assert!(s.evictions <= s.inserts, "case {case}: evictions bounded by inserts");
+        assert!(s.hits <= s.lookups(), "case {case}");
+        assert!(cache.len() as u64 <= s.inserts - s.evictions, "case {case}");
+        assert!(s.saved_wallclock >= 0.0 && s.saved_wallclock.is_finite(), "case {case}");
+
+        // Quiescent delta accounting: the aggregated counters advance by
+        // exactly the single-threaded tail of operations.
+        let before = cache.stats();
+        for (i, label) in labels.iter().enumerate() {
+            cache.insert(label, 0.1, tagged(0.3, i as f64));
+            cache.lookup(label, 0.3, 0.1);
+            cache.lookup(label, 5.0, 0.1);
+        }
+        let delta = cache.stats().delta_since(&before);
+        assert_eq!(delta.inserts, 16, "case {case}");
+        assert_eq!(delta.hits, 16, "case {case}: post-insert lookups all hit");
+        assert_eq!(delta.misses, 16, "case {case}: off-bucket lookups all miss");
+        assert_eq!(delta.evictions, 0, "case {case}");
+    }
+}
+
 /// Property: profiling wallclock equals the sum of iterative steps plus the
 /// max of the initial parallel phase (time accounting never drifts).
 #[test]
