@@ -1,0 +1,119 @@
+//! Queryable fleet telemetry end-to-end: the `fleet_daemon` scenario with
+//! a columnar `TelemetryStore` attached — every processed event lands as a
+//! compressed time-series point, the query layer aggregates them without
+//! decompressing whole series, and the std-only HTTP endpoint serves the
+//! same answers over a real socket.
+//!
+//! ```bash
+//! cargo run --release --example fleet_telemetry
+//! ```
+
+use std::io::{Read as _, Write as _};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::thread;
+
+use streamprof::coordinator::ProfilerConfig;
+use streamprof::fleet::{
+    sim_fleet, DriftVerdict, FleetConfig, FleetDaemon, Query, TelemetryServer, TelemetryStore,
+};
+use streamprof::util::json::{self, Json};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = FleetConfig {
+        workers: 2,
+        rounds: 1,
+        strategy: "nms".to_string(),
+        profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
+        horizon: 500,
+    };
+    let store = Arc::new(TelemetryStore::new());
+    let mut daemon = FleetDaemon::builder()
+        .config(cfg)
+        .jobs(sim_fleet(6, 7))
+        .rebalance(true)
+        .telemetry(store.clone())
+        .build();
+
+    // The fleet_daemon timeline: two arrivals mid-run, one stale-model
+    // verdict, one retirement — every journal entry also lands in the store.
+    for job in sim_fleet(8, 7).into_iter().skip(6) {
+        daemon.submit_at(job, 600);
+    }
+    daemon.observe_verdict_at("job-02", DriftVerdict::ModelStale { rolling_smape: 0.9 }, 900);
+    daemon.retire_at("job-05", 1200);
+    daemon.run_until(1200)?;
+
+    let journal = daemon.journal().to_vec();
+    let report = daemon.drain()?;
+
+    // Probe totals: the store is lossless within retention, so the sum of
+    // the probes series equals the journal's probe-completion lines.
+    let journaled: u64 = journal
+        .iter()
+        .filter(|e| e.kind == "probe-completion")
+        .filter_map(|e| e.detail.split_whitespace().nth(1))
+        .filter_map(|t| t.parse().ok())
+        .sum();
+    let recorded = run_query(&store, "select probes | agg sum").single().expect("probes");
+    assert_eq!(recorded, journaled as f64, "store and journal agree on probe totals");
+    println!("probes: {recorded} executed (journal agrees)");
+
+    // The injected verdict is queryable as a point with code 2 (model-stale).
+    let verdicts = run_query(&store, "select verdicts where label=job-02");
+    assert_eq!(verdicts.series.len(), 1, "one verdict series for job-02");
+    assert_eq!(verdicts.series[0].points, vec![(900, 2.0)], "model-stale is code 2 at t=900");
+
+    // Per-job p99 runtime matches the same estimator applied to the
+    // drained report's step records, bit for bit.
+    let p99 = run_query(&store, "select runtime where label=job-03 | agg p99")
+        .single()
+        .expect("runtime recorded");
+    let summary = report.summary();
+    let outcome = summary.outcomes.iter().find(|o| o.name == "job-03").unwrap();
+    let mut obs: Vec<f64> = outcome
+        .rounds
+        .iter()
+        .flat_map(|r| r.steps.iter().map(|s| s.mean_runtime))
+        .collect();
+    obs.sort_by(f64::total_cmp);
+    let expect = obs[((obs.len() as f64 * 0.99).ceil() as usize).saturating_sub(1)];
+    assert_eq!(p99.to_bits(), expect.to_bits(), "telemetry p99 is bit-equal to the report's");
+    println!("job-03 p99 runtime: {p99:.4}s (report agrees bit-for-bit)");
+
+    // Serve the store over a real socket and ask the same question again.
+    let server = TelemetryServer::bind("127.0.0.1:0", store.clone(), &report.to_json())?;
+    let addr = server.local_addr();
+    let handle = thread::spawn(move || server.serve_requests(2));
+    let health = json::parse(&http_get(addr, "/healthz")?).map_err(anyhow::Error::msg)?;
+    assert_eq!(health.get("ok").and_then(Json::as_bool), Some(true));
+    let body = http_get(addr, "/query?q=select+probes+%7C+agg+sum")?;
+    let answer = json::parse(&body).map_err(anyhow::Error::msg)?;
+    let over_http = answer
+        .get("series")
+        .and_then(Json::as_arr)
+        .and_then(|s| s[0].get("value"))
+        .and_then(Json::as_f64);
+    assert_eq!(over_http, Some(recorded), "HTTP and in-process answers match");
+    handle.join().expect("server thread")?;
+    println!(
+        "served {} series / {} points over http://{addr}",
+        store.series_count(),
+        store.total_points()
+    );
+    Ok(())
+}
+
+/// Parse-and-run helper for the in-process queries above.
+fn run_query(store: &TelemetryStore, text: &str) -> streamprof::fleet::QueryResult {
+    Query::parse(text).expect("query parses").run(store)
+}
+
+/// Minimal GET over a raw socket; returns the response body.
+fn http_get(addr: SocketAddr, path: &str) -> anyhow::Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n")?;
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw)?;
+    Ok(raw.split("\r\n\r\n").nth(1).unwrap_or("").to_string())
+}

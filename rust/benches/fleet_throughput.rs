@@ -9,7 +9,10 @@
 //!     whole fleet replays cached probes),
 //!   * p99 verdict-to-replan latency — real time from an external drift
 //!     verdict landing in the event queue to the localized replan that
-//!     re-profiles the job against its observed rate.
+//!     re-profiles the job against its observed rate,
+//!   * the same bootstrap sweep with a telemetry store attached — the
+//!     jobs/sec cost of recording every processed event as a compressed
+//!     time-series point (target: ≤ 5% at the 10k tier).
 //!
 //! Results land in BENCH_fleet.json, committed at the repository root as
 //! the standing baseline; regenerate on quiet hardware with:
@@ -24,7 +27,9 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use streamprof::coordinator::ProfilerConfig;
-use streamprof::fleet::{sim_fleet, DriftVerdict, FleetConfig, FleetDaemon, MeasurementCache};
+use streamprof::fleet::{
+    sim_fleet, DriftVerdict, FleetConfig, FleetDaemon, MeasurementCache, TelemetryStore,
+};
 use streamprof::util::{json, Args, Json, Table};
 
 /// Verdict cycles timed per tier (each is one verdict -> replan round trip).
@@ -38,6 +43,9 @@ struct TierResult {
     saved_s: f64,
     hit_rate: f64,
     p99_ms: f64,
+    jobs_per_sec_telemetry: f64,
+    overhead_pct: f64,
+    telemetry_points: usize,
 }
 
 impl TierResult {
@@ -51,18 +59,43 @@ impl TierResult {
             ("hit_rate", Json::num(self.hit_rate)),
             ("verdicts", Json::num(VERDICT_CYCLES as f64)),
             ("p99_verdict_to_replan_ms", Json::num(self.p99_ms)),
+            ("jobs_per_sec_telemetry", Json::num(self.jobs_per_sec_telemetry)),
+            ("telemetry_overhead_pct", Json::num(self.overhead_pct)),
+            ("telemetry_points", Json::num(self.telemetry_points as f64)),
         ])
     }
 }
 
-fn run_tier(tier: &'static str, jobs: usize) -> Result<TierResult> {
-    let cfg = FleetConfig {
+fn tier_cfg() -> FleetConfig {
+    FleetConfig {
         workers: 8,
         rounds: 1,
         strategy: "nms".to_string(),
         profiler: ProfilerConfig { samples: 64, max_steps: 4, ..Default::default() },
         horizon: 1000,
-    };
+    }
+}
+
+/// The bootstrap sweep re-run with a telemetry store attached: same
+/// roster, fresh cache, measuring the jobs/sec cost of recording every
+/// processed event as a compressed point.
+fn run_tier_telemetry(jobs: usize) -> Result<(f64, usize)> {
+    let store = Arc::new(TelemetryStore::new());
+    let mut daemon = FleetDaemon::builder()
+        .config(tier_cfg())
+        .jobs(sim_fleet(jobs, 7))
+        .rebalance(false)
+        .cache(Arc::new(MeasurementCache::new()))
+        .telemetry(store.clone())
+        .build();
+    let t0 = Instant::now();
+    daemon.run_until(0)?;
+    let sweep_s = t0.elapsed().as_secs_f64().max(1e-9);
+    Ok((jobs as f64 / sweep_s, store.total_points()))
+}
+
+fn run_tier(tier: &'static str, jobs: usize) -> Result<TierResult> {
+    let cfg = tier_cfg();
     let cache = Arc::new(MeasurementCache::new());
     let mut daemon = FleetDaemon::builder()
         .config(cfg)
@@ -96,14 +129,19 @@ fn run_tier(tier: &'static str, jobs: usize) -> Result<TierResult> {
     let p99 = lat_ms[((lat_ms.len() as f64 * 0.99).ceil() as usize).saturating_sub(1)];
 
     let stats = cache.stats();
+    let jobs_per_sec = jobs as f64 / sweep_s;
+    let (jobs_per_sec_telemetry, telemetry_points) = run_tier_telemetry(jobs)?;
     Ok(TierResult {
         tier,
         jobs,
-        jobs_per_sec: jobs as f64 / sweep_s,
+        jobs_per_sec,
         sweep_s,
         saved_s: stats.saved_wallclock,
         hit_rate: stats.hit_rate(),
         p99_ms: p99,
+        jobs_per_sec_telemetry,
+        overhead_pct: (1.0 - jobs_per_sec_telemetry / jobs_per_sec) * 100.0,
+        telemetry_points,
     })
 }
 
@@ -124,13 +162,16 @@ fn main() -> Result<()> {
         results.push(run_tier(name, jobs)?);
     }
 
-    let mut table = Table::new(&["tier", "jobs", "jobs/s", "saved (s)", "hit rate", "p99 (ms)"])
-        .with_title("Fleet daemon throughput");
+    let headers =
+        ["tier", "jobs", "jobs/s", "jobs/s tel", "ovh %", "saved (s)", "hit rate", "p99 (ms)"];
+    let mut table = Table::new(&headers).with_title("Fleet daemon throughput");
     for r in &results {
         table.rowd(&[
             &r.tier,
             &r.jobs,
             &format!("{:.0}", r.jobs_per_sec),
+            &format!("{:.0}", r.jobs_per_sec_telemetry),
+            &format!("{:.1}", r.overhead_pct),
             &format!("{:.1}", r.saved_s),
             &format!("{:.2}", r.hit_rate),
             &format!("{:.3}", r.p99_ms),

@@ -31,12 +31,14 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::fit::RuntimeModel;
+use crate::util::json::Json;
 
 use super::cache::{CacheStats, MeasurementCache};
 use super::drift::{AdaptiveConfig, AdaptiveLoop, AdaptiveSummary, DriftVerdict};
 use super::migrate::rebalance;
 use super::placement::FleetJob;
 use super::session::FleetReport;
+use super::telemetry::{TelemetryRecorder, TelemetryStore};
 use super::worker::{self, JobOutcome, ProfilePass};
 use super::{plan_capacity, run_sweep, FleetConfig, FleetJobSpec};
 
@@ -174,6 +176,7 @@ pub struct FleetDaemonBuilder {
     rebalance: bool,
     adaptive: Option<AdaptiveConfig>,
     cache: Option<Arc<MeasurementCache>>,
+    telemetry: Option<Arc<TelemetryStore>>,
 }
 
 impl FleetDaemonBuilder {
@@ -216,12 +219,22 @@ impl FleetDaemonBuilder {
         self
     }
 
+    /// Attach a telemetry store: every journaled event also emits its
+    /// observable series (probes, runtimes, verdicts, headroom, cache
+    /// deltas, migrations) into `store`. Off by default — without a
+    /// store the hot path pays only an `Option` check.
+    pub fn telemetry(mut self, store: Arc<TelemetryStore>) -> Self {
+        self.telemetry = Some(store);
+        self
+    }
+
     /// Finalize: schedule the initial roster as arrivals at `t = 0`
     /// followed by the bootstrap replan. Nothing runs until the daemon
     /// is stepped or drained.
     pub fn build(self) -> FleetDaemon {
         let cache = self.cache.unwrap_or_default();
         let stats_at_build = cache.stats();
+        let telemetry = self.telemetry.map(|s| TelemetryRecorder::new(s, stats_at_build));
         let mut daemon = FleetDaemon {
             cfg: self.cfg,
             rebalance: self.rebalance,
@@ -242,6 +255,7 @@ impl FleetDaemonBuilder {
             extras: Vec::new(),
             journal: Vec::new(),
             metrics: DaemonMetrics::default(),
+            telemetry,
         };
         for spec in self.specs {
             daemon.schedule(0, FleetEvent::JobArrival(Box::new(spec)));
@@ -290,6 +304,10 @@ pub struct FleetDaemon {
     extras: Vec<JobOutcome>,
     journal: Vec<JournalEntry>,
     metrics: DaemonMetrics,
+    /// Telemetry hooks, when a store is attached. Emission points sit
+    /// adjacent to every `record()` call so the store and the journal
+    /// describe the same timeline (the `telemetry_e2e` contract).
+    telemetry: Option<TelemetryRecorder>,
 }
 
 impl FleetDaemon {
@@ -321,6 +339,11 @@ impl FleetDaemon {
     /// Counters over everything processed so far.
     pub fn metrics(&self) -> DaemonMetrics {
         self.metrics
+    }
+
+    /// The attached telemetry store, if any.
+    pub fn telemetry(&self) -> Option<&Arc<TelemetryStore>> {
+        self.telemetry.as_ref().map(TelemetryRecorder::store)
     }
 
     /// Submit a job now (arrival at the current tick).
@@ -401,6 +424,14 @@ impl FleetDaemon {
         } else {
             None
         };
+        if let Some(t) = self.telemetry.as_mut() {
+            let now = self.clock;
+            if let Some(p) = &plan {
+                t.headroom(now, &p.plans);
+                t.migrations(now, p);
+            }
+            t.cache_flush(now, self.cache.stats());
+        }
         let cache = self.cache.stats().delta_since(&self.stats_at_build);
         Ok(FleetReport::assemble(self.sweep, adaptive, plan, cache))
     }
@@ -439,6 +470,9 @@ impl FleetDaemon {
             FleetEvent::EpochTick { epoch } => self.on_epoch_tick(epoch)?,
             FleetEvent::ProbeCompletion { job, executed } => {
                 self.record("probe-completion", format!("{job}: {executed} probes executed"));
+                if let Some(t) = &self.telemetry {
+                    t.probes(self.clock, &job, roster_node(&self.roster, &job), executed);
+                }
             }
             FleetEvent::Replan => self.on_replan()?,
         }
@@ -448,6 +482,9 @@ impl FleetDaemon {
     fn on_arrival(&mut self, spec: FleetJobSpec) {
         self.metrics.arrivals += 1;
         self.record("arrival", format!("{} ({}) on {}", spec.name, spec.label(), spec.node.name));
+        if let Some(t) = &self.telemetry {
+            t.arrival(self.clock, &spec.name, spec.node.name);
+        }
         if self.bootstrapped {
             self.pending.push(PendingWork { spec: spec.clone(), verdict: None });
         }
@@ -458,6 +495,9 @@ impl FleetDaemon {
     fn on_departure(&mut self, name: &str) {
         self.metrics.departures += 1;
         self.record("departure", name.to_string());
+        if let Some(t) = &self.telemetry {
+            t.departure(self.clock, name, roster_node(&self.roster, name));
+        }
         self.roster.retain(|s| s.name != name);
         self.pending.retain(|w| w.spec.name != name);
         self.extras.retain(|o| o.name != name);
@@ -472,6 +512,9 @@ impl FleetDaemon {
     fn on_verdict(&mut self, job: &str, verdict: DriftVerdict) {
         self.metrics.verdicts += 1;
         self.record("verdict", format!("{job}: {}", verdict.name()));
+        if let Some(t) = &self.telemetry {
+            t.verdict(self.clock, job, roster_node(&self.roster, job), &verdict);
+        }
         if !verdict.is_drift() {
             return;
         }
@@ -511,6 +554,25 @@ impl FleetDaemon {
         if replanned {
             self.metrics.replans += 1;
         }
+        let now = self.clock;
+        if let Some(t) = self.telemetry.as_mut() {
+            // Only drift verdicts, mirroring the epoch's journal entries.
+            for (name, v) in &report.verdicts {
+                if v.is_drift() {
+                    t.verdict(now, name, roster_node(&self.roster, name), v);
+                }
+            }
+            for r in &report.reprofiled {
+                let node = roster_node(&self.roster, &r.name);
+                t.probes(now, &r.name, node, r.executed_probes);
+                t.smape(now, &r.name, node, r.post_smape);
+            }
+            if let Some(plan) = &report.plan {
+                t.headroom(now, &plan.plans);
+                t.migrations(now, plan);
+            }
+            t.cache_flush(now, self.cache.stats());
+        }
         Ok(())
     }
 
@@ -528,12 +590,22 @@ impl FleetDaemon {
                         let at = (self.cfg.horizon + e * acfg.epoch_ticks) as u64;
                         self.schedule(at, FleetEvent::EpochTick { epoch: e });
                     }
+                    if let Some(t) = &self.telemetry {
+                        for o in &al.initial_summary().outcomes {
+                            t.outcome_runtimes(self.clock, o);
+                        }
+                    }
                     self.adaptive_loop = Some(al);
                 }
                 None => {
                     self.sweep_base = self.cache.stats();
                     let sweep = run_sweep(&self.cfg, &self.cache, self.roster.clone())?;
                     self.next_index = sweep.outcomes.len();
+                    if let Some(t) = &self.telemetry {
+                        for o in &sweep.outcomes {
+                            t.outcome_runtimes(self.clock, o);
+                        }
+                    }
                     self.sweep = Some(sweep);
                 }
             }
@@ -547,6 +619,13 @@ impl FleetDaemon {
         if let Some(sweep) = &mut self.sweep {
             sweep.plans = plan_capacity(&sweep.outcomes);
             sweep.cache = self.cache.stats().delta_since(&self.sweep_base);
+        }
+        let now = self.clock;
+        if let Some(t) = self.telemetry.as_mut() {
+            if let Some(sweep) = &self.sweep {
+                t.headroom(now, &sweep.plans);
+            }
+            t.cache_flush(now, self.cache.stats());
         }
         Ok(())
     }
@@ -576,6 +655,10 @@ impl FleetDaemon {
         let outcome = worker::profile_job_with(&spec, &self.cfg, &self.cache, 0, &pass)?;
         let executed = self.cache.stats().misses - miss_before;
         self.record("probe-completion", format!("{}: {executed} probes executed", spec.name));
+        if let Some(t) = &self.telemetry {
+            t.probes(self.clock, &spec.name, spec.node.name, executed);
+            t.outcome_runtimes(self.clock, &outcome);
+        }
         self.merge_outcome(outcome);
         Ok(())
     }
@@ -642,6 +725,28 @@ impl FleetDaemon {
         }
         jobs
     }
+}
+
+/// Home-node name of a rostered job, or `""` for unknown jobs (e.g. a
+/// verdict naming a job that never joined — journaled all the same).
+fn roster_node(roster: &[FleetJobSpec], job: &str) -> &'static str {
+    roster.iter().find(|s| s.name == job).map(|s| s.node.name).unwrap_or("")
+}
+
+/// Serialize a daemon journal as JSON — the `--journal-out` schema.
+/// Entries keep the journal's exact vocabulary (`at` / `kind` /
+/// `detail`), which is also the vocabulary the telemetry store records
+/// under, so a journal dump and a store snapshot diff directly (the
+/// `telemetry_e2e` test does exactly that).
+pub fn journal_json(entries: &[JournalEntry]) -> Json {
+    let rows = entries.iter().map(|e| {
+        Json::obj([
+            ("at", Json::num(e.at as f64)),
+            ("kind", Json::str(e.kind)),
+            ("detail", Json::str(&e.detail)),
+        ])
+    });
+    Json::obj([("version", Json::num(1.0)), ("entries", Json::arr(rows))])
 }
 
 #[cfg(test)]
@@ -780,6 +885,40 @@ mod tests {
         let report = d.drain().unwrap();
         let plan = report.plan.expect("rebalance stage ran");
         assert_eq!(plan.metrics.jobs, 2);
+    }
+
+    #[test]
+    fn journal_json_round_trips_the_processed_timeline() {
+        let mut d = FleetDaemon::builder().config(quick_cfg()).jobs(sim_fleet(2, 7)).build();
+        d.run_until(0).unwrap();
+        let text = crate::util::json::to_string(&journal_json(d.journal()));
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("version").and_then(Json::as_usize), Some(1));
+        let entries = back.get("entries").and_then(Json::as_arr).unwrap();
+        assert_eq!(entries.len(), d.journal().len());
+        assert_eq!(entries[0].get("kind").and_then(Json::as_str), Some("arrival"));
+    }
+
+    #[test]
+    fn attached_telemetry_store_tracks_probe_journal_entries() {
+        use crate::fleet::telemetry::SeriesKind;
+        let store = Arc::new(TelemetryStore::new());
+        let mut d = FleetDaemon::builder()
+            .config(quick_cfg())
+            .jobs(sim_fleet(2, 7))
+            .telemetry(store.clone())
+            .build();
+        d.run_until(0).unwrap();
+        d.observe_verdict_at("job-00", DriftVerdict::ModelStale { rolling_smape: 0.9 }, 700);
+        d.run_until(700).unwrap();
+        let journal_probes = d.journal().iter().filter(|e| e.kind == "probe-completion").count();
+        let node = sim_fleet(1, 7)[0].node.name;
+        let stored = store.points(SeriesKind::Probes, "job-00", node);
+        assert_eq!(stored.len(), journal_probes);
+        assert_eq!(stored[0].0, 700);
+        assert!(stored[0].1 > 0.0, "stale re-profile executed fresh probes");
+        assert_eq!(d.telemetry().unwrap().total_points(), store.total_points());
+        d.drain().unwrap();
     }
 
     #[test]

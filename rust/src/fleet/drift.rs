@@ -461,6 +461,12 @@ impl AdaptiveLoop {
         })
     }
 
+    /// The cold bootstrap sweep the loop adapted from (the daemon's
+    /// telemetry recorder emits its runtime observations at bootstrap).
+    pub(crate) fn initial_summary(&self) -> &FleetSummary {
+        &self.initial
+    }
+
     /// Run the next adaptation epoch (numbered from 1) and return its
     /// report. Errors once all configured epochs have run.
     pub(crate) fn run_epoch(&mut self, cache: &MeasurementCache) -> Result<&EpochReport> {

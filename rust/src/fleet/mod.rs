@@ -60,6 +60,7 @@ pub mod migrate;
 pub mod placement;
 pub mod queue;
 pub mod session;
+pub mod telemetry;
 pub mod worker;
 
 // The factory abstraction lives with the backends (coordinator); it is
@@ -67,7 +68,9 @@ pub mod worker;
 pub use crate::coordinator::backend::{BackendFactory, EngineBackendFactory, SimBackendFactory};
 
 pub use cache::{CacheStats, CachedBackend, MeasurementCache};
-pub use daemon::{DaemonMetrics, FleetDaemon, FleetDaemonBuilder, FleetEvent, JournalEntry};
+pub use daemon::{
+    journal_json, DaemonMetrics, FleetDaemon, FleetDaemonBuilder, FleetEvent, JournalEntry,
+};
 pub use drift::{
     model_fingerprint, AdaptiveConfig, AdaptiveJobReport, AdaptiveSummary, DriftConfig,
     DriftMonitor, DriftVerdict, EpochReport, ReprofiledJob, RuntimeShift,
@@ -76,6 +79,10 @@ pub use migrate::{rebalance, rebalance_across, FleetMetrics, FleetPlan, Migratio
 pub use placement::{candidates_for, translate_model, FleetJob, PlacementCandidate};
 pub use queue::WorkQueue;
 pub use session::{FleetReport, FleetSession, FleetSessionBuilder};
+pub use telemetry::{
+    Agg, Query, QueryResult, SeriesKey, SeriesKind, TelemetryRecorder, TelemetryServer,
+    TelemetryStore,
+};
 pub use worker::{IncrementalModel, JobOutcome, ProfilePass, ScaledBackend, ScaledBackendFactory};
 
 use std::collections::BTreeMap;

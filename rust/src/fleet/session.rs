@@ -38,6 +38,7 @@ use super::cache::{CacheStats, MeasurementCache};
 use super::daemon::FleetDaemon;
 use super::drift::{model_fingerprint, AdaptiveConfig, AdaptiveSummary, DriftVerdict};
 use super::migrate::FleetPlan;
+use super::telemetry::TelemetryStore;
 use super::{FleetConfig, FleetJobSpec, FleetSummary};
 
 /// Builder for a [`FleetSession`] — the single public entry point of the
@@ -61,6 +62,7 @@ pub struct FleetSessionBuilder {
     rebalance: bool,
     adaptive: Option<AdaptiveConfig>,
     cache: Option<Arc<MeasurementCache>>,
+    telemetry: Option<Arc<TelemetryStore>>,
 }
 
 impl FleetSessionBuilder {
@@ -104,6 +106,14 @@ impl FleetSessionBuilder {
         self
     }
 
+    /// Attach a telemetry store: every run replays the roster through the
+    /// daemon with a [`super::TelemetryRecorder`] attached, so the store
+    /// fills with the same series an always-on daemon would emit.
+    pub fn telemetry(mut self, store: Arc<TelemetryStore>) -> Self {
+        self.telemetry = Some(store);
+        self
+    }
+
     /// Finalize into a reusable [`FleetSession`].
     pub fn build(self) -> FleetSession {
         FleetSession {
@@ -112,6 +122,7 @@ impl FleetSessionBuilder {
             rebalance: self.rebalance,
             adaptive: self.adaptive,
             cache: self.cache.unwrap_or_default(),
+            telemetry: self.telemetry,
         }
     }
 
@@ -130,6 +141,7 @@ pub struct FleetSession {
     rebalance: bool,
     adaptive: Option<AdaptiveConfig>,
     cache: Arc<MeasurementCache>,
+    telemetry: Option<Arc<TelemetryStore>>,
 }
 
 impl FleetSession {
@@ -160,6 +172,9 @@ impl FleetSession {
             .cache(self.cache.clone());
         if let Some(acfg) = &self.adaptive {
             builder = builder.adaptive(acfg.clone());
+        }
+        if let Some(store) = &self.telemetry {
+            builder = builder.telemetry(store.clone());
         }
         builder.build().drain()
     }

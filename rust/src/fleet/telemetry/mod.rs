@@ -1,0 +1,27 @@
+//! Queryable fleet telemetry: a columnar time-series store fed by the
+//! daemon, a small query language, and a std-only HTTP serve mode.
+//!
+//! The paper's profiling loop produces a stream of runtime observations,
+//! drift verdicts, and placement decisions that — before this module —
+//! only survived as a one-shot report. Telemetry keeps them queryable:
+//!
+//! - [`TelemetryStore`] ([`store`]): per-series ring buffers keyed
+//!   `(kind, label, node)`, delta-of-delta timestamps + run-length
+//!   values, fixed retention, lock-striped appends.
+//! - [`TelemetryRecorder`] ([`recorder`]): the daemon-side hooks that
+//!   emit one point per journaled event, keeping store and `journal()`
+//!   byte-consistent.
+//! - [`Query`] ([`query`]): `select <series> where label=.. node=.. |
+//!   window 600 | agg p99` evaluated over the compressed blocks.
+//! - [`TelemetryServer`] ([`serve`]): `streamprof serve --port N`
+//!   exposing `/healthz`, `/series`, `/snapshot`, and `/query?q=..`.
+
+pub mod query;
+pub mod recorder;
+pub mod serve;
+pub mod store;
+
+pub use query::{Agg, Query, QueryResult, SeriesResult};
+pub use recorder::{verdict_code, TelemetryRecorder};
+pub use serve::TelemetryServer;
+pub use store::{SeriesBuf, SeriesKey, SeriesKind, SeriesStats, TelemetryStore, DEFAULT_RETENTION};

@@ -1,0 +1,417 @@
+//! Tiny query expression language over the telemetry store.
+//!
+//! Grammar (stages separated by `|`):
+//!
+//! ```text
+//! select <series|*> [where label=<job> node=<node>]
+//!     [| window <ticks>] [| agg count|sum|mean|min|max|p99|rate|last]
+//! ```
+//!
+//! `window <ticks>` restricts evaluation to the trailing `[latest - ticks,
+//! latest]` interval, where `latest` is the newest timestamp across the
+//! *matched* series (the daemon's virtual clock, not wallclock). `agg`
+//! folds each matched series to one number; without it the query returns
+//! the raw points. Aggregates are computed over the compressed buffers —
+//! blocks fully inside the window fold their value runs without decoding
+//! timestamps; only `p99` (which needs a sort) and boundary blocks decode
+//! points.
+
+use crate::util::json::Json;
+
+use super::store::{SeriesBuf, SeriesKey, SeriesKind, TelemetryStore};
+
+/// Per-series fold selected by the `agg` stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Agg {
+    /// Number of points in the window.
+    Count,
+    /// Sum of values.
+    Sum,
+    /// Arithmetic mean of values.
+    Mean,
+    /// Minimum value.
+    Min,
+    /// Maximum value.
+    Max,
+    /// 99th percentile by the nearest-rank rule (`ceil(0.99 n) - 1` after
+    /// sorting) — the same estimator the fleet throughput bench reports.
+    P99,
+    /// Points per tick over the window span.
+    Rate,
+    /// Value of the newest point in the window.
+    Last,
+}
+
+impl Agg {
+    const ALL: [Agg; 8] =
+        [Agg::Count, Agg::Sum, Agg::Mean, Agg::Min, Agg::Max, Agg::P99, Agg::Rate, Agg::Last];
+
+    /// Wire name used in the grammar and JSON output.
+    pub fn name(self) -> &'static str {
+        match self {
+            Agg::Count => "count",
+            Agg::Sum => "sum",
+            Agg::Mean => "mean",
+            Agg::Min => "min",
+            Agg::Max => "max",
+            Agg::P99 => "p99",
+            Agg::Rate => "rate",
+            Agg::Last => "last",
+        }
+    }
+
+    /// Inverse of [`Agg::name`].
+    pub fn from_name(name: &str) -> Option<Agg> {
+        Agg::ALL.iter().copied().find(|a| a.name() == name)
+    }
+}
+
+/// A parsed query. `kind: None` means `select *`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Query {
+    /// Series kind filter, or `None` for all kinds.
+    pub kind: Option<SeriesKind>,
+    /// `where label=..` filter (exact match), if any.
+    pub label: Option<String>,
+    /// `where node=..` filter (exact match), if any.
+    pub node: Option<String>,
+    /// Trailing window size in ticks, if any.
+    pub window: Option<u64>,
+    /// Aggregate stage, if any.
+    pub agg: Option<Agg>,
+}
+
+impl Query {
+    /// Parse a query expression. Errors are human-readable strings in the
+    /// same style as `util::json::parse`.
+    pub fn parse(text: &str) -> Result<Query, String> {
+        let mut stages = text.split('|');
+        let select = stages.next().unwrap_or("");
+        let toks: Vec<&str> = select.split_whitespace().collect();
+        if toks.first() != Some(&"select") {
+            return Err("query must start with 'select <series>'".to_string());
+        }
+        let Some(&series) = toks.get(1) else {
+            return Err("select needs a series name or *".to_string());
+        };
+        let kind = if series == "*" {
+            None
+        } else {
+            match SeriesKind::from_name(series) {
+                Some(k) => Some(k),
+                None => return Err(format!("unknown series '{series}' (see /series)")),
+            }
+        };
+        let mut query = Query { kind, label: None, node: None, window: None, agg: None };
+        if toks.len() > 2 {
+            if toks[2] != "where" {
+                return Err(format!("expected 'where', got '{}'", toks[2]));
+            }
+            if toks.len() == 3 {
+                return Err("'where' needs at least one label=/node= filter".to_string());
+            }
+            for tok in &toks[3..] {
+                let Some((field, value)) = tok.split_once('=') else {
+                    return Err(format!("bad filter '{tok}': expected field=value"));
+                };
+                match field {
+                    "label" => query.label = Some(value.to_string()),
+                    "node" => query.node = Some(value.to_string()),
+                    _ => return Err(format!("unknown filter field '{field}'")),
+                }
+            }
+        }
+        for stage in stages {
+            let toks: Vec<&str> = stage.split_whitespace().collect();
+            match toks.as_slice() {
+                ["window", ticks] => {
+                    if query.window.is_some() {
+                        return Err("duplicate window stage".to_string());
+                    }
+                    match ticks.parse::<u64>() {
+                        Ok(t) => query.window = Some(t),
+                        Err(_) => return Err(format!("bad window '{ticks}': expected ticks")),
+                    }
+                }
+                ["agg", name] => {
+                    if query.agg.is_some() {
+                        return Err("duplicate agg stage".to_string());
+                    }
+                    match Agg::from_name(name) {
+                        Some(a) => query.agg = Some(a),
+                        None => return Err(format!("unknown agg '{name}'")),
+                    }
+                }
+                [] => return Err("empty query stage".to_string()),
+                other => return Err(format!("unknown stage '{}'", other.join(" "))),
+            }
+        }
+        Ok(query)
+    }
+
+    fn matches(&self, key: &SeriesKey) -> bool {
+        self.kind.map_or(true, |k| k == key.kind)
+            && self.label.as_deref().map_or(true, |l| l == key.label)
+            && self.node.as_deref().map_or(true, |n| n == key.node)
+    }
+
+    /// Evaluate against a store. Two passes under the shard locks: one to
+    /// find the newest matched timestamp (window anchor), one to fold each
+    /// matched series.
+    pub fn run(&self, store: &TelemetryStore) -> QueryResult {
+        let mut latest = 0u64;
+        let mut matched = 0usize;
+        store.for_each(|key, buf| {
+            if self.matches(key) {
+                matched += 1;
+                latest = latest.max(buf.latest().unwrap_or(0));
+            }
+        });
+        let bounds = self.window.map(|w| (latest.saturating_sub(w), latest));
+        let (lo, hi) = bounds.unwrap_or((0, u64::MAX));
+        let mut series = Vec::with_capacity(matched);
+        store.for_each(|key, buf| {
+            if self.matches(key) {
+                series.push(eval_series(key, buf, lo, hi, self.agg, self.window));
+            }
+        });
+        QueryResult { query: self.clone(), window: bounds, series }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj([
+            ("select", Json::str(self.kind.map(SeriesKind::name).unwrap_or("*"))),
+            ("label", self.label.as_deref().map(Json::str).unwrap_or(Json::Null)),
+            ("node", self.node.as_deref().map(Json::str).unwrap_or(Json::Null)),
+            ("window", self.window.map(|w| Json::num(w as f64)).unwrap_or(Json::Null)),
+            ("agg", self.agg.map(|a| Json::str(a.name())).unwrap_or(Json::Null)),
+        ])
+    }
+}
+
+fn eval_series(
+    key: &SeriesKey,
+    buf: &SeriesBuf,
+    lo: u64,
+    hi: u64,
+    agg: Option<Agg>,
+    window: Option<u64>,
+) -> SeriesResult {
+    let Some(agg) = agg else {
+        let points = buf.points_in(lo, hi);
+        let count = points.len() as u64;
+        return SeriesResult { key: key.clone(), count, value: None, points };
+    };
+    let stats = buf.stats_in(lo, hi);
+    let value = if stats.count == 0 {
+        None
+    } else {
+        Some(match agg {
+            Agg::Count => stats.count as f64,
+            Agg::Sum => stats.sum,
+            Agg::Mean => stats.sum / stats.count as f64,
+            Agg::Min => stats.min,
+            Agg::Max => stats.max,
+            Agg::Last => stats.v_last,
+            Agg::Rate => {
+                let span = window.unwrap_or_else(|| stats.t_last - stats.t_first).max(1);
+                stats.count as f64 / span as f64
+            }
+            Agg::P99 => {
+                let mut values: Vec<f64> =
+                    buf.points_in(lo, hi).into_iter().map(|(_, v)| v).collect();
+                values.sort_by(f64::total_cmp);
+                let rank = ((values.len() as f64 * 0.99).ceil() as usize).saturating_sub(1);
+                values[rank]
+            }
+        })
+    };
+    SeriesResult { key: key.clone(), count: stats.count, value, points: Vec::new() }
+}
+
+/// One matched series in a [`QueryResult`].
+#[derive(Clone, Debug)]
+pub struct SeriesResult {
+    /// The series identity.
+    pub key: SeriesKey,
+    /// Points inside the evaluated window.
+    pub count: u64,
+    /// Aggregate value; `None` without an `agg` stage or on an empty
+    /// window.
+    pub value: Option<f64>,
+    /// Raw in-window points; populated only without an `agg` stage.
+    pub points: Vec<(u64, f64)>,
+}
+
+impl SeriesResult {
+    fn to_json(&self, with_points: bool) -> Json {
+        let mut fields = vec![
+            ("kind", Json::str(self.key.kind.name())),
+            ("label", Json::str(&self.key.label)),
+            ("node", Json::str(&self.key.node)),
+            ("count", Json::num(self.count as f64)),
+        ];
+        if with_points {
+            let pts = self.points.iter();
+            let arr = pts.map(|&(t, v)| Json::arr([Json::num(t as f64), Json::num(v)]));
+            fields.push(("points", Json::arr(arr)));
+        } else {
+            fields.push(("value", self.value.map(Json::num).unwrap_or(Json::Null)));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// The result of evaluating a [`Query`]: one entry per matched series, in
+/// key order.
+#[derive(Clone, Debug)]
+pub struct QueryResult {
+    /// The query that produced this result.
+    pub query: Query,
+    /// Evaluated `[lo, hi]` bounds when a window stage was present.
+    pub window: Option<(u64, u64)>,
+    /// Matched series, sorted by key.
+    pub series: Vec<SeriesResult>,
+}
+
+impl QueryResult {
+    /// The aggregate of the single matched series, if the query matched
+    /// exactly one and carried an `agg` stage.
+    pub fn single(&self) -> Option<f64> {
+        match self.series.as_slice() {
+            [one] => one.value,
+            _ => None,
+        }
+    }
+
+    /// Serialize for the CLI and the HTTP endpoint.
+    pub fn to_json(&self) -> Json {
+        let with_points = self.query.agg.is_none();
+        let window = match self.window {
+            Some((lo, hi)) => Json::arr([Json::num(lo as f64), Json::num(hi as f64)]),
+            None => Json::Null,
+        };
+        Json::obj([
+            ("query", self.query.to_json()),
+            ("window", window),
+            ("matched", Json::num(self.series.len() as f64)),
+            ("series", Json::arr(self.series.iter().map(|s| s.to_json(with_points)))),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> TelemetryStore {
+        let s = TelemetryStore::new();
+        for t in 0..10u64 {
+            s.append(SeriesKind::Probes, "job-00", "pi4", t * 100, 4.0);
+            s.append(SeriesKind::Probes, "job-01", "nano", t * 100, 6.0);
+        }
+        s.append(SeriesKind::Verdicts, "job-00", "pi4", 450, 2.0);
+        s
+    }
+
+    #[test]
+    fn parse_full_grammar() {
+        let q = Query::parse("select probes where label=job-00 node=pi4 | window 600 | agg p99")
+            .unwrap();
+        assert_eq!(q.kind, Some(SeriesKind::Probes));
+        assert_eq!(q.label.as_deref(), Some("job-00"));
+        assert_eq!(q.node.as_deref(), Some("pi4"));
+        assert_eq!(q.window, Some(600));
+        assert_eq!(q.agg, Some(Agg::P99));
+        let star = Query::parse("select *").unwrap();
+        assert_eq!(star.kind, None);
+        assert_eq!(star.agg, None);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_queries() {
+        for bad in [
+            "",
+            "probes",
+            "select",
+            "select nope",
+            "select probes where",
+            "select probes where label",
+            "select probes where job=job-00",
+            "select probes whence label=x",
+            "select probes | window x",
+            "select probes | window 1 | window 2",
+            "select probes | agg p50",
+            "select probes | agg sum | agg sum",
+            "select probes | ",
+            "select probes | group by node",
+        ] {
+            assert!(Query::parse(bad).is_err(), "accepted: {bad:?}");
+        }
+    }
+
+    #[test]
+    fn select_returns_points_in_key_order() {
+        let r = Query::parse("select probes").unwrap().run(&store());
+        assert_eq!(r.series.len(), 2);
+        assert_eq!(r.series[0].key.label, "job-00");
+        assert_eq!(r.series[1].key.label, "job-01");
+        assert_eq!(r.series[0].points.len(), 10);
+        assert_eq!(r.window, None);
+    }
+
+    #[test]
+    fn filters_and_aggregates() {
+        let s = store();
+        let sum = Query::parse("select probes where label=job-00 | agg sum").unwrap().run(&s);
+        assert_eq!(sum.single(), Some(40.0));
+        let mean = Query::parse("select probes where node=nano | agg mean").unwrap().run(&s);
+        assert_eq!(mean.single(), Some(6.0));
+        let last = Query::parse("select verdicts | agg last").unwrap().run(&s);
+        assert_eq!(last.single(), Some(2.0));
+        let none = Query::parse("select smape | agg sum").unwrap().run(&s);
+        assert_eq!(none.series.len(), 0);
+        assert_eq!(none.single(), None);
+    }
+
+    #[test]
+    fn window_anchors_on_newest_matched_timestamp() {
+        let s = store();
+        let q = Query::parse("select probes where label=job-00 | window 300 | agg count").unwrap();
+        let r = q.run(&s);
+        // latest = 900, window = [600, 900] -> points at 600/700/800/900.
+        assert_eq!(r.window, Some((600, 900)));
+        assert_eq!(r.single(), Some(4.0));
+        let rate = Query::parse("select probes where label=job-00 | window 300 | agg rate")
+            .unwrap()
+            .run(&s);
+        assert_eq!(rate.single(), Some(4.0 / 300.0));
+    }
+
+    #[test]
+    fn p99_matches_the_bench_estimator() {
+        let s = TelemetryStore::new();
+        for t in 0..200u64 {
+            s.append(SeriesKind::Runtime, "job-00", "pi4", t, t as f64);
+        }
+        let r = Query::parse("select runtime | agg p99").unwrap().run(&s);
+        // ceil(200 * 0.99) - 1 = 197 -> value 197.0 of the sorted 0..200.
+        assert_eq!(r.single(), Some(197.0));
+    }
+
+    #[test]
+    fn result_json_parses_back() {
+        let r = Query::parse("select probes | agg sum").unwrap().run(&store());
+        let text = crate::util::json::to_string(&r.to_json());
+        let doc = crate::util::json::parse(&text).unwrap();
+        assert_eq!(doc.get("matched").and_then(Json::as_f64), Some(2.0));
+        let series = doc.get("series").and_then(Json::as_arr).unwrap();
+        assert_eq!(series.len(), 2);
+        assert_eq!(series[0].get("value").and_then(Json::as_f64), Some(40.0));
+        let raw = Query::parse("select verdicts").unwrap().run(&store());
+        let doc = crate::util::json::parse(&crate::util::json::to_string(&raw.to_json())).unwrap();
+        let series = doc.get("series").and_then(Json::as_arr).unwrap();
+        let points = series[0].get("points").and_then(Json::as_arr).unwrap();
+        assert_eq!(points.len(), 1);
+    }
+}

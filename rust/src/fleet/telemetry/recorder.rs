@@ -1,0 +1,150 @@
+//! Bridges daemon events into the telemetry store.
+//!
+//! The recorder is owned by the [`FleetDaemon`](crate::fleet::FleetDaemon)
+//! and invoked adjacent to every `journal()` entry, so the store is a
+//! lossless-within-retention columnar view of the same timeline — the
+//! `telemetry_e2e` test diffs the two. All methods take the daemon's
+//! virtual-clock tick explicitly; the recorder never reads wallclock.
+
+use std::sync::Arc;
+
+use crate::coordinator::CapacityPlan;
+use crate::fleet::cache::CacheStats;
+use crate::fleet::drift::DriftVerdict;
+use crate::fleet::migrate::FleetPlan;
+use crate::fleet::worker::JobOutcome;
+
+use super::store::{SeriesKind, TelemetryStore};
+
+/// Numeric encoding of a [`DriftVerdict`] in the `verdicts` series:
+/// 0 = stable, 1 = rate-shift, 2 = model-stale.
+pub fn verdict_code(verdict: &DriftVerdict) -> f64 {
+    match verdict {
+        DriftVerdict::Stable => 0.0,
+        DriftVerdict::RateShift { .. } => 1.0,
+        DriftVerdict::ModelStale { .. } => 2.0,
+    }
+}
+
+/// Emits fleet observations into a shared [`TelemetryStore`].
+pub struct TelemetryRecorder {
+    store: Arc<TelemetryStore>,
+    last_cache: CacheStats,
+}
+
+impl TelemetryRecorder {
+    /// Recorder over `store`. `cache_base` is the cache's stats at attach
+    /// time; the first [`TelemetryRecorder::cache_flush`] emits deltas
+    /// relative to it, so restored lifetime counters never pollute the
+    /// series.
+    pub fn new(store: Arc<TelemetryStore>, cache_base: CacheStats) -> TelemetryRecorder {
+        TelemetryRecorder { store, last_cache: cache_base }
+    }
+
+    /// The shared store (for query handlers and tests).
+    pub fn store(&self) -> &Arc<TelemetryStore> {
+        &self.store
+    }
+
+    /// A job was admitted to the roster.
+    pub fn arrival(&self, at: u64, job: &str, node: &str) {
+        self.store.append(SeriesKind::Arrivals, job, node, at, 1.0);
+    }
+
+    /// A job was retired from the roster.
+    pub fn departure(&self, at: u64, job: &str, node: &str) {
+        self.store.append(SeriesKind::Departures, job, node, at, 1.0);
+    }
+
+    /// A drift verdict was observed (externally or by an epoch tick).
+    pub fn verdict(&self, at: u64, job: &str, node: &str, verdict: &DriftVerdict) {
+        self.store.append(SeriesKind::Verdicts, job, node, at, verdict_code(verdict));
+        if let DriftVerdict::ModelStale { rolling_smape } = verdict {
+            self.store.append(SeriesKind::Smape, job, node, at, *rolling_smape);
+        }
+    }
+
+    /// A (re-)profile of `job` executed `executed` fresh probes (cache
+    /// replays excluded — a fully warm profile records 0).
+    pub fn probes(&self, at: u64, job: &str, node: &str, executed: u64) {
+        self.store.append(SeriesKind::Probes, job, node, at, executed as f64);
+    }
+
+    /// Rolling SMAPE after a drift-triggered re-profile.
+    pub fn smape(&self, at: u64, job: &str, node: &str, smape: f64) {
+        self.store.append(SeriesKind::Smape, job, node, at, smape);
+    }
+
+    /// Every observed mean step runtime of a finished profile, as one
+    /// `runtime` point per step at the completion tick.
+    pub fn outcome_runtimes(&self, at: u64, outcome: &JobOutcome) {
+        for round in &outcome.rounds {
+            for step in &round.steps {
+                let node = outcome.node.name;
+                self.store.append(SeriesKind::Runtime, &outcome.name, node, at, step.mean_runtime);
+            }
+        }
+    }
+
+    /// Residual capacity per node after a replan.
+    pub fn headroom(&self, at: u64, plans: &[(String, CapacityPlan)]) {
+        for (node, plan) in plans {
+            let headroom = plan.capacity - plan.total_assigned;
+            self.store.append(SeriesKind::Headroom, "", node, at, headroom);
+        }
+    }
+
+    /// Cross-node migrations of a rebalance plan (one point per move,
+    /// keyed by the destination node).
+    pub fn migrations(&self, at: u64, plan: &FleetPlan) {
+        for m in &plan.migrations {
+            self.store.append(SeriesKind::Migrations, &m.job, m.to, at, 1.0);
+        }
+    }
+
+    /// Cache hit/miss deltas since the previous flush. Zero deltas are
+    /// recorded too — the run-length codec collapses them, and the sum of
+    /// the series then exactly equals the drained report's cache delta.
+    pub fn cache_flush(&mut self, at: u64, now: CacheStats) {
+        let delta = now.delta_since(&self.last_cache);
+        self.store.append(SeriesKind::CacheHits, "", "", at, delta.hits as f64);
+        self.store.append(SeriesKind::CacheMisses, "", "", at, delta.misses as f64);
+        self.last_cache = now;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::MeasurementCache;
+
+    #[test]
+    fn verdict_codes_are_stable() {
+        assert_eq!(verdict_code(&DriftVerdict::Stable), 0.0);
+        let rate = DriftVerdict::RateShift { provisioned_hz: 2.0, observed_hz: 8.0 };
+        assert_eq!(verdict_code(&rate), 1.0);
+        let stale = DriftVerdict::ModelStale { rolling_smape: 0.9 };
+        assert_eq!(verdict_code(&stale), 2.0);
+    }
+
+    #[test]
+    fn model_stale_verdicts_also_record_smape() {
+        let store = Arc::new(TelemetryStore::new());
+        let rec = TelemetryRecorder::new(store.clone(), CacheStats::default());
+        rec.verdict(700, "job-01", "pi4", &DriftVerdict::ModelStale { rolling_smape: 0.9 });
+        assert_eq!(store.points(SeriesKind::Verdicts, "job-01", "pi4"), vec![(700, 2.0)]);
+        assert_eq!(store.points(SeriesKind::Smape, "job-01", "pi4"), vec![(700, 0.9)]);
+    }
+
+    #[test]
+    fn cache_flush_emits_deltas_not_lifetime_totals() {
+        let cache = MeasurementCache::new();
+        let base = cache.stats();
+        let store = Arc::new(TelemetryStore::new());
+        let mut rec = TelemetryRecorder::new(store.clone(), base);
+        rec.cache_flush(100, cache.stats());
+        rec.cache_flush(200, cache.stats());
+        assert_eq!(store.points(SeriesKind::CacheHits, "", ""), vec![(100, 0.0), (200, 0.0)]);
+        assert_eq!(store.points(SeriesKind::CacheMisses, "", ""), vec![(100, 0.0), (200, 0.0)]);
+    }
+}

@@ -1,0 +1,266 @@
+//! Std-only HTTP/JSON endpoint over the telemetry store.
+//!
+//! A deliberately tiny server — `TcpListener` + hand-parsed GET requests,
+//! one connection at a time, `Connection: close` — because the crate's
+//! only dependency is `anyhow` and the query surface is four read-only
+//! routes:
+//!
+//! | route            | returns                                          |
+//! |------------------|--------------------------------------------------|
+//! | `/healthz`       | store size, evicted points, compressed footprint |
+//! | `/series`        | every series key with its retained point count   |
+//! | `/snapshot`      | the drained fleet report JSON                    |
+//! | `/query?q=<expr>`| a [`Query`] result (expression percent-encoded)  |
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+use super::query::Query;
+use super::store::TelemetryStore;
+
+/// Serves telemetry queries and a fleet snapshot over HTTP.
+pub struct TelemetryServer {
+    listener: TcpListener,
+    store: Arc<TelemetryStore>,
+    snapshot: String,
+}
+
+impl TelemetryServer {
+    /// Bind `addr` (e.g. `127.0.0.1:7878`, or port 0 for an ephemeral
+    /// port in tests). `snapshot` is served verbatim at `/snapshot`.
+    pub fn bind(addr: &str, store: Arc<TelemetryStore>, snapshot: &Json) -> Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding telemetry server on {addr}"))?;
+        Ok(TelemetryServer { listener, store, snapshot: json::to_string(snapshot) })
+    }
+
+    /// The bound address (resolves port 0 to the actual port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.listener.local_addr().expect("telemetry server has a local address")
+    }
+
+    /// Accept and answer exactly one connection. Per-connection I/O
+    /// errors are reported on stderr but do not take the server down.
+    pub fn serve_one(&self) -> Result<()> {
+        let (stream, _) = self.listener.accept().context("telemetry server accept")?;
+        if let Err(e) = self.handle(stream) {
+            eprintln!("telemetry serve: {e:#}");
+        }
+        Ok(())
+    }
+
+    /// Accept and answer exactly `n` connections (test harness helper).
+    pub fn serve_requests(&self, n: usize) -> Result<()> {
+        for _ in 0..n {
+            self.serve_one()?;
+        }
+        Ok(())
+    }
+
+    /// Serve until the process exits (the `streamprof serve` loop).
+    pub fn serve_forever(&self) -> Result<()> {
+        loop {
+            self.serve_one()?;
+        }
+    }
+
+    fn handle(&self, stream: TcpStream) -> Result<()> {
+        stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+        stream.set_write_timeout(Some(Duration::from_secs(5)))?;
+        let mut reader = BufReader::new(stream.try_clone().context("cloning connection")?);
+        let mut request_line = String::new();
+        reader.read_line(&mut request_line).context("reading request line")?;
+        let mut parts = request_line.split_whitespace();
+        let method = parts.next().unwrap_or("").to_string();
+        let target = parts.next().unwrap_or("/").to_string();
+        // Drain request headers so well-behaved clients see a clean close.
+        loop {
+            let mut header = String::new();
+            let n = reader.read_line(&mut header).unwrap_or(0);
+            if n == 0 || header == "\r\n" || header == "\n" {
+                break;
+            }
+        }
+        let (status, body) = self.route(&method, &target);
+        let mut out = stream;
+        write!(
+            out,
+            "HTTP/1.1 {status}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        )
+        .context("writing response")?;
+        out.flush().context("flushing response")?;
+        Ok(())
+    }
+
+    fn route(&self, method: &str, target: &str) -> (&'static str, String) {
+        if method != "GET" {
+            let err = error_body("only GET is supported");
+            return ("405 Method Not Allowed", err);
+        }
+        let (path, params) = match target.split_once('?') {
+            Some((p, q)) => (p, q),
+            None => (target, ""),
+        };
+        match path {
+            "/healthz" => ("200 OK", json::to_string(&self.healthz())),
+            "/series" => ("200 OK", json::to_string(&self.series())),
+            "/snapshot" => ("200 OK", self.snapshot.clone()),
+            "/query" => self.query(params),
+            _ => ("404 Not Found", error_body(&format!("no route {path}"))),
+        }
+    }
+
+    fn healthz(&self) -> Json {
+        Json::obj([
+            ("ok", Json::Bool(true)),
+            ("series", Json::num(self.store.series_count() as f64)),
+            ("points", Json::num(self.store.total_points() as f64)),
+            ("evicted", Json::num(self.store.total_evicted() as f64)),
+            ("compressed_bytes", Json::num(self.store.compressed_bytes() as f64)),
+        ])
+    }
+
+    fn series(&self) -> Json {
+        let mut rows = Vec::new();
+        self.store.for_each(|key, buf| {
+            rows.push(Json::obj([
+                ("kind", Json::str(key.kind.name())),
+                ("label", Json::str(&key.label)),
+                ("node", Json::str(&key.node)),
+                ("points", Json::num(buf.len() as f64)),
+                ("evicted", Json::num(buf.evicted() as f64)),
+            ]));
+        });
+        Json::obj([("series", Json::Arr(rows))])
+    }
+
+    fn query(&self, params: &str) -> (&'static str, String) {
+        let Some(expr) = query_param(params, "q") else {
+            return ("400 Bad Request", error_body("missing q= parameter"));
+        };
+        match Query::parse(&expr) {
+            Ok(q) => ("200 OK", json::to_string(&q.run(&self.store).to_json())),
+            Err(e) => ("400 Bad Request", error_body(&e)),
+        }
+    }
+}
+
+fn error_body(message: &str) -> String {
+    json::to_string(&Json::obj([("error", Json::str(message))]))
+}
+
+/// Value of `name` in a `k=v&k=v` query string, percent-decoded.
+fn query_param(params: &str, name: &str) -> Option<String> {
+    for pair in params.split('&') {
+        let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+        if k == name {
+            return Some(percent_decode(v));
+        }
+    }
+    None
+}
+
+/// Decodes `%XX` escapes and `+`-as-space; malformed escapes pass through
+/// verbatim (the query parser then reports them).
+fn percent_decode(s: &str) -> String {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            b'%' => {
+                let hex = bytes.get(i + 1..i + 3).and_then(|h| std::str::from_utf8(h).ok());
+                match hex.and_then(|h| u8::from_str_radix(h, 16).ok()) {
+                    Some(b) => {
+                        out.push(b);
+                        i += 3;
+                    }
+                    None => {
+                        out.push(b'%');
+                        i += 1;
+                    }
+                }
+            }
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::telemetry::store::SeriesKind;
+    use std::io::Read;
+
+    fn request(addr: SocketAddr, target: &str) -> (String, String) {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        write!(stream, "GET {target} HTTP/1.1\r\nHost: test\r\n\r\n").unwrap();
+        let mut response = String::new();
+        stream.read_to_string(&mut response).unwrap();
+        let (head, body) = response.split_once("\r\n\r\n").unwrap();
+        let status = head.lines().next().unwrap().to_string();
+        (status, body.to_string())
+    }
+
+    fn test_server() -> (TelemetryServer, SocketAddr) {
+        let store = Arc::new(TelemetryStore::new());
+        for t in 0..5u64 {
+            store.append(SeriesKind::Probes, "job-00", "pi4", t * 100, 4.0);
+        }
+        let snapshot = Json::obj([("fleet", Json::str("test"))]);
+        let server = TelemetryServer::bind("127.0.0.1:0", store, &snapshot).unwrap();
+        let addr = server.local_addr();
+        (server, addr)
+    }
+
+    #[test]
+    fn percent_decoding() {
+        assert_eq!(percent_decode("select%20probes%20%7C%20agg%20sum"), "select probes | agg sum");
+        assert_eq!(percent_decode("a+b%3Dc"), "a b=c");
+        assert_eq!(percent_decode("100%"), "100%");
+        assert_eq!(percent_decode("%zz"), "%zz");
+    }
+
+    #[test]
+    fn routes_answer_over_real_sockets() {
+        let (server, addr) = test_server();
+        let serving = std::thread::spawn(move || server.serve_requests(6).unwrap());
+        let (status, body) = request(addr, "/healthz");
+        assert!(status.contains("200"), "{status}");
+        let doc = json::parse(&body).unwrap();
+        assert_eq!(doc.get("points").and_then(Json::as_usize), Some(5));
+        let (_, body) = request(addr, "/series");
+        let doc = json::parse(&body).unwrap();
+        let rows = doc.get("series").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("kind").and_then(Json::as_str), Some("probes"));
+        let (_, body) = request(addr, "/snapshot");
+        let doc = json::parse(&body).unwrap();
+        assert_eq!(doc.get("fleet").and_then(Json::as_str), Some("test"));
+        let (_, body) = request(addr, "/query?q=select%20probes%20%7C%20agg%20sum");
+        let doc = json::parse(&body).unwrap();
+        let series = doc.get("series").and_then(Json::as_arr).unwrap();
+        assert_eq!(series[0].get("value").and_then(Json::as_f64), Some(20.0));
+        let (status, _) = request(addr, "/nope");
+        assert!(status.contains("404"), "{status}");
+        let (status, body) = request(addr, "/query?q=select%20nope");
+        assert!(status.contains("400"), "{status}");
+        assert!(json::parse(&body).unwrap().get("error").is_some());
+        serving.join().unwrap();
+    }
+}

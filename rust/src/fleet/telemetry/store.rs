@@ -1,0 +1,733 @@
+//! Columnar in-memory time-series store for fleet telemetry.
+//!
+//! Every series is keyed `(kind, label, node)` and held in a [`SeriesBuf`]
+//! ring of compressed blocks: timestamps are delta-of-delta encoded as
+//! zigzag varints (ticks on the daemon's virtual clock compress to ~1
+//! byte each), values are run-length encoded over their raw `f64` bits
+//! (counters and repeated gauge readings collapse to a single run).
+//! Retention is a fixed per-series point budget; eviction drops whole
+//! oldest blocks, so the store is lossless *within* the retention window
+//! and explicit about what it dropped (`evicted()`).
+//!
+//! Appends are lock-striped across 8 shards by FNV-1a of the full key —
+//! the daemon's replan hot path only ever contends on one shard with a
+//! concurrent reader, mirroring the sharded [`MeasurementCache`]
+//! (`crate::fleet::MeasurementCache`) design.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Mutex;
+
+use crate::util::fnv1a;
+
+/// Shards in the store; appends hash the full series key to pick one.
+const STORE_SHARDS: usize = 8;
+
+/// Default per-series retention, in points. At one point per processed
+/// daemon event this covers thousands of ticks per series.
+pub const DEFAULT_RETENTION: usize = 4096;
+
+/// Points per sealed block (capped by the series capacity so tiny
+/// retention windows still evict at a useful granularity).
+const BLOCK_POINTS: usize = 256;
+
+/// What a telemetry series measures. The `name()` strings are the public
+/// vocabulary shared by the query grammar, the HTTP endpoints, and the
+/// `--journal-out` diff in the e2e tests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SeriesKind {
+    /// Job arrivals (value 1 per admitted job).
+    Arrivals,
+    /// Job retirements (value 1 per retired job).
+    Departures,
+    /// Drift verdicts, encoded 0=stable / 1=rate-shift / 2=model-stale.
+    Verdicts,
+    /// Probes actually executed by a (re-)profile of a job.
+    Probes,
+    /// Observed mean runtimes from profiling steps (seconds).
+    Runtime,
+    /// Rolling SMAPE after a drift-triggered re-profile.
+    Smape,
+    /// Per-node residual capacity after each replan.
+    Headroom,
+    /// Cross-node migrations (value 1; node = destination).
+    Migrations,
+    /// Measurement-cache hit delta since the previous flush.
+    CacheHits,
+    /// Measurement-cache miss delta since the previous flush.
+    CacheMisses,
+}
+
+impl SeriesKind {
+    /// Every kind, in serialization order.
+    pub const ALL: [SeriesKind; 10] = [
+        SeriesKind::Arrivals,
+        SeriesKind::Departures,
+        SeriesKind::Verdicts,
+        SeriesKind::Probes,
+        SeriesKind::Runtime,
+        SeriesKind::Smape,
+        SeriesKind::Headroom,
+        SeriesKind::Migrations,
+        SeriesKind::CacheHits,
+        SeriesKind::CacheMisses,
+    ];
+
+    /// Stable wire name used by queries, JSON output, and docs.
+    pub fn name(self) -> &'static str {
+        match self {
+            SeriesKind::Arrivals => "arrivals",
+            SeriesKind::Departures => "departures",
+            SeriesKind::Verdicts => "verdicts",
+            SeriesKind::Probes => "probes",
+            SeriesKind::Runtime => "runtime",
+            SeriesKind::Smape => "smape",
+            SeriesKind::Headroom => "headroom",
+            SeriesKind::Migrations => "migrations",
+            SeriesKind::CacheHits => "cache_hits",
+            SeriesKind::CacheMisses => "cache_misses",
+        }
+    }
+
+    /// Inverse of [`SeriesKind::name`].
+    pub fn from_name(name: &str) -> Option<SeriesKind> {
+        SeriesKind::ALL.iter().copied().find(|k| k.name() == name)
+    }
+}
+
+/// Full identity of one series. `label` is the job name for job-scoped
+/// kinds, empty for node- or fleet-scoped ones; `node` is empty for
+/// fleet-scoped kinds (cache deltas).
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct SeriesKey {
+    /// What the series measures.
+    pub kind: SeriesKind,
+    /// Job name, or empty when the series is not job-scoped.
+    pub label: String,
+    /// Node name, or empty when the series is fleet-scoped.
+    pub node: String,
+}
+
+fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+fn write_varint(out: &mut Vec<u8>, mut v: u64) {
+    while v >= 0x80 {
+        out.push((v as u8) | 0x80);
+        v >>= 7;
+    }
+    out.push(v as u8);
+}
+
+/// Reads one LEB128 varint at `*pos`, advancing it. Inputs are only ever
+/// produced by [`write_varint`], so truncation cannot occur; a malformed
+/// slice decodes to whatever prefix was present rather than panicking.
+fn read_varint(buf: &[u8], pos: &mut usize) -> u64 {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    while *pos < buf.len() {
+        let byte = buf[*pos];
+        *pos += 1;
+        v |= u64::from(byte & 0x7f) << shift;
+        if byte & 0x80 == 0 {
+            break;
+        }
+        shift += 7;
+    }
+    v
+}
+
+/// One sealed, immutable compressed block of points.
+#[derive(Clone, Debug)]
+struct Block {
+    /// Varint stream: first timestamp raw, then zigzag delta-of-delta.
+    ts: Vec<u8>,
+    /// Run-length encoded values as (f64 bits, run length).
+    runs: Vec<(u64, u32)>,
+    len: u32,
+    t_min: u64,
+    t_max: u64,
+}
+
+/// Mutable tail block accepting appends until it reaches the block size.
+#[derive(Clone, Debug, Default)]
+struct BlockBuilder {
+    ts: Vec<u8>,
+    runs: Vec<(u64, u32)>,
+    len: u32,
+    t_min: u64,
+    t_max: u64,
+    t_prev: u64,
+    delta_prev: i64,
+}
+
+impl BlockBuilder {
+    fn push(&mut self, t: u64, v: f64) {
+        if self.len == 0 {
+            write_varint(&mut self.ts, t);
+            self.t_min = t;
+            self.t_max = t;
+            self.delta_prev = 0;
+        } else {
+            // Wrapping i64 arithmetic round-trips ANY u64 timestamp, so
+            // out-of-order appends (concurrent writers sharing a series)
+            // stay lossless rather than corrupting the stream.
+            let delta = (t as i64).wrapping_sub(self.t_prev as i64);
+            write_varint(&mut self.ts, zigzag(delta.wrapping_sub(self.delta_prev)));
+            self.delta_prev = delta;
+            self.t_min = self.t_min.min(t);
+            self.t_max = self.t_max.max(t);
+        }
+        self.t_prev = t;
+        let bits = v.to_bits();
+        match self.runs.last_mut() {
+            Some((run_bits, n)) if *run_bits == bits && *n < u32::MAX => *n += 1,
+            _ => self.runs.push((bits, 1)),
+        }
+        self.len += 1;
+    }
+
+    fn seal(&mut self) -> Block {
+        let b = std::mem::take(self);
+        Block { ts: b.ts, runs: b.runs, len: b.len, t_min: b.t_min, t_max: b.t_max }
+    }
+}
+
+/// Streaming decoder over one block's compressed representation.
+struct PointIter<'a> {
+    ts: &'a [u8],
+    pos: usize,
+    runs: &'a [(u64, u32)],
+    run_idx: usize,
+    run_off: u32,
+    emitted: u32,
+    len: u32,
+    t_prev: u64,
+    delta_prev: i64,
+}
+
+impl<'a> PointIter<'a> {
+    fn new(ts: &'a [u8], runs: &'a [(u64, u32)], len: u32) -> Self {
+        PointIter {
+            ts,
+            pos: 0,
+            runs,
+            run_idx: 0,
+            run_off: 0,
+            emitted: 0,
+            len,
+            t_prev: 0,
+            delta_prev: 0,
+        }
+    }
+}
+
+/// Borrowed view of one block's compressed streams, either sealed or the
+/// open tail.
+struct BlockView<'a> {
+    ts: &'a [u8],
+    runs: &'a [(u64, u32)],
+    len: u32,
+    t_min: u64,
+    t_max: u64,
+}
+
+impl Iterator for PointIter<'_> {
+    type Item = (u64, f64);
+
+    fn next(&mut self) -> Option<(u64, f64)> {
+        if self.emitted == self.len {
+            return None;
+        }
+        let t = if self.emitted == 0 {
+            read_varint(self.ts, &mut self.pos)
+        } else {
+            let dod = unzigzag(read_varint(self.ts, &mut self.pos));
+            self.delta_prev = self.delta_prev.wrapping_add(dod);
+            (self.t_prev as i64).wrapping_add(self.delta_prev) as u64
+        };
+        self.t_prev = t;
+        let (bits, n) = self.runs[self.run_idx];
+        self.run_off += 1;
+        if self.run_off == n {
+            self.run_idx += 1;
+            self.run_off = 0;
+        }
+        self.emitted += 1;
+        Some((t, f64::from_bits(bits)))
+    }
+}
+
+/// Window aggregates computed without materializing points. All value
+/// fields are meaningless when `count == 0`; `t_first`/`t_last`/`v_last`
+/// assume the series was appended in non-decreasing time order (true for
+/// the daemon, whose virtual clock is monotone).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SeriesStats {
+    /// Points inside the window.
+    pub count: u64,
+    /// Sum of values inside the window.
+    pub sum: f64,
+    /// Minimum value inside the window.
+    pub min: f64,
+    /// Maximum value inside the window.
+    pub max: f64,
+    /// Timestamp of the first in-window point.
+    pub t_first: u64,
+    /// Timestamp of the last in-window point.
+    pub t_last: u64,
+    /// Value of the last in-window point.
+    pub v_last: f64,
+}
+
+impl SeriesStats {
+    fn absorb_point(&mut self, t: u64, v: f64) {
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+            self.t_first = t;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.count += 1;
+        self.sum += v;
+        self.t_last = t;
+        self.v_last = v;
+    }
+
+    /// Fast path for a block fully inside the window: fold the value
+    /// runs directly, never touching the timestamp stream.
+    fn absorb_runs(&mut self, runs: &[(u64, u32)], len: u32, t_min: u64, t_max: u64) {
+        if len == 0 {
+            return;
+        }
+        if self.count == 0 {
+            self.t_first = t_min;
+            self.min = f64::INFINITY;
+            self.max = f64::NEG_INFINITY;
+        }
+        for &(bits, n) in runs {
+            let v = f64::from_bits(bits);
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+            self.sum += v * f64::from(n);
+        }
+        self.count += u64::from(len);
+        self.t_last = t_max;
+        self.v_last = f64::from_bits(runs[runs.len() - 1].0);
+    }
+}
+
+/// Ring buffer of compressed blocks holding one series.
+#[derive(Debug)]
+pub struct SeriesBuf {
+    sealed: VecDeque<Block>,
+    open: BlockBuilder,
+    block_points: u32,
+    capacity: usize,
+    total: usize,
+    evicted: u64,
+}
+
+impl SeriesBuf {
+    /// A ring retaining at most `capacity` points (clamped to ≥ 1).
+    pub fn new(capacity: usize) -> SeriesBuf {
+        let capacity = capacity.max(1);
+        SeriesBuf {
+            sealed: VecDeque::new(),
+            open: BlockBuilder::default(),
+            block_points: capacity.min(BLOCK_POINTS) as u32,
+            capacity,
+            total: 0,
+            evicted: 0,
+        }
+    }
+
+    /// Append one point. Seals the open block at the block size and
+    /// evicts whole oldest blocks while over capacity.
+    pub fn append(&mut self, t: u64, v: f64) {
+        self.open.push(t, v);
+        self.total += 1;
+        if self.open.len >= self.block_points {
+            let sealed = self.open.seal();
+            self.sealed.push_back(sealed);
+        }
+        while self.total > self.capacity {
+            match self.sealed.pop_front() {
+                Some(b) => {
+                    self.total -= b.len as usize;
+                    self.evicted += u64::from(b.len);
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Retained points.
+    pub fn len(&self) -> usize {
+        self.total
+    }
+
+    /// True when nothing is retained.
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Retention budget in points.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Points dropped by retention so far.
+    pub fn evicted(&self) -> u64 {
+        self.evicted
+    }
+
+    /// Largest retained timestamp, if any.
+    pub fn latest(&self) -> Option<u64> {
+        let sealed = self.sealed.iter().map(|b| b.t_max).max();
+        let open = (self.open.len > 0).then_some(self.open.t_max);
+        sealed.into_iter().chain(open).max()
+    }
+
+    /// Smallest retained timestamp, if any.
+    pub fn earliest(&self) -> Option<u64> {
+        let sealed = self.sealed.iter().map(|b| b.t_min).min();
+        let open = (self.open.len > 0).then_some(self.open.t_min);
+        sealed.into_iter().chain(open).min()
+    }
+
+    /// Compressed footprint in bytes (timestamp streams + value runs).
+    pub fn compressed_bytes(&self) -> usize {
+        let mut total = self.open.ts.len() + self.open.runs.len() * 12;
+        for b in &self.sealed {
+            total += b.ts.len() + b.runs.len() * 12;
+        }
+        total
+    }
+
+    fn blocks(&self) -> Vec<BlockView<'_>> {
+        let mut out = Vec::with_capacity(self.sealed.len() + 1);
+        for b in &self.sealed {
+            out.push(BlockView {
+                ts: &b.ts,
+                runs: &b.runs,
+                len: b.len,
+                t_min: b.t_min,
+                t_max: b.t_max,
+            });
+        }
+        if self.open.len > 0 {
+            let o = &self.open;
+            out.push(BlockView {
+                ts: &o.ts,
+                runs: &o.runs,
+                len: o.len,
+                t_min: o.t_min,
+                t_max: o.t_max,
+            });
+        }
+        out
+    }
+
+    /// Decode every retained point in append order.
+    pub fn points(&self) -> Vec<(u64, f64)> {
+        let mut out = Vec::with_capacity(self.total);
+        for b in self.blocks() {
+            out.extend(PointIter::new(b.ts, b.runs, b.len));
+        }
+        out
+    }
+
+    /// Decode only the points with `lo <= t <= hi`, skipping blocks whose
+    /// time range is disjoint from the window.
+    pub fn points_in(&self, lo: u64, hi: u64) -> Vec<(u64, f64)> {
+        let mut out = Vec::new();
+        for b in self.blocks() {
+            if b.t_min > hi || b.t_max < lo {
+                continue;
+            }
+            let pts = PointIter::new(b.ts, b.runs, b.len);
+            out.extend(pts.filter(|&(t, _)| t >= lo && t <= hi));
+        }
+        out
+    }
+
+    /// Window aggregates. Blocks fully inside `[lo, hi]` fold their value
+    /// runs without decoding timestamps; only boundary blocks decode.
+    pub fn stats_in(&self, lo: u64, hi: u64) -> SeriesStats {
+        let mut stats = SeriesStats::default();
+        for b in self.blocks() {
+            if b.t_min > hi || b.t_max < lo {
+                continue;
+            }
+            if b.t_min >= lo && b.t_max <= hi {
+                stats.absorb_runs(b.runs, b.len, b.t_min, b.t_max);
+            } else {
+                for (t, v) in PointIter::new(b.ts, b.runs, b.len) {
+                    if t >= lo && t <= hi {
+                        stats.absorb_point(t, v);
+                    }
+                }
+            }
+        }
+        stats
+    }
+}
+
+/// Lock-striped map of series rings. Shared by the recording daemon and
+/// any number of query readers; a reader only blocks appends that hash
+/// to the same shard.
+pub struct TelemetryStore {
+    shards: [Mutex<BTreeMap<SeriesKey, SeriesBuf>>; STORE_SHARDS],
+    retention: usize,
+}
+
+impl TelemetryStore {
+    /// Store with the [`DEFAULT_RETENTION`] point budget per series.
+    pub fn new() -> TelemetryStore {
+        TelemetryStore::with_retention(DEFAULT_RETENTION)
+    }
+
+    /// Store retaining at most `points` per series (clamped to ≥ 1).
+    pub fn with_retention(points: usize) -> TelemetryStore {
+        TelemetryStore {
+            shards: std::array::from_fn(|_| Mutex::new(BTreeMap::new())),
+            retention: points.max(1),
+        }
+    }
+
+    fn shard_index(kind: SeriesKind, label: &str, node: &str) -> usize {
+        let bytes = kind
+            .name()
+            .bytes()
+            .chain(std::iter::once(0))
+            .chain(label.bytes())
+            .chain(std::iter::once(0))
+            .chain(node.bytes());
+        (fnv1a(bytes) % STORE_SHARDS as u64) as usize
+    }
+
+    /// Append one point to the series `(kind, label, node)`, creating it
+    /// on first touch.
+    pub fn append(&self, kind: SeriesKind, label: &str, node: &str, at: u64, value: f64) {
+        let idx = TelemetryStore::shard_index(kind, label, node);
+        let mut shard = self.shards[idx].lock().unwrap();
+        shard
+            .entry(SeriesKey { kind, label: label.to_string(), node: node.to_string() })
+            .or_insert_with(|| SeriesBuf::new(self.retention))
+            .append(at, value);
+    }
+
+    /// Visit every series in key order. Holds one shard lock at a time;
+    /// the callback sees a consistent view of each shard, not of the
+    /// whole store.
+    pub fn for_each<F: FnMut(&SeriesKey, &SeriesBuf)>(&self, mut f: F) {
+        let mut all: Vec<(SeriesKey, usize)> = Vec::new();
+        for (idx, shard) in self.shards.iter().enumerate() {
+            let shard = shard.lock().unwrap();
+            all.extend(shard.keys().map(|k| (k.clone(), idx)));
+        }
+        all.sort();
+        for (key, idx) in all {
+            let shard = self.shards[idx].lock().unwrap();
+            if let Some(buf) = shard.get(&key) {
+                f(&key, buf);
+            }
+        }
+    }
+
+    /// Every series key, sorted.
+    pub fn keys(&self) -> Vec<SeriesKey> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            out.extend(shard.lock().unwrap().keys().cloned());
+        }
+        out.sort();
+        out
+    }
+
+    /// Decoded points of one series, or empty if it does not exist.
+    pub fn points(&self, kind: SeriesKind, label: &str, node: &str) -> Vec<(u64, f64)> {
+        let idx = TelemetryStore::shard_index(kind, label, node);
+        let shard = self.shards[idx].lock().unwrap();
+        let key = SeriesKey { kind, label: label.to_string(), node: node.to_string() };
+        shard.get(&key).map(|b| b.points()).unwrap_or_default()
+    }
+
+    /// Number of series.
+    pub fn series_count(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    /// Retained points across all series.
+    pub fn total_points(&self) -> usize {
+        let mut total = 0;
+        for shard in &self.shards {
+            total += shard.lock().unwrap().values().map(SeriesBuf::len).sum::<usize>();
+        }
+        total
+    }
+
+    /// Points dropped by retention across all series.
+    pub fn total_evicted(&self) -> u64 {
+        let mut total = 0;
+        for shard in &self.shards {
+            total += shard.lock().unwrap().values().map(SeriesBuf::evicted).sum::<u64>();
+        }
+        total
+    }
+
+    /// Compressed footprint across all series, in bytes.
+    pub fn compressed_bytes(&self) -> usize {
+        let mut total = 0;
+        for shard in &self.shards {
+            for buf in shard.lock().unwrap().values() {
+                total += buf.compressed_bytes();
+            }
+        }
+        total
+    }
+
+    /// Largest timestamp across all series, if any point exists.
+    pub fn latest(&self) -> Option<u64> {
+        let mut best: Option<u64> = None;
+        for shard in &self.shards {
+            for buf in shard.lock().unwrap().values() {
+                best = best.max(buf.latest());
+            }
+        }
+        best
+    }
+}
+
+impl Default for TelemetryStore {
+    fn default() -> TelemetryStore {
+        TelemetryStore::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_zigzag_roundtrip() {
+        for v in [0i64, 1, -1, 63, -64, 300, -300, i64::MAX, i64::MIN] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+        let mut buf = Vec::new();
+        for v in [0u64, 1, 127, 128, 16383, 16384, u64::MAX] {
+            buf.clear();
+            write_varint(&mut buf, v);
+            let mut pos = 0;
+            assert_eq!(read_varint(&buf, &mut pos), v);
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn series_roundtrips_in_append_order() {
+        let pts = [(10u64, 1.0), (10, 1.0), (12, 1.0), (500, 2.5), (500, 2.5), (501, -3.0)];
+        let mut buf = SeriesBuf::new(64);
+        for &(t, v) in &pts {
+            buf.append(t, v);
+        }
+        assert_eq!(buf.points(), pts);
+        assert_eq!(buf.len(), pts.len());
+        assert_eq!(buf.evicted(), 0);
+        assert_eq!(buf.earliest(), Some(10));
+        assert_eq!(buf.latest(), Some(501));
+    }
+
+    #[test]
+    fn repeated_values_collapse_to_one_run() {
+        let mut buf = SeriesBuf::new(1024);
+        for t in 0..500u64 {
+            buf.append(t * 100, 7.0);
+        }
+        // One open block run + regular deltas: far smaller than 500 raw points.
+        assert!(buf.compressed_bytes() < 500, "got {}", buf.compressed_bytes());
+        assert_eq!(buf.points().len(), 500);
+    }
+
+    #[test]
+    fn eviction_is_block_granular_and_oldest_first() {
+        let mut buf = SeriesBuf::new(10); // block_points = 10
+        for t in 0..35u64 {
+            buf.append(t, t as f64);
+            assert!(buf.len() <= 10);
+        }
+        assert_eq!(buf.len() as u64 + buf.evicted(), 35);
+        let pts = buf.points();
+        // Whatever is retained is exactly the newest suffix.
+        let first = 35 - pts.len() as u64;
+        let expect: Vec<(u64, f64)> = (first..35).map(|t| (t, t as f64)).collect();
+        assert_eq!(pts, expect);
+    }
+
+    #[test]
+    fn window_queries_skip_disjoint_blocks() {
+        let mut buf = SeriesBuf::new(4096);
+        for t in 0..1000u64 {
+            buf.append(t, (t % 5) as f64);
+        }
+        let pts = buf.points_in(600, 699);
+        assert_eq!(pts.len(), 100);
+        assert!(pts.iter().all(|&(t, _)| (600..=699).contains(&t)));
+        let stats = buf.stats_in(600, 699);
+        assert_eq!(stats.count, 100);
+        assert_eq!(stats.t_first, 600);
+        assert_eq!(stats.t_last, 699);
+        assert_eq!(stats.min, 0.0);
+        assert_eq!(stats.max, 4.0);
+        assert_eq!(stats.sum, pts.iter().map(|&(_, v)| v).sum::<f64>());
+        assert_eq!(stats.v_last, (699 % 5) as f64);
+    }
+
+    #[test]
+    fn stats_full_block_fast_path_matches_decode() {
+        let mut buf = SeriesBuf::new(4096);
+        for t in 0..777u64 {
+            buf.append(t * 3, ((t * 7) % 11) as f64 - 5.0);
+        }
+        let all = buf.stats_in(0, u64::MAX);
+        let pts = buf.points();
+        assert_eq!(all.count as usize, pts.len());
+        assert_eq!(all.sum, pts.iter().map(|&(_, v)| v).sum::<f64>());
+        let min = pts.iter().map(|&(_, v)| v).fold(f64::INFINITY, f64::min);
+        let max = pts.iter().map(|&(_, v)| v).fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(all.min, min);
+        assert_eq!(all.max, max);
+        assert_eq!(all.v_last, pts.last().unwrap().1);
+    }
+
+    #[test]
+    fn store_keys_series_independently() {
+        let store = TelemetryStore::new();
+        store.append(SeriesKind::Probes, "job-00", "pi4", 10, 4.0);
+        store.append(SeriesKind::Probes, "job-01", "pi4", 11, 5.0);
+        store.append(SeriesKind::Verdicts, "job-00", "pi4", 12, 2.0);
+        assert_eq!(store.series_count(), 3);
+        assert_eq!(store.total_points(), 3);
+        assert_eq!(store.points(SeriesKind::Probes, "job-00", "pi4"), vec![(10, 4.0)]);
+        assert_eq!(store.points(SeriesKind::Probes, "job-02", "pi4"), Vec::new());
+        assert_eq!(store.latest(), Some(12));
+        let keys = store.keys();
+        assert_eq!(keys.len(), 3);
+        assert!(keys.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in SeriesKind::ALL {
+            assert_eq!(SeriesKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(SeriesKind::from_name("nope"), None);
+    }
+}

@@ -5,6 +5,9 @@
 //!   acquire  [opts]            run the §III-A.a acquisition sweep -> CSV
 //!   profile  [opts]            run one profiling session (sim or PJRT)
 //!   adjust   [opts]            profile + adaptive resource adjustment plan
+//!   fleet    [opts]            profile a fleet (batch or --daemon timeline)
+//!   serve    [opts]            daemon scenario + telemetry HTTP endpoint
+//!   telemetry query "<expr>"   evaluate a telemetry query offline
 //!   repro    <id|all> [--full] regenerate paper tables/figures
 //!   artifacts                  show AOT artifact/manifest status
 //!
@@ -19,9 +22,10 @@ use streamprof::coordinator::{
     ResourceAdjuster, SimulatedBackend,
 };
 use streamprof::earlystop::EarlyStopConfig;
+use streamprof::fleet::telemetry::{Query, TelemetryServer, TelemetryStore};
 use streamprof::fleet::{
-    sim_fleet, AdaptiveConfig, DriftConfig, DriftVerdict, FleetConfig, FleetDaemon,
-    FleetJobSpec, FleetReport, FleetSession, MeasurementCache, RuntimeShift,
+    journal_json, sim_fleet, AdaptiveConfig, DriftConfig, DriftVerdict, FleetConfig,
+    FleetDaemon, FleetJobSpec, FleetReport, FleetSession, MeasurementCache, RuntimeShift,
 };
 use streamprof::repro;
 use streamprof::runtime::{artifacts_available, default_artifacts_dir, Engine};
@@ -41,6 +45,8 @@ fn main() {
         "profile" => cmd_profile(&args).map(|_| ()),
         "adjust" => cmd_adjust(&args),
         "fleet" => cmd_fleet(&args),
+        "serve" => cmd_serve(&args),
+        "telemetry" => cmd_telemetry(&args),
         "repro" => cmd_repro(&args),
         "artifacts" => cmd_artifacts(),
         _ => {
@@ -75,7 +81,12 @@ fn print_help() {
          \u{20}           [--shift-at 1500] [--shift-rate 8.0] [--shift-jobs 2]\n\
          \u{20}           [--stale-jobs 1] [--stale-scale 3.0]\n\
          \u{20}           [--daemon] [--events \"@0 submit 12, @600 retire job-01\"]\n\
+         \u{20}           [--journal-out journal.json] (--daemon only)\n\
          \u{20}           [--out report.json] [--cache-file cache.json]\n\
+         \u{20} serve     [--port 7878] [fleet/daemon options]   serve telemetry over HTTP\n\
+         \u{20}           endpoints: /healthz /series /snapshot /query?q=<expr>\n\
+         \u{20} telemetry query \"<expr>\" [fleet/daemon options]\n\
+         \u{20}           expr: select <series> [where label=L node=N] [| window N] [| agg p99]\n\
          \u{20} repro     <table1|fig2|fig3|fig4|fig5|fig6|fig7|all> [--full]\n\
          \u{20} artifacts                     AOT artifact status\n"
     );
@@ -235,9 +246,10 @@ fn cmd_adjust(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_fleet(args: &Args) -> Result<()> {
-    let n_jobs = args.opt_usize("jobs", 12);
-    let cfg = FleetConfig {
+/// Build the [`FleetConfig`] shared by the `fleet`, `serve`, and
+/// `telemetry` commands from their common CLI options.
+fn fleet_config(args: &Args) -> FleetConfig {
+    FleetConfig {
         workers: args.opt_usize("workers", 4),
         rounds: args.opt_usize("rounds", 2),
         strategy: args.opt_or("strategy", "nms"),
@@ -254,17 +266,12 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             ..Default::default()
         },
         horizon: args.opt_usize("horizon", 1000),
-    };
-    let workers = cfg.workers;
-    let rounds = cfg.rounds;
-    let mut specs = sim_fleet(n_jobs, args.opt_u64("seed", 7));
-    let adaptive = args.flag("adaptive");
-    if adaptive {
-        inject_drift(args, &mut specs);
     }
+}
 
-    // One shared cache for the session, optionally restored from (and
-    // saved back to) --cache-file.
+/// One shared cache for the session, optionally restored from (and later
+/// saved back to) `--cache-file`. Returns the cache plus the save path.
+fn open_cache(args: &Args) -> Result<(Arc<MeasurementCache>, Option<String>)> {
     let cache = Arc::new(MeasurementCache::new());
     let cache_file = args.opt("cache-file").map(str::to_string);
     if let Some(path) = &cache_file {
@@ -287,6 +294,20 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             );
         }
     }
+    Ok((cache, cache_file))
+}
+
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let n_jobs = args.opt_usize("jobs", 12);
+    let cfg = fleet_config(args);
+    let workers = cfg.workers;
+    let rounds = cfg.rounds;
+    let mut specs = sim_fleet(n_jobs, args.opt_u64("seed", 7));
+    let adaptive = args.flag("adaptive");
+    if adaptive {
+        inject_drift(args, &mut specs);
+    }
+    let (cache, cache_file) = open_cache(args)?;
 
     if args.flag("daemon") {
         return cmd_fleet_daemon(args, cfg, cache, cache_file.as_deref());
@@ -346,14 +367,45 @@ fn cmd_fleet_daemon(
     }
     let workers = cfg.workers;
     let rounds = cfg.rounds;
-    let seed = args.opt_u64("seed", 7);
     let spec = args.opt_or("events", &format!("@0 submit {}", args.opt_usize("jobs", 12)));
     let mut daemon = FleetDaemon::builder()
         .config(cfg)
         .rebalance(args.flag("rebalance"))
         .cache(cache.clone())
         .build();
+    let last = schedule_events(&mut daemon, &spec, args.opt_u64("seed", 7))?;
 
+    daemon.run_until(last)?;
+    let journal = daemon.journal().to_vec();
+    let metrics = daemon.metrics();
+    if let Some(path) = args.opt("journal-out") {
+        std::fs::write(path, json::to_string(&journal_json(&journal)))
+            .with_context(|| format!("writing journal to {path}"))?;
+        println!("wrote {path}");
+    }
+    let report = daemon.drain()?;
+
+    let mut timeline = Table::new(&["tick", "event", "detail"]).with_title(&format!(
+        "Fleet daemon timeline — {} events, {} replans",
+        metrics.events_processed,
+        metrics.replans
+    ));
+    for entry in &journal {
+        timeline.rowd(&[&entry.at, &entry.kind, &entry.detail]);
+    }
+    println!("{}", timeline.render());
+
+    let jobs = report.summary().outcomes.len();
+    print_fleet_sweep(&report, jobs, workers, rounds);
+    if let Some(fleet_plan) = &report.plan {
+        print_fleet_plan(fleet_plan);
+    }
+    write_fleet_outputs(args, &report, &cache, cache_file)
+}
+
+/// Parse an `--events` timeline spec and schedule every clause on the
+/// daemon. Returns the last scheduled tick — the natural `run_until` bound.
+fn schedule_events(daemon: &mut FleetDaemon, spec: &str, seed: u64) -> Result<u64> {
     let mut last = 0u64;
     let mut total = 0usize;
     for clause in spec.split(',') {
@@ -390,28 +442,58 @@ fn cmd_fleet_daemon(
             _ => bail!("bad --events clause '{}' (submit|retire|verdict)", clause.trim()),
         }
     }
+    Ok(last)
+}
 
+/// Shared scenario runner for `serve` and `telemetry query`: replay the
+/// `--events` timeline through a daemon with the given telemetry store
+/// attached, honour `--out`/`--cache-file`, and return the drained report.
+fn run_daemon_scenario(args: &Args, store: &Arc<TelemetryStore>) -> Result<FleetReport> {
+    let (cache, cache_file) = open_cache(args)?;
+    let spec = args.opt_or("events", &format!("@0 submit {}", args.opt_usize("jobs", 12)));
+    let mut daemon = FleetDaemon::builder()
+        .config(fleet_config(args))
+        .rebalance(args.flag("rebalance"))
+        .cache(cache.clone())
+        .telemetry(store.clone())
+        .build();
+    let last = schedule_events(&mut daemon, &spec, args.opt_u64("seed", 7))?;
     daemon.run_until(last)?;
-    let journal = daemon.journal().to_vec();
-    let metrics = daemon.metrics();
     let report = daemon.drain()?;
+    write_fleet_outputs(args, &report, &cache, cache_file.as_deref())?;
+    Ok(report)
+}
 
-    let mut timeline = Table::new(&["tick", "event", "detail"]).with_title(&format!(
-        "Fleet daemon timeline — {} events, {} replans",
-        metrics.events_processed,
-        metrics.replans
-    ));
-    for entry in &journal {
-        timeline.rowd(&[&entry.at, &entry.kind, &entry.detail]);
-    }
-    println!("{}", timeline.render());
+/// `streamprof serve`: replay an `--events` timeline through a daemon with
+/// a telemetry recorder attached, then expose the store and the drained
+/// report over std-only HTTP/JSON until killed.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let store = Arc::new(TelemetryStore::new());
+    let report = run_daemon_scenario(args, &store)?;
+    let port = args.opt_u64("port", 7878);
+    let server = TelemetryServer::bind(&format!("127.0.0.1:{port}"), store, &report.to_json())?;
+    println!("serving telemetry on http://{}", server.local_addr());
+    println!("  GET /healthz    store health and point counts");
+    println!("  GET /series     every recorded series");
+    println!("  GET /snapshot   the drained fleet report");
+    println!("  GET /query?q=   e.g. /query?q=select+probes+%7C+agg+sum");
+    server.serve_forever()
+}
 
-    let jobs = report.summary().outcomes.len();
-    print_fleet_sweep(&report, jobs, workers, rounds);
-    if let Some(fleet_plan) = &report.plan {
-        print_fleet_plan(fleet_plan);
+/// `streamprof telemetry query "<expr>"`: replay a daemon scenario offline
+/// with telemetry attached and evaluate one query over the recorded store.
+/// The result JSON is the last line on stdout, so scripts can `tail -n 1`.
+fn cmd_telemetry(args: &Args) -> Result<()> {
+    if args.positional.get(1).map(String::as_str) != Some("query") {
+        bail!("usage: streamprof telemetry query \"<expr>\" [fleet options]");
     }
-    write_fleet_outputs(args, &report, &cache, cache_file)
+    let text = args.positional.get(2).context("telemetry query needs an expression")?;
+    // Parse before the scenario runs: a bad expression should fail fast.
+    let query = Query::parse(text).map_err(anyhow::Error::msg)?;
+    let store = Arc::new(TelemetryStore::new());
+    run_daemon_scenario(args, &store)?;
+    println!("{}", json::to_string(&query.run(&store).to_json()));
+    Ok(())
 }
 
 /// Map an `--events` verdict kind onto a representative [`DriftVerdict`].

@@ -42,6 +42,11 @@ impl Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Array constructor from any sequence of values.
+    pub fn arr(items: impl IntoIterator<Item = Json>) -> Json {
+        Json::Arr(items.into_iter().collect())
+    }
+
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -72,6 +77,13 @@ impl Json {
 
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|f| f as usize)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
     }
 
     /// Required-field helpers (errors instead of panics).
@@ -388,6 +400,15 @@ mod tests {
         let back = parse(&text).unwrap();
         assert_eq!(back.get("name").unwrap().as_str(), Some("cam-01"));
         assert!((back.get("rate").unwrap().as_f64().unwrap() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn arr_and_as_bool_helpers() {
+        let v = Json::arr((0..3).map(|i| Json::num(i as f64)));
+        assert_eq!(to_string(&v), "[0,1,2]");
+        assert_eq!(parse("true").unwrap().as_bool(), Some(true));
+        assert_eq!(parse("false").unwrap().as_bool(), Some(false));
+        assert_eq!(parse("1").unwrap().as_bool(), None);
     }
 
     #[test]

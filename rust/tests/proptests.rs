@@ -10,6 +10,7 @@ use streamprof::coordinator::{
 };
 use streamprof::earlystop::{EarlyStopConfig, EarlyStopMonitor};
 use streamprof::fit::{ModelKind, ProfilePoint, RuntimeModel};
+use streamprof::fleet::telemetry::{SeriesBuf, SeriesKind, TelemetryStore};
 use streamprof::fleet::{rebalance, FleetJob, MeasurementCache};
 use streamprof::simulator::{Algo, SimulatedJob, NODES};
 use streamprof::strategies::{self, initial_limits};
@@ -554,5 +555,142 @@ fn prop_time_accounting_consistent() {
             sess.total_time,
             init_max + tail
         );
+    }
+}
+
+/// Property: the delta-of-delta + RLE codec round-trips arbitrary
+/// timelines bit-for-bit — zero-delta bursts, out-of-order appends from
+/// interleaved writers, long value runs, block-boundary crossings — and
+/// `points_in` equals a filter over the full decode.
+#[test]
+fn prop_telemetry_codec_roundtrip() {
+    let mut rng = Rng::new(0x7E1E);
+    for case in 0..CASES {
+        let n = 1 + rng.below(300);
+        let mut buf = SeriesBuf::new(10_000);
+        let mut want: Vec<(u64, f64)> = Vec::with_capacity(n);
+        let mut t = rng.below(1000) as u64;
+        for _ in 0..n {
+            // Zero and negative deltas stress the dod encoder; repeated
+            // values stress the RLE side.
+            t = match rng.below(6) {
+                0 => t,
+                1 => t + 1,
+                2 => t + rng.below(10) as u64,
+                3 => t + rng.below(500) as u64,
+                4 => t.saturating_sub(rng.below(100) as u64),
+                _ => t + rng.below(100_000) as u64,
+            };
+            let v = match rng.below(4) {
+                0 => want.last().map_or(1.0, |(_, v)| *v),
+                1 => rng.below(50) as f64,
+                2 => rng.uniform(-1e6, 1e6),
+                _ => rng.normal() * 1e-9,
+            };
+            buf.append(t, v);
+            want.push((t, v));
+        }
+        let got = buf.points();
+        assert_eq!(got.len(), want.len(), "case {case}: point count");
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.0, w.0, "case {case}: timestamp {i}");
+            assert_eq!(g.1.to_bits(), w.1.to_bits(), "case {case}: value {i}");
+        }
+        assert_eq!(buf.evicted(), 0, "case {case}: capacity never reached");
+        // Windowed decode == filter over the full decode, random bounds.
+        let hi = want.iter().map(|&(pt, _)| pt).max().unwrap();
+        let lo = hi.saturating_sub(rng.below(1 + hi as usize) as u64);
+        let filtered: Vec<(u64, f64)> =
+            want.iter().copied().filter(|&(pt, _)| pt >= lo && pt <= hi).collect();
+        assert_eq!(buf.points_in(lo, hi), filtered, "case {case}: windowed decode");
+    }
+}
+
+/// Property: the ring retains at most `capacity` points, never loses
+/// accounting (`len + evicted == appended`), and what survives is the
+/// exact newest suffix of the appended sequence.
+#[test]
+fn prop_telemetry_retention_invariants() {
+    let mut rng = Rng::new(0x4E7A1);
+    for case in 0..CASES {
+        let capacity = 1 + rng.below(200);
+        let appends = rng.below(1000);
+        let mut buf = SeriesBuf::new(capacity);
+        let mut appended: Vec<(u64, f64)> = Vec::with_capacity(appends);
+        let mut t = 0u64;
+        for i in 0..appends {
+            t += rng.below(5) as u64;
+            let v = i as f64;
+            buf.append(t, v);
+            appended.push((t, v));
+            assert!(buf.len() <= buf.capacity(), "case {case}: over-retained after {i}");
+        }
+        assert_eq!(buf.capacity(), capacity);
+        assert_eq!(buf.len() as u64 + buf.evicted(), appends as u64, "case {case}: accounting");
+        let got = buf.points();
+        assert_eq!(&got, &appended[appends - buf.len()..], "case {case}: newest suffix");
+        if let (Some(earliest), Some(&(t0, _))) = (buf.earliest(), got.first()) {
+            assert_eq!(earliest, t0, "case {case}: earliest");
+        }
+        if let (Some(latest), Some(&(tn, _))) = (buf.latest(), got.last()) {
+            assert_eq!(latest, tn, "case {case}: latest");
+        }
+    }
+}
+
+/// The 16 interleaved series identities used by the concurrency property.
+fn key_for(idx: usize) -> (SeriesKind, String, String) {
+    let kind = SeriesKind::ALL[idx % SeriesKind::ALL.len()];
+    (kind, format!("job-{idx:02}"), format!("node{}", idx % 4))
+}
+
+/// Property: 8 threads hammering `TelemetryStore::append` across 16
+/// interleaved keys lose nothing — per-key point counts and value sums
+/// match a single-threaded replay of the same deterministic operation
+/// streams, and the global accounting adds up.
+#[test]
+fn prop_telemetry_concurrent_appends_aggregate_exactly() {
+    const THREADS: u64 = 8;
+    const OPS: usize = 200;
+    for case in 0..8u64 {
+        let store = TelemetryStore::new();
+        std::thread::scope(|s| {
+            for w in 0..THREADS {
+                let store = &store;
+                s.spawn(move || {
+                    let mut rng = Rng::new(case * 6151 + w + 1);
+                    for op in 0..OPS {
+                        let (kind, label, node) = key_for(rng.below(16));
+                        let t = (w as usize * OPS + op) as u64;
+                        store.append(kind, &label, &node, t, rng.below(100) as f64);
+                        std::thread::yield_now();
+                    }
+                });
+            }
+        });
+
+        // Single-lock reference: replay the identical streams serially.
+        let mut expect: HashMap<usize, (usize, f64)> = HashMap::new();
+        for w in 0..THREADS {
+            let mut rng = Rng::new(case * 6151 + w + 1);
+            for _ in 0..OPS {
+                let idx = rng.below(16);
+                let slot = expect.entry(idx).or_default();
+                slot.0 += 1;
+                slot.1 += rng.below(100) as f64;
+            }
+        }
+        let mut total = 0;
+        for (idx, &(count, sum)) in &expect {
+            let (kind, label, node) = key_for(*idx);
+            let pts = store.points(kind, &label, &node);
+            assert_eq!(pts.len(), count, "case {case}: key {idx} lost appends");
+            let got: f64 = pts.iter().map(|(_, v)| v).sum();
+            assert_eq!(got, sum, "case {case}: key {idx} sum drifted");
+            total += count;
+        }
+        assert_eq!(store.total_points(), total, "case {case}: global accounting");
+        assert_eq!(store.series_count(), expect.len(), "case {case}: series count");
+        assert_eq!(store.total_evicted(), 0, "case {case}: retention untouched");
     }
 }

@@ -1,0 +1,333 @@
+//! End-to-end telemetry consistency: a daemon timeline with arrivals,
+//! drift verdicts, and a retirement runs with a [`TelemetryStore`]
+//! attached, and every query answer is checked against the ground truth
+//! the daemon itself reports — the journal, the drained [`FleetReport`],
+//! and the adaptive epoch summaries. Within the retention window the
+//! store is lossless, so the agreement is exact, not approximate.
+
+use std::collections::BTreeMap;
+use std::io::{Read as _, Write as _};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+
+use streamprof::coordinator::ProfilerConfig;
+use streamprof::fleet::{
+    journal_json, sim_fleet, AdaptiveConfig, DriftVerdict, FleetConfig, FleetDaemon,
+    FleetJobSpec, FleetReport, FleetSession, JournalEntry, Query, TelemetryServer,
+    TelemetryStore,
+};
+use streamprof::simulator::{node, Algo};
+use streamprof::stream::ArrivalProcess;
+use streamprof::util::json::{self, Json};
+
+fn quick_cfg(workers: usize, rounds: usize) -> FleetConfig {
+    FleetConfig {
+        workers,
+        rounds,
+        strategy: "nms".to_string(),
+        profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
+        horizon: 500,
+    }
+}
+
+/// Sum of the aggregate values across every series the expression matches.
+fn agg(store: &TelemetryStore, expr: &str) -> f64 {
+    let result = Query::parse(expr).expect("query parses").run(store);
+    result.series.iter().filter_map(|s| s.value).sum()
+}
+
+/// Every in-window point of every series the expression matches.
+fn points(store: &TelemetryStore, expr: &str) -> Vec<(u64, f64)> {
+    let result = Query::parse(expr).expect("query parses").run(store);
+    result.series.iter().flat_map(|s| s.points.clone()).collect()
+}
+
+/// The canonical mixed timeline: four jobs bootstrap at tick 0, a fifth
+/// arrives mid-run, two drift verdicts trigger re-profiles, one verdict
+/// is stable, and one job retires. Returns the attached store, the
+/// journal captured before draining, and the drained report.
+fn scenario() -> (Arc<TelemetryStore>, Vec<JournalEntry>, FleetReport) {
+    let store = Arc::new(TelemetryStore::new());
+    let mut daemon = FleetDaemon::builder()
+        .config(quick_cfg(2, 1))
+        .jobs(sim_fleet(4, 7))
+        .rebalance(true)
+        .telemetry(store.clone())
+        .build();
+    for job in sim_fleet(5, 7).into_iter().skip(4) {
+        daemon.submit_at(job, 600);
+    }
+    daemon.observe_verdict_at("job-01", DriftVerdict::ModelStale { rolling_smape: 0.8 }, 700);
+    let shift = DriftVerdict::RateShift { provisioned_hz: 2.0, observed_hz: 9.0 };
+    daemon.observe_verdict_at("job-02", shift, 800);
+    daemon.observe_verdict_at("job-03", DriftVerdict::Stable, 800);
+    daemon.retire_at("job-00", 900);
+    daemon.run_until(900).expect("timeline runs");
+    let journal = daemon.journal().to_vec();
+    let report = daemon.drain().expect("daemon drains");
+    (store, journal, report)
+}
+
+/// Minimal GET over a raw socket; returns the response body.
+fn http_get(addr: SocketAddr, path: &str) -> String {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n")
+        .expect("request");
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).expect("response");
+    raw.split("\r\n\r\n").nth(1).unwrap_or("").to_string()
+}
+
+#[test]
+fn probes_series_is_exactly_the_journal_probe_timeline() {
+    let (store, journal, _report) = scenario();
+    let mut expected: BTreeMap<String, Vec<(u64, f64)>> = BTreeMap::new();
+    for e in journal.iter().filter(|e| e.kind == "probe-completion") {
+        let mut toks = e.detail.split_whitespace();
+        let job = toks.next().unwrap().trim_end_matches(':').to_string();
+        let count: f64 = toks.next().unwrap().parse().unwrap();
+        expected.entry(job).or_default().push((e.at, count));
+    }
+    assert_eq!(expected.len(), 3, "the arrival and both drift verdicts executed probes");
+    for (job, want) in &expected {
+        let got = points(&store, &format!("select probes where label={job}"));
+        assert_eq!(&got, want, "{job}: probe timeline diverged from the journal");
+    }
+    let journaled: f64 = expected.values().flatten().map(|(_, v)| v).sum();
+    assert_eq!(agg(&store, "select probes | agg sum"), journaled);
+    // Jobs that never executed a re-profile have no probes series at all.
+    assert!(points(&store, "select probes where label=job-03").is_empty());
+}
+
+#[test]
+fn verdict_timeline_matches_the_journal() {
+    let (store, journal, _report) = scenario();
+    let mut want: Vec<(u64, String, i64)> = journal
+        .iter()
+        .filter(|e| e.kind == "verdict")
+        .map(|e| {
+            let (job, name) = e.detail.split_once(": ").unwrap();
+            let code = match name {
+                "stable" => 0,
+                "rate-shift" => 1,
+                "model-stale" => 2,
+                other => panic!("unknown verdict '{other}'"),
+            };
+            (e.at, job.to_string(), code)
+        })
+        .collect();
+    want.sort();
+    assert_eq!(want.len(), 3, "all three injected verdicts journaled");
+    let result = Query::parse("select verdicts").unwrap().run(&store);
+    let mut got: Vec<(u64, String, i64)> = Vec::new();
+    for s in &result.series {
+        for (t, v) in &s.points {
+            got.push((*t, s.key.label.clone(), *v as i64));
+        }
+    }
+    got.sort();
+    assert_eq!(got, want, "stored verdict codes diverge from the journal");
+}
+
+#[test]
+fn runtime_p99_is_bit_equal_to_the_drained_report() {
+    let (store, _journal, report) = scenario();
+    let summary = report.summary();
+    let outcome = summary.outcomes.iter().find(|o| o.name == "job-03").unwrap();
+    let mut obs: Vec<f64> = outcome
+        .rounds
+        .iter()
+        .flat_map(|r| r.steps.iter().map(|s| s.mean_runtime))
+        .collect();
+    obs.sort_by(f64::total_cmp);
+    let want = obs[((obs.len() as f64 * 0.99).ceil() as usize).saturating_sub(1)];
+    let q = Query::parse("select runtime where label=job-03 | agg p99").unwrap();
+    let got = q.run(&store).single().expect("p99 aggregate");
+    assert_eq!(got.to_bits(), want.to_bits(), "telemetry p99 must match the report estimator");
+}
+
+#[test]
+fn journal_json_document_diffs_cleanly_against_the_store() {
+    let (store, journal, _report) = scenario();
+    let doc = json::parse(&json::to_string(&journal_json(&journal))).expect("round-trips");
+    assert_eq!(doc.get("version").and_then(Json::as_usize), Some(1));
+    let entries = doc.get("entries").and_then(Json::as_arr).expect("entries array");
+    assert_eq!(entries.len(), journal.len());
+    // Rebuild the probe totals from the document alone — the schema the
+    // `fleet --daemon --journal-out` flag writes — and diff the store.
+    let mut from_json = 0.0;
+    for e in entries {
+        if e.get("kind").and_then(Json::as_str) == Some("probe-completion") {
+            let detail = e.get("detail").and_then(Json::as_str).unwrap();
+            let n: f64 = detail.split_whitespace().nth(1).unwrap().parse().unwrap();
+            from_json += n;
+        }
+    }
+    assert!(from_json > 0.0, "scenario journaled probe work");
+    assert_eq!(agg(&store, "select probes | agg sum"), from_json);
+}
+
+#[test]
+fn store_is_lossless_within_default_retention() {
+    let (store, journal, _report) = scenario();
+    assert_eq!(store.total_evicted(), 0, "default retention covers the whole scenario");
+    assert!(store.total_points() > 0);
+    let arrivals = journal.iter().filter(|e| e.kind == "arrival").count();
+    let departures = journal.iter().filter(|e| e.kind == "departure").count();
+    assert_eq!(arrivals, 5);
+    assert_eq!(departures, 1);
+    assert_eq!(agg(&store, "select arrivals | agg count"), arrivals as f64);
+    assert_eq!(agg(&store, "select departures | agg count"), departures as f64);
+}
+
+#[test]
+fn window_queries_count_the_same_entries_as_the_journal() {
+    let (store, journal, _report) = scenario();
+    let at: Vec<u64> = journal
+        .iter()
+        .filter(|e| e.kind == "probe-completion")
+        .map(|e| e.at)
+        .collect();
+    let latest = *at.iter().max().expect("probe entries exist");
+    let lo = latest - 150;
+    let q = Query::parse("select probes | window 150 | agg count").unwrap();
+    let result = q.run(&store);
+    assert_eq!(result.window, Some((lo, latest)), "window anchors on the newest probe");
+    let want = at.iter().filter(|t| **t >= lo).count();
+    let got: f64 = result.series.iter().filter_map(|s| s.value).sum();
+    assert_eq!(got, want as f64, "windowed count matches the journal slice");
+    assert!(want < at.len(), "the window must actually exclude something");
+}
+
+#[test]
+fn http_endpoint_serves_the_stores_answers() {
+    let (store, _journal, report) = scenario();
+    let server = TelemetryServer::bind("127.0.0.1:0", store.clone(), &report.to_json()).unwrap();
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || server.serve_requests(3));
+
+    let doc = json::parse(&http_get(addr, "/query?q=select+probes+%7C+agg+sum")).unwrap();
+    let series = doc.get("series").and_then(Json::as_arr).expect("series array");
+    let got = series[0].get("value").and_then(Json::as_f64);
+    assert_eq!(got, Some(agg(&store, "select probes | agg sum")));
+
+    let listing = json::parse(&http_get(addr, "/series")).expect("series listing parses");
+    let rows = listing.get("series").and_then(Json::as_arr).expect("rows");
+    assert_eq!(rows.len(), store.series_count());
+
+    let snap = json::parse(&http_get(addr, "/snapshot")).expect("snapshot parses");
+    assert_eq!(snap.get("version").and_then(Json::as_usize), Some(1));
+    handle.join().expect("server thread").expect("all requests served");
+}
+
+#[test]
+fn cache_series_sum_to_the_reports_cache_delta() {
+    let (store, _journal, report) = scenario();
+    assert!(report.cache.lookups() > 0, "the scenario exercised the cache");
+    assert_eq!(agg(&store, "select cache_hits | agg sum"), report.cache.hits as f64);
+    assert_eq!(agg(&store, "select cache_misses | agg sum"), report.cache.misses as f64);
+}
+
+#[test]
+fn malformed_queries_are_rejected_with_reasons() {
+    let bad = [
+        "probes",
+        "select nope",
+        "select probes extra",
+        "select probes where color=red",
+        "select probes | agg p50",
+        "select probes | window soon",
+        "select probes | window 5 | window 6",
+        "select probes | agg sum | agg mean",
+        "select probes |",
+    ];
+    for expr in bad {
+        assert!(Query::parse(expr).is_err(), "'{expr}' must be rejected");
+    }
+    assert!(Query::parse("select * | window 100 | agg rate").is_ok());
+}
+
+#[test]
+fn session_replay_fills_an_identical_store() {
+    let session_store = Arc::new(TelemetryStore::new());
+    FleetSession::builder()
+        .config(quick_cfg(2, 1))
+        .jobs(sim_fleet(4, 7))
+        .telemetry(session_store.clone())
+        .run()
+        .expect("session run");
+
+    let daemon_store = Arc::new(TelemetryStore::new());
+    let mut daemon = FleetDaemon::builder()
+        .config(quick_cfg(2, 1))
+        .telemetry(daemon_store.clone())
+        .build();
+    for spec in sim_fleet(4, 7) {
+        daemon.submit(spec);
+    }
+    daemon.drain().expect("daemon drains");
+
+    assert!(session_store.total_points() > 0);
+    assert_eq!(session_store.keys(), daemon_store.keys());
+    for key in session_store.keys() {
+        assert_eq!(
+            session_store.points(key.kind, &key.label, &key.node),
+            daemon_store.points(key.kind, &key.label, &key.node),
+            "series {key:?} diverged between session replay and daemon"
+        );
+    }
+}
+
+#[test]
+fn adaptive_epochs_emit_drift_verdicts_and_smape_points() {
+    // The drift_e2e recipe: cam-a and cam-c jump from 2 Hz to 8 Hz at
+    // tick 1500, the start of epoch 2 — exactly those two re-profile.
+    let mut specs = vec![
+        FleetJobSpec::simulated("cam-a", node("pi4").unwrap(), Algo::Arima, 101),
+        FleetJobSpec::simulated("cam-b", node("wally").unwrap(), Algo::Birch, 102),
+        FleetJobSpec::simulated("cam-c", node("e2high").unwrap(), Algo::Lstm, 103),
+        FleetJobSpec::simulated("cam-d", node("e216").unwrap(), Algo::Arima, 104),
+    ];
+    for i in [0usize, 2] {
+        specs[i].arrivals = ArrivalProcess::Fixed(2.0)
+            .with_shift_at(1500, ArrivalProcess::Fixed(8.0));
+    }
+    let store = Arc::new(TelemetryStore::new());
+    let cfg = FleetConfig {
+        workers: 1,
+        rounds: 2,
+        strategy: "nms".to_string(),
+        profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
+        horizon: 1000,
+    };
+    let report = FleetSession::builder()
+        .config(cfg)
+        .jobs(specs)
+        .adaptive(AdaptiveConfig::default())
+        .telemetry(store.clone())
+        .run()
+        .expect("adaptive run");
+    let adaptive = report.adaptive.as_ref().expect("adaptive summary");
+
+    let drifted = adaptive
+        .epochs
+        .iter()
+        .flat_map(|e| e.verdicts.iter())
+        .filter(|(_, v)| v.is_drift())
+        .count();
+    assert!(drifted > 0, "the recipe must trigger drift");
+    assert_eq!(agg(&store, "select verdicts | agg count"), drifted as f64);
+
+    let reprofiled: Vec<_> = adaptive.epochs.iter().flat_map(|e| e.reprofiled.iter()).collect();
+    assert!(!reprofiled.is_empty(), "drifted jobs re-profiled");
+    let executed: u64 = reprofiled.iter().map(|r| r.executed_probes).sum();
+    assert_eq!(agg(&store, "select probes | agg sum"), executed as f64);
+    for r in &reprofiled {
+        let got = points(&store, &format!("select smape where label={}", r.name));
+        assert!(
+            got.iter().any(|(_, v)| v.to_bits() == r.post_smape.to_bits()),
+            "{}: post-SMAPE missing from the smape series",
+            r.name
+        );
+    }
+}
