@@ -12,7 +12,12 @@
 //!     re-profiles the job against its observed rate,
 //!   * the same bootstrap sweep with a telemetry store attached — the
 //!     jobs/sec cost of recording every processed event as a compressed
-//!     time-series point (target: ≤ 5% at the 10k tier).
+//!     time-series point (target: ≤ 5% at the 10k tier),
+//!   * the decentralized mesh stage: a full mesh sized to the tier
+//!     (jobs/8 nodes, clamped to 16..=128) schedules a capped job slice
+//!     local-optimistically and reports the ratio of its guaranteed count
+//!     to the centralized planner's on the identical input, plus the
+//!     gossip rounds spent getting there.
 //!
 //! Results land in BENCH_fleet.json, committed at the repository root as
 //! the standing baseline; regenerate on quiet hardware with:
@@ -27,10 +32,12 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use streamprof::coordinator::ProfilerConfig;
+use streamprof::fit::{ModelKind, RuntimeModel};
 use streamprof::fleet::{
-    sim_fleet, DriftVerdict, FleetConfig, FleetDaemon, MeasurementCache, TelemetryStore,
+    mesh_rebalance, rebalance_across, sim_fleet, DriftVerdict, FleetConfig, FleetDaemon, FleetJob,
+    MeasurementCache, MeshConfig, MeshTopology, TelemetryStore,
 };
-use streamprof::util::{json, Args, Json, Table};
+use streamprof::util::{json, Args, Json, Rng, Table};
 
 /// Verdict cycles timed per tier (each is one verdict -> replan round trip).
 const VERDICT_CYCLES: usize = 32;
@@ -46,6 +53,9 @@ struct TierResult {
     jobs_per_sec_telemetry: f64,
     overhead_pct: f64,
     telemetry_points: usize,
+    mesh_nodes: usize,
+    mesh_guaranteed_ratio: f64,
+    gossip_rounds: u64,
 }
 
 impl TierResult {
@@ -62,6 +72,9 @@ impl TierResult {
             ("jobs_per_sec_telemetry", Json::num(self.jobs_per_sec_telemetry)),
             ("telemetry_overhead_pct", Json::num(self.overhead_pct)),
             ("telemetry_points", Json::num(self.telemetry_points as f64)),
+            ("mesh_nodes", Json::num(self.mesh_nodes as f64)),
+            ("mesh_guaranteed_ratio", Json::num(self.mesh_guaranteed_ratio)),
+            ("gossip_rounds", Json::num(self.gossip_rounds as f64)),
         ])
     }
 }
@@ -92,6 +105,48 @@ fn run_tier_telemetry(jobs: usize) -> Result<(f64, usize)> {
     daemon.run_until(0)?;
     let sweep_s = t0.elapsed().as_secs_f64().max(1e-9);
     Ok((jobs as f64 / sweep_s, store.total_points()))
+}
+
+/// Deterministic job set homed on the mesh's member nodes. The daemon
+/// tiers use `sim_fleet`, whose homes are the 7 base machines — the mesh
+/// stage needs jobs the topology can place directly on its own roster.
+fn mesh_fleet(topo: &MeshTopology, n_jobs: usize) -> Vec<FleetJob> {
+    let mut rng = Rng::new(0xBE5C);
+    (0..n_jobs)
+        .map(|i| {
+            let node = topo.nodes()[rng.below(topo.nodes().len())];
+            FleetJob {
+                name: format!("mjob-{i:05}"),
+                node,
+                model: RuntimeModel {
+                    kind: ModelKind::Full,
+                    a: rng.uniform(0.005, 0.08),
+                    b: node.scaling,
+                    c: rng.uniform(0.0005, 0.005),
+                    d: node.limit_stretch(),
+                    fit_cost: 0.0,
+                },
+                rate_hz: rng.uniform(0.5, 20.0),
+                priority: 1 + rng.below(5) as i32,
+            }
+        })
+        .collect()
+}
+
+/// Decentralized mesh stage: a full mesh sized to the tier schedules a
+/// capped job slice local-optimistically; `mesh_guaranteed_ratio` is the
+/// quality figure (mesh guaranteed count over the centralized planner's
+/// on the identical input) that the CI schema check guards.
+fn run_tier_mesh(jobs: usize) -> Result<(usize, f64, u64)> {
+    let nodes = (jobs / 8).clamp(16, 128);
+    let topo = MeshTopology::parse(&format!("full:{nodes}"))?;
+    let mesh_jobs = mesh_fleet(&topo, jobs.min(4000));
+    let centralized = rebalance_across(&mesh_jobs, topo.nodes());
+    let cfg = MeshConfig { every: 200, rounds: 8 };
+    let (plan, stats) = mesh_rebalance(&mesh_jobs, topo, &cfg, &[])?;
+    let ratio =
+        plan.metrics.guaranteed_after as f64 / centralized.metrics.guaranteed_after.max(1) as f64;
+    Ok((nodes, ratio, stats.gossip_rounds))
 }
 
 fn run_tier(tier: &'static str, jobs: usize) -> Result<TierResult> {
@@ -131,6 +186,7 @@ fn run_tier(tier: &'static str, jobs: usize) -> Result<TierResult> {
     let stats = cache.stats();
     let jobs_per_sec = jobs as f64 / sweep_s;
     let (jobs_per_sec_telemetry, telemetry_points) = run_tier_telemetry(jobs)?;
+    let (mesh_nodes, mesh_guaranteed_ratio, gossip_rounds) = run_tier_mesh(jobs)?;
     Ok(TierResult {
         tier,
         jobs,
@@ -142,6 +198,9 @@ fn run_tier(tier: &'static str, jobs: usize) -> Result<TierResult> {
         jobs_per_sec_telemetry,
         overhead_pct: (1.0 - jobs_per_sec_telemetry / jobs_per_sec) * 100.0,
         telemetry_points,
+        mesh_nodes,
+        mesh_guaranteed_ratio,
+        gossip_rounds,
     })
 }
 
@@ -162,8 +221,10 @@ fn main() -> Result<()> {
         results.push(run_tier(name, jobs)?);
     }
 
-    let headers =
-        ["tier", "jobs", "jobs/s", "jobs/s tel", "ovh %", "saved (s)", "hit rate", "p99 (ms)"];
+    let headers = [
+        "tier", "jobs", "jobs/s", "jobs/s tel", "ovh %", "saved (s)", "hit rate", "p99 (ms)",
+        "mesh ratio",
+    ];
     let mut table = Table::new(&headers).with_title("Fleet daemon throughput");
     for r in &results {
         table.rowd(&[
@@ -175,6 +236,7 @@ fn main() -> Result<()> {
             &format!("{:.1}", r.saved_s),
             &format!("{:.2}", r.hit_rate),
             &format!("{:.3}", r.p99_ms),
+            &format!("{:.2}", r.mesh_guaranteed_ratio),
         ]);
     }
     println!("{}", table.render());

@@ -42,6 +42,16 @@ pub struct CapacityPlan {
     pub capacity: f64,
 }
 
+/// The adjustment a node with `capacity` assignable cores would grant a
+/// job with the given model and arrival rate — [`JobManager::quote`]
+/// without a manager. The mesh scheduler scores remote placements with
+/// this from gossiped capacity summaries alone.
+pub fn quote_for(capacity: f64, model: &RuntimeModel, rate_hz: f64) -> Adjustment {
+    let adj =
+        ResourceAdjuster::new(model.clone(), JobManager::L_MIN, capacity, JobManager::DELTA);
+    adj.decide_rate(rate_hz)
+}
+
 /// The job registry + allocator.
 pub struct JobManager {
     capacity: f64,
@@ -51,8 +61,13 @@ pub struct JobManager {
 }
 
 impl JobManager {
+    /// Smallest assignable CPU limit (fraction of a core).
+    pub const L_MIN: f64 = 0.1;
+    /// Limit-grid step the adjuster searches on.
+    pub const DELTA: f64 = 0.1;
+
     pub fn new(capacity: f64) -> Self {
-        Self { capacity, l_min: 0.1, delta: 0.1, jobs: BTreeMap::new() }
+        Self { capacity, l_min: Self::L_MIN, delta: Self::DELTA, jobs: BTreeMap::new() }
     }
 
     /// Register (or replace) a job with its profiled runtime model.
@@ -315,10 +330,14 @@ mod tests {
         let mut mgr = JobManager::new(4.0);
         let j = job("a", 0.05, 5.0, 1);
         let quoted = mgr.quote(&j.model, j.rate_hz);
+        let free = quote_for(4.0, &j.model, j.rate_hz);
         mgr.register(j);
         let planned = &mgr.plan().assignments[0].adjustment;
         assert!((quoted.limit - planned.limit).abs() < 1e-12);
         assert_eq!(quoted.feasible, planned.feasible);
+        // The manager-free quote is the same decision.
+        assert!((free.limit - quoted.limit).abs() < 1e-12);
+        assert_eq!(free.feasible, quoted.feasible);
     }
 
     #[test]

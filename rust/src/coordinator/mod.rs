@@ -15,5 +15,5 @@ pub use backend::{
     BackendFactory, EngineBackendFactory, Measurement, PjrtBackend, ProfilingBackend,
     SimBackendFactory, SimulatedBackend,
 };
-pub use manager::{Assignment, CapacityPlan, JobManager, ManagedJob};
+pub use manager::{quote_for, Assignment, CapacityPlan, JobManager, ManagedJob};
 pub use profiler::{smape_vs_dataset, Profiler, ProfilerConfig, SessionResult, StepRecord};

@@ -35,6 +35,7 @@ use crate::util::json::Json;
 
 use super::cache::{CacheStats, MeasurementCache};
 use super::drift::{AdaptiveConfig, AdaptiveLoop, AdaptiveSummary, DriftVerdict};
+use super::mesh::{Mesh, MeshConfig, MeshFault, MeshStats, MeshTopology};
 use super::migrate::rebalance;
 use super::placement::FleetJob;
 use super::session::FleetReport;
@@ -77,8 +78,16 @@ pub enum FleetEvent {
         /// Probes that missed the cache and executed.
         executed: u64,
     },
+    /// A mesh fault lands on the topology (link partition/heal, node
+    /// loss). Class 0, like every other world mutation, so a same-tick
+    /// gossip round sees the post-fault topology.
+    MeshFault(MeshFault),
     /// Re-plan request: profile pending work, recompute node plans.
     Replan,
+    /// One mesh gossip round (pre-scheduled at build on the configured
+    /// cadence). Class 2: a same-tick coalesced replan runs *first*, so
+    /// the round gossips fresh post-replan capacity summaries.
+    GossipRound,
 }
 
 impl FleetEvent {
@@ -90,7 +99,11 @@ impl FleetEvent {
             FleetEvent::DriftVerdict { .. } => "verdict",
             FleetEvent::EpochTick { .. } => "epoch-tick",
             FleetEvent::ProbeCompletion { .. } => "probe-completion",
+            FleetEvent::MeshFault(MeshFault::Cut(..)) => "link-cut",
+            FleetEvent::MeshFault(MeshFault::Heal(..)) => "link-heal",
+            FleetEvent::MeshFault(MeshFault::Lose(..)) => "node-loss",
             FleetEvent::Replan => "replan",
+            FleetEvent::GossipRound => "gossip-round",
         }
     }
 }
@@ -177,6 +190,8 @@ pub struct FleetDaemonBuilder {
     adaptive: Option<AdaptiveConfig>,
     cache: Option<Arc<MeasurementCache>>,
     telemetry: Option<Arc<TelemetryStore>>,
+    mesh: Option<(MeshTopology, MeshConfig)>,
+    faults: Vec<(u64, MeshFault)>,
 }
 
 impl FleetDaemonBuilder {
@@ -228,10 +243,38 @@ impl FleetDaemonBuilder {
         self
     }
 
+    /// Attach a decentralized mesh scheduler over `topo`: per-node local
+    /// schedulers gossip capacity summaries on `cfg`'s cadence (one
+    /// [`FleetEvent::GossipRound`] per round, pre-scheduled at build so
+    /// `drain` terminates) and place shed jobs local-optimistically.
+    /// `drain` then reports the mesh plan instead of the centralized
+    /// rebalance. Sweep mode only — `build` panics if combined with
+    /// [`FleetDaemonBuilder::adaptive`].
+    pub fn mesh(mut self, topo: MeshTopology, cfg: MeshConfig) -> Self {
+        self.mesh = Some((topo, cfg));
+        self
+    }
+
+    /// Inject a mesh fault (link partition/heal, node loss) at virtual
+    /// tick `at`. Requires [`FleetDaemonBuilder::mesh`] — `build` panics
+    /// on faults without a topology to land on.
+    pub fn mesh_fault_at(mut self, at: u64, fault: MeshFault) -> Self {
+        self.faults.push((at, fault));
+        self
+    }
+
     /// Finalize: schedule the initial roster as arrivals at `t = 0`
     /// followed by the bootstrap replan. Nothing runs until the daemon
     /// is stepped or drained.
     pub fn build(self) -> FleetDaemon {
+        assert!(
+            self.mesh.is_none() || self.adaptive.is_none(),
+            "mesh scheduling is sweep-mode only: drop .adaptive() or .mesh()"
+        );
+        assert!(
+            self.faults.is_empty() || self.mesh.is_some(),
+            "mesh faults need a topology to land on: call .mesh() first"
+        );
         let cache = self.cache.unwrap_or_default();
         let stats_at_build = cache.stats();
         let telemetry = self.telemetry.map(|s| TelemetryRecorder::new(s, stats_at_build));
@@ -253,6 +296,7 @@ impl FleetDaemonBuilder {
             next_index: 0,
             adaptive_loop: None,
             extras: Vec::new(),
+            mesh: None,
             journal: Vec::new(),
             metrics: DaemonMetrics::default(),
             telemetry,
@@ -264,6 +308,18 @@ impl FleetDaemonBuilder {
         // fail exactly like the batch sweep does, on drain.
         daemon.replan_queued = true;
         daemon.schedule(0, FleetEvent::Replan);
+        if let Some((topo, mcfg)) = self.mesh {
+            // Finitely pre-scheduled rounds keep `drain` terminating; the
+            // first lands one cadence after the bootstrap replan.
+            let every = mcfg.every.max(1);
+            for k in 1..=mcfg.rounds {
+                daemon.schedule(k as u64 * every, FleetEvent::GossipRound);
+            }
+            for (at, fault) in self.faults {
+                daemon.schedule(at, FleetEvent::MeshFault(fault));
+            }
+            daemon.mesh = Some(Mesh::new(topo));
+        }
         daemon
     }
 }
@@ -302,6 +358,9 @@ pub struct FleetDaemon {
     /// Adaptive-mode outcomes for jobs the loop does not track: mid-run
     /// arrivals and externally-verdicted re-profiles (override by name).
     extras: Vec<JobOutcome>,
+    /// Decentralized mesh scheduler, when configured. Gossip rounds and
+    /// faults mutate it; `drain` reports its plan instead of `rebalance`.
+    mesh: Option<Mesh>,
     journal: Vec<JournalEntry>,
     metrics: DaemonMetrics,
     /// Telemetry hooks, when a store is attached. Emission points sit
@@ -344,6 +403,11 @@ impl FleetDaemon {
     /// The attached telemetry store, if any.
     pub fn telemetry(&self) -> Option<&Arc<TelemetryStore>> {
         self.telemetry.as_ref().map(TelemetryRecorder::store)
+    }
+
+    /// The attached mesh scheduler, if any.
+    pub fn mesh(&self) -> Option<&Mesh> {
+        self.mesh.as_ref()
     }
 
     /// Submit a job now (arrival at the current tick).
@@ -413,7 +477,15 @@ impl FleetDaemon {
             Some(al) => Some(al.finish(&self.cache)),
             None => None,
         };
-        let plan = if self.rebalance {
+        let plan = if self.mesh.is_some() {
+            // Mesh mode (sweep-only): sync the final profiled state into
+            // the mesh and report *its* accumulated placement — the
+            // decentralized counterpart of the centralized rebalance.
+            let jobs = self.mesh_jobs();
+            let mesh = self.mesh.as_mut().expect("checked above");
+            mesh.sync_jobs(&jobs);
+            Some(mesh.fleet_plan())
+        } else if self.rebalance {
             Some(match (&self.sweep, &adaptive) {
                 // After adaptation, rebalance from the *final* models
                 // and rates, not the cold sweep's.
@@ -433,12 +505,15 @@ impl FleetDaemon {
             t.cache_flush(now, self.cache.stats());
         }
         let cache = self.cache.stats().delta_since(&self.stats_at_build);
-        Ok(FleetReport::assemble(self.sweep, adaptive, plan, cache))
+        let mut report = FleetReport::assemble(self.sweep, adaptive, plan, cache);
+        report.mesh = self.mesh.as_ref().map(Mesh::stats);
+        Ok(report)
     }
 
     fn schedule(&mut self, at: u64, event: FleetEvent) {
         let class = match event {
             FleetEvent::Replan => 1,
+            FleetEvent::GossipRound => 2,
             _ => 0,
         };
         let at = at.max(self.clock);
@@ -474,7 +549,9 @@ impl FleetDaemon {
                     t.probes(self.clock, &job, roster_node(&self.roster, &job), executed);
                 }
             }
+            FleetEvent::MeshFault(fault) => self.on_mesh_fault(fault)?,
             FleetEvent::Replan => self.on_replan()?,
+            FleetEvent::GossipRound => self.on_gossip_round()?,
         }
         Ok(())
     }
@@ -499,7 +576,18 @@ impl FleetDaemon {
             t.departure(self.clock, name, roster_node(&self.roster, name));
         }
         self.roster.retain(|s| s.name != name);
-        self.pending.retain(|w| w.spec.name != name);
+        let (kept, dropped): (Vec<_>, Vec<_>) =
+            std::mem::take(&mut self.pending).into_iter().partition(|w| w.spec.name != name);
+        self.pending = kept;
+        for w in dropped {
+            // A queued verdict the departure supersedes must not silently
+            // vanish — nor re-profile a job that just left (its cache
+            // aging is deferred to replan time, see `apply_pending`).
+            if let Some(v) = w.verdict {
+                let detail = format!("{name}: {} superseded by departure", v.name());
+                self.record("verdict-dropped", detail);
+            }
+        }
         self.extras.retain(|o| o.name != name);
         if let Some(sweep) = &mut self.sweep {
             sweep.outcomes.retain(|o| o.name != name);
@@ -519,14 +607,13 @@ impl FleetDaemon {
             return;
         }
         let Some(spec) = self.roster.iter().find(|s| s.name == job).cloned() else {
+            // A verdict for a job not (or not yet) on the roster — e.g.
+            // one arriving the same tick but *before* the job's arrival,
+            // or after its departure. Drop it loudly, never re-profile.
+            let detail = format!("{job}: {} — no such job on the roster", verdict.name());
+            self.record("verdict-dropped", detail);
             return;
         };
-        if matches!(verdict, DriftVerdict::ModelStale { .. }) {
-            // Stale model ⇒ poisoned measurements: age the label so the
-            // re-profile executes instead of replaying them.
-            self.cache.bump_generation(&spec.label());
-            self.cache.evict_stale();
-        }
         self.pending.push(PendingWork { spec, verdict: Some(verdict) });
         self.schedule_replan();
     }
@@ -636,7 +723,22 @@ impl FleetDaemon {
     fn apply_pending(&mut self, work: PendingWork) -> Result<()> {
         let PendingWork { spec, verdict } = work;
         if !self.roster.iter().any(|s| s.name == spec.name) {
-            return Ok(()); // retired while queued
+            // Retired while queued (departures also purge the queue, so
+            // this is a defensive backstop — journaled all the same).
+            if let Some(v) = &verdict {
+                let detail = format!("{}: {} — job retired before the replan", spec.name, v.name());
+                self.record("verdict-dropped", detail);
+            }
+            return Ok(());
+        }
+        if matches!(verdict, Some(DriftVerdict::ModelStale { .. })) {
+            // Stale model ⇒ poisoned measurements: age the label so the
+            // re-profile executes instead of replaying them. Deferred
+            // from verdict arrival to replan time so a verdict a
+            // same-tick departure supersedes can never age the cache of
+            // a job that already left.
+            self.cache.bump_generation(&spec.label());
+            self.cache.evict_stale();
         }
         let pass = match verdict {
             None => ProfilePass::default(),
@@ -661,6 +763,61 @@ impl FleetDaemon {
         }
         self.merge_outcome(outcome);
         Ok(())
+    }
+
+    /// A mesh fault event lands: journal it, then mutate the topology.
+    fn on_mesh_fault(&mut self, fault: MeshFault) -> Result<()> {
+        let kind = match &fault {
+            MeshFault::Cut(..) => "link-cut",
+            MeshFault::Heal(..) => "link-heal",
+            MeshFault::Lose(..) => "node-loss",
+        };
+        self.record(kind, fault.to_string());
+        if let Some(mesh) = self.mesh.as_mut() {
+            fault.apply(mesh.topology_mut())?;
+        }
+        Ok(())
+    }
+
+    /// One gossip round: sync the mesh's job view from the live sweep
+    /// state (a same-tick replan sorts first, so summaries are fresh),
+    /// run the publish → deliver → decide → resolve cycle, and emit the
+    /// round's health series.
+    fn on_gossip_round(&mut self) -> Result<()> {
+        let jobs = self.mesh_jobs();
+        let now = self.clock;
+        let Some(mesh) = self.mesh.as_mut() else {
+            return Ok(());
+        };
+        mesh.sync_jobs(&jobs);
+        let out = mesh.round(now);
+        let round = mesh.stats().gossip_rounds;
+        let detail = format!(
+            "round {round}: {} delivered / {} dropped, {} moved, {} rolled back, staleness {}",
+            out.delivered,
+            out.dropped,
+            out.moves.len(),
+            out.rollbacks.len(),
+            out.staleness_ticks
+        );
+        self.record("gossip-round", detail);
+        if let Some(t) = &self.telemetry {
+            t.gossip_round(now, out.delivered);
+            t.staleness(now, out.staleness_ticks);
+            for (job, dest) in &out.rollbacks {
+                t.rollback(now, job, dest);
+            }
+        }
+        Ok(())
+    }
+
+    /// The mesh's placement view of the live sweep state (mesh mode is
+    /// sweep-only, enforced at build).
+    fn mesh_jobs(&self) -> Vec<FleetJob> {
+        self.sweep
+            .as_ref()
+            .map(|s| s.outcomes.iter().map(FleetJob::from).collect())
+            .unwrap_or_default()
     }
 
     /// The job's current fitted model, wherever it last landed.
@@ -919,6 +1076,81 @@ mod tests {
         assert!(stored[0].1 > 0.0, "stale re-profile executed fresh probes");
         assert_eq!(d.telemetry().unwrap().total_points(), store.total_points());
         d.drain().unwrap();
+    }
+
+    #[test]
+    fn same_tick_retire_and_verdict_drops_the_verdict() {
+        let mut d = FleetDaemon::builder().config(quick_cfg()).jobs(sim_fleet(2, 7)).build();
+        d.run_until(0).unwrap();
+        let cold = d.cache.stats();
+        // Verdict first, departure second, same tick: the departure must
+        // supersede the queued re-profile without aging the cache.
+        d.observe_verdict_at("job-01", DriftVerdict::ModelStale { rolling_smape: 0.9 }, 600);
+        d.retire_at("job-01", 600);
+        d.run_until(600).unwrap();
+        let after = d.cache.stats();
+        assert_eq!(after.evictions, cold.evictions, "no cache aging for a departed job");
+        assert_eq!(after.misses, cold.misses, "no re-profile executed");
+        assert_eq!(d.journal().iter().filter(|e| e.kind == "probe-completion").count(), 0);
+        let drops: Vec<&JournalEntry> =
+            d.journal().iter().filter(|e| e.kind == "verdict-dropped").collect();
+        assert_eq!(drops.len(), 1);
+        assert!(drops[0].detail.starts_with("job-01:"), "got: {}", drops[0].detail);
+        assert_eq!(d.metrics().replans, 2, "verdict and departure coalesced into one replan");
+        // Reversed order (the departure pops first): the verdict finds
+        // no rostered job and is dropped at arrival, journaled too.
+        d.retire_at("job-00", 700);
+        d.observe_verdict_at("job-00", DriftVerdict::ModelStale { rolling_smape: 0.9 }, 700);
+        d.run_until(700).unwrap();
+        assert_eq!(d.cache.stats().evictions, cold.evictions);
+        assert_eq!(d.journal().iter().filter(|e| e.kind == "verdict-dropped").count(), 2);
+    }
+
+    #[test]
+    fn same_tick_submit_and_verdict_coalesce_into_one_replan() {
+        let mut d = FleetDaemon::builder().config(quick_cfg()).jobs(sim_fleet(2, 7)).build();
+        d.run_until(0).unwrap();
+        // A verdict scheduled *before* the newcomer's same-tick arrival
+        // targets a job not yet rostered: dropped with a journal entry.
+        d.observe_verdict_at("job-02", DriftVerdict::ModelStale { rolling_smape: 0.9 }, 500);
+        let newcomer = sim_fleet(3, 7).pop().unwrap();
+        d.submit_at(newcomer, 500);
+        d.observe_verdict_at("job-00", DriftVerdict::ModelStale { rolling_smape: 0.9 }, 500);
+        d.run_until(500).unwrap();
+        assert_eq!(d.metrics().replans, 2, "arrival + verdict coalesced into one replan");
+        let probes: Vec<&JournalEntry> =
+            d.journal().iter().filter(|e| e.kind == "probe-completion").collect();
+        assert_eq!(probes.len(), 2, "newcomer cold profile + job-00 warm re-profile");
+        assert!(probes.iter().any(|e| e.detail.starts_with("job-02:")));
+        assert!(probes.iter().any(|e| e.detail.starts_with("job-00:")));
+        let drops: Vec<&JournalEntry> =
+            d.journal().iter().filter(|e| e.kind == "verdict-dropped").collect();
+        assert_eq!(drops.len(), 1, "the pre-arrival verdict was dropped");
+        assert!(drops[0].detail.starts_with("job-02:"), "got: {}", drops[0].detail);
+        let report = d.drain().unwrap();
+        assert_eq!(report.summary().outcomes.len(), 3);
+    }
+
+    #[test]
+    fn mesh_daemon_gossips_on_cadence_and_drains_a_mesh_plan() {
+        let topo = MeshTopology::parse("ring:4").unwrap();
+        let mut d = FleetDaemon::builder()
+            .config(quick_cfg())
+            .jobs(sim_fleet(3, 7))
+            .mesh(topo, MeshConfig { every: 200, rounds: 3 })
+            .mesh_fault_at(400, MeshFault::Cut("wally.0".into(), "asok.1".into()))
+            .build();
+        d.run_until(650).unwrap();
+        assert_eq!(d.journal().iter().filter(|e| e.kind == "gossip-round").count(), 3);
+        assert!(d.journal().iter().any(|e| e.kind == "link-cut"));
+        let topo = d.mesh().expect("mesh attached").topology();
+        assert!(!topo.link_up("wally.0", "asok.1"), "fault landed before the same-tick round");
+        let report = d.drain().unwrap();
+        let plan = report.plan.expect("mesh drain reports the mesh plan");
+        assert_eq!(plan.metrics.jobs, 3);
+        let stats = report.mesh.expect("mesh stats ride along in the report");
+        assert_eq!(stats.gossip_rounds, 3);
+        assert!(stats.summaries_delivered > 0, "ring neighbors exchanged summaries");
     }
 
     #[test]

@@ -1,0 +1,192 @@
+//! Latency-aware neighbor gossip for the mesh scheduler.
+//!
+//! [`super::mesh::LocalScheduler`]s never read fleet-global state: the only
+//! thing a node learns about the rest of the mesh is the stream of
+//! [`NodeSummary`] messages its direct topology neighbors publish. The
+//! [`GossipBus`] models that exchange on the daemon's virtual clock — a
+//! summary published at tick `t` over a link with latency `L` becomes
+//! visible to the neighbor at `t + L`, a summary published into a
+//! partitioned link is dropped (and counted), and a lost node neither
+//! publishes nor receives. Staleness is therefore not simulated separately:
+//! it *emerges* from latency, cadence, and partitions, exactly as it would
+//! in a real meshed edge deployment.
+
+use super::mesh::MeshTopology;
+
+/// The compact capacity summary one node gossips to its neighbors — all a
+/// [`super::mesh::LocalScheduler`] ever learns about another machine.
+#[derive(Clone, Debug)]
+pub struct NodeSummary {
+    /// Origin node name.
+    pub node: &'static str,
+    /// Virtual tick the summary was published (staleness anchor).
+    pub at: u64,
+    /// Residual capacity the origin advertised at `at`.
+    pub residual: f64,
+    /// Total assignable capacity of the origin.
+    pub capacity: f64,
+}
+
+/// One summary in flight toward a neighbor.
+#[derive(Clone, Debug)]
+struct InFlight {
+    due: u64,
+    to: &'static str,
+    summary: NodeSummary,
+}
+
+/// Counters the bus accumulates over its lifetime.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GossipCounters {
+    /// Summaries delivered to a neighbor's view.
+    pub delivered: u64,
+    /// Summaries dropped on a partitioned link or at a lost endpoint.
+    pub dropped: u64,
+}
+
+/// The in-flight summary queue between mesh nodes.
+///
+/// Deterministic by construction: publishes happen in node-name order (the
+/// caller iterates schedulers in a `BTreeMap`), deliveries are drained in
+/// `(due, to, from)` order, and no wallclock or randomness is consulted.
+#[derive(Debug, Default)]
+pub struct GossipBus {
+    in_flight: Vec<InFlight>,
+    counters: GossipCounters,
+}
+
+impl GossipBus {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Publish `summary` from its origin node to every direct topology
+    /// neighbor. Links that are cut, and endpoints that are lost, drop the
+    /// message and bump the drop counter.
+    pub fn publish(&mut self, topo: &MeshTopology, summary: &NodeSummary) {
+        if topo.is_lost(summary.node) {
+            return;
+        }
+        for neighbor in topo.neighbors(summary.node) {
+            if !topo.link_up(summary.node, neighbor.name) || topo.is_lost(neighbor.name) {
+                self.counters.dropped += 1;
+                continue;
+            }
+            let latency = topo.link_latency(summary.node, neighbor.name).unwrap_or(0);
+            self.in_flight.push(InFlight {
+                due: summary.at.saturating_add(latency),
+                to: neighbor.name,
+                summary: summary.clone(),
+            });
+        }
+    }
+
+    /// Drain every summary due at or before `now`, in `(due, to, from)`
+    /// order. The caller folds each into the receiver's view (newest wins).
+    pub fn deliver_due(&mut self, now: u64) -> Vec<(&'static str, NodeSummary)> {
+        let mut due: Vec<InFlight> = Vec::new();
+        let mut rest: Vec<InFlight> = Vec::with_capacity(self.in_flight.len());
+        for msg in self.in_flight.drain(..) {
+            if msg.due <= now {
+                due.push(msg);
+            } else {
+                rest.push(msg);
+            }
+        }
+        self.in_flight = rest;
+        due.sort_by(|x, y| {
+            x.due
+                .cmp(&y.due)
+                .then_with(|| x.to.cmp(y.to))
+                .then_with(|| x.summary.node.cmp(y.summary.node))
+        });
+        self.counters.delivered += due.len() as u64;
+        due.into_iter().map(|m| (m.to, m.summary)).collect()
+    }
+
+    /// Summaries still in flight (scheduled but not yet due).
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    /// Lifetime delivery/drop counters.
+    pub fn counters(&self) -> GossipCounters {
+        self.counters
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::mesh::MeshTopology;
+
+    fn summary(topo: &MeshTopology, idx: usize, at: u64) -> NodeSummary {
+        let spec = topo.nodes()[idx];
+        NodeSummary { node: spec.name, at, residual: spec.cores, capacity: spec.cores }
+    }
+
+    #[test]
+    fn zero_latency_delivery_is_immediate_and_ordered() {
+        let topo = MeshTopology::parse("full:3").unwrap();
+        let mut bus = GossipBus::new();
+        for i in (0..3).rev() {
+            bus.publish(&topo, &summary(&topo, i, 10));
+        }
+        let delivered = bus.deliver_due(10);
+        // 3 nodes x 2 neighbors each.
+        assert_eq!(delivered.len(), 6);
+        assert_eq!(bus.in_flight(), 0);
+        let order: Vec<(&str, &str)> = delivered.iter().map(|(to, s)| (*to, s.node)).collect();
+        let mut sorted = order.clone();
+        sorted.sort();
+        assert_eq!(order, sorted, "deliveries sorted by (to, from)");
+    }
+
+    #[test]
+    fn latency_delays_delivery() {
+        let topo = MeshTopology::parse("ring:4@50").unwrap();
+        let mut bus = GossipBus::new();
+        bus.publish(&topo, &summary(&topo, 0, 100));
+        assert!(bus.deliver_due(100).is_empty(), "nothing due before the latency elapses");
+        assert_eq!(bus.in_flight(), 2);
+        let late = bus.deliver_due(150);
+        assert_eq!(late.len(), 2);
+        assert!(late.iter().all(|(_, s)| s.at == 100), "summaries keep their publish tick");
+    }
+
+    #[test]
+    fn cut_links_and_lost_nodes_drop_summaries() {
+        let mut topo = MeshTopology::parse("line:3").unwrap();
+        let (a, b, c) = (topo.nodes()[0].name, topo.nodes()[1].name, topo.nodes()[2].name);
+        topo.cut(a, b).unwrap();
+        let mut bus = GossipBus::new();
+        bus.publish(&topo, &summary(&topo, 1, 5));
+        assert_eq!(bus.counters().dropped, 1, "the cut a-b link eats one copy");
+        let delivered = bus.deliver_due(5);
+        assert_eq!(delivered.len(), 1);
+        assert_eq!(delivered[0].0, c);
+        // A lost node stops publishing outright.
+        topo.lose(b);
+        bus.publish(&topo, &summary(&topo, 1, 6));
+        assert_eq!(bus.in_flight(), 0);
+        // …and stops receiving: c's copy toward b is dropped.
+        bus.publish(&topo, &summary(&topo, 2, 6));
+        assert_eq!(bus.counters().dropped, 2);
+        assert_eq!(bus.in_flight(), 0, "c's only neighbor is the lost b");
+    }
+
+    #[test]
+    fn healed_links_carry_again() {
+        let mut topo = MeshTopology::parse("ring:3").unwrap();
+        let (a, b) = (topo.nodes()[0].name, topo.nodes()[1].name);
+        topo.cut(a, b).unwrap();
+        let mut bus = GossipBus::new();
+        bus.publish(&topo, &summary(&topo, 0, 1));
+        let before = bus.counters();
+        assert_eq!(before.dropped, 1);
+        topo.heal(a, b).unwrap();
+        bus.publish(&topo, &summary(&topo, 0, 2));
+        assert_eq!(bus.counters().dropped, 1, "no new drops after the heal");
+        assert_eq!(bus.deliver_due(2).len(), 3);
+    }
+}

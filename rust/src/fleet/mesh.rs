@@ -1,0 +1,943 @@
+//! Decentralized local-optimistic mesh scheduling for edge fleets.
+//!
+//! [`super::migrate::rebalance`] is a centralized planner with global
+//! knowledge — realistic for one datacenter, wrong for the paper's
+//! edge/fog setting. This module implements a LOS-style scheduler (LOS:
+//! Local-Optimistic Scheduling of Periodic Model Training in Meshed Edge
+//! Networks, arXiv 2109.13009): every node runs a [`LocalScheduler`] that
+//! knows its *direct topology neighbors only*, learns their residual
+//! capacity from gossiped [`NodeSummary`] messages
+//! ([`super::gossip::GossipBus`]), and makes **local-optimistic** placement
+//! decisions — it offers its shed jobs to the best neighbor its (possibly
+//! stale) view suggests, and resolves the inevitable accept conflicts
+//! optimistically through [`JobManager::try_accept`] with a deterministic
+//! loser-retry on the next gossip round.
+//!
+//! Faults are first-class scenario axes, not test hacks: link partitions
+//! ([`MeshTopology::cut`] / [`MeshTopology::heal`]), delayed gossip (link
+//! latency in the topology spec), and node loss ([`MeshTopology::lose`])
+//! all flow through the same [`MeshFault`] events the daemon schedules on
+//! its virtual clock.
+//!
+//! Invariants (property-tested in `tests/proptests.rs`):
+//! * a node only ever reads its neighbors' gossiped summaries — migrations
+//!   always follow topology links;
+//! * no guaranteed job is ever displaced ([`JobManager::try_accept`] grants
+//!   from residual capacity only, and crowded-out migrants roll back);
+//! * the whole round is deterministic — node-name, priority, and job-name
+//!   orderings everywhere, no wallclock, no randomness;
+//! * a fully-connected zero-latency mesh converges to within tolerance of
+//!   the centralized [`FleetPlan`].
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{JobManager, ManagedJob};
+use crate::simulator::{NodeSpec, NODES};
+
+use super::gossip::{GossipBus, NodeSummary};
+use super::migrate::{FleetMetrics, FleetPlan, Migration};
+use super::placement::{candidates_among, translate_model, FleetJob, NodeView};
+
+/// Interned mesh nodes: clones of the Table-I base machines renamed
+/// `<base>.<idx>`, leaked to the `&'static` lifetime the placement layer
+/// works with. Interning dedupes, so re-parsing a topology (tests, benches,
+/// repeated CLI runs) never grows the leak.
+static MESH_NODES: OnceLock<Mutex<BTreeMap<String, &'static NodeSpec>>> = OnceLock::new();
+
+fn intern_node(base: &'static NodeSpec, name: &str) -> &'static NodeSpec {
+    let mut map = MESH_NODES.get_or_init(|| Mutex::new(BTreeMap::new())).lock().unwrap();
+    if let Some(&spec) = map.get(name) {
+        return spec;
+    }
+    let leaked: &'static str = Box::leak(name.to_string().into_boxed_str());
+    let spec: &'static NodeSpec = Box::leak(Box::new(NodeSpec { name: leaked, ..base.clone() }));
+    map.insert(name.to_string(), spec);
+    spec
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+/// State of one named link between two mesh nodes.
+#[derive(Clone, Copy, Debug)]
+struct Link {
+    latency: u64,
+    up: bool,
+}
+
+/// A mesh of named nodes and links with latency and partition state.
+///
+/// Topologies are built from a compact spec string:
+///
+/// ```text
+/// full:<n> | ring:<n> | line:<n> | star:<n> | grid:<w>x<h>   [@<latency>]
+/// ```
+///
+/// Node `i` is a clone of Table-I machine `NODES[i % 7]` named
+/// `<base>.<i>` (e.g. `wally.0`, `asok.1`, `pi4.2`, …), so a 100-node mesh
+/// cycles the calibrated machine zoo. The optional `@<latency>` suffix
+/// applies the same gossip latency (in virtual ticks) to every link;
+/// without it links deliver within the publishing round.
+#[derive(Clone, Debug)]
+pub struct MeshTopology {
+    spec: String,
+    nodes: Vec<&'static NodeSpec>,
+    adjacency: BTreeMap<&'static str, Vec<&'static str>>,
+    links: BTreeMap<(&'static str, &'static str), Link>,
+    lost: BTreeSet<&'static str>,
+}
+
+impl MeshTopology {
+    /// Parse a topology spec (see the type docs for the grammar).
+    pub fn parse(spec: &str) -> Result<Self> {
+        let (body, latency) = match spec.split_once('@') {
+            Some((b, l)) => {
+                let lat = l
+                    .trim()
+                    .parse::<u64>()
+                    .map_err(|_| anyhow!("mesh spec '{spec}': bad latency '{l}'"))?;
+                (b.trim(), lat)
+            }
+            None => (spec.trim(), 0),
+        };
+        let (shape, size) = body
+            .split_once(':')
+            .ok_or_else(|| anyhow!("mesh spec '{spec}': expected <shape>:<size>[@latency]"))?;
+        let mut edges: BTreeSet<(usize, usize)> = BTreeSet::new();
+        let n = if shape == "grid" {
+            let (w, h) = size
+                .split_once('x')
+                .ok_or_else(|| anyhow!("mesh spec '{spec}': grid wants <w>x<h>"))?;
+            let w: usize =
+                w.parse().map_err(|_| anyhow!("mesh spec '{spec}': bad grid width '{w}'"))?;
+            let h: usize =
+                h.parse().map_err(|_| anyhow!("mesh spec '{spec}': bad grid height '{h}'"))?;
+            if w * h < 2 {
+                bail!("mesh spec '{spec}': a mesh needs at least 2 nodes");
+            }
+            for r in 0..h {
+                for c in 0..w {
+                    let i = r * w + c;
+                    if c + 1 < w {
+                        edges.insert((i, i + 1));
+                    }
+                    if r + 1 < h {
+                        edges.insert((i, i + w));
+                    }
+                }
+            }
+            w * h
+        } else {
+            let n: usize =
+                size.parse().map_err(|_| anyhow!("mesh spec '{spec}': bad size '{size}'"))?;
+            if n < 2 {
+                bail!("mesh spec '{spec}': a mesh needs at least 2 nodes");
+            }
+            match shape {
+                "full" => {
+                    for i in 0..n {
+                        for j in i + 1..n {
+                            edges.insert((i, j));
+                        }
+                    }
+                }
+                "ring" => {
+                    for i in 0..n {
+                        let j = (i + 1) % n;
+                        edges.insert((i.min(j), i.max(j)));
+                    }
+                }
+                "line" => {
+                    for i in 0..n - 1 {
+                        edges.insert((i, i + 1));
+                    }
+                }
+                "star" => {
+                    for i in 1..n {
+                        edges.insert((0, i));
+                    }
+                }
+                other => bail!("mesh spec '{spec}': unknown shape '{other}' \
+                     (full|ring|line|star|grid)"),
+            }
+            n
+        };
+
+        let nodes: Vec<&'static NodeSpec> = (0..n)
+            .map(|i| {
+                let base = &NODES[i % NODES.len()];
+                intern_node(base, &format!("{}.{}", base.name, i))
+            })
+            .collect();
+        let mut adjacency: BTreeMap<&'static str, Vec<&'static str>> =
+            nodes.iter().map(|s| (s.name, Vec::new())).collect();
+        let mut links = BTreeMap::new();
+        for &(i, j) in &edges {
+            let (a, b) = (nodes[i].name, nodes[j].name);
+            adjacency.get_mut(a).unwrap().push(b);
+            adjacency.get_mut(b).unwrap().push(a);
+            links.insert(Self::key(a, b), Link { latency, up: true });
+        }
+        for neighbors in adjacency.values_mut() {
+            neighbors.sort_unstable();
+        }
+        Ok(Self { spec: spec.to_string(), nodes, adjacency, links, lost: BTreeSet::new() })
+    }
+
+    fn key(a: &'static str, b: &'static str) -> (&'static str, &'static str) {
+        if a <= b {
+            (a, b)
+        } else {
+            (b, a)
+        }
+    }
+
+    fn link_key(&self, a: &str, b: &str) -> Result<(&'static str, &'static str)> {
+        let a = self.resolve(a)?;
+        let b = self.resolve(b)?;
+        let key = Self::key(a.name, b.name);
+        if !self.links.contains_key(&key) {
+            bail!("no mesh link {}-{}", a.name, b.name);
+        }
+        Ok(key)
+    }
+
+    fn resolve(&self, name: &str) -> Result<&'static NodeSpec> {
+        self.nodes
+            .iter()
+            .find(|s| s.name == name)
+            .copied()
+            .ok_or_else(|| anyhow!("unknown mesh node '{name}' in topology '{}'", self.spec))
+    }
+
+    /// The spec string this topology was parsed from.
+    pub fn spec(&self) -> &str {
+        &self.spec
+    }
+
+    /// All mesh nodes, in index order.
+    pub fn nodes(&self) -> &[&'static NodeSpec] {
+        &self.nodes
+    }
+
+    /// Whether `name` is a member of this mesh.
+    pub fn contains(&self, name: &str) -> bool {
+        self.adjacency.contains_key(name)
+    }
+
+    /// Number of (undirected) links in the topology.
+    pub fn link_count(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Direct topology neighbors of `name`, in name order — regardless of
+    /// link/partition state (callers filter with [`Self::link_up`]).
+    pub fn neighbors(&self, name: &str) -> Vec<&'static NodeSpec> {
+        self.adjacency
+            .get(name)
+            .map(|ns| ns.iter().map(|n| self.resolve(n).expect("adjacency is closed")).collect())
+            .unwrap_or_default()
+    }
+
+    /// Whether `a` and `b` share a topology link (up or down).
+    pub fn are_linked(&self, a: &str, b: &str) -> bool {
+        self.adjacency.get(a).is_some_and(|ns| ns.iter().any(|n| *n == b))
+    }
+
+    /// Whether the `a`-`b` link exists and is currently up.
+    pub fn link_up(&self, a: &str, b: &str) -> bool {
+        match (self.resolve(a), self.resolve(b)) {
+            (Ok(a), Ok(b)) => {
+                self.links.get(&Self::key(a.name, b.name)).map(|l| l.up).unwrap_or(false)
+            }
+            _ => false,
+        }
+    }
+
+    /// Gossip latency of the `a`-`b` link, if the link exists.
+    pub fn link_latency(&self, a: &str, b: &str) -> Option<u64> {
+        let (a, b) = (self.resolve(a).ok()?, self.resolve(b).ok()?);
+        self.links.get(&Self::key(a.name, b.name)).map(|l| l.latency)
+    }
+
+    /// Partition the `a`-`b` link: summaries published across it are
+    /// dropped until [`Self::heal`].
+    pub fn cut(&mut self, a: &str, b: &str) -> Result<()> {
+        let key = self.link_key(a, b)?;
+        self.links.get_mut(&key).expect("validated").up = false;
+        Ok(())
+    }
+
+    /// Restore a previously [`Self::cut`] link.
+    pub fn heal(&mut self, a: &str, b: &str) -> Result<()> {
+        let key = self.link_key(a, b)?;
+        self.links.get_mut(&key).expect("validated").up = true;
+        Ok(())
+    }
+
+    /// Mark a node lost: it stops publishing and receiving gossip, accepts
+    /// no placements, and its resident jobs drop out of the mesh plan.
+    pub fn lose(&mut self, name: &str) {
+        if let Ok(spec) = self.resolve(name) {
+            self.lost.insert(spec.name);
+        }
+    }
+
+    /// Whether `name` has been [`Self::lose`]d.
+    pub fn is_lost(&self, name: &str) -> bool {
+        self.lost.contains(name)
+    }
+}
+
+/// A fault injected into the mesh at a scheduled virtual tick — the
+/// scenario axes behind `fleet --mesh --partition`.
+#[derive(Clone, Debug)]
+pub enum MeshFault {
+    /// Partition the named link.
+    Cut(String, String),
+    /// Restore the named link.
+    Heal(String, String),
+    /// Lose the named node.
+    Lose(String),
+}
+
+impl MeshFault {
+    /// Apply this fault to a topology.
+    pub fn apply(&self, topo: &mut MeshTopology) -> Result<()> {
+        match self {
+            MeshFault::Cut(a, b) => topo.cut(a, b),
+            MeshFault::Heal(a, b) => topo.heal(a, b),
+            MeshFault::Lose(n) => {
+                topo.resolve(n)?;
+                topo.lose(n);
+                Ok(())
+            }
+        }
+    }
+
+    /// Short verb tag for journals and logs.
+    pub fn verb(&self) -> &'static str {
+        match self {
+            MeshFault::Cut(..) => "cut",
+            MeshFault::Heal(..) => "heal",
+            MeshFault::Lose(..) => "lose",
+        }
+    }
+}
+
+impl std::fmt::Display for MeshFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MeshFault::Cut(a, b) => write!(f, "cut {a}-{b}"),
+            MeshFault::Heal(a, b) => write!(f, "heal {a}-{b}"),
+            MeshFault::Lose(n) => write!(f, "lose {n}"),
+        }
+    }
+}
+
+/// Gossip cadence of a mesh run.
+#[derive(Clone, Copy, Debug)]
+pub struct MeshConfig {
+    /// Virtual ticks between gossip rounds.
+    pub every: u64,
+    /// Number of gossip rounds to schedule.
+    pub rounds: usize,
+}
+
+impl Default for MeshConfig {
+    fn default() -> Self {
+        Self { every: 200, rounds: 5 }
+    }
+}
+
+/// The per-node scheduler: one machine's neighbor-local view of the mesh.
+#[derive(Clone, Debug)]
+pub struct LocalScheduler {
+    /// The node this scheduler runs on.
+    pub spec: &'static NodeSpec,
+    views: BTreeMap<&'static str, NodeSummary>,
+}
+
+impl LocalScheduler {
+    fn new(spec: &'static NodeSpec) -> Self {
+        Self { spec, views: BTreeMap::new() }
+    }
+
+    /// Fold a delivered summary into the view; the newest publish wins.
+    fn observe(&mut self, summary: NodeSummary) {
+        match self.views.get(summary.node) {
+            Some(old) if old.at > summary.at => {}
+            _ => {
+                self.views.insert(summary.node, summary);
+            }
+        }
+    }
+
+    /// The neighbor summaries this node currently holds, in name order.
+    pub fn views(&self) -> impl Iterator<Item = &NodeSummary> {
+        self.views.values()
+    }
+
+    /// Aggregate age of the held views at `now` (staleness, in ticks).
+    pub fn view_age(&self, now: u64) -> u64 {
+        self.views.values().map(|v| now.saturating_sub(v.at)).sum()
+    }
+}
+
+/// Lifetime counters of one mesh run — mirrored into the telemetry store
+/// so `streamprof serve` can answer mesh-health queries.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MeshStats {
+    /// Gossip rounds executed.
+    pub gossip_rounds: u64,
+    /// Summaries delivered into neighbor views.
+    pub summaries_delivered: u64,
+    /// Summaries dropped on partitioned links or lost endpoints.
+    pub summaries_dropped: u64,
+    /// Aggregate view age (ticks) summed over nodes at each round.
+    pub staleness_ticks: u64,
+    /// Optimistic offers refused or crowded out and rolled back.
+    pub conflict_rollbacks: u64,
+    /// Accepted cross-node moves.
+    pub moves: u64,
+}
+
+/// What one gossip round did — the telemetry/journal payload.
+#[derive(Clone, Debug, Default)]
+pub struct RoundOutcome {
+    /// Summaries delivered this round.
+    pub delivered: u64,
+    /// Summaries dropped this round.
+    pub dropped: u64,
+    /// Aggregate view age (ticks) across nodes at this round.
+    pub staleness_ticks: u64,
+    /// `(job, refused destination)` pairs rolled back this round.
+    pub rollbacks: Vec<(String, &'static str)>,
+    /// Migrations accepted this round.
+    pub moves: Vec<Migration>,
+}
+
+/// One placement offer a node makes for a shed job.
+struct Offer {
+    job: String,
+    from: &'static str,
+    to: &'static str,
+    priority: i32,
+    needs_reprofile: bool,
+}
+
+/// The mesh scheduler: topology + gossip bus + one [`LocalScheduler`] per
+/// node, advancing in discrete gossip rounds on the virtual clock.
+#[derive(Debug)]
+pub struct Mesh {
+    topo: MeshTopology,
+    bus: GossipBus,
+    schedulers: BTreeMap<&'static str, LocalScheduler>,
+    jobs: BTreeMap<String, FleetJob>,
+    placement: BTreeMap<String, &'static str>,
+    attempted: BTreeMap<String, BTreeSet<&'static str>>,
+    migrations: Vec<Migration>,
+    baseline_guaranteed: Option<usize>,
+    stats: MeshStats,
+}
+
+impl Mesh {
+    /// Build a mesh over `topo` with empty views and no jobs.
+    pub fn new(topo: MeshTopology) -> Self {
+        let schedulers =
+            topo.nodes().iter().map(|&spec| (spec.name, LocalScheduler::new(spec))).collect();
+        Self {
+            topo,
+            bus: GossipBus::new(),
+            schedulers,
+            jobs: BTreeMap::new(),
+            placement: BTreeMap::new(),
+            attempted: BTreeMap::new(),
+            migrations: Vec::new(),
+            baseline_guaranteed: None,
+            stats: MeshStats::default(),
+        }
+    }
+
+    /// The topology (for fault injection and introspection).
+    pub fn topology(&self) -> &MeshTopology {
+        &self.topo
+    }
+
+    /// Mutable topology access — how scheduled [`MeshFault`]s land.
+    pub fn topology_mut(&mut self) -> &mut MeshTopology {
+        &mut self.topo
+    }
+
+    /// Current job placements (job name → mesh node name).
+    pub fn placements(&self) -> &BTreeMap<String, &'static str> {
+        &self.placement
+    }
+
+    /// Accumulated run counters.
+    pub fn stats(&self) -> MeshStats {
+        self.stats
+    }
+
+    /// Sync the mesh's job set with the fleet's current roster. Jobs keep
+    /// their existing placement; new jobs start on their home node when it
+    /// is a mesh member, otherwise on a deterministic (name-hashed) node.
+    /// Departed jobs leave the placement map.
+    pub fn sync_jobs(&mut self, jobs: &[FleetJob]) {
+        self.jobs = jobs.iter().map(|j| (j.name.clone(), j.clone())).collect();
+        self.placement.retain(|name, _| self.jobs.contains_key(name));
+        self.attempted.retain(|name, _| self.jobs.contains_key(name));
+        let n = self.topo.nodes().len();
+        for job in self.jobs.values() {
+            if self.placement.contains_key(&job.name) {
+                continue;
+            }
+            let node = if self.topo.contains(job.node.name) {
+                self.topo.resolve(job.node.name).expect("member").name
+            } else {
+                self.topo.nodes()[(fnv1a(job.name.as_bytes()) % n as u64) as usize].name
+            };
+            self.placement.insert(job.name.clone(), node);
+        }
+        if self.baseline_guaranteed.is_none() && !self.jobs.is_empty() {
+            let managers = self.managers();
+            self.baseline_guaranteed = Some(guaranteed_count(&managers));
+        }
+    }
+
+    /// Rebuild per-node managers from the current placement. Jobs resident
+    /// on lost nodes are excluded — their guarantees died with the node.
+    fn managers(&self) -> BTreeMap<&'static str, (&'static NodeSpec, JobManager)> {
+        let mut managers: BTreeMap<&'static str, (&'static NodeSpec, JobManager)> = self
+            .topo
+            .nodes()
+            .iter()
+            .filter(|s| !self.topo.is_lost(s.name))
+            .map(|&s| (s.name, (s, JobManager::new(s.cores))))
+            .collect();
+        for (name, &node) in &self.placement {
+            let Some((spec, mgr)) = managers.get_mut(node) else {
+                continue; // resident node lost
+            };
+            let job = &self.jobs[name];
+            mgr.register(ManagedJob {
+                name: job.name.clone(),
+                model: translate_model(&job.model, job.node, spec),
+                rate_hz: job.rate_hz,
+                priority: job.priority,
+            });
+        }
+        managers
+    }
+
+    /// Run one gossip round at virtual tick `now`: publish summaries to
+    /// neighbors, deliver everything due, let each node offer its shed
+    /// jobs to the best neighbor its view suggests, and resolve the offers
+    /// optimistically (losers retry next round).
+    pub fn round(&mut self, now: u64) -> RoundOutcome {
+        let mut managers = self.managers();
+        let before = self.bus.counters();
+
+        // Publish: every live node advertises its residual to neighbors.
+        for (spec, mgr) in managers.values() {
+            let summary = NodeSummary {
+                node: spec.name,
+                at: now,
+                residual: mgr.residual_capacity(),
+                capacity: mgr.capacity(),
+            };
+            self.bus.publish(&self.topo, &summary);
+        }
+
+        // Deliver everything due (zero-latency links deliver in-round).
+        for (to, summary) in self.bus.deliver_due(now) {
+            if let Some(sched) = self.schedulers.get_mut(to) {
+                sched.observe(summary);
+            }
+        }
+
+        // Decide: each node, in name order, offers its shed jobs (priority
+        // desc, name asc) to the best *reachable neighbor* its view
+        // suggests. Nothing outside the neighbor views is consulted.
+        let mut staleness = 0u64;
+        let mut offers: Vec<Offer> = Vec::new();
+        for (&node, (_, mgr)) in &managers {
+            if self.topo.is_lost(node) {
+                continue;
+            }
+            let sched = &self.schedulers[node];
+            staleness += sched.view_age(now);
+            let views: Vec<NodeView> = sched
+                .views()
+                .filter(|v| {
+                    self.topo.link_up(node, v.node)
+                        && !self.topo.is_lost(v.node)
+                        && v.node != node
+                })
+                .map(|v| NodeView {
+                    spec: self.topo.resolve(v.node).expect("view of a member"),
+                    residual: v.residual,
+                })
+                .collect();
+            if views.is_empty() {
+                continue;
+            }
+            let plan = mgr.plan();
+            let mut shed: Vec<&str> = plan
+                .assignments
+                .iter()
+                .filter(|a| !a.guaranteed)
+                .map(|a| a.name.as_str())
+                .collect();
+            shed.sort_by(|x, y| {
+                let (px, py) = (self.jobs[*x].priority, self.jobs[*y].priority);
+                py.cmp(&px).then_with(|| x.cmp(y))
+            });
+            for name in shed {
+                let job = &self.jobs[name];
+                let candidates = candidates_among(job, &views);
+                if candidates.is_empty() {
+                    continue;
+                }
+                let tried = self.attempted.entry(name.to_string()).or_default();
+                let pick = match candidates.iter().find(|c| !tried.contains(c.node)) {
+                    Some(c) => c,
+                    None => {
+                        // Every candidate has been refused before: reset the
+                        // retry memory and start over from the best one —
+                        // fresh gossip may have changed the picture.
+                        tried.clear();
+                        &candidates[0]
+                    }
+                };
+                offers.push(Offer {
+                    job: name.to_string(),
+                    from: node,
+                    to: pick.node,
+                    priority: job.priority,
+                    needs_reprofile: pick.needs_reprofile,
+                });
+            }
+        }
+
+        // Resolve: offers grouped by destination (name order); within a
+        // destination, higher priority first, job name as tie-break. An
+        // offer the destination refuses — someone else took the capacity
+        // first, or the view was stale — rolls back; the loser records the
+        // refusal and retries a different candidate next round.
+        offers.sort_by(|x, y| {
+            x.to
+                .cmp(y.to)
+                .then_with(|| y.priority.cmp(&x.priority))
+                .then_with(|| x.job.cmp(&y.job))
+        });
+        let mut outcome = RoundOutcome { staleness_ticks: staleness, ..Default::default() };
+        for offer in offers {
+            let job = &self.jobs[&offer.job];
+            let dest_spec = self.topo.resolve(offer.to).expect("offer to a member");
+            let translated = translate_model(&job.model, job.node, dest_spec);
+            let dest = &mut managers.get_mut(offer.to).expect("live destination").1;
+            let accepted = dest.try_accept(ManagedJob {
+                name: job.name.clone(),
+                model: translated,
+                rate_hz: job.rate_hz,
+                priority: job.priority,
+            });
+            let granted = match accepted {
+                Some(limit) => limit,
+                None => {
+                    self.attempted.entry(offer.job.clone()).or_default().insert(offer.to);
+                    outcome.rollbacks.push((offer.job, offer.to));
+                    continue;
+                }
+            };
+            // Crowd-out recheck: the destination re-plans from scratch and
+            // a resident shed job with higher priority can push the migrant
+            // straight back out — roll such no-op moves back.
+            let kept =
+                dest.plan().assignments.iter().any(|a| a.name == offer.job && a.guaranteed);
+            if !kept {
+                dest.deregister(&offer.job);
+                self.attempted.entry(offer.job.clone()).or_default().insert(offer.to);
+                outcome.rollbacks.push((offer.job, offer.to));
+                continue;
+            }
+            let slack_after = dest.residual_capacity();
+            managers.get_mut(offer.from).expect("offer origin").1.deregister(&offer.job);
+            self.placement.insert(offer.job.clone(), offer.to);
+            self.attempted.remove(&offer.job);
+            outcome.moves.push(Migration {
+                job: offer.job,
+                from: offer.from,
+                to: offer.to,
+                priority: offer.priority,
+                limit: granted,
+                slack_after,
+                needs_reprofile: offer.needs_reprofile,
+            });
+        }
+
+        let after = self.bus.counters();
+        outcome.delivered = after.delivered - before.delivered;
+        outcome.dropped = after.dropped - before.dropped;
+        self.stats.gossip_rounds += 1;
+        self.stats.summaries_delivered += outcome.delivered;
+        self.stats.summaries_dropped += outcome.dropped;
+        self.stats.staleness_ticks += outcome.staleness_ticks;
+        self.stats.conflict_rollbacks += outcome.rollbacks.len() as u64;
+        self.stats.moves += outcome.moves.len() as u64;
+        self.migrations.extend(outcome.moves.iter().cloned());
+        outcome
+    }
+
+    /// Assemble the current placement into a [`FleetPlan`] — same shape as
+    /// the centralized rebalancer's, so the two are directly comparable.
+    /// Lost nodes (and their resident jobs) are excluded.
+    pub fn fleet_plan(&self) -> FleetPlan {
+        let managers = self.managers();
+        let plans: Vec<_> =
+            managers.iter().map(|(&name, (_, mgr))| (name.to_string(), mgr.plan())).collect();
+        let guaranteed_after = plans
+            .iter()
+            .flat_map(|(_, p)| p.assignments.iter())
+            .filter(|a| a.guaranteed)
+            .count();
+        let metrics = FleetMetrics {
+            jobs: plans.iter().map(|(_, p)| p.assignments.len()).sum(),
+            guaranteed_before: self.baseline_guaranteed.unwrap_or(guaranteed_after),
+            guaranteed_after,
+            total_capacity: plans.iter().map(|(_, p)| p.capacity).sum(),
+            total_assigned: plans.iter().map(|(_, p)| p.total_assigned).sum(),
+        };
+        FleetPlan { plans, migrations: self.migrations.clone(), metrics }
+    }
+}
+
+fn guaranteed_count(managers: &BTreeMap<&'static str, (&'static NodeSpec, JobManager)>) -> usize {
+    managers
+        .values()
+        .map(|(_, mgr)| mgr.plan().assignments.iter().filter(|a| a.guaranteed).count())
+        .sum()
+}
+
+/// Run a standalone mesh schedule over `jobs`: `cfg.rounds` gossip rounds
+/// at `cfg.every`-tick cadence starting at tick 0, applying each fault in
+/// `faults` (a `(tick, fault)` list) before the first round at or after
+/// its tick. Returns the final plan and the run counters — the benchable,
+/// property-testable form of the scheduler (the daemon drives the same
+/// [`Mesh`] from its event loop instead).
+pub fn mesh_rebalance(
+    jobs: &[FleetJob],
+    topo: MeshTopology,
+    cfg: &MeshConfig,
+    faults: &[(u64, MeshFault)],
+) -> Result<(FleetPlan, MeshStats)> {
+    let mut mesh = Mesh::new(topo);
+    mesh.sync_jobs(jobs);
+    let mut pending: Vec<&(u64, MeshFault)> = faults.iter().collect();
+    pending.sort_by_key(|(at, _)| *at);
+    let mut next_fault = 0usize;
+    for k in 0..cfg.rounds {
+        let now = k as u64 * cfg.every.max(1);
+        while next_fault < pending.len() && pending[next_fault].0 <= now {
+            pending[next_fault].1.apply(mesh.topology_mut())?;
+            next_fault += 1;
+        }
+        mesh.round(now);
+    }
+    Ok((mesh.fleet_plan(), mesh.stats()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fit::{ModelKind, RuntimeModel};
+
+    fn model(a: f64, b: f64) -> RuntimeModel {
+        RuntimeModel { kind: ModelKind::Full, a, b, c: 0.001, d: 1.0, fit_cost: 0.0 }
+    }
+
+    fn job(name: &str, home: &'static NodeSpec, a: f64, rate: f64, prio: i32) -> FleetJob {
+        let model = model(a, home.scaling);
+        FleetJob { name: name.into(), node: home, model, rate_hz: rate, priority: prio }
+    }
+
+    #[test]
+    fn topology_shapes_parse_with_expected_links() {
+        let full = MeshTopology::parse("full:5").unwrap();
+        assert_eq!(full.nodes().len(), 5);
+        assert_eq!(full.link_count(), 10);
+        let ring = MeshTopology::parse("ring:4").unwrap();
+        assert_eq!(ring.link_count(), 4);
+        for spec in ring.nodes() {
+            assert_eq!(ring.neighbors(spec.name).len(), 2);
+        }
+        let line = MeshTopology::parse("line:4").unwrap();
+        assert_eq!(line.link_count(), 3);
+        let star = MeshTopology::parse("star:5").unwrap();
+        assert_eq!(star.link_count(), 4);
+        assert_eq!(star.neighbors(star.nodes()[0].name).len(), 4);
+        let grid = MeshTopology::parse("grid:2x3").unwrap();
+        assert_eq!(grid.nodes().len(), 6);
+        assert_eq!(grid.link_count(), 7);
+        let latency = MeshTopology::parse("ring:3@40").unwrap();
+        let (a, b) = (latency.nodes()[0].name, latency.nodes()[1].name);
+        assert_eq!(latency.link_latency(a, b), Some(40));
+    }
+
+    #[test]
+    fn node_naming_cycles_the_machine_zoo() {
+        let topo = MeshTopology::parse("full:9").unwrap();
+        let names: Vec<&str> = topo.nodes().iter().map(|s| s.name).collect();
+        assert_eq!(names[0], "wally.0");
+        assert_eq!(names[2], "pi4.2");
+        assert_eq!(names[7], "wally.7", "node 7 cycles back to wally");
+        assert_eq!(topo.nodes()[7].cores, topo.nodes()[0].cores);
+    }
+
+    #[test]
+    fn interned_nodes_are_deduped() {
+        let a = MeshTopology::parse("ring:3").unwrap();
+        let b = MeshTopology::parse("full:3").unwrap();
+        for (x, y) in a.nodes().iter().zip(b.nodes()) {
+            assert!(std::ptr::eq(*x, *y), "same name must intern to the same spec");
+        }
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected() {
+        for bad in ["", "full", "full:", "full:1", "blob:4", "grid:3", "grid:0x1", "ring:3@soon"] {
+            assert!(MeshTopology::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn faults_flip_topology_state() {
+        let mut topo = MeshTopology::parse("ring:3").unwrap();
+        let (a, b) = (topo.nodes()[0].name, topo.nodes()[1].name);
+        assert!(topo.link_up(a, b));
+        MeshFault::Cut(a.into(), b.into()).apply(&mut topo).unwrap();
+        assert!(!topo.link_up(a, b));
+        MeshFault::Heal(a.into(), b.into()).apply(&mut topo).unwrap();
+        assert!(topo.link_up(a, b));
+        MeshFault::Lose(topo.nodes()[2].name.into()).apply(&mut topo).unwrap();
+        assert!(topo.is_lost(topo.nodes()[2].name));
+        assert!(MeshFault::Cut(a.into(), "ghost".into()).apply(&mut topo).is_err());
+        assert!(MeshFault::Lose("ghost".into()).apply(&mut topo).is_err());
+    }
+
+    /// star:5 = wally.0 center with asok.1/pi4.2/e2high.3/e2small.4 leaves.
+    /// Six residents fill the center to residual 0.8; pi4.2 carries three
+    /// jobs and sheds two, each needing 0.6 on the center — capacity for
+    /// exactly one, so the optimistic offers must conflict.
+    fn conflict_mesh() -> (MeshTopology, Vec<FleetJob>) {
+        let topo = MeshTopology::parse("star:5").unwrap();
+        let center = topo.nodes()[0];
+        let pi = topo.nodes()[2];
+        let mut jobs: Vec<FleetJob> = (0..6)
+            .map(|i| job(&format!("w-{i}"), center, 0.05, 20.0, 5))
+            .collect();
+        for i in 0..3 {
+            jobs.push(job(&format!("m-{i}"), pi, 0.05, 40.0, 3 - i as i32));
+        }
+        (topo, jobs)
+    }
+
+    #[test]
+    fn conflicting_offers_resolve_with_deterministic_loser_retry() {
+        let (topo, jobs) = conflict_mesh();
+        let mut mesh = Mesh::new(topo);
+        mesh.sync_jobs(&jobs);
+        let round = mesh.round(0);
+        assert_eq!(round.moves.len(), 1, "center capacity fits exactly one migrant");
+        assert_eq!(round.moves[0].job, "m-1", "higher-priority shed job wins the slot");
+        assert_eq!(round.moves[0].to, "wally.0");
+        assert!(!round.moves[0].needs_reprofile, "0.6 is inside the shared pi4/wally range");
+        assert_eq!(round.rollbacks, vec![("m-2".to_string(), "wally.0")]);
+        let stats = mesh.stats();
+        assert_eq!(stats.conflict_rollbacks, 1);
+        assert_eq!(stats.moves, 1);
+        // The loser keeps retrying its only neighbor on later rounds.
+        let again = mesh.round(200);
+        assert!(again.moves.is_empty(), "no capacity freed; the retry must fail again");
+        assert_eq!(again.rollbacks.len(), 1);
+    }
+
+    #[test]
+    fn fleet_plan_reports_the_migrated_state() {
+        let (topo, jobs) = conflict_mesh();
+        let mut mesh = Mesh::new(topo);
+        mesh.sync_jobs(&jobs);
+        mesh.round(0);
+        let plan = mesh.fleet_plan();
+        assert_eq!(plan.metrics.jobs, 9);
+        assert_eq!(
+            plan.metrics.guaranteed_after,
+            plan.metrics.guaranteed_before + 1,
+            "{:?}",
+            plan.metrics
+        );
+        let (node, a) = plan.assignment("m-1").expect("migrant planned");
+        assert_eq!(node, "wally.0");
+        assert!(a.guaranteed);
+        assert_eq!(plan.migrations.len(), 1);
+        for (name, p) in &plan.plans {
+            assert!(p.total_assigned <= p.capacity + 1e-9, "{name} over capacity");
+        }
+    }
+
+    #[test]
+    fn lost_nodes_drop_out_of_the_plan() {
+        let (topo, jobs) = conflict_mesh();
+        let mut mesh = Mesh::new(topo);
+        mesh.sync_jobs(&jobs);
+        mesh.round(0);
+        mesh.topology_mut().lose("pi4.2");
+        let plan = mesh.fleet_plan();
+        assert!(plan.node_plan("pi4.2").is_none(), "lost node leaves the plan roster");
+        assert_eq!(plan.metrics.jobs, 7, "m-1 migrated out in time; m-0 and m-2 died with pi4.2");
+        let next = mesh.round(400);
+        assert!(next.moves.is_empty(), "nobody offers to (or from) a lost node");
+    }
+
+    #[test]
+    fn standalone_driver_is_deterministic() {
+        let (topo_a, jobs) = conflict_mesh();
+        let (topo_b, _) = conflict_mesh();
+        let cfg = MeshConfig { every: 100, rounds: 3 };
+        let (plan_a, stats_a) = mesh_rebalance(&jobs, topo_a, &cfg, &[]).unwrap();
+        let (plan_b, stats_b) = mesh_rebalance(&jobs, topo_b, &cfg, &[]).unwrap();
+        assert_eq!(plan_a.guaranteed_jobs(), plan_b.guaranteed_jobs());
+        assert_eq!(plan_a.migrations.len(), plan_b.migrations.len());
+        assert_eq!(stats_a.conflict_rollbacks, stats_b.conflict_rollbacks);
+        assert_eq!(stats_a.gossip_rounds, 3);
+    }
+
+    #[test]
+    fn latency_delays_convergence_but_not_correctness() {
+        // With @150 links and rounds every 100 ticks, round 0 publishes
+        // into the void: views arrive one round late, so the first move
+        // can only happen in round 2 — and staleness is visible.
+        let (mut topo, jobs) = conflict_mesh();
+        topo = MeshTopology::parse(&format!("{}@150", topo.spec())).unwrap();
+        let mut mesh = Mesh::new(topo);
+        mesh.sync_jobs(&jobs);
+        let r0 = mesh.round(0);
+        assert!(r0.moves.is_empty(), "no views yet");
+        assert_eq!(r0.delivered, 0);
+        let r1 = mesh.round(100);
+        assert!(r1.moves.is_empty(), "round-0 summaries are still in flight at t=100");
+        let r2 = mesh.round(200);
+        assert_eq!(r2.moves.len(), 1, "views finally arrived");
+        assert!(r2.staleness_ticks > 0, "delivered views are stale by construction");
+    }
+}

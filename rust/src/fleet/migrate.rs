@@ -47,6 +47,11 @@ pub struct Migration {
     pub limit: f64,
     /// Destination residual capacity after the move.
     pub slack_after: f64,
+    /// True when the granted limit lies outside the home/destination
+    /// shared limit range — the translated model extrapolated, so the
+    /// destination should re-profile before the limit is trusted (see
+    /// [`super::placement::PlacementCandidate::needs_reprofile`]).
+    pub needs_reprofile: bool,
 }
 
 /// Fleet-wide utilization / guarantee metrics of a [`FleetPlan`].
@@ -219,6 +224,7 @@ pub fn rebalance_across(jobs: &[FleetJob], extra_nodes: &[&'static NodeSpec]) ->
                 priority: job.priority,
                 limit: granted,
                 slack_after,
+                needs_reprofile: cand.needs_reprofile,
             });
             break;
         }
@@ -294,6 +300,7 @@ mod tests {
             assert_eq!(m.from, "n1");
             assert_eq!(m.to, "wally");
             assert!(m.limit > 0.0 && m.slack_after >= -1e-9);
+            assert!(!m.needs_reprofile, "limits stay inside n1/wally's shared range");
         }
         // Every migrated job is guaranteed at its destination.
         for m in &plan.migrations {

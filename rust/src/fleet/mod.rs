@@ -56,6 +56,8 @@
 pub mod cache;
 pub mod daemon;
 pub mod drift;
+pub mod gossip;
+pub mod mesh;
 pub mod migrate;
 pub mod placement;
 pub mod queue;
@@ -75,8 +77,14 @@ pub use drift::{
     model_fingerprint, AdaptiveConfig, AdaptiveJobReport, AdaptiveSummary, DriftConfig,
     DriftMonitor, DriftVerdict, EpochReport, ReprofiledJob, RuntimeShift,
 };
+pub use gossip::{GossipBus, GossipCounters, NodeSummary};
+pub use mesh::{
+    mesh_rebalance, LocalScheduler, Mesh, MeshConfig, MeshFault, MeshStats, MeshTopology,
+};
 pub use migrate::{rebalance, rebalance_across, FleetMetrics, FleetPlan, Migration};
-pub use placement::{candidates_for, translate_model, FleetJob, PlacementCandidate};
+pub use placement::{
+    candidates_among, candidates_for, translate_model, FleetJob, NodeView, PlacementCandidate,
+};
 pub use queue::WorkQueue;
 pub use session::{FleetReport, FleetSession, FleetSessionBuilder};
 pub use telemetry::{

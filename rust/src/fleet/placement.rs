@@ -18,7 +18,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::coordinator::JobManager;
+use crate::coordinator::{quote_for, JobManager};
 use crate::fit::RuntimeModel;
 use crate::simulator::NodeSpec;
 
@@ -82,41 +82,78 @@ pub struct PlacementCandidate {
     pub limit: f64,
     /// Residual capacity the destination would retain after the grant.
     pub slack: f64,
+    /// True when the granted limit lies *outside* the limit range both the
+    /// home and destination node can assign (`min(from.cores, to.cores)`).
+    /// Translation is only validated as interpolation on that shared range
+    /// (see [`translate_model`]); a tighter placement is still offered, but
+    /// flagged so the destination re-profiles before the limit is trusted.
+    pub needs_reprofile: bool,
+}
+
+/// One node as seen through the mesh's gossip layer: its spec (static
+/// calibration) plus the residual capacity it last advertised — everything
+/// a [`super::mesh::LocalScheduler`] knows about a neighbor.
+#[derive(Clone, Copy, Debug)]
+pub struct NodeView {
+    /// The advertised node.
+    pub spec: &'static NodeSpec,
+    /// Residual capacity from the node's last gossiped summary (possibly
+    /// stale — that is the point of the mesh scheduler's optimism).
+    pub residual: f64,
+}
+
+fn score_one(job: &FleetJob, view: &NodeView) -> Option<PlacementCandidate> {
+    if view.spec.name == job.node.name {
+        return None;
+    }
+    let translated = translate_model(&job.model, job.node, view.spec);
+    let quote = quote_for(view.spec.cores, &translated, job.rate_hz);
+    if !quote.feasible || quote.limit > view.residual + 1e-9 {
+        return None;
+    }
+    let shared = job.node.cores.min(view.spec.cores);
+    Some(PlacementCandidate {
+        node: view.spec.name,
+        limit: quote.limit,
+        slack: view.residual - quote.limit,
+        needs_reprofile: quote.limit > shared + 1e-9,
+    })
+}
+
+fn sort_candidates(out: &mut [PlacementCandidate]) {
+    // Validated (in-shared-range) placements always outrank extrapolated
+    // ones; within a tier, largest slack wins, node name tie-breaks.
+    out.sort_by(|x, y| {
+        x.needs_reprofile
+            .cmp(&y.needs_reprofile)
+            .then_with(|| y.slack.partial_cmp(&x.slack).unwrap())
+            .then_with(|| x.node.cmp(y.node))
+    });
 }
 
 /// Score every node (except the job's home) that could guarantee `job`
 /// from its residual capacity. Returns candidates sorted best-first:
+/// validated-translation placements before `needs_reprofile` ones, then
 /// largest slack, node name as the deterministic tie-break.
 pub fn candidates_for(
     job: &FleetJob,
     managers: &BTreeMap<&'static str, (&'static NodeSpec, JobManager)>,
 ) -> Vec<PlacementCandidate> {
-    let mut out: Vec<PlacementCandidate> = Vec::new();
-    for (&name, (spec, mgr)) in managers {
-        if name == job.node.name {
-            continue;
-        }
-        let translated = translate_model(&job.model, job.node, spec);
-        let quote = mgr.quote(&translated, job.rate_hz);
-        if !quote.feasible {
-            continue;
-        }
-        let residual = mgr.residual_capacity();
-        if quote.limit > residual + 1e-9 {
-            continue;
-        }
-        out.push(PlacementCandidate {
-            node: name,
-            limit: quote.limit,
-            slack: residual - quote.limit,
-        });
-    }
-    out.sort_by(|x, y| {
-        y.slack
-            .partial_cmp(&x.slack)
-            .unwrap()
-            .then_with(|| x.node.cmp(y.node))
-    });
+    let views: Vec<NodeView> = managers
+        .values()
+        .map(|(spec, mgr)| NodeView { spec, residual: mgr.residual_capacity() })
+        .collect();
+    candidates_among(job, &views)
+}
+
+/// [`candidates_for`] over gossiped [`NodeView`]s instead of live managers
+/// — the same scoring, computed from whatever (possibly stale) residuals
+/// the views carry. This is the only placement input the mesh scheduler's
+/// per-node deciders get.
+pub fn candidates_among(job: &FleetJob, views: &[NodeView]) -> Vec<PlacementCandidate> {
+    let mut out: Vec<PlacementCandidate> =
+        views.iter().filter_map(|v| score_one(job, v)).collect();
+    sort_candidates(&mut out);
     out
 }
 
@@ -290,6 +327,65 @@ mod tests {
             let (spec, _) = &managers[c.node];
             assert!(c.limit <= spec.cores + 1e-9);
             assert!(c.slack >= -1e-9);
+            assert!(!c.needs_reprofile, "mid-range limits stay inside the shared range");
         }
+    }
+
+    #[test]
+    fn extrapolated_limits_are_flagged_and_outranked() {
+        use crate::fit::ModelKind;
+        // Regression for the extrapolated-translation bug: a heavy job
+        // homed on pi4 (4 cores) quotes ~5.9 cores on wally (8 cores) —
+        // *outside* the shared limit range min(4, 8) where translation is
+        // validated. The old scorer trusted that limit silently; it must
+        // now surface as `needs_reprofile`.
+        let pi4 = node("pi4").unwrap();
+        let wally = node("wally").unwrap();
+        let heavy = FleetJob {
+            name: "heavy".into(),
+            node: pi4,
+            model: RuntimeModel {
+                kind: ModelKind::Full,
+                a: 1.95,
+                b: 0.85,
+                c: 0.001,
+                d: 1.0,
+                fit_cost: 0.0,
+            },
+            rate_hz: 10.0,
+            priority: 1,
+        };
+        let mut managers: BTreeMap<&'static str, (&'static NodeSpec, JobManager)> =
+            BTreeMap::new();
+        managers.insert(wally.name, (wally, JobManager::new(wally.cores)));
+        let cands = candidates_for(&heavy, &managers);
+        assert_eq!(cands.len(), 1);
+        let c = &cands[0];
+        assert_eq!(c.node, "wally");
+        assert!(c.limit > pi4.cores.min(wally.cores) + 1e-9, "limit {} extrapolates", c.limit);
+        assert!(c.needs_reprofile, "out-of-shared-range placement must be flagged");
+
+        // And a validated placement outranks a flagged one even when the
+        // flagged one has more slack: add a fast 16-core machine where the
+        // same job's limit (~1.3) sits inside the shared range.
+        let fastbig: &'static NodeSpec = Box::leak(Box::new(NodeSpec {
+            name: "fastbig",
+            cores: 16.0,
+            speed: 4.0,
+            ..wally.clone()
+        }));
+        let views = [
+            NodeView { spec: wally, residual: wally.cores },
+            NodeView { spec: fastbig, residual: 2.0 },
+        ];
+        let cands = candidates_among(&heavy, &views);
+        assert_eq!(cands.len(), 2);
+        assert_eq!(cands[0].node, "fastbig", "validated placement ranks first");
+        assert!(!cands[0].needs_reprofile);
+        assert!(cands[1].needs_reprofile);
+        assert!(
+            cands[1].slack > cands[0].slack,
+            "slack alone would have ranked the extrapolated candidate first"
+        );
     }
 }

@@ -37,6 +37,7 @@ use crate::util::json::Json;
 use super::cache::{CacheStats, MeasurementCache};
 use super::daemon::FleetDaemon;
 use super::drift::{model_fingerprint, AdaptiveConfig, AdaptiveSummary, DriftVerdict};
+use super::mesh::{MeshConfig, MeshFault, MeshStats, MeshTopology};
 use super::migrate::FleetPlan;
 use super::telemetry::TelemetryStore;
 use super::{FleetConfig, FleetJobSpec, FleetSummary};
@@ -63,6 +64,8 @@ pub struct FleetSessionBuilder {
     adaptive: Option<AdaptiveConfig>,
     cache: Option<Arc<MeasurementCache>>,
     telemetry: Option<Arc<TelemetryStore>>,
+    mesh: Option<(MeshTopology, MeshConfig)>,
+    faults: Vec<(u64, MeshFault)>,
 }
 
 impl FleetSessionBuilder {
@@ -114,6 +117,22 @@ impl FleetSessionBuilder {
         self
     }
 
+    /// Attach a decentralized mesh scheduler (sweep mode only): the run
+    /// replays through a daemon with the mesh attached, gossip rounds
+    /// play out during the drain, and the report's plan is the mesh's
+    /// local-optimistic placement instead of the centralized rebalance.
+    pub fn mesh(mut self, topo: MeshTopology, cfg: MeshConfig) -> Self {
+        self.mesh = Some((topo, cfg));
+        self
+    }
+
+    /// Inject a mesh fault (link partition/heal, node loss) at virtual
+    /// tick `at` — requires [`FleetSessionBuilder::mesh`].
+    pub fn mesh_fault_at(mut self, at: u64, fault: MeshFault) -> Self {
+        self.faults.push((at, fault));
+        self
+    }
+
     /// Finalize into a reusable [`FleetSession`].
     pub fn build(self) -> FleetSession {
         FleetSession {
@@ -123,6 +142,8 @@ impl FleetSessionBuilder {
             adaptive: self.adaptive,
             cache: self.cache.unwrap_or_default(),
             telemetry: self.telemetry,
+            mesh: self.mesh,
+            faults: self.faults,
         }
     }
 
@@ -142,6 +163,8 @@ pub struct FleetSession {
     adaptive: Option<AdaptiveConfig>,
     cache: Arc<MeasurementCache>,
     telemetry: Option<Arc<TelemetryStore>>,
+    mesh: Option<(MeshTopology, MeshConfig)>,
+    faults: Vec<(u64, MeshFault)>,
 }
 
 impl FleetSession {
@@ -176,6 +199,12 @@ impl FleetSession {
         if let Some(store) = &self.telemetry {
             builder = builder.telemetry(store.clone());
         }
+        if let Some((topo, mcfg)) = &self.mesh {
+            builder = builder.mesh(topo.clone(), *mcfg);
+            for (at, fault) in &self.faults {
+                builder = builder.mesh_fault_at(*at, fault.clone());
+            }
+        }
         builder.build().drain()
     }
 }
@@ -194,6 +223,9 @@ pub struct FleetReport {
     /// Cache statistics of this run (sweep + adaptation), as a delta —
     /// the session's cache itself persists across runs.
     pub cache: CacheStats,
+    /// Mesh-health counters when the decentralized mesh scheduler ran
+    /// (its plan is in `plan`, replacing the centralized rebalance).
+    pub mesh: Option<MeshStats>,
 }
 
 impl FleetReport {
@@ -205,7 +237,7 @@ impl FleetReport {
         plan: Option<FleetPlan>,
         cache: CacheStats,
     ) -> Self {
-        Self { sweep, adaptive, plan, cache }
+        Self { sweep, adaptive, plan, cache, mesh: None }
     }
 
     /// The profiling sweep every stage built on (the cold sweep when the
@@ -237,8 +269,22 @@ impl FleetReport {
         if let Some(ad) = &self.adaptive {
             root.push(("adaptive", adaptive_json(ad)));
         }
+        if let Some(m) = &self.mesh {
+            root.push(("mesh", mesh_stats_json(m)));
+        }
         Json::obj(root)
     }
+}
+
+fn mesh_stats_json(s: &MeshStats) -> Json {
+    Json::obj([
+        ("gossip_rounds", Json::num(s.gossip_rounds as f64)),
+        ("summaries_delivered", Json::num(s.summaries_delivered as f64)),
+        ("summaries_dropped", Json::num(s.summaries_dropped as f64)),
+        ("staleness_ticks", Json::num(s.staleness_ticks as f64)),
+        ("conflict_rollbacks", Json::num(s.conflict_rollbacks as f64)),
+        ("moves", Json::num(s.moves as f64)),
+    ])
 }
 
 /// Hex fingerprint: `u64` does not survive a round-trip through JSON's
@@ -329,6 +375,7 @@ fn fleet_plan_json(p: &FleetPlan) -> Json {
             ("priority", Json::num(m.priority as f64)),
             ("limit", Json::num(m.limit)),
             ("slack_after", Json::num(m.slack_after)),
+            ("needs_reprofile", Json::Bool(m.needs_reprofile)),
         ]));
     }
     let metrics = Json::obj([
@@ -492,6 +539,24 @@ mod tests {
         let (a, b) = (base.plan.unwrap(), composed.plan.unwrap());
         assert_eq!(a.metrics.guaranteed_after, b.metrics.guaranteed_after);
         assert_eq!(a.guaranteed_jobs(), b.guaranteed_jobs());
+    }
+
+    #[test]
+    fn mesh_session_reports_stats_and_serializes() {
+        let topo = MeshTopology::parse("full:4").unwrap();
+        let report = FleetSession::builder()
+            .config(quick_cfg())
+            .jobs(sim_fleet(4, 7))
+            .mesh(topo, MeshConfig { every: 100, rounds: 2 })
+            .run()
+            .unwrap();
+        let stats = report.mesh.expect("mesh stats ride along");
+        assert_eq!(stats.gossip_rounds, 2);
+        assert!(report.plan.is_some(), "mesh drain reports its plan");
+        let tree = report.to_json();
+        let mesh = tree.get("mesh").expect("mesh block serialized");
+        assert_eq!(mesh.get("gossip_rounds").and_then(Json::as_usize), Some(2));
+        assert!(tree.get("rebalance").is_some(), "the mesh plan serializes like any plan");
     }
 
     #[test]

@@ -15,6 +15,12 @@
 //! blocks fully inside the window fold their value runs without decoding
 //! timestamps; only `p99` (which needs a sort) and boundary blocks decode
 //! points.
+//!
+//! `agg rate` is **points per tick**: point count divided by the window
+//! size when a `window` stage is present, by the matched span
+//! `t_last - t_first` otherwise. A single-point or same-tick series has no
+//! span to rate over without a window — such degenerate spans evaluate to
+//! `null`, never to a bogus `rate == count`.
 
 use crate::util::json::Json;
 
@@ -206,25 +212,30 @@ fn eval_series(
     let value = if stats.count == 0 {
         None
     } else {
-        Some(match agg {
-            Agg::Count => stats.count as f64,
-            Agg::Sum => stats.sum,
-            Agg::Mean => stats.sum / stats.count as f64,
-            Agg::Min => stats.min,
-            Agg::Max => stats.max,
-            Agg::Last => stats.v_last,
-            Agg::Rate => {
-                let span = window.unwrap_or_else(|| stats.t_last - stats.t_first).max(1);
-                stats.count as f64 / span as f64
-            }
+        match agg {
+            Agg::Count => Some(stats.count as f64),
+            Agg::Sum => Some(stats.sum),
+            Agg::Mean => Some(stats.sum / stats.count as f64),
+            Agg::Min => Some(stats.min),
+            Agg::Max => Some(stats.max),
+            Agg::Last => Some(stats.v_last),
+            Agg::Rate => match window {
+                Some(w) => Some(stats.count as f64 / w.max(1) as f64),
+                None if stats.t_last > stats.t_first => {
+                    Some(stats.count as f64 / (stats.t_last - stats.t_first) as f64)
+                }
+                // No window and a single-point / same-tick series: there
+                // is no span to rate over — null, not `rate == count`.
+                None => None,
+            },
             Agg::P99 => {
                 let mut values: Vec<f64> =
                     buf.points_in(lo, hi).into_iter().map(|(_, v)| v).collect();
                 values.sort_by(f64::total_cmp);
                 let rank = ((values.len() as f64 * 0.99).ceil() as usize).saturating_sub(1);
-                values[rank]
+                Some(values[rank])
             }
-        })
+        }
     };
     SeriesResult { key: key.clone(), count: stats.count, value, points: Vec::new() }
 }
@@ -386,6 +397,34 @@ mod tests {
             .unwrap()
             .run(&s);
         assert_eq!(rate.single(), Some(4.0 / 300.0));
+    }
+
+    #[test]
+    fn rate_is_null_for_degenerate_spans() {
+        let s = TelemetryStore::new();
+        s.append(SeriesKind::Probes, "solo", "pi4", 500, 4.0);
+        // Single point, no window: no span to rate over.
+        let one = Query::parse("select probes where label=solo | agg rate").unwrap().run(&s);
+        assert_eq!(one.single(), None, "single-point rate must be null, not count");
+        assert_eq!(one.series[0].count, 1);
+        // Same-tick burst: span is still zero.
+        s.append(SeriesKind::Probes, "solo", "pi4", 500, 2.0);
+        let burst = Query::parse("select probes where label=solo | agg rate").unwrap().run(&s);
+        assert_eq!(burst.single(), None);
+        // An explicit window supplies the denominator.
+        let windowed = Query::parse("select probes where label=solo | window 100 | agg rate")
+            .unwrap()
+            .run(&s);
+        assert_eq!(windowed.single(), Some(2.0 / 100.0));
+        // And the null serializes as JSON null, not as a number.
+        let text = crate::util::json::to_string(&burst.to_json());
+        let doc = crate::util::json::parse(&text).unwrap();
+        let series = doc.get("series").and_then(Json::as_arr).unwrap();
+        assert!(matches!(series[0].get("value"), Some(Json::Null)));
+        // A real span rates over t_last - t_first as before.
+        s.append(SeriesKind::Probes, "solo", "pi4", 700, 2.0);
+        let spanned = Query::parse("select probes where label=solo | agg rate").unwrap().run(&s);
+        assert_eq!(spanned.single(), Some(3.0 / 200.0));
     }
 
     #[test]

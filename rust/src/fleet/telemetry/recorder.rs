@@ -102,6 +102,23 @@ impl TelemetryRecorder {
         }
     }
 
+    /// A mesh gossip round ran; `delivered` summaries reached a neighbor
+    /// view this round.
+    pub fn gossip_round(&self, at: u64, delivered: u64) {
+        self.store.append(SeriesKind::GossipRounds, "", "", at, delivered as f64);
+    }
+
+    /// Aggregate mesh view age (ticks) observed at a gossip round.
+    pub fn staleness(&self, at: u64, ticks: u64) {
+        self.store.append(SeriesKind::StalenessTicks, "", "", at, ticks as f64);
+    }
+
+    /// An optimistic mesh placement of `job` was refused by `dest` and
+    /// rolled back.
+    pub fn rollback(&self, at: u64, job: &str, dest: &str) {
+        self.store.append(SeriesKind::ConflictRollbacks, job, dest, at, 1.0);
+    }
+
     /// Cache hit/miss deltas since the previous flush. Zero deltas are
     /// recorded too — the run-length codec collapses them, and the sum of
     /// the series then exactly equals the drained report's cache delta.
@@ -134,6 +151,21 @@ mod tests {
         rec.verdict(700, "job-01", "pi4", &DriftVerdict::ModelStale { rolling_smape: 0.9 });
         assert_eq!(store.points(SeriesKind::Verdicts, "job-01", "pi4"), vec![(700, 2.0)]);
         assert_eq!(store.points(SeriesKind::Smape, "job-01", "pi4"), vec![(700, 0.9)]);
+    }
+
+    #[test]
+    fn mesh_hooks_record_health_series() {
+        let store = Arc::new(TelemetryStore::new());
+        let rec = TelemetryRecorder::new(store.clone(), CacheStats::default());
+        rec.gossip_round(200, 6);
+        rec.staleness(200, 40);
+        rec.rollback(200, "m-2", "wally.0");
+        assert_eq!(store.points(SeriesKind::GossipRounds, "", ""), vec![(200, 6.0)]);
+        assert_eq!(store.points(SeriesKind::StalenessTicks, "", ""), vec![(200, 40.0)]);
+        assert_eq!(
+            store.points(SeriesKind::ConflictRollbacks, "m-2", "wally.0"),
+            vec![(200, 1.0)]
+        );
     }
 
     #[test]

@@ -55,11 +55,18 @@ pub enum SeriesKind {
     CacheHits,
     /// Measurement-cache miss delta since the previous flush.
     CacheMisses,
+    /// Mesh gossip rounds (value = summaries delivered that round).
+    GossipRounds,
+    /// Aggregate mesh view age in ticks at each gossip round (staleness).
+    StalenessTicks,
+    /// Optimistic mesh placements refused and rolled back (value 1 per
+    /// rollback; node = the refusing destination).
+    ConflictRollbacks,
 }
 
 impl SeriesKind {
     /// Every kind, in serialization order.
-    pub const ALL: [SeriesKind; 10] = [
+    pub const ALL: [SeriesKind; 13] = [
         SeriesKind::Arrivals,
         SeriesKind::Departures,
         SeriesKind::Verdicts,
@@ -70,6 +77,9 @@ impl SeriesKind {
         SeriesKind::Migrations,
         SeriesKind::CacheHits,
         SeriesKind::CacheMisses,
+        SeriesKind::GossipRounds,
+        SeriesKind::StalenessTicks,
+        SeriesKind::ConflictRollbacks,
     ];
 
     /// Stable wire name used by queries, JSON output, and docs.
@@ -85,6 +95,9 @@ impl SeriesKind {
             SeriesKind::Migrations => "migrations",
             SeriesKind::CacheHits => "cache_hits",
             SeriesKind::CacheMisses => "cache_misses",
+            SeriesKind::GossipRounds => "gossip_rounds",
+            SeriesKind::StalenessTicks => "staleness_ticks",
+            SeriesKind::ConflictRollbacks => "conflict_rollbacks",
         }
     }
 

@@ -15,7 +15,7 @@
 
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use streamprof::coordinator::{
     smape_vs_dataset, PjrtBackend, Profiler, ProfilerConfig, ProfilingBackend,
@@ -25,7 +25,8 @@ use streamprof::earlystop::EarlyStopConfig;
 use streamprof::fleet::telemetry::{Query, TelemetryServer, TelemetryStore};
 use streamprof::fleet::{
     journal_json, sim_fleet, AdaptiveConfig, DriftConfig, DriftVerdict, FleetConfig,
-    FleetDaemon, FleetJobSpec, FleetReport, FleetSession, MeasurementCache, RuntimeShift,
+    FleetDaemon, FleetJobSpec, FleetReport, FleetSession, MeasurementCache, MeshConfig,
+    MeshFault, MeshTopology, RuntimeShift,
 };
 use streamprof::repro;
 use streamprof::runtime::{artifacts_available, default_artifacts_dir, Engine};
@@ -82,6 +83,9 @@ fn print_help() {
          \u{20}           [--stale-jobs 1] [--stale-scale 3.0]\n\
          \u{20}           [--daemon] [--events \"@0 submit 12, @600 retire job-01\"]\n\
          \u{20}           [--journal-out journal.json] (--daemon only)\n\
+         \u{20}           [--mesh full:8|ring:8|line:8|star:8|grid:3x3[@<latency>]]\n\
+         \u{20}           [--gossip-every 200] [--gossip-rounds 5]\n\
+         \u{20}           [--partition \"@400 cut pi4.2-wally.0, @600 lose asok.1\"]\n\
          \u{20}           [--out report.json] [--cache-file cache.json]\n\
          \u{20} serve     [--port 7878] [fleet/daemon options]   serve telemetry over HTTP\n\
          \u{20}           endpoints: /healthz /series /snapshot /query?q=<expr>\n\
@@ -318,6 +322,13 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         .jobs(specs)
         .rebalance(args.flag("rebalance"))
         .cache(cache.clone());
+    if let Some((topo, mcfg, faults)) = mesh_args(args)? {
+        ensure!(!adaptive, "--mesh is sweep-mode only: drop --adaptive");
+        builder = builder.mesh(topo, mcfg);
+        for (at, fault) in faults {
+            builder = builder.mesh_fault_at(at, fault);
+        }
+    }
     if adaptive {
         builder = builder.adaptive(AdaptiveConfig {
             epochs: args.opt_usize("epochs", 3),
@@ -339,6 +350,9 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     }
     if let Some(fleet_plan) = &report.plan {
         print_fleet_plan(fleet_plan);
+    }
+    if let Some(stats) = &report.mesh {
+        print_mesh_stats(stats);
     }
 
     write_fleet_outputs(args, &report, &cache, cache_file.as_deref())
@@ -368,11 +382,17 @@ fn cmd_fleet_daemon(
     let workers = cfg.workers;
     let rounds = cfg.rounds;
     let spec = args.opt_or("events", &format!("@0 submit {}", args.opt_usize("jobs", 12)));
-    let mut daemon = FleetDaemon::builder()
+    let mut builder = FleetDaemon::builder()
         .config(cfg)
         .rebalance(args.flag("rebalance"))
-        .cache(cache.clone())
-        .build();
+        .cache(cache.clone());
+    if let Some((topo, mcfg, faults)) = mesh_args(args)? {
+        builder = builder.mesh(topo, mcfg);
+        for (at, fault) in faults {
+            builder = builder.mesh_fault_at(at, fault);
+        }
+    }
+    let mut daemon = builder.build();
     let last = schedule_events(&mut daemon, &spec, args.opt_u64("seed", 7))?;
 
     daemon.run_until(last)?;
@@ -400,7 +420,81 @@ fn cmd_fleet_daemon(
     if let Some(fleet_plan) = &report.plan {
         print_fleet_plan(fleet_plan);
     }
+    if let Some(stats) = &report.mesh {
+        print_mesh_stats(stats);
+    }
     write_fleet_outputs(args, &report, &cache, cache_file)
+}
+
+/// Parse the `--mesh` / `--gossip-*` / `--partition` option cluster into
+/// the mesh topology, gossip cadence, and scheduled fault list shared by
+/// the batch and `--daemon` fleet paths. `None` when `--mesh` is absent.
+fn mesh_args(args: &Args) -> Result<Option<(MeshTopology, MeshConfig, Vec<(u64, MeshFault)>)>> {
+    let Some(spec) = args.opt("mesh") else {
+        ensure!(args.opt("partition").is_none(), "--partition needs --mesh");
+        return Ok(None);
+    };
+    let topo = MeshTopology::parse(spec)?;
+    let mcfg = MeshConfig {
+        every: args.opt_u64("gossip-every", 200),
+        rounds: args.opt_usize("gossip-rounds", 5),
+    };
+    let faults = match args.opt("partition") {
+        Some(p) => parse_partition(p)?,
+        None => Vec::new(),
+    };
+    Ok(Some((topo, mcfg, faults)))
+}
+
+/// Parse a `--partition` fault spec: comma-separated clauses, each
+/// `@<tick> cut <a>-<b>`, `@<tick> heal <a>-<b>`, or `@<tick> lose <node>`
+/// (node names are the mesh's `<base>.<idx>` names, e.g. `pi4.2`).
+fn parse_partition(spec: &str) -> Result<Vec<(u64, MeshFault)>> {
+    fn link(tok: &str) -> Result<(String, String)> {
+        let (a, b) = tok
+            .split_once('-')
+            .with_context(|| format!("expected <a>-<b>, got '{tok}'"))?;
+        Ok((a.to_string(), b.to_string()))
+    }
+    let mut faults = Vec::new();
+    for clause in spec.split(',') {
+        let toks: Vec<&str> = clause.split_whitespace().collect();
+        if toks.is_empty() {
+            continue;
+        }
+        let tick = toks[0]
+            .strip_prefix('@')
+            .with_context(|| format!("--partition clause '{}' lacks @<tick>", clause.trim()))?;
+        let at: u64 = tick.parse().context("bad --partition tick")?;
+        let fault = match (toks.get(1).copied(), toks.get(2).copied()) {
+            (Some("cut"), Some(pair)) => {
+                let (a, b) = link(pair)?;
+                MeshFault::Cut(a, b)
+            }
+            (Some("heal"), Some(pair)) => {
+                let (a, b) = link(pair)?;
+                MeshFault::Heal(a, b)
+            }
+            (Some("lose"), Some(name)) => MeshFault::Lose(name.to_string()),
+            _ => bail!("bad --partition clause '{}' (cut|heal|lose)", clause.trim()),
+        };
+        faults.push((at, fault));
+    }
+    Ok(faults)
+}
+
+/// One-line mesh-health summary printed after the plan tables.
+fn print_mesh_stats(s: &streamprof::fleet::MeshStats) {
+    println!(
+        "mesh health: {} gossip rounds, {} summaries delivered ({} dropped on faulted links), \
+         {} conflict rollback(s), {} move(s), {} staleness ticks observed",
+        s.gossip_rounds,
+        s.summaries_delivered,
+        s.summaries_dropped,
+        s.conflict_rollbacks,
+        s.moves,
+        s.staleness_ticks
+    );
 }
 
 /// Parse an `--events` timeline spec and schedule every clause on the
@@ -609,8 +703,9 @@ fn print_fleet_sweep(report: &FleetReport, n_jobs: usize, workers: usize, rounds
 }
 
 fn print_fleet_plan(fleet_plan: &streamprof::fleet::FleetPlan) {
-    let mut moves = Table::new(&["job", "prio", "from", "to", "limit", "slack after"])
-        .with_title("Shed-job migrations (cross-node placement via translated models)");
+    let mut moves =
+        Table::new(&["job", "prio", "from", "to", "limit", "slack after", "reprofile"])
+            .with_title("Shed-job migrations (cross-node placement via translated models)");
     for m in &fleet_plan.migrations {
         moves.rowd(&[
             &m.job,
@@ -619,6 +714,7 @@ fn print_fleet_plan(fleet_plan: &streamprof::fleet::FleetPlan) {
             &m.to,
             &format!("{:.1}", m.limit),
             &format!("{:.1}", m.slack_after),
+            &m.needs_reprofile,
         ]);
     }
     if fleet_plan.migrations.is_empty() {

@@ -11,7 +11,10 @@ use streamprof::coordinator::{
 use streamprof::earlystop::{EarlyStopConfig, EarlyStopMonitor};
 use streamprof::fit::{ModelKind, ProfilePoint, RuntimeModel};
 use streamprof::fleet::telemetry::{SeriesBuf, SeriesKind, TelemetryStore};
-use streamprof::fleet::{rebalance, FleetJob, MeasurementCache};
+use streamprof::fleet::{
+    mesh_rebalance, rebalance, rebalance_across, FleetJob, MeasurementCache, MeshConfig, MeshFault,
+    MeshTopology,
+};
 use streamprof::simulator::{Algo, SimulatedJob, NODES};
 use streamprof::strategies::{self, initial_limits};
 use streamprof::util::Rng;
@@ -293,6 +296,170 @@ fn prop_fleet_placement_invariants() {
             assert_eq!((&x.job, x.from, x.to), (&y.job, y.from, y.to));
             assert!((x.limit - y.limit).abs() < 1e-12, "case {case}");
         }
+    }
+}
+
+/// Random job set for the mesh properties: jobs homed on mesh member
+/// nodes (clones of the Table-I machines), with the same power-law model
+/// family as [`random_fleet`].
+fn random_mesh_fleet(rng: &mut Rng, topo: &MeshTopology, n_jobs: usize) -> Vec<FleetJob> {
+    (0..n_jobs)
+        .map(|i| {
+            let node = topo.nodes()[rng.below(topo.nodes().len())];
+            FleetJob {
+                name: format!("mjob-{i:03}"),
+                node,
+                model: RuntimeModel {
+                    kind: ModelKind::Full,
+                    a: rng.uniform(0.005, 0.08),
+                    b: node.scaling,
+                    c: rng.uniform(0.0005, 0.005),
+                    d: node.limit_stretch(),
+                    fit_cost: 0.0,
+                },
+                rate_hz: rng.uniform(0.5, 20.0),
+                priority: 1 + rng.below(5) as i32,
+            }
+        })
+        .collect()
+}
+
+/// Property: mesh migrations only ever hop along topology links — the
+/// local-optimistic scheduler never consults anything beyond its direct
+/// neighbors' gossiped summaries, so a move to a non-adjacent node is
+/// impossible by construction — and every plan entry is a mesh member.
+#[test]
+fn prop_mesh_moves_follow_topology_links() {
+    let mut rng = Rng::new(0x3E5B);
+    let shapes = ["ring:8", "line:7", "star:9", "grid:3x4", "full:6"];
+    for case in 0..CASES / 2 {
+        let topo = MeshTopology::parse(shapes[rng.below(shapes.len())]).unwrap();
+        let jobs = random_mesh_fleet(&mut rng, &topo, 8 + rng.below(20));
+        let cfg = MeshConfig::default();
+        let (plan, stats) = mesh_rebalance(&jobs, topo.clone(), &cfg, &[]).unwrap();
+        assert_eq!(stats.gossip_rounds as usize, cfg.rounds, "case {case}");
+        for m in &plan.migrations {
+            assert!(
+                topo.are_linked(m.from, m.to),
+                "case {case}: {} hopped {} -> {} without a link",
+                m.job,
+                m.from,
+                m.to
+            );
+            assert_ne!(m.from, m.to, "case {case}: self-migration");
+        }
+        for (node, _) in &plan.plans {
+            assert!(topo.contains(node), "case {case}: plan entry for non-member {node}");
+        }
+    }
+}
+
+/// Property: decentralized scheduling only wins — a job the per-node
+/// baseline plan guaranteed at home is never displaced by mesh moves
+/// (`try_accept` grants from residual capacity only, and crowded-out
+/// migrants roll back), and the plan's baseline counter matches an
+/// independent per-node recomputation.
+#[test]
+fn prop_mesh_never_displaces_guaranteed_jobs() {
+    let mut rng = Rng::new(0xD15B);
+    for case in 0..CASES / 2 {
+        let topo = MeshTopology::parse("grid:3x3").unwrap();
+        let jobs = random_mesh_fleet(&mut rng, &topo, 10 + rng.below(16));
+        let mut baseline_guaranteed: Vec<String> = Vec::new();
+        for &node in topo.nodes() {
+            let mut mgr = streamprof::coordinator::JobManager::new(node.cores);
+            for j in jobs.iter().filter(|j| j.node.name == node.name) {
+                mgr.register(streamprof::coordinator::ManagedJob {
+                    name: j.name.clone(),
+                    model: j.model.clone(),
+                    rate_hz: j.rate_hz,
+                    priority: j.priority,
+                });
+            }
+            let planned = mgr.plan();
+            baseline_guaranteed
+                .extend(planned.assignments.into_iter().filter(|a| a.guaranteed).map(|a| a.name));
+        }
+        let (plan, _) = mesh_rebalance(&jobs, topo, &MeshConfig::default(), &[]).unwrap();
+        assert_eq!(plan.metrics.guaranteed_before, baseline_guaranteed.len(), "case {case}");
+        for name in &baseline_guaranteed {
+            let (_, a) = plan.assignment(name).expect("baseline job planned");
+            assert!(a.guaranteed, "case {case}: {name} displaced by mesh moves");
+        }
+        assert!(plan.metrics.guaranteed_after >= plan.metrics.guaranteed_before, "case {case}");
+    }
+}
+
+/// Property: a mesh run is a pure function of the job *set*, topology,
+/// cadence, and fault schedule — a second identical run, and a run fed
+/// the same jobs in permuted submission order, both produce identical
+/// placements, migration sequences, and run counters, even with a link
+/// cut landing mid-run and latency-delayed (stale) gossip.
+#[test]
+fn prop_mesh_schedule_deterministic_under_permutation() {
+    let mut rng = Rng::new(0x5EED);
+    for case in 0..CASES / 3 {
+        let topo = MeshTopology::parse("ring:6@25").unwrap();
+        let jobs = random_mesh_fleet(&mut rng, &topo, 8 + rng.below(14));
+        let faults = vec![(200u64, MeshFault::Cut("wally.0".into(), "asok.1".into()))];
+        let cfg = MeshConfig::default();
+        let (plan, stats) = mesh_rebalance(&jobs, topo.clone(), &cfg, &faults).unwrap();
+
+        let mut permuted = jobs.clone();
+        for i in (1..permuted.len()).rev() {
+            let j = rng.below(i + 1);
+            permuted.swap(i, j);
+        }
+        let runs = [
+            mesh_rebalance(&jobs, topo.clone(), &cfg, &faults).unwrap(),
+            mesh_rebalance(&permuted, topo, &cfg, &faults).unwrap(),
+        ];
+        for (again, more) in &runs {
+            assert_eq!(plan.guaranteed_jobs(), again.guaranteed_jobs(), "case {case}");
+            assert_eq!(plan.migrations.len(), again.migrations.len(), "case {case}");
+            for (x, y) in plan.migrations.iter().zip(&again.migrations) {
+                assert_eq!((&x.job, x.from, x.to), (&y.job, y.from, y.to), "case {case}");
+                assert_eq!(x.limit.to_bits(), y.limit.to_bits(), "case {case}");
+            }
+            assert_eq!(plan.metrics.guaranteed_after, again.metrics.guaranteed_after);
+            assert_eq!(stats.gossip_rounds, more.gossip_rounds, "case {case}");
+            assert_eq!(stats.summaries_delivered, more.summaries_delivered, "case {case}");
+            assert_eq!(stats.conflict_rollbacks, more.conflict_rollbacks, "case {case}");
+            assert_eq!(stats.moves, more.moves, "case {case}");
+        }
+    }
+}
+
+/// Property: on a fully-connected 120-node mesh the local-optimistic
+/// scheduler converges to at least 90% of the centralized planner's
+/// guaranteed count — with zero-latency gossip (fresh global views), and
+/// still under one-round-stale views plus a handful of cut links.
+#[test]
+fn prop_mesh_converges_toward_centralized_plan() {
+    let mut rng = Rng::new(0xC04E);
+    for (case, spec) in ["full:120", "full:120@30"].into_iter().enumerate() {
+        let topo = MeshTopology::parse(spec).unwrap();
+        let jobs = random_mesh_fleet(&mut rng, &topo, 300);
+        let centralized = rebalance_across(&jobs, topo.nodes());
+        let mut faults: Vec<(u64, MeshFault)> = Vec::new();
+        if case == 1 {
+            // Stale-gossip variant: also cut six links before round one.
+            for pair in topo.nodes().windows(2).take(6) {
+                let fault = MeshFault::Cut(pair[0].name.into(), pair[1].name.into());
+                faults.push((0, fault));
+            }
+        }
+        let cfg = MeshConfig { every: 200, rounds: 8 };
+        let (plan, stats) = mesh_rebalance(&jobs, topo, &cfg, &faults).unwrap();
+        assert_eq!(plan.metrics.jobs, jobs.len(), "{spec}: every job planned");
+        assert!(stats.summaries_delivered > 0, "{spec}: gossip flowed");
+        let target = centralized.metrics.guaranteed_after;
+        let floor = (target as f64 * 0.9).ceil() as usize;
+        assert!(
+            plan.metrics.guaranteed_after >= floor,
+            "{spec}: mesh guaranteed {} < 90% of centralized {target}",
+            plan.metrics.guaranteed_after
+        );
     }
 }
 
