@@ -43,6 +43,7 @@ fn main() -> anyhow::Result<()> {
             strategy: "nms".to_string(),
             profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
             horizon: 1000,
+            probe_workers: 0,
         })
         .jobs(specs)
         .run()?;

@@ -25,6 +25,7 @@ fn main() -> anyhow::Result<()> {
         strategy: "nms".to_string(),
         profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
         horizon: 500,
+        probe_workers: 0,
     };
     let roster = sim_fleet(6, 7);
     let mut daemon = FleetDaemon::builder().config(cfg).jobs(roster).rebalance(true).build();

@@ -26,6 +26,7 @@ fn main() -> anyhow::Result<()> {
         strategy: "nms".to_string(),
         profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
         horizon: 500,
+        probe_workers: 0,
     };
     let store = Arc::new(TelemetryStore::new());
     let mut daemon = FleetDaemon::builder()

@@ -56,6 +56,7 @@
 //! (pre-stats) still restore, with zeroed carried counters.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, MutexGuard};
 
 use anyhow::{bail, ensure, Result};
@@ -105,6 +106,18 @@ impl CacheStats {
         } else {
             self.hits as f64 / total as f64
         }
+    }
+
+    /// Fold another stats delta into this one — how the daemon's
+    /// overlapped completion path accumulates per-profile cache
+    /// contributions into a deterministic virtual total.
+    pub fn absorb(&mut self, d: &CacheStats) {
+        self.hits += d.hits;
+        self.misses += d.misses;
+        self.stale_hits_refused += d.stale_hits_refused;
+        self.evictions += d.evictions;
+        self.inserts += d.inserts;
+        self.saved_wallclock += d.saved_wallclock;
     }
 
     /// Counter deltas since an `earlier` snapshot of the same cache —
@@ -161,6 +174,15 @@ impl Shard {
 /// semantics are identical to the former single-mutex implementation.
 pub struct MeasurementCache {
     shards: [Mutex<Shard>; SHARD_COUNT],
+    /// Per-stripe hit/miss mirrors maintained *outside* the stripe locks:
+    /// each `lookup` bumps exactly one atomic here (while holding its
+    /// stripe lock, so the mirror never drifts from the locked counters).
+    /// [`MeasurementCache::hits`] / [`MeasurementCache::misses`] sum these
+    /// with relaxed loads — the fast path the daemon's replan tail and the
+    /// telemetry cache-flush use instead of aggregating all eight stripes
+    /// under their mutexes.
+    fast_hits: [AtomicU64; SHARD_COUNT],
+    fast_misses: [AtomicU64; SHARD_COUNT],
 }
 
 impl Default for MeasurementCache {
@@ -171,7 +193,25 @@ impl Default for MeasurementCache {
 
 impl MeasurementCache {
     pub fn new() -> Self {
-        Self { shards: std::array::from_fn(|_| Mutex::new(Shard::default())) }
+        Self {
+            shards: std::array::from_fn(|_| Mutex::new(Shard::default())),
+            fast_hits: std::array::from_fn(|_| AtomicU64::new(0)),
+            fast_misses: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Lifetime cache hits — one relaxed atomic load per stripe, no
+    /// stripe lock. Exact whenever no lookup is mid-flight (every
+    /// increment happens under the stripe lock the full `stats()`
+    /// aggregation would take anyway).
+    pub fn hits(&self) -> u64 {
+        self.fast_hits.iter().map(|a| a.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Lifetime cache misses — the lock-free counterpart of
+    /// `stats().misses`, see [`MeasurementCache::hits`].
+    pub fn misses(&self) -> u64 {
+        self.fast_misses.iter().map(|a| a.load(Ordering::Relaxed)).sum()
     }
 
     /// The stripe a label lives on. Deterministic (FNV-1a), so snapshots
@@ -210,7 +250,23 @@ impl MeasurementCache {
     /// (a miss, plus `stale_hits_refused`) so the caller re-executes. On a
     /// hit the original run's wallclock is credited to `saved_wallclock`.
     pub fn lookup(&self, label: &str, limit: f64, delta: f64) -> Option<Measurement> {
-        let mut shard = self.shard(label);
+        self.lookup_tallied(label, limit, delta, &mut CacheStats::default())
+    }
+
+    /// [`MeasurementCache::lookup`], additionally mirroring the hit /
+    /// miss / stale-refusal / saved-wallclock accounting of this single
+    /// call into `tally` — how [`CachedBackend`] attributes cache traffic
+    /// to the one profile that caused it (the per-outcome delta the
+    /// overlapped daemon merges deterministically).
+    pub fn lookup_tallied(
+        &self,
+        label: &str,
+        limit: f64,
+        delta: f64,
+        tally: &mut CacheStats,
+    ) -> Option<Measurement> {
+        let idx = Self::shard_index(label);
+        let mut shard = self.shards[idx].lock().unwrap();
         let (delta, generation) = shard.label_state(label, delta);
         let key = (label.to_string(), grid_bucket(limit, delta));
         let entry = shard.map.get(&key).map(|e| (e.m, e.generation));
@@ -218,6 +274,7 @@ impl MeasurementCache {
             Some((m, stamped)) if stamped == generation => Some(m),
             Some(_) => {
                 shard.stats.stale_hits_refused += 1;
+                tally.stale_hits_refused += 1;
                 None
             }
             None => None,
@@ -226,10 +283,15 @@ impl MeasurementCache {
             Some(m) => {
                 shard.stats.hits += 1;
                 shard.stats.saved_wallclock += m.wallclock;
+                self.fast_hits[idx].fetch_add(1, Ordering::Relaxed);
+                tally.hits += 1;
+                tally.saved_wallclock += m.wallclock;
                 Some(m)
             }
             None => {
                 shard.stats.misses += 1;
+                self.fast_misses[idx].fetch_add(1, Ordering::Relaxed);
+                tally.misses += 1;
                 None
             }
         }
@@ -526,6 +588,8 @@ impl MeasurementCache {
         // Fold the carried counters (and the restored entries, which count
         // as inserts) into stripe 0; `stats()` sums the stripes, so where
         // the carry lands is invisible to every reader.
+        self.fast_hits[0].fetch_add(carried.hits, Ordering::Relaxed);
+        self.fast_misses[0].fetch_add(carried.misses, Ordering::Relaxed);
         let s = &mut guards[0].stats;
         s.hits += carried.hits;
         s.misses += carried.misses;
@@ -548,11 +612,23 @@ pub struct CachedBackend<'a, B: ProfilingBackend> {
     cache: &'a MeasurementCache,
     label: String,
     delta: f64,
+    /// Cache traffic caused by *this* backend: every lookup and insert is
+    /// mirrored here, so the profile that owns the backend can report its
+    /// exact cache contribution without re-aggregating global stats.
+    tally: CacheStats,
 }
 
 impl<'a, B: ProfilingBackend> CachedBackend<'a, B> {
     pub fn new(inner: B, cache: &'a MeasurementCache, label: String, delta: f64) -> Self {
-        Self { inner, cache, label, delta }
+        Self { inner, cache, label, delta, tally: CacheStats::default() }
+    }
+
+    /// The cache traffic this backend generated so far (hits, misses =
+    /// probes actually executed, inserts, stale refusals, wallclock
+    /// saved). A session's tally equals the global stats delta across the
+    /// session whenever no other worker touches the cache concurrently.
+    pub fn tally(&self) -> CacheStats {
+        self.tally
     }
 
     fn serve(&self, limit: f64, cached: Measurement) -> Measurement {
@@ -562,11 +638,13 @@ impl<'a, B: ProfilingBackend> CachedBackend<'a, B> {
 
 impl<B: ProfilingBackend> ProfilingBackend for CachedBackend<'_, B> {
     fn measure(&mut self, limit: f64, samples: usize) -> Measurement {
-        if let Some(m) = self.cache.lookup(&self.label, limit, self.delta) {
+        if let Some(m) = self.cache.lookup_tallied(&self.label, limit, self.delta, &mut self.tally)
+        {
             return self.serve(limit, m);
         }
         let m = self.inner.measure(limit, samples);
         self.cache.insert(&self.label, self.delta, m);
+        self.tally.inserts += 1;
         m
     }
 
@@ -576,11 +654,13 @@ impl<B: ProfilingBackend> ProfilingBackend for CachedBackend<'_, B> {
         cfg: &EarlyStopConfig,
         cap: usize,
     ) -> Measurement {
-        if let Some(m) = self.cache.lookup(&self.label, limit, self.delta) {
+        if let Some(m) = self.cache.lookup_tallied(&self.label, limit, self.delta, &mut self.tally)
+        {
             return self.serve(limit, m);
         }
         let m = self.inner.measure_early_stop(limit, cfg, cap);
         self.cache.insert(&self.label, self.delta, m);
+        self.tally.inserts += 1;
         m
     }
 
@@ -623,6 +703,39 @@ mod tests {
         assert_eq!(s.inserts, 1);
         assert!((s.saved_wallclock - m1.wallclock).abs() < 1e-12);
         assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fast_hit_miss_accessors_mirror_the_locked_stats() {
+        let cache = MeasurementCache::new();
+        let mut b = backend(&cache, 11);
+        b.measure(0.5, 1000);
+        b.measure(0.5, 1000);
+        b.measure(0.7, 1000);
+        let s = cache.stats();
+        assert_eq!(cache.hits(), s.hits);
+        assert_eq!(cache.misses(), s.misses);
+        assert_eq!((cache.hits(), cache.misses()), (1, 2));
+    }
+
+    #[test]
+    fn backend_tally_tracks_its_own_cache_traffic() {
+        let cache = MeasurementCache::new();
+        let mut b = backend(&cache, 12);
+        b.measure(0.5, 1000); // miss + insert
+        b.measure(0.5, 1000); // hit
+        let t = b.tally();
+        assert_eq!((t.hits, t.misses, t.inserts), (1, 1, 1));
+        assert!(t.saved_wallclock > 0.0, "the hit credits the saved run");
+        // Aging the label makes the next probe a stale refusal + miss.
+        cache.bump_generation("pi4/arima");
+        b.measure(0.5, 1000);
+        let t = b.tally();
+        assert_eq!((t.misses, t.stale_hits_refused, t.inserts), (2, 1, 2));
+        // The backend's private tally matches the global lifetime stats
+        // (nothing else touched this cache).
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.stale_hits_refused), (t.hits, t.misses, 1));
     }
 
     #[test]

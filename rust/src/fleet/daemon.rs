@@ -7,10 +7,11 @@
 //!  submit/retire/observe_verdict ──► BinaryHeap<FleetEvent>  (virtual time)
 //!                                        │ step / run_until / drain
 //!                                        ▼
-//!   JobArrival ──┐                 coalesced Replan ──► run_sweep (newcomers)
-//!   JobDeparture ├─► roster edits ─► plan_capacity    profile_job_with (drift)
+//!   JobArrival ──┐                 coalesced Replan ──► run_sweep (bootstrap)
+//!   JobDeparture ├─► roster edits ─► plan_capacity    dispatch / profile (drift)
 //!   DriftVerdict ┘                                    rebalance (on drain)
-//!   EpochTick ────► AdaptiveLoop::run_epoch (drift-gated re-profiling)
+//!   EpochTick ──────► AdaptiveLoop::run_epoch (drift-gated re-profiling)
+//!   ProbeCompletion ► settle pool results in dispatch order (overlapped)
 //! ```
 //!
 //! Determinism is load-bearing: events are ordered by `(tick, class,
@@ -23,12 +24,27 @@
 //! sweep over the full roster — byte-identical to
 //! [`FleetSession::run`](super::FleetSession::run), which is now
 //! implemented as exactly that wrapper (enforced by `tests/fleet_e2e.rs`).
+//!
+//! ## Overlapped profiling (`probe_workers > 0`)
+//!
+//! With [`FleetConfig::probe_workers`] set, a replan's pending profiles
+//! are *dispatched* to the persistent [`ProbePool`] (journaled as
+//! `probe-dispatched`) instead of executed inline, and the event loop
+//! moves on — new arrivals and verdicts keep dispatching while earlier
+//! probes are still running, so profiling overlaps event processing
+//! across replans. Finished work re-enters the loop through
+//! [`FleetEvent::ProbeCompletion`] events and is **settled strictly in
+//! dispatch order** regardless of worker finish order; capacity planning
+//! defers until the replan's whole batch has settled. The drained report
+//! is byte-identical to the synchronous path at `probe_workers == 1`
+//! (cache-delta accounting uses deterministic per-outcome tallies, not
+//! wallclock-dependent global snapshots).
 
 use std::cmp::{Ordering, Reverse};
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::fit::RuntimeModel;
 use crate::util::json::Json;
@@ -38,6 +54,7 @@ use super::drift::{AdaptiveConfig, AdaptiveLoop, AdaptiveSummary, DriftVerdict};
 use super::mesh::{Mesh, MeshConfig, MeshFault, MeshStats, MeshTopology};
 use super::migrate::rebalance;
 use super::placement::FleetJob;
+use super::pool::ProbePool;
 use super::session::FleetReport;
 use super::telemetry::{TelemetryRecorder, TelemetryStore};
 use super::worker::{self, JobOutcome, ProfilePass};
@@ -70,13 +87,17 @@ pub enum FleetEvent {
         /// Epoch number, counted from 1.
         epoch: usize,
     },
-    /// Record of probes a re-profile actually executed (also emitted
-    /// into the journal by the daemon's own replans).
+    /// A dispatched probe finished (overlapped mode): settle every
+    /// outstanding pool result up to `seq` back into the live state, in
+    /// dispatch order. Class 2: same-tick mutations and the replan that
+    /// dispatched the probe sort first; gossip rounds after, so a round
+    /// always sees fully merged outcomes. The synchronous path journals
+    /// its `probe-completion` entries inline and never schedules this.
     ProbeCompletion {
-        /// Name of the re-profiled job.
+        /// Name of the profiled job (journal/display only).
         job: String,
-        /// Probes that missed the cache and executed.
-        executed: u64,
+        /// Pool dispatch sequence number to settle through.
+        seq: u64,
     },
     /// A mesh fault lands on the topology (link partition/heal, node
     /// loss). Class 0, like every other world mutation, so a same-tick
@@ -85,8 +106,9 @@ pub enum FleetEvent {
     /// Re-plan request: profile pending work, recompute node plans.
     Replan,
     /// One mesh gossip round (pre-scheduled at build on the configured
-    /// cadence). Class 2: a same-tick coalesced replan runs *first*, so
-    /// the round gossips fresh post-replan capacity summaries.
+    /// cadence). Class 3: a same-tick coalesced replan (class 1) and any
+    /// probe completions (class 2) run *first*, so the round gossips
+    /// fresh post-replan capacity summaries.
     GossipRound,
 }
 
@@ -175,6 +197,18 @@ struct PendingWork {
     /// `None` = fresh arrival (full cold profile); `Some` = drift
     /// verdict (warm single-round re-profile).
     verdict: Option<DriftVerdict>,
+}
+
+/// A probe dispatched to the pool but not yet merged back — the
+/// daemon-side record of in-flight work, settled strictly in dispatch
+/// order (overlapped mode only).
+struct OutstandingProbe {
+    /// Pool dispatch sequence number.
+    seq: u64,
+    /// Job name (journal + conflict detection).
+    name: String,
+    /// Home-node name at dispatch time (telemetry key).
+    node: &'static str,
 }
 
 /// Builder for a [`FleetDaemon`] — deliberately the same vocabulary as
@@ -278,11 +312,20 @@ impl FleetDaemonBuilder {
         let cache = self.cache.unwrap_or_default();
         let stats_at_build = cache.stats();
         let telemetry = self.telemetry.map(|s| TelemetryRecorder::new(s, stats_at_build));
+        // One persistent pool for the daemon's whole lifetime — bootstrap
+        // sweeps included. `probe_workers == 0` (synchronous mode) sizes
+        // it like the old per-sweep scoped pool.
+        let pool_workers = match self.cfg.probe_workers {
+            0 => self.cfg.workers.max(1),
+            n => n,
+        };
+        let pool = ProbePool::new(Arc::clone(&cache), pool_workers);
         let mut daemon = FleetDaemon {
             cfg: self.cfg,
             rebalance: self.rebalance,
             adaptive: self.adaptive,
             cache,
+            pool,
             stats_at_build,
             sweep_base: stats_at_build,
             clock: 0,
@@ -290,6 +333,10 @@ impl FleetDaemonBuilder {
             heap: BinaryHeap::new(),
             roster: Vec::new(),
             pending: Vec::new(),
+            outstanding: VecDeque::new(),
+            batches: VecDeque::new(),
+            settled_below: 0,
+            virt: stats_at_build,
             bootstrapped: false,
             replan_queued: false,
             sweep: None,
@@ -337,6 +384,9 @@ pub struct FleetDaemon {
     rebalance: bool,
     adaptive: Option<AdaptiveConfig>,
     cache: Arc<MeasurementCache>,
+    /// Persistent profiling workers, shared by every replan (bootstrap
+    /// sweeps included) for the daemon's whole lifetime.
+    pool: ProbePool,
     /// Cache stats when the daemon was built — the report's delta base.
     stats_at_build: CacheStats,
     /// Cache stats immediately before the bootstrap sweep — the sweep
@@ -348,6 +398,20 @@ pub struct FleetDaemon {
     /// Current fleet roster, in arrival order.
     roster: Vec<FleetJobSpec>,
     pending: Vec<PendingWork>,
+    /// Dispatched-but-unmerged probes, in dispatch order (overlapped
+    /// mode; always empty when `probe_workers == 0`).
+    outstanding: VecDeque<OutstandingProbe>,
+    /// Last dispatch seq of each replan batch whose planning tail is
+    /// still deferred; a batch's tail runs once every seq up to its
+    /// marker has settled.
+    batches: VecDeque<u64>,
+    /// Watermark: every dispatch seq `< settled_below` has been settled.
+    settled_below: u64,
+    /// Deterministic view of the cache's lifetime stats in overlapped
+    /// mode: accumulated from per-outcome tallies strictly in dispatch
+    /// order, so planning tails never read wallclock-dependent global
+    /// counters while later probes are still in flight.
+    virt: CacheStats,
     bootstrapped: bool,
     replan_queued: bool,
     /// Live sweep state (sweep mode; adaptive mode keeps its state in
@@ -473,6 +537,10 @@ impl FleetDaemon {
     /// session returns for the equivalent schedule.
     pub fn drain(mut self) -> Result<FleetReport> {
         while self.step()? {}
+        // Every completion event has popped, so every dispatched probe
+        // has settled and the pool is quiescent.
+        debug_assert!(self.outstanding.is_empty(), "drain left probes unsettled");
+        debug_assert!(self.batches.is_empty(), "drain left a planning tail deferred");
         let adaptive = match self.adaptive_loop.take() {
             Some(al) => Some(al.finish(&self.cache)),
             None => None,
@@ -502,7 +570,8 @@ impl FleetDaemon {
                 t.headroom(now, &p.plans);
                 t.migrations(now, p);
             }
-            t.cache_flush(now, self.cache.stats());
+            // Quiescent pool: the wait-free accessors are exact here.
+            t.cache_flush(now, self.cache.hits(), self.cache.misses());
         }
         let cache = self.cache.stats().delta_since(&self.stats_at_build);
         let mut report = FleetReport::assemble(self.sweep, adaptive, plan, cache);
@@ -513,7 +582,8 @@ impl FleetDaemon {
     fn schedule(&mut self, at: u64, event: FleetEvent) {
         let class = match event {
             FleetEvent::Replan => 1,
-            FleetEvent::GossipRound => 2,
+            FleetEvent::ProbeCompletion { .. } => 2,
+            FleetEvent::GossipRound => 3,
             _ => 0,
         };
         let at = at.max(self.clock);
@@ -540,15 +610,10 @@ impl FleetDaemon {
         self.metrics.events_processed += 1;
         match event {
             FleetEvent::JobArrival(spec) => self.on_arrival(*spec),
-            FleetEvent::JobDeparture(name) => self.on_departure(&name),
+            FleetEvent::JobDeparture(name) => self.on_departure(&name)?,
             FleetEvent::DriftVerdict { job, verdict } => self.on_verdict(&job, verdict),
             FleetEvent::EpochTick { epoch } => self.on_epoch_tick(epoch)?,
-            FleetEvent::ProbeCompletion { job, executed } => {
-                self.record("probe-completion", format!("{job}: {executed} probes executed"));
-                if let Some(t) = &self.telemetry {
-                    t.probes(self.clock, &job, roster_node(&self.roster, &job), executed);
-                }
-            }
+            FleetEvent::ProbeCompletion { job, seq } => self.on_probe_completion(&job, seq)?,
             FleetEvent::MeshFault(fault) => self.on_mesh_fault(fault)?,
             FleetEvent::Replan => self.on_replan()?,
             FleetEvent::GossipRound => self.on_gossip_round()?,
@@ -569,7 +634,11 @@ impl FleetDaemon {
         self.schedule_replan();
     }
 
-    fn on_departure(&mut self, name: &str) {
+    fn on_departure(&mut self, name: &str) -> Result<()> {
+        // Departures consume profiled state (they purge outcomes by
+        // name), so every in-flight probe must merge first — otherwise a
+        // settle after this purge would resurrect the departed job.
+        self.settle_all()?;
         self.metrics.departures += 1;
         self.record("departure", name.to_string());
         if let Some(t) = &self.telemetry {
@@ -595,6 +664,7 @@ impl FleetDaemon {
         if self.bootstrapped {
             self.schedule_replan();
         }
+        Ok(())
     }
 
     fn on_verdict(&mut self, job: &str, verdict: DriftVerdict) {
@@ -619,6 +689,9 @@ impl FleetDaemon {
     }
 
     fn on_epoch_tick(&mut self, epoch: usize) -> Result<()> {
+        // The epoch probes and re-profiles through the shared cache on
+        // this thread; in-flight pool work must land first.
+        self.settle_all()?;
         self.record("epoch-tick", format!("epoch {epoch}"));
         let Some(al) = self.adaptive_loop.as_mut() else {
             return Ok(());
@@ -658,7 +731,15 @@ impl FleetDaemon {
                 t.headroom(now, &plan.plans);
                 t.migrations(now, plan);
             }
-            t.cache_flush(now, self.cache.stats());
+            // Pool quiescent after settle_all: the wait-free accessors
+            // are exact.
+            t.cache_flush(now, self.cache.hits(), self.cache.misses());
+        }
+        // The epoch mutated the cache outside the dispatch/settle
+        // protocol; with the pool quiescent the real counters are safe
+        // to resynchronize into the deterministic view.
+        if self.overlap() {
+            self.virt = self.cache.stats();
         }
         Ok(())
     }
@@ -671,8 +752,13 @@ impl FleetDaemon {
             self.record("replan", format!("bootstrap over {} jobs", self.roster.len()));
             match self.adaptive.clone() {
                 Some(acfg) => {
-                    let al =
-                        AdaptiveLoop::start(&self.cfg, &self.cache, self.roster.clone(), &acfg)?;
+                    let al = AdaptiveLoop::start(
+                        &self.cfg,
+                        &self.cache,
+                        &self.pool,
+                        self.roster.clone(),
+                        &acfg,
+                    )?;
                     for e in 1..=acfg.epochs {
                         let at = (self.cfg.horizon + e * acfg.epoch_ticks) as u64;
                         self.schedule(at, FleetEvent::EpochTick { epoch: e });
@@ -686,7 +772,7 @@ impl FleetDaemon {
                 }
                 None => {
                     self.sweep_base = self.cache.stats();
-                    let sweep = run_sweep(&self.cfg, &self.cache, self.roster.clone())?;
+                    let sweep = run_sweep(&self.cfg, &self.pool, self.roster.clone())?;
                     self.next_index = sweep.outcomes.len();
                     if let Some(t) = &self.telemetry {
                         for o in &sweep.outcomes {
@@ -696,25 +782,61 @@ impl FleetDaemon {
                     self.sweep = Some(sweep);
                 }
             }
+            // The bootstrap sweep ran to completion through the pool, so
+            // the real counters are exact — seed the deterministic view.
+            if self.overlap() {
+                self.virt = self.cache.stats();
+            }
         } else {
             self.record("replan", format!("{} pending updates", self.pending.len()));
         }
         let work = std::mem::take(&mut self.pending);
-        for w in work {
-            self.apply_pending(w)?;
+        if self.overlap() {
+            // Dispatch phase: hand every pending profile to the pool and
+            // return to the event loop; the planning tail runs once the
+            // batch's last dispatch settles (or immediately when nothing
+            // was dispatched — matching the synchronous tail count).
+            let mut last_dispatched = None;
+            for w in work {
+                if let Some(seq) = self.dispatch_pending(w)? {
+                    last_dispatched = Some(seq);
+                }
+            }
+            match last_dispatched {
+                Some(last) => self.batches.push_back(last),
+                None => self.replan_tail(),
+            }
+        } else {
+            for w in work {
+                self.apply_pending(w)?;
+            }
+            self.replan_tail();
         }
+        Ok(())
+    }
+
+    /// Whether probe execution is overlapped (dispatch/completion split)
+    /// rather than synchronous inside each replan event.
+    fn overlap(&self) -> bool {
+        self.cfg.probe_workers > 0
+    }
+
+    /// The planning tail of a replan: recompute capacity plans over the
+    /// merged outcomes and emit the planning telemetry. Overlapped mode
+    /// defers this until the replan's whole batch has settled.
+    fn replan_tail(&mut self) {
+        let cache_now = if self.overlap() { self.virt } else { self.cache.stats() };
         if let Some(sweep) = &mut self.sweep {
             sweep.plans = plan_capacity(&sweep.outcomes);
-            sweep.cache = self.cache.stats().delta_since(&self.sweep_base);
+            sweep.cache = cache_now.delta_since(&self.sweep_base);
         }
         let now = self.clock;
         if let Some(t) = self.telemetry.as_mut() {
             if let Some(sweep) = &self.sweep {
                 t.headroom(now, &sweep.plans);
             }
-            t.cache_flush(now, self.cache.stats());
+            t.cache_flush(now, cache_now.hits, cache_now.misses);
         }
-        Ok(())
     }
 
     /// Profile one pending unit of work: a fresh arrival cold (the full
@@ -753,15 +875,143 @@ impl FleetDaemon {
                 rounds: Some(1),
             },
         };
-        let miss_before = self.cache.stats().misses;
         let outcome = worker::profile_job_with(&spec, &self.cfg, &self.cache, 0, &pass)?;
-        let executed = self.cache.stats().misses - miss_before;
+        // The outcome's own tally, not two full sharded-stats
+        // aggregations around the profile: same value (this thread is
+        // the only prober here) at zero lock traffic.
+        let executed = outcome.cache_delta.misses;
         self.record("probe-completion", format!("{}: {executed} probes executed", spec.name));
         if let Some(t) = &self.telemetry {
             t.probes(self.clock, &spec.name, spec.node.name, executed);
             t.outcome_runtimes(self.clock, &outcome);
         }
         self.merge_outcome(outcome);
+        Ok(())
+    }
+
+    /// Overlapped counterpart of [`FleetDaemon::apply_pending`]: the same
+    /// validation and pass construction, but the profile is *dispatched*
+    /// to the pool (journaled as `probe-dispatched`) and merges later, at
+    /// settle time. Returns the dispatch seq, or `None` when the work was
+    /// dropped (job retired while queued).
+    fn dispatch_pending(&mut self, work: PendingWork) -> Result<Option<u64>> {
+        let PendingWork { spec, verdict } = work;
+        if !self.roster.iter().any(|s| s.name == spec.name) {
+            if let Some(v) = &verdict {
+                let detail = format!("{}: {} — job retired before the replan", spec.name, v.name());
+                self.record("verdict-dropped", detail);
+            }
+            return Ok(None);
+        }
+        // An in-flight probe of the same job must merge before this one
+        // dispatches: the new pass warm-starts from the job's *current*
+        // model, and that includes any result still inside the pool.
+        while self.outstanding.iter().any(|o| o.name == spec.name) {
+            self.settle_next()?;
+        }
+        // Cache aging for a stale model rides inside the task (the pool
+        // worker ages right before profiling), keeping the age/profile
+        // pair adjacent in dispatch order.
+        let age_label =
+            matches!(verdict, Some(DriftVerdict::ModelStale { .. })).then(|| spec.label());
+        let pass = match verdict {
+            None => ProfilePass::default(),
+            Some(v) => ProfilePass {
+                runtime_scale: None,
+                prior: self.model_of(&spec.name),
+                session_warm: matches!(v, DriftVerdict::ModelStale { .. }),
+                rate_hz: match v {
+                    DriftVerdict::RateShift { observed_hz, .. } => Some(observed_hz),
+                    _ => None,
+                },
+                rounds: Some(1),
+            },
+        };
+        let name = spec.name.clone();
+        let node = spec.node.name;
+        let seq = self.pool.dispatch(0, spec, &self.cfg, pass, age_label);
+        self.record("probe-dispatched", format!("{name}: seq {seq}"));
+        self.outstanding.push_back(OutstandingProbe { seq, name: name.clone(), node });
+        if let Some(t) = &self.telemetry {
+            // Outstanding count, not the racy pool queue length: the
+            // series must be a pure function of the event schedule.
+            t.probe_queue_depth(self.clock, self.outstanding.len() as u64);
+        }
+        let at = self.clock;
+        self.schedule(at, FleetEvent::ProbeCompletion { job: name, seq });
+        Ok(Some(seq))
+    }
+
+    /// Settle the oldest outstanding probe: block on its pool result,
+    /// merge it, journal its completion, and run any replan tail whose
+    /// batch just drained. Settling is the ONLY way pool results re-enter
+    /// daemon state, and it always proceeds in dispatch order.
+    fn settle_next(&mut self) -> Result<()> {
+        let o = self.outstanding.pop_front().expect("settle_next needs outstanding work");
+        let mut outcome = self
+            .pool
+            .collect(o.seq)
+            .with_context(|| format!("profiling '{}' (dispatch seq {})", o.name, o.seq))?;
+        // Match the synchronous path's hardcoded worker id so merged
+        // reports never depend on which pool thread ran the probe.
+        outcome.worker = 0;
+        let executed = outcome.cache_delta.misses;
+        self.virt.absorb(&outcome.cache_delta);
+        self.settled_below = o.seq + 1;
+        self.record("probe-completion", format!("{}: {executed} probes executed", o.name));
+        if let Some(t) = &self.telemetry {
+            t.probes(self.clock, &o.name, o.node, executed);
+            t.outcome_runtimes(self.clock, &outcome);
+        }
+        self.merge_outcome(outcome);
+        self.flush_drained_batches();
+        Ok(())
+    }
+
+    /// Settle every outstanding probe (consumer events and drain).
+    fn settle_all(&mut self) -> Result<()> {
+        while !self.outstanding.is_empty() {
+            self.settle_next()?;
+        }
+        Ok(())
+    }
+
+    /// Run the deferred planning tail of every replan batch whose last
+    /// dispatch has now settled.
+    fn flush_drained_batches(&mut self) {
+        while self.batches.front().is_some_and(|&last| last < self.settled_below) {
+            self.batches.pop_front();
+            self.replan_tail();
+        }
+    }
+
+    /// A `ProbeCompletion` event popped. If the next scheduled event is
+    /// *transparent* — one that only dispatches or mutates the roster
+    /// without consuming profiled state (arrival, verdict, mesh fault,
+    /// replan) — defer the settle past it by re-scheduling this event at
+    /// that tick: this is what lets profiling overlap across replans.
+    /// Otherwise settle everything up to `seq` now.
+    fn on_probe_completion(&mut self, job: &str, seq: u64) -> Result<()> {
+        if seq < self.settled_below {
+            return Ok(()); // already settled eagerly (conflict or consumer)
+        }
+        let defer_to = self.heap.peek().and_then(|Reverse(s)| {
+            matches!(
+                s.event,
+                FleetEvent::JobArrival(_)
+                    | FleetEvent::DriftVerdict { .. }
+                    | FleetEvent::MeshFault(_)
+                    | FleetEvent::Replan
+            )
+            .then_some(s.at)
+        });
+        if let Some(at) = defer_to {
+            self.schedule(at, FleetEvent::ProbeCompletion { job: job.to_string(), seq });
+            return Ok(());
+        }
+        while self.outstanding.front().is_some_and(|o| o.seq <= seq) {
+            self.settle_next()?;
+        }
         Ok(())
     }
 
@@ -1162,5 +1412,54 @@ mod tests {
         assert_eq!(d.run_until(899).unwrap(), 0);
         assert!(d.run_until(900).unwrap() > 0);
         assert_eq!(d.sweep.as_ref().unwrap().outcomes.len(), 2);
+    }
+
+    /// The mixed-mutation scenario shared by the overlap tests: a drift
+    /// verdict at t=700, then a fresh arrival at t=800 — two replans
+    /// whose probes can overlap. `workers: 1` keeps the bootstrap pool
+    /// the same size in both modes, so even the `worker` field matches.
+    fn overlap_scenario(probe_workers: usize) -> FleetDaemon {
+        let cfg = FleetConfig { probe_workers, workers: 1, ..quick_cfg() };
+        let mut d = FleetDaemon::builder().config(cfg).jobs(sim_fleet(2, 7)).build();
+        let shift = DriftVerdict::RateShift { provisioned_hz: 2.0, observed_hz: 9.0 };
+        d.observe_verdict_at("job-00", shift, 700);
+        d.submit_at(sim_fleet(3, 7).pop().unwrap(), 800);
+        d
+    }
+
+    #[test]
+    fn overlapped_drain_is_byte_identical_to_the_synchronous_report() {
+        let sync = overlap_scenario(0).drain().unwrap();
+        let overlapped = overlap_scenario(1).drain().unwrap();
+        assert_eq!(
+            crate::util::json::to_string(&sync.to_json()),
+            crate::util::json::to_string(&overlapped.to_json()),
+            "overlapped replay diverged from the synchronous path"
+        );
+    }
+
+    #[test]
+    fn completions_defer_past_transparent_events_so_replans_overlap() {
+        let mut d = overlap_scenario(1);
+        d.run_until(1_000).unwrap();
+        let kinds: Vec<(&str, String)> = d
+            .journal()
+            .iter()
+            .map(|e| (e.kind, e.detail.split(':').next().unwrap_or("").to_string()))
+            .collect();
+        let dispatched_new = kinds
+            .iter()
+            .position(|(k, job)| *k == "probe-dispatched" && job == "job-02")
+            .expect("the arrival's probe was dispatched");
+        let completed_old = kinds
+            .iter()
+            .position(|(k, job)| *k == "probe-completion" && job == "job-00")
+            .expect("the verdict's probe completed");
+        assert!(
+            dispatched_new < completed_old,
+            "the second replan dispatched before the first batch settled: {kinds:?}"
+        );
+        let report = d.drain().unwrap();
+        assert_eq!(report.summary().outcomes.len(), 3);
     }
 }

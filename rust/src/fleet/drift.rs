@@ -374,6 +374,7 @@ impl AdaptiveLoop {
     pub(crate) fn start(
         cfg: &FleetConfig,
         cache: &MeasurementCache,
+        pool: &super::ProbePool,
         specs: Vec<FleetJobSpec>,
         acfg: &AdaptiveConfig,
     ) -> Result<Self> {
@@ -409,7 +410,7 @@ impl AdaptiveLoop {
             }
         }
         let stats_start = cache.stats();
-        let initial = super::run_sweep(cfg, cache, specs.clone())?;
+        let initial = super::run_sweep(cfg, pool, specs.clone())?;
         let stats_after_sweep = cache.stats();
 
         // Mirror the cold sweep's per-node managers: the adaptive loop
@@ -519,7 +520,6 @@ impl AdaptiveLoop {
                 cache.evict_stale();
             }
             let observed_hz = job.monitor.observed_hz;
-            let miss_before = cache.stats().misses;
             let pass = ProfilePass {
                 // Profile the regime current at the END of the observed
                 // window — a shift that landed mid-epoch must not leave
@@ -536,7 +536,10 @@ impl AdaptiveLoop {
             };
             let outcome =
                 worker::profile_job_with(&job.spec, &self.cfg, cache, 0, &pass)?;
-            let executed_probes = cache.stats().misses - miss_before;
+            // The outcome's own cache tally, not a global before/after
+            // miss delta: exact even while pool workers probe the shared
+            // cache concurrently.
+            let executed_probes = outcome.cache_delta.misses;
             job.model = outcome.model;
             job.rate_hz = observed_hz;
             job.reprofiles += 1;

@@ -1,23 +1,27 @@
 //! Fleet-scale concurrent profiling engine.
 //!
 //! The single-job [`crate::coordinator::Profiler`] becomes a worker task:
-//! N registered stream jobs are sharded across a pool of scoped worker
-//! threads pulling from a shared [`WorkQueue`], all probing through one
-//! [`MeasurementCache`] keyed by `(job label, cpu-limit bucket)` so
-//! repeated strategy probes — re-profiling rounds, and replicas of a job
-//! class on the same device type — reuse observed runtimes instead of
-//! re-executing the job. Each job's [`crate::fit::RuntimeModel`] is refit
-//! *incrementally* (warm-started from the previous parameters) as
-//! measurements land, and the finished models feed straight into per-node
-//! [`JobManager`] registrations, producing the fleet-wide
-//! [`CapacityPlan`]s that close the paper's adaptive-adjustment loop.
+//! N registered stream jobs are sharded across a persistent [`ProbePool`]
+//! of worker threads pulling from a shared striped [`WorkQueue`], all
+//! probing through one [`MeasurementCache`] keyed by `(job label,
+//! cpu-limit bucket)` so repeated strategy probes — re-profiling rounds,
+//! and replicas of a job class on the same device type — reuse observed
+//! runtimes instead of re-executing the job. Each job's
+//! [`crate::fit::RuntimeModel`] is refit *incrementally* (warm-started
+//! from the previous parameters) as measurements land, and the finished
+//! models feed straight into per-node [`JobManager`] registrations,
+//! producing the fleet-wide [`CapacityPlan`]s that close the paper's
+//! adaptive-adjustment loop.
 //!
 //! ```text
-//!  FleetJobSpec*N ──► WorkQueue (striped) ──► worker pool (scoped threads)
+//!  FleetJobSpec*N ──► ProbePool::dispatch ──► WorkQueue lane (seq % workers)
+//!                                               │  persistent workers (condvar-parked)
 //!                                               │  Profiler::run_observed
 //!                                               │   ├─ BackendFactory::build ─► CachedBackend
 //!                                               │   │      ─► cache (sharded)
 //!                                               │   └─ IncrementalModel (warm refits)
+//!                                               ▼
+//!                                 results[seq] ──► collect in dispatch order
 //!                                               ▼
 //!                                            JobOutcome*N ──► per-node JobManager ──► CapacityPlan
 //! ```
@@ -60,6 +64,7 @@ pub mod gossip;
 pub mod mesh;
 pub mod migrate;
 pub mod placement;
+pub mod pool;
 pub mod queue;
 pub mod session;
 pub mod telemetry;
@@ -85,6 +90,7 @@ pub use migrate::{rebalance, rebalance_across, FleetMetrics, FleetPlan, Migratio
 pub use placement::{
     candidates_among, candidates_for, translate_model, FleetJob, NodeView, PlacementCandidate,
 };
+pub use pool::ProbePool;
 pub use queue::WorkQueue;
 pub use session::{FleetReport, FleetSession, FleetSessionBuilder};
 pub use telemetry::{
@@ -94,7 +100,7 @@ pub use telemetry::{
 pub use worker::{IncrementalModel, JobOutcome, ProfilePass, ScaledBackend, ScaledBackendFactory};
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::{ensure, Context, Result};
 
@@ -190,6 +196,13 @@ pub struct FleetConfig {
     /// Arrival-process horizon (samples) used to derive each job's peak
     /// rate demand.
     pub horizon: usize,
+    /// Persistent probe-pool workers for the daemon's overlapped
+    /// dispatch/completion path. `0` (the default) keeps probe execution
+    /// synchronous inside each replan event and sizes the pool from
+    /// `workers`; `N ≥ 1` sizes the pool explicitly **and** lets
+    /// profiling overlap event processing across replans (capacity
+    /// planning defers until the replan's batch drains).
+    pub probe_workers: usize,
 }
 
 impl Default for FleetConfig {
@@ -200,6 +213,7 @@ impl Default for FleetConfig {
             strategy: "nms".to_string(),
             profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
             horizon: 1000,
+            probe_workers: 0,
         }
     }
 }
@@ -271,12 +285,12 @@ pub(crate) fn plan_capacity(outcomes: &[JobOutcome]) -> Vec<(String, CapacityPla
         .collect()
 }
 
-/// Profile every job across the worker pool and derive per-node capacity
-/// plans from the fitted models — the sweep stage shared by
-/// [`FleetSession::run`] and [`FleetDaemon`] replans.
+/// Profile every job across the persistent [`ProbePool`] and derive
+/// per-node capacity plans from the fitted models — the sweep stage
+/// shared by [`FleetSession::run`] and [`FleetDaemon`] replans.
 pub(crate) fn run_sweep(
     cfg: &FleetConfig,
-    cache: &MeasurementCache,
+    pool: &ProbePool,
     specs: Vec<FleetJobSpec>,
 ) -> Result<FleetSummary> {
     ensure!(!specs.is_empty(), "fleet run needs at least one job spec");
@@ -288,44 +302,42 @@ pub(crate) fn run_sweep(
     ensure!(cfg.profiler.max_steps >= cfg.profiler.n_initial, "profiler max_steps < n_initial");
     // Snapshot so the summary reports THIS run's cache behaviour even
     // when the cache is reused across runs.
-    let cache_before = cache.stats();
-    let n_workers = cfg.workers.clamp(1, specs.len());
-    let n_jobs = specs.len();
-    // One lane per worker: each worker drains its own slice of the
-    // roster and steals from the others once it runs dry, so pops never
-    // serialize on a single queue mutex.
-    let queue = WorkQueue::striped(specs.into_iter().enumerate(), n_workers);
-    let results: Mutex<Vec<JobOutcome>> = Mutex::new(Vec::with_capacity(n_jobs));
-    let failures: Mutex<Vec<String>> = Mutex::new(Vec::new());
-    std::thread::scope(|s| {
-        for w in 0..n_workers {
-            let queue = &queue;
-            let results = &results;
-            let failures = &failures;
-            s.spawn(move || {
-                while let Some((index, spec)) = queue.pop_for(w) {
-                    match worker::profile_job(&spec, cfg, cache, w) {
-                        Ok(mut outcome) => {
-                            outcome.index = index;
-                            results.lock().unwrap().push(outcome);
-                        }
-                        Err(e) => {
-                            failures.lock().unwrap().push(format!("{}: {e:#}", spec.name));
-                        }
-                    }
-                }
-            });
+    let cache_before = pool.cache().stats();
+    // Dispatch the whole roster, then collect strictly in dispatch order:
+    // the pool stripes task `seq` onto lane `seq % workers` (the scoped
+    // sweep's round-robin sharding), and seq-ordered collection keeps the
+    // summary a pure function of the submission order, never of worker
+    // scheduling.
+    let pending: Vec<(u64, String)> = specs
+        .into_iter()
+        .enumerate()
+        .map(|(index, spec)| {
+            let name = spec.name.clone();
+            (pool.dispatch(index, spec, cfg, ProfilePass::default(), None), name)
+        })
+        .collect();
+    let mut outcomes = Vec::with_capacity(pending.len());
+    let mut failures = Vec::new();
+    for (seq, name) in pending {
+        match pool.collect(seq) {
+            Ok(outcome) => outcomes.push(outcome),
+            Err(e) => failures.push(format!("{name}: {e:#}")),
         }
-    });
-    let failures = failures.into_inner().unwrap();
+    }
     ensure!(failures.is_empty(), "fleet workers failed: {}", failures.join("; "));
-    let mut outcomes = results.into_inner().unwrap();
     outcomes.sort_by_key(|o| o.index);
+    // Report each task's home lane, not whichever thread ran it: work
+    // stealing makes the latter vary run to run, and the summary must
+    // stay a pure function of the submission order.
+    let lanes = pool.workers();
+    for o in &mut outcomes {
+        o.worker = o.index % lanes;
+    }
 
     // Feed the fitted models into per-node managers: this is where the
     // fleet engine hands over to the adaptive-adjustment layer.
     let plans = plan_capacity(&outcomes);
-    let cache = cache.stats().delta_since(&cache_before);
+    let cache = pool.cache().stats().delta_since(&cache_before);
     Ok(FleetSummary { outcomes, cache, plans })
 }
 
@@ -404,14 +416,14 @@ mod tests {
     #[test]
     fn summary_cache_stats_are_per_run_not_lifetime() {
         let cfg = FleetConfig { workers: 1, rounds: 1, ..Default::default() };
-        let cache = MeasurementCache::new();
-        let first = run_sweep(&cfg, &cache, sim_fleet(2, 3)).unwrap();
+        let pool = ProbePool::new(Arc::new(MeasurementCache::new()), 1);
+        let first = run_sweep(&cfg, &pool, sim_fleet(2, 3)).unwrap();
         assert_eq!(first.cache.hits, 0, "distinct labels, single round: no hits");
         assert!(first.cache.misses > 0);
         // Same specs again through the same cache: a full replay. The
         // second summary must report only this run's (all-hit) stats, not
         // the blended lifetime counters.
-        let second = run_sweep(&cfg, &cache, sim_fleet(2, 3)).unwrap();
+        let second = run_sweep(&cfg, &pool, sim_fleet(2, 3)).unwrap();
         assert_eq!(second.cache.misses, 0, "replay run must not re-execute");
         assert_eq!(second.cache.hits, first.cache.misses);
         assert!((second.hit_rate() - 1.0).abs() < 1e-12);
@@ -419,14 +431,14 @@ mod tests {
 
     #[test]
     fn empty_fleet_is_an_error() {
-        let cache = MeasurementCache::new();
-        assert!(run_sweep(&FleetConfig::default(), &cache, Vec::new()).is_err());
+        let pool = ProbePool::new(Arc::new(MeasurementCache::new()), 1);
+        assert!(run_sweep(&FleetConfig::default(), &pool, Vec::new()).is_err());
     }
 
     #[test]
     fn unknown_strategy_is_an_error() {
         let cfg = FleetConfig { strategy: "hillclimb".into(), ..FleetConfig::default() };
-        let cache = MeasurementCache::new();
-        assert!(run_sweep(&cfg, &cache, sim_fleet(2, 1)).is_err());
+        let pool = ProbePool::new(Arc::new(MeasurementCache::new()), 1);
+        assert!(run_sweep(&cfg, &pool, sim_fleet(2, 1)).is_err());
     }
 }

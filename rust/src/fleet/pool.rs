@@ -1,0 +1,298 @@
+//! Persistent probe pool: long-lived profiling workers the daemon keeps
+//! across replans.
+//!
+//! [`run_sweep`](super::run_sweep) used to spawn a scoped thread pool per
+//! batch — fine for one-shot sessions, but a long-lived [`FleetDaemon`]
+//! replans hundreds of times, and re-spawning OS threads per replan both
+//! costs wallclock and forces every batch to *complete* before the event
+//! loop can move on. The [`ProbePool`] keeps the same striped
+//! [`WorkQueue`] shape but parks persistent workers on a condvar between
+//! batches:
+//!
+//! ```text
+//!  dispatch(seq, spec, pass) ──► WorkQueue lane (seq % stripes)
+//!                                      │ notify
+//!                  parked worker ◄─────┘
+//!                      │ profile_job_with (through the shared cache)
+//!                      ▼
+//!                  results[seq] ──► collect(seq)   (blocks until done)
+//! ```
+//!
+//! Ordering contract: the pool itself completes tasks in whatever order
+//! the workers finish, but every result is keyed by its **dispatch
+//! sequence number** and callers collect in that order — so downstream
+//! state (reports, journals, capacity plans) is a pure function of the
+//! dispatch order, never of worker scheduling. With one worker the pool
+//! executes tasks in exact dispatch order, which is what makes the
+//! overlapped daemon byte-identical to the synchronous path at
+//! `--probe-workers 1`.
+//!
+//! [`FleetDaemon`]: super::FleetDaemon
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use super::cache::MeasurementCache;
+use super::queue::WorkQueue;
+use super::worker::{self, JobOutcome, ProfilePass};
+use super::{FleetConfig, FleetJobSpec};
+
+/// One unit of profiling work handed to the pool.
+struct ProbeTask {
+    /// Dispatch sequence number — the key results are collected under.
+    seq: u64,
+    /// Roster index stamped onto the outcome (`JobOutcome::index`).
+    index: usize,
+    spec: FleetJobSpec,
+    cfg: FleetConfig,
+    pass: ProfilePass,
+    /// When set, the worker bumps this cache label's generation and
+    /// evicts its stale entries *immediately before* profiling — cache
+    /// aging for `ModelStale` re-profiles, moved onto the pool thread so
+    /// the age-then-profile pair stays adjacent in dispatch order even
+    /// while the daemon races ahead dispatching more work.
+    age_label: Option<String>,
+}
+
+/// State shared between the pool handle and its worker threads.
+struct Shared {
+    cache: Arc<MeasurementCache>,
+    queue: WorkQueue<ProbeTask>,
+    state: Mutex<PoolState>,
+    /// Signalled on dispatch (and shutdown): parked workers re-check the
+    /// queue.
+    work: Condvar,
+    /// Signalled when a result lands: blocked collectors re-check.
+    done: Condvar,
+}
+
+#[derive(Default)]
+struct PoolState {
+    /// Finished outcomes keyed by dispatch sequence, awaiting collection.
+    results: BTreeMap<u64, Result<JobOutcome>>,
+    shutdown: bool,
+}
+
+/// A fixed set of persistent profiling workers over a striped
+/// [`WorkQueue`], condvar-parked when idle. Dropping the pool shuts the
+/// workers down and joins them.
+pub struct ProbePool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    next_seq: AtomicU64,
+}
+
+impl ProbePool {
+    /// Spawn `workers` persistent threads (clamped to at least one), all
+    /// probing through `cache`.
+    pub fn new(cache: Arc<MeasurementCache>, workers: usize) -> Self {
+        let n = workers.max(1);
+        let shared = Arc::new(Shared {
+            cache,
+            queue: WorkQueue::striped(std::iter::empty(), n),
+            state: Mutex::new(PoolState::default()),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..n)
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared, w))
+            })
+            .collect();
+        Self { shared, handles, next_seq: AtomicU64::new(0) }
+    }
+
+    /// Worker threads in the pool (== queue stripes).
+    pub fn workers(&self) -> usize {
+        self.shared.queue.stripes()
+    }
+
+    /// The measurement cache every worker probes through.
+    pub fn cache(&self) -> &MeasurementCache {
+        &self.shared.cache
+    }
+
+    /// Tasks dispatched but not yet picked up by a worker — the
+    /// `probe_queue_depth` telemetry signal. Wait-free (one atomic load).
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.len()
+    }
+
+    /// Hand one profiling task to the pool and return its dispatch
+    /// sequence number. Tasks land on lane `seq % workers`, preserving
+    /// the striped sweep's round-robin sharding; `age_label` requests
+    /// pre-profile cache aging on the worker (see [`ProbeTask`] — the
+    /// `ModelStale` path).
+    pub fn dispatch(
+        &self,
+        index: usize,
+        spec: FleetJobSpec,
+        cfg: &FleetConfig,
+        pass: ProfilePass,
+        age_label: Option<String>,
+    ) -> u64 {
+        let seq = self.next_seq.fetch_add(1, Ordering::SeqCst);
+        let lane = (seq % self.shared.queue.stripes() as u64) as usize;
+        self.shared.queue.push_to(
+            lane,
+            ProbeTask { seq, index, spec, cfg: cfg.clone(), pass, age_label },
+        );
+        // Notify under the state lock: a worker that just found the queue
+        // empty is either still holding the lock (it will re-check after
+        // we release) or already waiting (it gets the wakeup) — no missed
+        // notification window.
+        let _state = self.shared.state.lock().unwrap();
+        self.shared.work.notify_one();
+        seq
+    }
+
+    /// Block until the task dispatched as `seq` finishes and take its
+    /// outcome. Each sequence number can be collected exactly once.
+    pub fn collect(&self, seq: u64) -> Result<JobOutcome> {
+        let mut state = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(result) = state.results.remove(&seq) {
+                return result;
+            }
+            state = self.shared.done.wait(state).unwrap();
+        }
+    }
+}
+
+impl Drop for ProbePool {
+    fn drop(&mut self) {
+        {
+            let mut state = self.shared.state.lock().unwrap();
+            state.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Park on the condvar until work (or shutdown) arrives, run the task,
+/// publish the result under its dispatch sequence.
+fn worker_loop(shared: &Shared, w: usize) {
+    loop {
+        let task = {
+            let mut state = shared.state.lock().unwrap();
+            loop {
+                if let Some(task) = shared.queue.pop_for(w) {
+                    break task;
+                }
+                if state.shutdown {
+                    return;
+                }
+                state = shared.work.wait(state).unwrap();
+            }
+        };
+        let mut aged_evictions = 0u64;
+        if let Some(label) = &task.age_label {
+            shared.cache.bump_generation(label);
+            aged_evictions = shared.cache.evict_stale() as u64;
+        }
+        let result = worker::profile_job_with(&task.spec, &task.cfg, &shared.cache, w, &task.pass)
+            .map(|mut outcome| {
+                outcome.index = task.index;
+                // Aging happened on behalf of this task: charge its
+                // evictions to the task's cache delta so the daemon's
+                // deterministic accounting sees them.
+                outcome.cache_delta.evictions += aged_evictions;
+                outcome
+            });
+        let mut state = shared.state.lock().unwrap();
+        state.results.insert(task.seq, result);
+        drop(state);
+        shared.done.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::{node, Algo};
+
+    fn pool_with(workers: usize) -> ProbePool {
+        ProbePool::new(Arc::new(MeasurementCache::new()), workers)
+    }
+
+    #[test]
+    fn dispatch_and_collect_round_trips_one_job() {
+        let pool = pool_with(2);
+        let cfg = FleetConfig { workers: 2, rounds: 1, ..FleetConfig::default() };
+        let spec = FleetJobSpec::simulated("solo", node("pi4").unwrap(), Algo::Arima, 7);
+        let seq = pool.dispatch(5, spec, &cfg, ProfilePass::default(), None);
+        let outcome = pool.collect(seq).unwrap();
+        assert_eq!(outcome.index, 5, "roster index stamped onto the outcome");
+        assert_eq!(outcome.name, "solo");
+        assert!(outcome.cache_delta.misses > 0, "cold profile executes probes");
+        assert_eq!(pool.queue_depth(), 0);
+    }
+
+    #[test]
+    fn results_collect_in_dispatch_order_regardless_of_finish_order() {
+        let pool = pool_with(4);
+        let cfg = FleetConfig { workers: 4, rounds: 1, ..FleetConfig::default() };
+        let specs = super::super::sim_fleet(8, 3);
+        let seqs: Vec<(u64, String)> = specs
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let name = s.name.clone();
+                (pool.dispatch(i, s, &cfg, ProfilePass::default(), None), name)
+            })
+            .collect();
+        for (i, (seq, name)) in seqs.into_iter().enumerate() {
+            let outcome = pool.collect(seq).unwrap();
+            assert_eq!(outcome.index, i);
+            assert_eq!(outcome.name, name);
+        }
+    }
+
+    #[test]
+    fn pool_survives_a_failing_task_and_reports_the_error() {
+        let pool = pool_with(1);
+        let cfg = FleetConfig { strategy: "bogus".into(), ..FleetConfig::default() };
+        let bad = FleetJobSpec::simulated("broken", node("pi4").unwrap(), Algo::Arima, 1);
+        let seq = pool.dispatch(0, bad, &cfg, ProfilePass::default(), None);
+        assert!(pool.collect(seq).is_err());
+        // The worker is still alive: a well-formed task after the failure
+        // completes normally.
+        let ok_cfg = FleetConfig { rounds: 1, ..FleetConfig::default() };
+        let good = FleetJobSpec::simulated("fine", node("pi4").unwrap(), Algo::Arima, 2);
+        let seq = pool.dispatch(1, good, &ok_cfg, ProfilePass::default(), None);
+        assert_eq!(pool.collect(seq).unwrap().name, "fine");
+    }
+
+    #[test]
+    fn age_label_refuses_stale_entries_before_profiling() {
+        let cache = Arc::new(MeasurementCache::new());
+        let pool = ProbePool::new(Arc::clone(&cache), 1);
+        let cfg = FleetConfig { rounds: 1, ..FleetConfig::default() };
+        let spec = FleetJobSpec::simulated("aging", node("pi4").unwrap(), Algo::Arima, 9);
+        let label = spec.label();
+        let cold = pool.dispatch(0, spec.clone(), &cfg, ProfilePass::default(), None);
+        let cold = pool.collect(cold).unwrap();
+        // Re-profile with aging: the stale generation must be refused and
+        // re-executed, and the evictions charged to this task's delta.
+        let hot = pool.dispatch(1, spec, &cfg, ProfilePass::default(), Some(label));
+        let hot = pool.collect(hot).unwrap();
+        assert_eq!(hot.cache_delta.hits, 0, "aged entries must not replay");
+        assert_eq!(hot.cache_delta.misses, cold.cache_delta.misses);
+        assert!(hot.cache_delta.evictions > 0, "aging evicts the stale label");
+    }
+
+    #[test]
+    fn drop_joins_idle_workers() {
+        let pool = pool_with(4);
+        assert_eq!(pool.workers(), 4);
+        drop(pool); // must not hang on parked workers
+    }
+}

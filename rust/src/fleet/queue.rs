@@ -3,7 +3,8 @@
 //! Deliberately minimal: profiling tasks are coarse (seconds to minutes of
 //! simulated work each), so mutex-guarded deques are far below contention
 //! range and keep the pool dependency-free. Workers pull until the queue
-//! is drained; there is no re-enqueue, so termination is trivial.
+//! is drained; [`WorkQueue::push_to`] lets a long-lived pool re-fill lanes
+//! between batches (the probe pool's dispatch path).
 //!
 //! [`WorkQueue::new`] builds a single global FIFO (the original shape).
 //! [`WorkQueue::striped`] splits the backlog round-robin across one lane
@@ -11,14 +12,25 @@
 //! lane first, **stealing** from the other lanes in cyclic order once it
 //! runs dry — so a large roster drains without every pop serializing on
 //! one mutex, mirroring the measurement cache's lock striping.
+//!
+//! Occupancy is tracked by one shared atomic counter, so [`WorkQueue::len`]
+//! and [`WorkQueue::is_empty`] never touch a lane mutex: the lane locks
+//! guard only push/pop/steal. The counter moves *before* an item becomes
+//! visible on push and *after* it was taken on pop, so it never undercounts
+//! a task that a concurrent consumer could still observe.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// A multi-consumer FIFO (optionally striped into per-worker lanes with
 /// work stealing) drained by the worker pool.
 pub struct WorkQueue<T> {
     lanes: Vec<Mutex<VecDeque<T>>>,
+    /// Tasks currently queued across every lane. Kept exact: incremented
+    /// before a pushed item is published, decremented after a popped item
+    /// was removed, both under no lane lock — reads are wait-free.
+    count: AtomicUsize,
 }
 
 impl<T> WorkQueue<T> {
@@ -34,10 +46,31 @@ impl<T> WorkQueue<T> {
     pub fn striped<I: IntoIterator<Item = T>>(items: I, stripes: usize) -> Self {
         let n = stripes.max(1);
         let mut lanes: Vec<VecDeque<T>> = (0..n).map(|_| VecDeque::new()).collect();
+        let mut count = 0;
         for (i, item) in items.into_iter().enumerate() {
             lanes[i % n].push_back(item);
+            count += 1;
         }
-        Self { lanes: lanes.into_iter().map(Mutex::new).collect() }
+        Self {
+            lanes: lanes.into_iter().map(Mutex::new).collect(),
+            count: AtomicUsize::new(count),
+        }
+    }
+
+    /// Lanes this queue was striped into.
+    pub fn stripes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Append one task to `lane` (wrapped onto the stripe count) — how a
+    /// persistent pool feeds new work to parked workers. The occupancy
+    /// counter is bumped before the lane mutex is taken, so a concurrent
+    /// `len()` never reports the queue empty while a published task is
+    /// still poppable.
+    pub fn push_to(&self, lane: usize, item: T) {
+        self.count.fetch_add(1, Ordering::SeqCst);
+        let n = self.lanes.len();
+        self.lanes[lane % n].lock().unwrap().push_back(item);
     }
 
     /// Pop the next task; `None` once the queue is drained. Equivalent to
@@ -54,16 +87,19 @@ impl<T> WorkQueue<T> {
         let home = worker % n;
         for k in 0..n {
             if let Some(item) = self.lanes[(home + k) % n].lock().unwrap().pop_front() {
+                self.count.fetch_sub(1, Ordering::SeqCst);
                 return Some(item);
             }
         }
         None
     }
 
+    /// Tasks currently queued — a single atomic load, no lane lock.
     pub fn len(&self) -> usize {
-        self.lanes.iter().map(|l| l.lock().unwrap().len()).sum()
+        self.count.load(Ordering::SeqCst)
     }
 
+    /// `len() == 0` without touching a lane mutex.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -157,5 +193,89 @@ mod tests {
         items.sort_unstable();
         assert_eq!(items, (0..64).collect::<Vec<_>>(), "each task exactly once");
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn push_to_wraps_lanes_and_keeps_fifo_per_lane() {
+        let q: WorkQueue<u32> = WorkQueue::striped(std::iter::empty(), 2);
+        assert_eq!(q.stripes(), 2);
+        q.push_to(0, 10);
+        q.push_to(1, 11);
+        q.push_to(2, 12); // wraps onto lane 0
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop_for(0), Some(10));
+        assert_eq!(q.pop_for(0), Some(12));
+        assert_eq!(q.pop_for(0), Some(11), "steal once home lane is dry");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn len_stays_exact_under_eight_thread_drain() {
+        // Regression for the atomic occupancy counter: 800 tasks drained
+        // by 8 stealing workers. Every observed `len()` must stay within
+        // the number of tasks not yet recorded as taken (the counter may
+        // lag a pop, never lead it), and the drained queue must report
+        // exactly empty with every task consumed exactly once.
+        const TASKS: usize = 800;
+        let q = WorkQueue::striped(0..TASKS, 8);
+        let taken: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            for w in 0..8 {
+                let q = &q;
+                let taken = &taken;
+                s.spawn(move || {
+                    while let Some(item) = q.pop_for(w) {
+                        // The pop already decremented the counter, so at
+                        // most TASKS - 1 tasks can still be queued.
+                        assert!(q.len() < TASKS, "counter can never exceed the backlog");
+                        taken.lock().unwrap().push(item);
+                    }
+                });
+            }
+        });
+        assert_eq!(q.len(), 0, "drained queue must count zero");
+        assert!(q.is_empty());
+        let mut items = taken.into_inner().unwrap();
+        items.sort_unstable();
+        assert_eq!(items, (0..TASKS).collect::<Vec<_>>(), "each task exactly once");
+    }
+
+    #[test]
+    fn concurrent_push_and_drain_count_stays_exact() {
+        // One producer feeding lanes round-robin while 4 consumers drain:
+        // the final ledger must balance — everything pushed was popped and
+        // the counter returns to zero.
+        use std::sync::atomic::AtomicBool;
+        let q: WorkQueue<usize> = WorkQueue::striped(std::iter::empty(), 4);
+        let popped: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+        let done = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let q = &q;
+            let done = &done;
+            s.spawn(move || {
+                for i in 0..200 {
+                    q.push_to(i, i);
+                }
+                done.store(true, Ordering::SeqCst);
+            });
+            for w in 0..4 {
+                let popped = &popped;
+                s.spawn(move || {
+                    let mut got = Vec::new();
+                    loop {
+                        match q.pop_for(w) {
+                            Some(item) => got.push(item),
+                            None if done.load(Ordering::SeqCst) && q.is_empty() => break,
+                            None => std::thread::yield_now(),
+                        }
+                    }
+                    popped.lock().unwrap().extend(got);
+                });
+            }
+        });
+        assert_eq!(q.len(), 0);
+        let mut items = popped.into_inner().unwrap();
+        items.sort_unstable();
+        assert_eq!(items, (0..200).collect::<Vec<_>>());
     }
 }

@@ -24,7 +24,10 @@
 //! [`FleetDaemon`]: [`FleetSession::run`] replays the roster as arrivals
 //! at `t = 0` and drains the event loop, so batch runs and event-driven
 //! runs are the same engine by construction (`tests/fleet_e2e.rs` pins
-//! the equivalence byte-for-byte).
+//! the equivalence byte-for-byte). Setting
+//! [`FleetConfig::probe_workers`](super::FleetConfig) overlaps probe
+//! execution across replans inside the drain; the drained report stays
+//! byte-identical because completions merge in dispatch order.
 
 use std::sync::Arc;
 

@@ -29,7 +29,8 @@ pub fn verdict_code(verdict: &DriftVerdict) -> f64 {
 /// Emits fleet observations into a shared [`TelemetryStore`].
 pub struct TelemetryRecorder {
     store: Arc<TelemetryStore>,
-    last_cache: CacheStats,
+    last_hits: u64,
+    last_misses: u64,
 }
 
 impl TelemetryRecorder {
@@ -38,7 +39,7 @@ impl TelemetryRecorder {
     /// relative to it, so restored lifetime counters never pollute the
     /// series.
     pub fn new(store: Arc<TelemetryStore>, cache_base: CacheStats) -> TelemetryRecorder {
-        TelemetryRecorder { store, last_cache: cache_base }
+        TelemetryRecorder { store, last_hits: cache_base.hits, last_misses: cache_base.misses }
     }
 
     /// The shared store (for query handlers and tests).
@@ -119,14 +120,23 @@ impl TelemetryRecorder {
         self.store.append(SeriesKind::ConflictRollbacks, job, dest, at, 1.0);
     }
 
-    /// Cache hit/miss deltas since the previous flush. Zero deltas are
-    /// recorded too — the run-length codec collapses them, and the sum of
-    /// the series then exactly equals the drained report's cache delta.
-    pub fn cache_flush(&mut self, at: u64, now: CacheStats) {
-        let delta = now.delta_since(&self.last_cache);
-        self.store.append(SeriesKind::CacheHits, "", "", at, delta.hits as f64);
-        self.store.append(SeriesKind::CacheMisses, "", "", at, delta.misses as f64);
-        self.last_cache = now;
+    /// Async probes outstanding (dispatched, not yet merged) right after
+    /// a dispatch — the overlapped daemon's backlog signal.
+    pub fn probe_queue_depth(&self, at: u64, depth: u64) {
+        self.store.append(SeriesKind::ProbeQueueDepth, "", "", at, depth as f64);
+    }
+
+    /// Cache hit/miss deltas since the previous flush, from the lifetime
+    /// `hits` / `misses` counters (the caller reads them off the cache's
+    /// wait-free fast accessors, or its deterministic virtual stats in
+    /// overlapped mode). Zero deltas are recorded too — the run-length
+    /// codec collapses them, and the sum of the series then exactly
+    /// equals the drained report's cache delta.
+    pub fn cache_flush(&mut self, at: u64, hits: u64, misses: u64) {
+        self.store.append(SeriesKind::CacheHits, "", "", at, (hits - self.last_hits) as f64);
+        self.store.append(SeriesKind::CacheMisses, "", "", at, (misses - self.last_misses) as f64);
+        self.last_hits = hits;
+        self.last_misses = misses;
     }
 }
 
@@ -174,9 +184,31 @@ mod tests {
         let base = cache.stats();
         let store = Arc::new(TelemetryStore::new());
         let mut rec = TelemetryRecorder::new(store.clone(), base);
-        rec.cache_flush(100, cache.stats());
-        rec.cache_flush(200, cache.stats());
+        rec.cache_flush(100, cache.hits(), cache.misses());
+        rec.cache_flush(200, cache.hits(), cache.misses());
         assert_eq!(store.points(SeriesKind::CacheHits, "", ""), vec![(100, 0.0), (200, 0.0)]);
         assert_eq!(store.points(SeriesKind::CacheMisses, "", ""), vec![(100, 0.0), (200, 0.0)]);
+    }
+
+    #[test]
+    fn cache_flush_deltas_follow_the_lifetime_counters() {
+        let store = Arc::new(TelemetryStore::new());
+        let mut rec = TelemetryRecorder::new(store.clone(), CacheStats::default());
+        rec.cache_flush(100, 3, 7);
+        rec.cache_flush(200, 10, 7);
+        assert_eq!(store.points(SeriesKind::CacheHits, "", ""), vec![(100, 3.0), (200, 7.0)]);
+        assert_eq!(store.points(SeriesKind::CacheMisses, "", ""), vec![(100, 7.0), (200, 0.0)]);
+    }
+
+    #[test]
+    fn probe_queue_depth_records_the_backlog() {
+        let store = Arc::new(TelemetryStore::new());
+        let rec = TelemetryRecorder::new(store.clone(), CacheStats::default());
+        rec.probe_queue_depth(500, 3);
+        rec.probe_queue_depth(510, 0);
+        assert_eq!(
+            store.points(SeriesKind::ProbeQueueDepth, "", ""),
+            vec![(500, 3.0), (510, 0.0)]
+        );
     }
 }

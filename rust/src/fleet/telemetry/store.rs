@@ -62,11 +62,15 @@ pub enum SeriesKind {
     /// Optimistic mesh placements refused and rolled back (value 1 per
     /// rollback; node = the refusing destination).
     ConflictRollbacks,
+    /// Async probes outstanding (dispatched to the probe pool, not yet
+    /// merged) right after each dispatch — the overlapped daemon's
+    /// backlog signal.
+    ProbeQueueDepth,
 }
 
 impl SeriesKind {
     /// Every kind, in serialization order.
-    pub const ALL: [SeriesKind; 13] = [
+    pub const ALL: [SeriesKind; 14] = [
         SeriesKind::Arrivals,
         SeriesKind::Departures,
         SeriesKind::Verdicts,
@@ -80,6 +84,7 @@ impl SeriesKind {
         SeriesKind::GossipRounds,
         SeriesKind::StalenessTicks,
         SeriesKind::ConflictRollbacks,
+        SeriesKind::ProbeQueueDepth,
     ];
 
     /// Stable wire name used by queries, JSON output, and docs.
@@ -98,6 +103,7 @@ impl SeriesKind {
             SeriesKind::GossipRounds => "gossip_rounds",
             SeriesKind::StalenessTicks => "staleness_ticks",
             SeriesKind::ConflictRollbacks => "conflict_rollbacks",
+            SeriesKind::ProbeQueueDepth => "probe_queue_depth",
         }
     }
 

@@ -21,7 +21,7 @@ use crate::earlystop::EarlyStopConfig;
 use crate::fit::{ProfilePoint, RuntimeModel};
 use crate::strategies::{self, grid_bucket};
 
-use super::cache::{CachedBackend, MeasurementCache};
+use super::cache::{CacheStats, CachedBackend, MeasurementCache};
 use super::{FleetConfig, FleetJobSpec};
 
 /// A runtime model maintained across measurements: each new observation
@@ -100,8 +100,15 @@ pub struct JobOutcome {
     /// Arrival rate (Hz) the job must sustain (peak over the horizon).
     pub rate_hz: f64,
     pub priority: i32,
-    /// Worker that processed this job.
+    /// Home lane the job was dispatched on (sweeps normalize this to
+    /// `index % workers`; the daemon's replan path reports lane 0),
+    /// keeping reports independent of which thread stole the task.
     pub worker: usize,
+    /// Measurement-cache traffic this profile caused (its `misses` are the
+    /// probes actually executed). Not serialized into reports — it exists
+    /// so the daemon's overlapped completion path can account cache deltas
+    /// deterministically without re-aggregating the shared cache.
+    pub cache_delta: CacheStats,
 }
 
 impl JobOutcome {
@@ -248,6 +255,7 @@ pub fn profile_job_with(
         None => IncrementalModel::new(cfg.profiler.delta),
     };
     let mut rounds = Vec::with_capacity(n_rounds);
+    let mut cache_delta = CacheStats::default();
     for _round in 0..n_rounds {
         // A fresh factory build every round: the factory contract makes
         // builds deterministic replays, which is exactly what lets the
@@ -264,6 +272,7 @@ pub fn profile_job_with(
             &mut |m: &Measurement| incremental.observe(m),
             session_prior,
         );
+        cache_delta.absorb(&cached.tally());
         rounds.push(session);
     }
     let rate_hz = pass
@@ -282,6 +291,7 @@ pub fn profile_job_with(
         rate_hz,
         priority: spec.priority,
         worker,
+        cache_delta,
     })
 }
 

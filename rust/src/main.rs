@@ -81,7 +81,8 @@ fn print_help() {
          \u{20}           [--drift-threshold 0.25] [--rate-threshold 0.25]\n\
          \u{20}           [--shift-at 1500] [--shift-rate 8.0] [--shift-jobs 2]\n\
          \u{20}           [--stale-jobs 1] [--stale-scale 3.0]\n\
-         \u{20}           [--daemon] [--events \"@0 submit 12, @600 retire job-01\"]\n\
+         \u{20}           [--daemon] [--probe-workers 0]   async pool size (0 = sync)\n\
+         \u{20}           [--events \"@0 submit 12, @600 retire job-01\"]\n\
          \u{20}           [--journal-out journal.json] (--daemon only)\n\
          \u{20}           [--mesh full:8|ring:8|line:8|star:8|grid:3x3[@<latency>]]\n\
          \u{20}           [--gossip-every 200] [--gossip-rounds 5]\n\
@@ -270,6 +271,7 @@ fn fleet_config(args: &Args) -> FleetConfig {
             ..Default::default()
         },
         horizon: args.opt_usize("horizon", 1000),
+        probe_workers: args.opt_usize("probe-workers", 0),
     }
 }
 

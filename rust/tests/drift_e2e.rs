@@ -24,6 +24,7 @@ fn quiet_cfg() -> FleetConfig {
         strategy: "nms".to_string(),
         profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
         horizon: 1000,
+        probe_workers: 0,
     }
 }
 

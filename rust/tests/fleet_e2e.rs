@@ -11,8 +11,8 @@ use std::sync::Arc;
 
 use streamprof::coordinator::ProfilerConfig;
 use streamprof::fleet::{
-    model_fingerprint, sim_fleet, EngineBackendFactory, FleetConfig, FleetDaemon, FleetJobSpec,
-    FleetSession, MeasurementCache,
+    model_fingerprint, sim_fleet, DriftVerdict, EngineBackendFactory, FleetConfig, FleetDaemon,
+    FleetJobSpec, FleetSession, MeasurementCache,
 };
 use streamprof::runtime::{artifacts_available, default_artifacts_dir, pjrt_enabled};
 use streamprof::simulator::{node, Algo};
@@ -26,6 +26,7 @@ fn quick_cfg(workers: usize, rounds: usize) -> FleetConfig {
         strategy: "nms".to_string(),
         profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
         horizon: 500,
+        probe_workers: 0,
     }
 }
 
@@ -115,7 +116,7 @@ fn session_run_is_byte_identical_to_daemon_event_replay() {
 
 #[test]
 fn single_worker_reports_serialize_byte_identically() {
-    // With one worker even the racy `worker` field is deterministic, so
+    // With one worker even scheduling jitter has nothing to reorder, so
     // the emitted JSON documents must match byte for byte.
     let session = FleetSession::builder()
         .config(quick_cfg(1, 2))
@@ -131,6 +132,36 @@ fn single_worker_reports_serialize_byte_identically() {
         json::to_string(&session.to_json()),
         json::to_string(&replay.to_json()),
         "batch and event-replay reports diverge"
+    );
+}
+
+/// A busy mid-run schedule — verdicts, arrivals, and a departure across
+/// four replans — driven once synchronously and once through the
+/// overlapped probe pool.
+fn busy_daemon(probe_workers: usize) -> FleetDaemon {
+    let cfg = FleetConfig { probe_workers, ..quick_cfg(1, 2) };
+    let mut d = FleetDaemon::builder().config(cfg).jobs(sim_fleet(3, 7)).build();
+    let mut extras = sim_fleet(5, 7).split_off(3);
+    let shift = DriftVerdict::RateShift { provisioned_hz: 2.0, observed_hz: 8.0 };
+    d.observe_verdict_at("job-00", shift, 600);
+    d.submit_at(extras.remove(0), 700);
+    d.observe_verdict_at("job-01", DriftVerdict::ModelStale { rolling_smape: 0.9 }, 800);
+    d.submit_at(extras.remove(0), 900);
+    d.retire_at("job-02", 900);
+    d
+}
+
+#[test]
+fn overlapped_profiling_drains_byte_identically_to_the_synchronous_daemon() {
+    // The perf-opt acceptance guard: with the pool overlapping probe
+    // execution across replans, completions still merge in dispatch
+    // order, so the drained report must not move a single byte.
+    let sync = busy_daemon(0).drain().expect("sync drain");
+    let overlapped = busy_daemon(1).drain().expect("overlapped drain");
+    assert_eq!(
+        json::to_string(&sync.to_json()),
+        json::to_string(&overlapped.to_json()),
+        "overlapped drain diverged from the synchronous daemon"
     );
 }
 

@@ -12,12 +12,12 @@ use streamprof::earlystop::{EarlyStopConfig, EarlyStopMonitor};
 use streamprof::fit::{ModelKind, ProfilePoint, RuntimeModel};
 use streamprof::fleet::telemetry::{SeriesBuf, SeriesKind, TelemetryStore};
 use streamprof::fleet::{
-    mesh_rebalance, rebalance, rebalance_across, FleetJob, MeasurementCache, MeshConfig, MeshFault,
-    MeshTopology,
+    journal_json, mesh_rebalance, rebalance, rebalance_across, sim_fleet, DriftVerdict, FleetConfig,
+    FleetDaemon, FleetJob, MeasurementCache, MeshConfig, MeshFault, MeshTopology,
 };
 use streamprof::simulator::{Algo, SimulatedJob, NODES};
 use streamprof::strategies::{self, initial_limits};
-use streamprof::util::Rng;
+use streamprof::util::{json, Rng};
 
 const CASES: u64 = 60;
 
@@ -859,5 +859,45 @@ fn prop_telemetry_concurrent_appends_aggregate_exactly() {
         assert_eq!(store.total_points(), total, "case {case}: global accounting");
         assert_eq!(store.series_count(), expect.len(), "case {case}: series count");
         assert_eq!(store.total_evicted(), 0, "case {case}: retention untouched");
+    }
+}
+
+/// Property: however the probe pool's worker threads interleave, the
+/// overlapped daemon drains a bit-identical report and journal — and the
+/// report matches the synchronous daemon byte for byte. Seq-ordered
+/// settling erases the completion-order permutation; the jobs carry
+/// distinct cache labels, so no two in-flight probes share cold entries.
+#[test]
+fn prop_overlapped_drain_is_invariant_under_completion_order() {
+    fn scenario(probe_workers: usize) -> FleetDaemon {
+        let cfg = FleetConfig {
+            workers: 4,
+            rounds: 1,
+            profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
+            horizon: 500,
+            probe_workers,
+            ..Default::default()
+        };
+        let mut d = FleetDaemon::builder().config(cfg).jobs(sim_fleet(4, 7)).build();
+        let shift = DriftVerdict::RateShift { provisioned_hz: 2.0, observed_hz: 8.0 };
+        d.observe_verdict_at("job-00", shift, 600);
+        d.observe_verdict_at("job-01", DriftVerdict::ModelStale { rolling_smape: 0.9 }, 650);
+        let mut extras = sim_fleet(6, 7).split_off(4);
+        d.submit_at(extras.remove(0), 700);
+        d.submit_at(extras.remove(0), 700);
+        d.retire_at("job-02", 900);
+        d
+    }
+    let sync_bytes = json::to_string(&scenario(0).drain().expect("sync drain").to_json());
+    let mut journals: Vec<String> = Vec::new();
+    for run in 0..4 {
+        let mut d = scenario(4);
+        d.run_until(2_000).expect("overlapped run");
+        journals.push(json::to_string(&journal_json(d.journal())));
+        let bytes = json::to_string(&d.drain().expect("overlapped drain").to_json());
+        assert_eq!(bytes, sync_bytes, "run {run}: overlapped report diverged from sync");
+    }
+    for (run, j) in journals.iter().enumerate().skip(1) {
+        assert_eq!(j, &journals[0], "run {run}: journal depends on thread interleaving");
     }
 }

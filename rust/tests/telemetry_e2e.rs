@@ -27,6 +27,7 @@ fn quick_cfg(workers: usize, rounds: usize) -> FleetConfig {
         strategy: "nms".to_string(),
         profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
         horizon: 500,
+        probe_workers: 0,
     }
 }
 
@@ -299,6 +300,7 @@ fn adaptive_epochs_emit_drift_verdicts_and_smape_points() {
         strategy: "nms".to_string(),
         profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
         horizon: 1000,
+        probe_workers: 0,
     };
     let report = FleetSession::builder()
         .config(cfg)
