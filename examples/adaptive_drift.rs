@@ -55,6 +55,7 @@ fn main() -> anyhow::Result<()> {
             profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
             horizon: 1000,
             probe_workers: 0,
+            ..FleetConfig::default()
         })
         .jobs(specs)
         .adaptive(acfg.clone())

@@ -26,6 +26,7 @@ fn main() -> anyhow::Result<()> {
         profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
         horizon: 500,
         probe_workers: 0,
+        ..FleetConfig::default()
     };
     let roster = sim_fleet(6, 7);
     let mut daemon = FleetDaemon::builder().config(cfg).jobs(roster).rebalance(true).build();

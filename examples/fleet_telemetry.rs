@@ -27,6 +27,7 @@ fn main() -> anyhow::Result<()> {
         profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
         horizon: 500,
         probe_workers: 0,
+        ..FleetConfig::default()
     };
     let store = Arc::new(TelemetryStore::new());
     let mut daemon = FleetDaemon::builder()

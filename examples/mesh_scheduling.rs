@@ -41,6 +41,7 @@ fn main() -> anyhow::Result<()> {
         profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
         horizon: 500,
         probe_workers: 0,
+        ..FleetConfig::default()
     };
     // A 3×3 grid with 50 ticks of link latency: summaries published at a
     // round arrive one round late, so every placement decision runs on

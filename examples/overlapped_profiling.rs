@@ -27,6 +27,7 @@ fn build_daemon(probe_workers: usize) -> FleetDaemon {
         profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
         horizon: 500,
         probe_workers,
+        ..FleetConfig::default()
     };
     let mut daemon = FleetDaemon::builder().config(cfg).jobs(sim_fleet(4, 7)).build();
     let shift = DriftVerdict::RateShift { provisioned_hz: 2.0, observed_hz: 9.0 };

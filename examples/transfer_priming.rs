@@ -1,0 +1,114 @@
+//! Transfer-prior priming end-to-end: the workload zoo profiled cold
+//! builds a [`PriorCorpus`]; returning job classes then profile primed
+//! from their donors and reach target accuracy in measurably fewer
+//! probes, while a regime-shifted sibling rejects its donor and falls
+//! back to the cold sweep at no extra cost.
+//!
+//! Every profile runs on a FRESH measurement cache: only the transfer
+//! seed carries cross-job knowledge, so the probe savings are the
+//! prior's alone — not the cache's.
+//!
+//! ```bash
+//! cargo run --release --example transfer_priming
+//! ```
+
+use streamprof::coordinator::{PriorVerdict, ProfilerConfig};
+use streamprof::fleet::worker::profile_job_with;
+use streamprof::fleet::{
+    sim_fleet, FleetConfig, FleetJobSpec, JobOutcome, MeasurementCache, PriorCorpus, ProfilePass,
+    ScaledBackendFactory,
+};
+use streamprof::util::Table;
+
+fn cfg() -> FleetConfig {
+    FleetConfig {
+        workers: 2,
+        rounds: 1,
+        strategy: "nms".to_string(),
+        profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
+        horizon: 500,
+        ..FleetConfig::default()
+    }
+}
+
+fn cold(spec: &FleetJobSpec) -> anyhow::Result<JobOutcome> {
+    let fresh = MeasurementCache::new();
+    profile_job_with(spec, &cfg(), &fresh, 0, &ProfilePass::default())
+}
+
+fn main() -> anyhow::Result<()> {
+    // Stage 1 — bootstrap: the full workload zoo (7 nodes x 3 algorithms)
+    // profiled cold is the corpus a long-running daemon accumulates.
+    let donor_cache = MeasurementCache::new();
+    let mut corpus = PriorCorpus::new();
+    for spec in sim_fleet(21, 7) {
+        corpus.absorb(&profile_job_with(&spec, &cfg(), &donor_cache, 0, &ProfilePass::default())?);
+    }
+    println!("corpus: {} donor curves from the bootstrap zoo\n", corpus.len());
+
+    // Stage 2 — returning classes: the next 7 arrivals repeat the zoo's
+    // classes, so each one finds an exact-label donor.
+    let mut table = Table::new(&["job", "donor", "verdict", "cold probes", "primed probes"])
+        .with_title("Prior-primed profiling vs cold start (fresh caches)");
+    let (mut cold_total, mut primed_total) = (0u64, 0u64);
+    for spec in &sim_fleet(28, 7).split_off(21) {
+        let cold_run = cold(spec)?;
+        let seed = corpus.donor_for(spec).expect("the corpus covers every zoo class");
+        let pass = ProfilePass { transfer: Some(seed), ..ProfilePass::default() };
+        let fresh = MeasurementCache::new();
+        let primed = profile_job_with(spec, &cfg(), &fresh, 0, &pass)?;
+        let tr = primed.transfer.clone().expect("primed outcome records its donor");
+        assert!(
+            matches!(tr.verdict, PriorVerdict::Adopted | PriorVerdict::Tempered),
+            "{}: same-class donor must not be rejected, got {:?}",
+            spec.name,
+            tr.verdict
+        );
+        cold_total += cold_run.cache_delta.misses;
+        primed_total += primed.cache_delta.misses;
+        table.rowd(&[
+            &spec.name,
+            &tr.donor,
+            &tr.verdict.name(),
+            &cold_run.cache_delta.misses,
+            &primed.cache_delta.misses,
+        ]);
+    }
+    println!("{}", table.render());
+    let saved = 100.0 * (cold_total as f64 - primed_total as f64) / cold_total as f64;
+    println!("probes: cold {cold_total}, primed {primed_total} ({saved:.1}% saved)\n");
+    // The acceptance bar: priming must measurably beat the cold start.
+    assert!(
+        primed_total < cold_total,
+        "priming saved nothing: primed {primed_total} vs cold {cold_total}"
+    );
+
+    // Stage 3 — mismatch: a 3x-slower sibling of class 0. The check probe
+    // rejects the donor and the session falls back to the cold sweep,
+    // reusing the check probe — a wrong prior costs nothing extra.
+    let base = sim_fleet(1, 7).remove(0);
+    let shifted = FleetJobSpec {
+        name: "shifted".to_string(),
+        backend: ScaledBackendFactory::shared(base.backend.clone(), 3.0),
+        ..base
+    };
+    let cold_run = cold(&shifted)?;
+    let seed = corpus.donor_for(&shifted).expect("the base class donates to its @x3 sibling");
+    let pass = ProfilePass { transfer: Some(seed), ..ProfilePass::default() };
+    let fresh = MeasurementCache::new();
+    let fallback = profile_job_with(&shifted, &cfg(), &fresh, 0, &pass)?;
+    let tr = fallback.transfer.clone().expect("the donor attempt is recorded");
+    assert_eq!(tr.verdict, PriorVerdict::Rejected, "a 3x regime shift must reject");
+    assert!(
+        fallback.cache_delta.misses <= cold_run.cache_delta.misses + 1,
+        "rejection cost {} probes vs {} cold",
+        fallback.cache_delta.misses,
+        cold_run.cache_delta.misses
+    );
+    println!(
+        "mismatch: donor {} rejected; fallback spent {} probes (cold: {})",
+        tr.donor, fallback.cache_delta.misses, cold_run.cache_delta.misses
+    );
+    println!("\ntransfer priming OK");
+    Ok(())
+}

@@ -37,9 +37,10 @@ use anyhow::{bail, Context, Result};
 
 use streamprof::coordinator::ProfilerConfig;
 use streamprof::fit::{ModelKind, RuntimeModel};
+use streamprof::fleet::worker::profile_job_with;
 use streamprof::fleet::{
     mesh_rebalance, rebalance_across, sim_fleet, DriftVerdict, FleetConfig, FleetDaemon, FleetJob,
-    MeasurementCache, MeshConfig, MeshTopology, TelemetryStore,
+    MeasurementCache, MeshConfig, MeshTopology, PriorCorpus, ProfilePass, TelemetryStore,
 };
 use streamprof::util::{json, Args, Json, Rng, Table};
 
@@ -62,6 +63,7 @@ struct TierResult {
     mesh_nodes: usize,
     mesh_guaranteed_ratio: f64,
     gossip_rounds: u64,
+    transfer_probe_savings_pct: f64,
 }
 
 impl TierResult {
@@ -83,6 +85,7 @@ impl TierResult {
             ("mesh_nodes", Json::num(self.mesh_nodes as f64)),
             ("mesh_guaranteed_ratio", Json::num(self.mesh_guaranteed_ratio)),
             ("gossip_rounds", Json::num(self.gossip_rounds as f64)),
+            ("transfer_probe_savings_pct", Json::num(self.transfer_probe_savings_pct)),
         ])
     }
 }
@@ -95,6 +98,8 @@ fn tier_cfg() -> FleetConfig {
         profiler: ProfilerConfig { samples: 64, max_steps: 4, ..Default::default() },
         horizon: 1000,
         probe_workers: 0,
+        transfer: false,
+        plan_quantile: None,
     }
 }
 
@@ -197,6 +202,31 @@ fn run_tier_mesh(jobs: usize) -> Result<(usize, f64, u64)> {
     Ok((nodes, ratio, stats.gossip_rounds))
 }
 
+/// Transfer-priming stage (fixed size, tier-independent): profile the
+/// 21-label workload zoo cold to build a corpus, then profile one
+/// recipient per label twice on FRESH caches — once cold, once primed by
+/// its corpus donor. Probes = executed cache misses; the fresh caches
+/// keep the shared-label replay path from masking what the prior saves.
+fn run_tier_transfer() -> Result<f64> {
+    let cfg = tier_cfg();
+    let donor_cache = MeasurementCache::new();
+    let mut corpus = PriorCorpus::new();
+    for spec in sim_fleet(21, 7) {
+        let outcome = profile_job_with(&spec, &cfg, &donor_cache, 0, &ProfilePass::default())?;
+        corpus.absorb(&outcome);
+    }
+    let recipients = sim_fleet(42, 7).split_off(21);
+    let (mut cold, mut primed) = (0u64, 0u64);
+    for spec in &recipients {
+        let c = profile_job_with(spec, &cfg, &MeasurementCache::new(), 0, &ProfilePass::default())?;
+        cold += c.cache_delta.misses;
+        let pass = ProfilePass { transfer: corpus.donor_for(spec), ..ProfilePass::default() };
+        let p = profile_job_with(spec, &cfg, &MeasurementCache::new(), 0, &pass)?;
+        primed += p.cache_delta.misses;
+    }
+    Ok(100.0 * (cold as f64 - primed as f64) / (cold as f64).max(1.0))
+}
+
 fn run_tier(tier: &'static str, jobs: usize) -> Result<TierResult> {
     let cfg = tier_cfg();
     let cache = Arc::new(MeasurementCache::new());
@@ -238,6 +268,7 @@ fn run_tier(tier: &'static str, jobs: usize) -> Result<TierResult> {
     let (p99_first_probe_ms, overlap_speedup) = run_tier_overlapped(jobs, sync_phase_s)?;
     let (jobs_per_sec_telemetry, telemetry_points) = run_tier_telemetry(jobs)?;
     let (mesh_nodes, mesh_guaranteed_ratio, gossip_rounds) = run_tier_mesh(jobs)?;
+    let transfer_probe_savings_pct = run_tier_transfer()?;
     Ok(TierResult {
         tier,
         jobs,
@@ -254,6 +285,7 @@ fn run_tier(tier: &'static str, jobs: usize) -> Result<TierResult> {
         mesh_nodes,
         mesh_guaranteed_ratio,
         gossip_rounds,
+        transfer_probe_savings_pct,
     })
 }
 
@@ -276,7 +308,7 @@ fn main() -> Result<()> {
 
     let headers = [
         "tier", "jobs", "jobs/s", "jobs/s tel", "ovh %", "saved (s)", "hit rate", "p99 (ms)",
-        "p99 disp (ms)", "overlap x", "mesh ratio",
+        "p99 disp (ms)", "overlap x", "mesh ratio", "xfer save %",
     ];
     let mut table = Table::new(&headers).with_title("Fleet daemon throughput");
     for r in &results {
@@ -292,6 +324,7 @@ fn main() -> Result<()> {
             &format!("{:.3}", r.p99_first_probe_ms),
             &format!("{:.2}", r.overlap_speedup),
             &format!("{:.2}", r.mesh_guaranteed_ratio),
+            &format!("{:.1}", r.transfer_probe_savings_pct),
         ]);
     }
     println!("{}", table.render());

@@ -24,6 +24,30 @@ pub struct ManagedJob {
     pub priority: i32,
 }
 
+impl ManagedJob {
+    /// Provision this job at runtime quantile `q` instead of the mean
+    /// prediction: the model is inflated by `1 + z(q) · spread`, where
+    /// `spread` is the model's relative residual spread — a Gaussian
+    /// tail assumption on the relative prediction error. `q = 0.5` (or a
+    /// zero spread) leaves the job unchanged; quantiles below the median
+    /// deflate, floored so the model never goes non-positive.
+    pub fn at_quantile(mut self, q: f64, spread: f64) -> Self {
+        self.model = quantile_model(&self.model, q, spread);
+        self
+    }
+}
+
+/// The capacity-planning view of a fitted runtime curve at quantile `q`:
+/// the mean model inflated by `1 + z(q) · spread` (Gaussian tail on the
+/// relative prediction error), floored so it never goes non-positive.
+/// This is [`ManagedJob::at_quantile`] as a free function, for call
+/// sites that re-plan from a bare [`RuntimeModel`].
+pub fn quantile_model(model: &RuntimeModel, q: f64, spread: f64) -> RuntimeModel {
+    let z = crate::stats::normal_quantile(q.clamp(1e-9, 1.0 - 1e-9));
+    let factor = (1.0 + z * spread.max(0.0)).max(0.1);
+    model.rescaled(factor)
+}
+
 /// Assignment outcome for one job.
 #[derive(Clone, Debug)]
 pub struct Assignment {
@@ -218,6 +242,43 @@ mod tests {
 
     fn job(name: &str, a: f64, rate: f64, prio: i32) -> ManagedJob {
         ManagedJob { name: name.into(), model: model(a), rate_hz: rate, priority: prio }
+    }
+
+    #[test]
+    fn at_quantile_inflates_the_upper_tail_only() {
+        let j = job("q", 0.05, 5.0, 1);
+        let p95 = j.clone().at_quantile(0.95, 0.2);
+        let p50 = j.clone().at_quantile(0.5, 0.2);
+        let tight = j.clone().at_quantile(0.95, 0.0);
+        for &r in &[0.3f64, 1.0, 2.0] {
+            assert!(p95.model.eval(r) > j.model.eval(r), "p95 inflates at {r}");
+            assert!((p50.model.eval(r) - j.model.eval(r)).abs() < 1e-12, "median = mean");
+            assert!((tight.model.eval(r) - j.model.eval(r)).abs() < 1e-12, "zero spread");
+        }
+        // z(0.95) * 0.2 ≈ 0.329: the inflation is the Gaussian tail factor.
+        let ratio = p95.model.eval(1.0) / j.model.eval(1.0);
+        assert!((ratio - 1.329).abs() < 1e-3, "{ratio}");
+    }
+
+    #[test]
+    fn quantile_planning_reserves_more_capacity() {
+        let plan_at = |q: Option<f64>| {
+            let mut mgr = JobManager::new(4.0);
+            let mut j = job("a", 0.05, 5.0, 1);
+            if let Some(q) = q {
+                j = j.at_quantile(q, 0.3);
+            }
+            mgr.register(j);
+            mgr.plan()
+        };
+        let mean = plan_at(None);
+        let p95 = plan_at(Some(0.95));
+        assert!(
+            p95.total_assigned > mean.total_assigned,
+            "p95 {} vs mean {}",
+            p95.total_assigned,
+            mean.total_assigned
+        );
     }
 
     #[test]

@@ -15,5 +15,8 @@ pub use backend::{
     BackendFactory, EngineBackendFactory, Measurement, PjrtBackend, ProfilingBackend,
     SimBackendFactory, SimulatedBackend,
 };
-pub use manager::{quote_for, Assignment, CapacityPlan, JobManager, ManagedJob};
-pub use profiler::{smape_vs_dataset, Profiler, ProfilerConfig, SessionResult, StepRecord};
+pub use manager::{quantile_model, quote_for, Assignment, CapacityPlan, JobManager, ManagedJob};
+pub use profiler::{
+    smape_vs_dataset, PriorGate, PriorVerdict, Profiler, ProfilerConfig, SessionPrior,
+    SessionResult, StepRecord,
+};

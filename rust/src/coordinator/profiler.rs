@@ -105,6 +105,71 @@ pub fn smape_vs_dataset(model: &RuntimeModel, dataset: &[ProfilePoint]) -> f64 {
     smape_guarded(&truth, &pred, 1e-9)
 }
 
+/// A distributional runtime prior a profiling session can be primed from.
+///
+/// The profiler stays decoupled from where the prior comes from (the fleet
+/// layer's transfer corpus implements this over a GP seeded with donor
+/// pseudo-observations); all it needs is a predicted mean and spread at
+/// any limitation — **both on the original runtime scale** — plus a way to
+/// condition on fresh measurements mid-session.
+pub trait SessionPrior {
+    /// Predicted mean per-sample runtime (seconds) at limitation `x`.
+    fn mean(&self, x: f64) -> f64;
+    /// Posterior standard deviation of the runtime prediction at `x`, on
+    /// the same scale as [`SessionPrior::mean`].
+    fn sd(&self, x: f64) -> f64;
+    /// Condition the prior on a fresh measurement (recalibration).
+    fn observe(&mut self, m: &Measurement);
+    /// The prior's current best [`RuntimeModel`] summary, used as the
+    /// fitted model of primed step records.
+    fn model(&self) -> RuntimeModel;
+}
+
+/// How a primed session judged its transfer prior after the check probe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PriorVerdict {
+    /// The check probe agreed with the prior; probes were dispatched only
+    /// where the posterior stayed uncertain.
+    Adopted,
+    /// The check probe disagreed mildly; the prior was kept but the
+    /// confidence gate tightened, so more verification probes ran.
+    Tempered,
+    /// The check probe disagreed beyond the reject threshold; the session
+    /// fell back to a cold sweep (reusing the check probe as its first
+    /// initial run, so no probe is wasted).
+    Rejected,
+}
+
+impl PriorVerdict {
+    /// Stable wire name used by daemon journals and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            PriorVerdict::Adopted => "adopted",
+            PriorVerdict::Tempered => "tempered",
+            PriorVerdict::Rejected => "rejected",
+        }
+    }
+}
+
+/// Thresholds steering [`Profiler::run_with_prior`]. All three are
+/// relative (SMAPE-style) quantities, so they are scale-free.
+#[derive(Clone, Debug)]
+pub struct PriorGate {
+    /// Check-probe gap above which the prior is kept but tempered.
+    pub temper: f64,
+    /// Check-probe gap above which the prior is rejected outright.
+    pub reject: f64,
+    /// Posterior `sd / |mean|` below which a grid point needs no probe.
+    /// Tempered priors verify against half this gate.
+    pub confidence: f64,
+}
+
+impl Default for PriorGate {
+    fn default() -> Self {
+        Self { temper: 0.12, reject: 0.4, confidence: 0.2 }
+    }
+}
+
 /// The orchestrator.
 pub struct Profiler {
     cfg: ProfilerConfig,
@@ -159,6 +224,24 @@ impl Profiler {
         observer: &mut dyn FnMut(&Measurement),
         prior: Option<&RuntimeModel>,
     ) -> SessionResult {
+        self.session_body(backend, observer, prior, None)
+    }
+
+    /// The cold/warm session body shared by [`Profiler::run_observed_from`]
+    /// and the rejected-prior fallback of [`Profiler::run_with_prior`].
+    ///
+    /// `first`, when set, is a measurement **already executed** at the
+    /// smallest initial limitation (the primed path's check probe): it is
+    /// used verbatim in place of re-probing that limit, and the observer is
+    /// NOT re-invoked for it — so a rejected prior costs exactly the cold
+    /// sweep, with the check probe reused as the first initial run.
+    fn session_body(
+        &mut self,
+        backend: &mut dyn ProfilingBackend,
+        observer: &mut dyn FnMut(&Measurement),
+        prior: Option<&RuntimeModel>,
+        first: Option<Measurement>,
+    ) -> SessionResult {
         let l_max = backend.l_max();
         let mut ctx = ProfilingContext::new(self.cfg.l_min, l_max, self.cfg.delta);
         if let Some(p) = prior {
@@ -173,10 +256,14 @@ impl Profiler {
         // ---- Phase 1: initial parallel runs (wallclock = slowest). ----
         let measurements: Vec<Measurement> = init
             .iter()
-            .map(|&l| {
-                let m = self.run_one(backend, l);
-                observer(&m);
-                m
+            .enumerate()
+            .map(|(i, &l)| match (i, first) {
+                (0, Some(m)) => m,
+                _ => {
+                    let m = self.run_one(backend, l);
+                    observer(&m);
+                    m
+                }
             })
             .collect();
         let parallel_wall = measurements.iter().map(|m| m.wallclock).fold(0.0f64, f64::max);
@@ -238,6 +325,112 @@ impl Profiler {
             steps,
             total_time: cumulative,
         }
+    }
+
+    /// Prior-primed profiling: probe only where the prior stays uncertain.
+    ///
+    /// One **check probe** runs first, at the smallest Algorithm-1 initial
+    /// limitation (the synthetic-target anchor). Its SMAPE-style gap to the
+    /// prior's prediction decides the verdict:
+    ///
+    /// * gap > `gate.reject` → [`PriorVerdict::Rejected`]: the session
+    ///   falls back to the cold sweep, reusing the check probe as its first
+    ///   initial run — a mismatched prior costs exactly the cold session.
+    /// * gap > `gate.temper` → [`PriorVerdict::Tempered`]: the prior is
+    ///   kept but verified against half the confidence gate.
+    /// * otherwise → [`PriorVerdict::Adopted`].
+    ///
+    /// In the adopted/tempered path the session conditions the prior on the
+    /// check probe, then repeatedly probes the unprofiled grid point with
+    /// the largest posterior `sd / |mean|` until every candidate clears the
+    /// confidence gate (or `max_steps` is hit) — a well-matched prior
+    /// reaches its target accuracy in measurably fewer probes than cold.
+    pub fn run_with_prior(
+        &mut self,
+        backend: &mut dyn ProfilingBackend,
+        observer: &mut dyn FnMut(&Measurement),
+        prior: &mut dyn SessionPrior,
+        gate: &PriorGate,
+    ) -> (SessionResult, PriorVerdict) {
+        let l_max = backend.l_max();
+        let init =
+            initial_limits(self.cfg.p, self.cfg.n_initial, self.cfg.l_min, l_max, self.cfg.delta);
+        let check = init.first().copied().unwrap_or(self.cfg.l_min);
+        let m0 = self.run_one(backend, check);
+        observer(&m0);
+
+        let predicted = prior.mean(check);
+        let denom = (m0.mean_runtime.abs() + predicted.abs()).max(1e-12) / 2.0;
+        let gap = (m0.mean_runtime - predicted).abs() / denom;
+        // NaN-safe: a non-finite gap (degenerate prior) rejects.
+        if !(gap <= gate.reject) {
+            let fallback = self.session_body(backend, observer, None, Some(m0));
+            return (fallback, PriorVerdict::Rejected);
+        }
+        let verdict =
+            if gap > gate.temper { PriorVerdict::Tempered } else { PriorVerdict::Adopted };
+        let confidence = match verdict {
+            PriorVerdict::Tempered => gate.confidence * 0.5,
+            _ => gate.confidence,
+        };
+        prior.observe(&m0);
+
+        let mut ctx = ProfilingContext::new(self.cfg.l_min, l_max, self.cfg.delta);
+        ctx.target = m0.mean_runtime;
+        ctx.points.push(ProfilePoint::new(m0.limit, m0.mean_runtime));
+        ctx.model = prior.model();
+        let mut cumulative = m0.wallclock;
+        let mut steps = vec![StepRecord {
+            index: 1,
+            limit: m0.limit,
+            mean_runtime: m0.mean_runtime,
+            samples: m0.samples,
+            wallclock: m0.wallclock,
+            cumulative_time: cumulative,
+            model: ctx.model.clone(),
+        }];
+
+        while steps.len() < self.cfg.max_steps {
+            // Most-uncertain unprofiled grid point, relative to the
+            // predicted magnitude. Candidates ascend, so strict `>` keeps
+            // the smallest limit on ties.
+            let mut best: Option<(f64, f64)> = None;
+            for cand in ctx.candidates() {
+                let ratio = prior.sd(cand) / prior.mean(cand).abs().max(1e-9);
+                if best.map(|(r, _)| ratio > r).unwrap_or(true) {
+                    best = Some((ratio, cand));
+                }
+            }
+            let Some((ratio, next)) = best else { break };
+            if !(ratio > confidence) {
+                break;
+            }
+            let m = self.run_one(backend, next);
+            observer(&m);
+            cumulative += m.wallclock;
+            ctx.points.push(ProfilePoint::new(m.limit, m.mean_runtime));
+            prior.observe(&m);
+            ctx.model = prior.model();
+            steps.push(StepRecord {
+                index: steps.len() + 1,
+                limit: m.limit,
+                mean_runtime: m.mean_runtime,
+                samples: m.samples,
+                wallclock: m.wallclock,
+                cumulative_time: cumulative,
+                model: ctx.model.clone(),
+            });
+        }
+
+        let session = SessionResult {
+            backend: backend.label(),
+            strategy: self.strategy.name().to_string(),
+            initial_limits: vec![check],
+            target: ctx.target,
+            steps,
+            total_time: cumulative,
+        };
+        (session, verdict)
     }
 }
 
@@ -388,6 +581,102 @@ mod tests {
             let rel = (m.eval(r) - cold.final_model().eval(r)).abs() / cold.final_model().eval(r);
             assert!(rel < 0.5, "warm vs cold diverged at {r}: {rel}");
         }
+    }
+
+    /// Minimal test prior: a fixed model curve scaled by `scale`, with a
+    /// constant relative spread. `observe` is a no-op — these tests drive
+    /// the gate logic, not the calibration (the fleet transfer prior owns
+    /// that).
+    struct FlatPrior {
+        model: RuntimeModel,
+        sd_rel: f64,
+        scale: f64,
+    }
+
+    impl SessionPrior for FlatPrior {
+        fn mean(&self, x: f64) -> f64 {
+            self.scale * self.model.eval(x)
+        }
+        fn sd(&self, x: f64) -> f64 {
+            self.sd_rel * self.mean(x).abs()
+        }
+        fn observe(&mut self, _m: &Measurement) {}
+        fn model(&self) -> RuntimeModel {
+            self.model.rescaled(self.scale)
+        }
+    }
+
+    #[test]
+    fn confident_matching_prior_is_adopted_with_fewer_probes() {
+        let cfg = ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() };
+        let mut b1 = backend("pi4", Algo::Arima, 41);
+        let cold = Profiler::new(cfg.clone(), strategies::by_name("nms", 1).unwrap()).run(&mut b1);
+        let mut prior =
+            FlatPrior { model: cold.final_model().clone(), sd_rel: 0.01, scale: 1.0 };
+        let mut b2 = backend("pi4", Algo::Arima, 41);
+        let (primed, verdict) = Profiler::new(cfg, strategies::by_name("nms", 1).unwrap())
+            .run_with_prior(&mut b2, &mut |_| {}, &mut prior, &PriorGate::default());
+        assert_eq!(verdict, PriorVerdict::Adopted);
+        assert!(
+            primed.steps.len() < cold.steps.len(),
+            "primed {} probes vs cold {}",
+            primed.steps.len(),
+            cold.steps.len()
+        );
+        assert_eq!(primed.initial_limits.len(), 1, "one check probe");
+    }
+
+    #[test]
+    fn mild_disagreement_tempers_the_prior() {
+        let cfg = ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() };
+        let mut b1 = backend("pi4", Algo::Arima, 43);
+        let cold = Profiler::new(cfg.clone(), strategies::by_name("nms", 1).unwrap()).run(&mut b1);
+        // ~30% uniform miscalibration: gap ≈ 0.26, between temper and reject.
+        let mut prior =
+            FlatPrior { model: cold.final_model().clone(), sd_rel: 0.01, scale: 1.3 };
+        let mut b2 = backend("pi4", Algo::Arima, 43);
+        let (_, verdict) = Profiler::new(cfg, strategies::by_name("nms", 1).unwrap())
+            .run_with_prior(&mut b2, &mut |_| {}, &mut prior, &PriorGate::default());
+        assert_eq!(verdict, PriorVerdict::Tempered);
+    }
+
+    #[test]
+    fn rejected_prior_falls_back_byte_identical_to_cold() {
+        let cfg = ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() };
+        let mut b1 = backend("pi4", Algo::Arima, 47);
+        let cold = Profiler::new(cfg.clone(), strategies::by_name("nms", 1).unwrap()).run(&mut b1);
+        // 5x regime shift: the check probe must reject the prior.
+        let mut prior =
+            FlatPrior { model: cold.final_model().clone(), sd_rel: 0.01, scale: 5.0 };
+        let mut b2 = backend("pi4", Algo::Arima, 47);
+        let (fallback, verdict) = Profiler::new(cfg, strategies::by_name("nms", 1).unwrap())
+            .run_with_prior(&mut b2, &mut |_| {}, &mut prior, &PriorGate::default());
+        assert_eq!(verdict, PriorVerdict::Rejected);
+        assert_eq!(fallback.steps.len(), cold.steps.len(), "no extra probe spent");
+        for (a, b) in cold.steps.iter().zip(&fallback.steps) {
+            assert_eq!(a.limit.to_bits(), b.limit.to_bits());
+            assert_eq!(a.mean_runtime.to_bits(), b.mean_runtime.to_bits());
+            assert_eq!(a.wallclock.to_bits(), b.wallclock.to_bits());
+            assert_eq!(a.model.a.to_bits(), b.model.a.to_bits());
+            assert_eq!(a.model.b.to_bits(), b.model.b.to_bits());
+        }
+        assert_eq!(cold.total_time.to_bits(), fallback.total_time.to_bits());
+        assert_eq!(cold.initial_limits, fallback.initial_limits);
+    }
+
+    #[test]
+    fn observer_not_reinvoked_for_the_reused_check_probe() {
+        let cfg = ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() };
+        let mut b1 = backend("pi4", Algo::Arima, 53);
+        let cold = Profiler::new(cfg.clone(), strategies::by_name("nms", 1).unwrap()).run(&mut b1);
+        let mut prior =
+            FlatPrior { model: cold.final_model().clone(), sd_rel: 0.01, scale: 5.0 };
+        let mut b2 = backend("pi4", Algo::Arima, 53);
+        let mut seen: Vec<Measurement> = Vec::new();
+        let (fallback, verdict) = Profiler::new(cfg, strategies::by_name("nms", 1).unwrap())
+            .run_with_prior(&mut b2, &mut |m| seen.push(*m), &mut prior, &PriorGate::default());
+        assert_eq!(verdict, PriorVerdict::Rejected);
+        assert_eq!(seen.len(), fallback.steps.len(), "check probe observed exactly once");
     }
 
     #[test]

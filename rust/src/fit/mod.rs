@@ -80,6 +80,20 @@ impl ModelKind {
             ModelKind::Full => "a*(R*d)^-b+c",
         }
     }
+
+    /// Inverse of [`ModelKind::name`]: how snapshot restores map the
+    /// persisted member string back onto the enum. `None` for strings no
+    /// member ever produced.
+    pub fn from_name(name: &str) -> Option<ModelKind> {
+        match name {
+            "R^-1" => Some(ModelKind::Inverse),
+            "a*R^-1" => Some(ModelKind::ScaledInverse),
+            "a*R^-b" => Some(ModelKind::PowerLaw),
+            "a*R^-b+c" => Some(ModelKind::PowerLawOffset),
+            "a*(R*d)^-b+c" => Some(ModelKind::Full),
+            _ => None,
+        }
+    }
 }
 
 /// Fitted runtime model. `params = [a, b, c, d]` with inactive members held
@@ -121,6 +135,19 @@ impl RuntimeModel {
         }
         let r = base.powf(1.0 / self.b) / self.d;
         r.is_finite().then_some(r)
+    }
+
+    /// Uniformly rescale the predicted runtime curve by `factor`: both the
+    /// power-law scale `a` and the asymptote `c` grow together, so
+    /// `rescaled(k).eval(r) == k * eval(r)` for every `r`. This is the
+    /// calibration primitive the transfer-prior path uses — one or two
+    /// fresh probes can recalibrate a donor curve's magnitude without
+    /// refitting (a refit at 1–2 points would degrade the model kind).
+    pub fn rescaled(&self, factor: f64) -> Self {
+        let mut m = self.clone();
+        m.a *= factor;
+        m.c *= factor;
+        m
     }
 
     /// Fit the nested family to `points` with no warm start.
@@ -487,6 +514,32 @@ mod tests {
             let want = 2.0 * r.powf(-1.0) + 0.05;
             assert!((m.eval(r) - want).abs() / want < 0.15, "r={r}");
         }
+    }
+
+    #[test]
+    fn rescaled_scales_every_prediction_uniformly() {
+        let pts = synth(1.5, 0.9, 0.08, 1.0, &[0.2, 0.6, 2.0, 6.0]);
+        let m = RuntimeModel::fit(&pts);
+        let k = 2.75;
+        let scaled = m.rescaled(k);
+        assert_eq!(scaled.kind, m.kind);
+        for &r in &[0.15f64, 0.5, 1.5, 6.0] {
+            assert!((scaled.eval(r) - k * m.eval(r)).abs() < 1e-12, "r={r}");
+        }
+    }
+
+    #[test]
+    fn model_kind_names_roundtrip() {
+        for kind in [
+            ModelKind::Inverse,
+            ModelKind::ScaledInverse,
+            ModelKind::PowerLaw,
+            ModelKind::PowerLawOffset,
+            ModelKind::Full,
+        ] {
+            assert_eq!(ModelKind::from_name(kind.name()), Some(kind));
+        }
+        assert_eq!(ModelKind::from_name("not-a-kind"), None);
     }
 
     #[test]

@@ -63,6 +63,7 @@ use anyhow::{bail, ensure, Result};
 
 use crate::coordinator::backend::{Measurement, ProfilingBackend};
 use crate::earlystop::EarlyStopConfig;
+use crate::fit::{ModelKind, RuntimeModel};
 use crate::strategies::grid_bucket;
 use crate::util::fnv1a;
 use crate::util::json::Json;
@@ -141,13 +142,17 @@ struct Entry {
     generation: u64,
 }
 
-/// Per-label aging state: the canonical bucket width and the current
-/// generation.
+/// Per-label aging state: the canonical bucket width, the current
+/// generation, and (since snapshot v3) the label's fitted model metadata.
 #[derive(Default)]
 struct LabelState {
     /// Canonical `delta`, fixed by the first insert/lookup of the label.
     delta: Option<f64>,
     generation: u64,
+    /// Fitted runtime model published by the last profile of this label
+    /// ([`MeasurementCache::note_model`]) — carried by v3 snapshots so a
+    /// restored transfer corpus gets its donor models verbatim.
+    model: Option<RuntimeModel>,
 }
 
 /// One lock stripe: entries, label states, and the counters for every
@@ -325,6 +330,20 @@ impl MeasurementCache {
         self.shard(label).labels.get(label).map_or(0, |st| st.generation)
     }
 
+    /// Publish the label's fitted runtime model as aging-state metadata.
+    /// A v3 [`MeasurementCache::snapshot`] carries it, so a restored
+    /// transfer corpus can donate the exact curve instead of refitting
+    /// from raw points. Overwrites any previous model for the label.
+    pub fn note_model(&self, label: &str, model: &RuntimeModel) {
+        let mut shard = self.shard(label);
+        shard.labels.entry(label.to_string()).or_default().model = Some(model.clone());
+    }
+
+    /// The fitted model last noted for `label`, if any.
+    pub fn model_of(&self, label: &str) -> Option<RuntimeModel> {
+        self.shard(label).labels.get(label).and_then(|st| st.model.clone())
+    }
+
     /// Reclaim every entry whose stamped generation is behind its label's
     /// current generation. Current-generation entries are never evicted.
     /// Returns the number of entries reclaimed.
@@ -361,9 +380,10 @@ impl MeasurementCache {
     /// runtime counters as a [`Json`] tree — the persistence surface
     /// behind `streamprof fleet --cache-file f.json`. Deterministic output
     /// (labels and buckets sorted, stripe counters summed in index order).
-    /// Version 2: the `stats` block carries hit/miss/eviction counters and
+    /// Version 2 added the `stats` block (hit/miss/eviction counters and
     /// the saved wallclock, so a restarted daemon keeps its amortization
-    /// history.
+    /// history); version 3 adds optional per-label `model` metadata — the
+    /// fitted curve parameters the transfer-prior corpus donates from.
     pub fn snapshot(&self) -> Json {
         let guards = self.lock_all();
         let stats = Self::sum_stats(&guards);
@@ -378,6 +398,9 @@ impl MeasurementCache {
             ];
             if let Some(d) = st.delta {
                 fields.push(("delta", Json::num(d)));
+            }
+            if let Some(m) = &st.model {
+                fields.push(("model", model_to_json(m)));
             }
             label_docs.push(Json::obj(fields));
         }
@@ -397,7 +420,7 @@ impl MeasurementCache {
             ]));
         }
         Json::obj([
-            ("version", Json::num(2.0)),
+            ("version", Json::num(3.0)),
             (
                 "stats",
                 Json::obj([
@@ -414,32 +437,39 @@ impl MeasurementCache {
         ])
     }
 
-    /// Merge a [`Self::snapshot`] back in. Returns the number of entries
-    /// restored.
+    /// Merge a [`Self::snapshot`] back in. Returns a [`RestoreOutcome`]:
+    /// the number of entries restored **and** the counts it refused, so a
+    /// corrupted corpus is visible to the caller instead of silently
+    /// shrinking.
     ///
-    /// Validation: the snapshot header declares each label's generation,
-    /// and an entry stamped with a **newer** generation than its label
-    /// declares is refused outright (a corrupt or hand-edited snapshot —
-    /// restoring it would serve measurements the aging protocol says were
-    /// never valid). Older-generation entries restore as stale: `lookup`
-    /// keeps refusing them and `evict_stale` can reclaim them.
+    /// Refusals are per-label/per-entry, not whole-snapshot: an entry
+    /// stamped with a **newer** generation than its label's header
+    /// declares is skipped and counted (`refused_newer` — restoring it
+    /// would serve measurements the aging protocol says were never valid),
+    /// and a label whose canonical bucket width conflicts with the live
+    /// cache is skipped entirely — header merge and entries — and its
+    /// entries counted (`refused_width`). Older-generation entries restore
+    /// as stale: `lookup` keeps refusing them and `evict_stale` can
+    /// reclaim them.
     ///
-    /// Merge policy when the cache is not empty: a label's canonical
-    /// bucket width must agree with the snapshot's, generations merge to
-    /// the max of both sides, and occupied buckets keep their live entry
-    /// (the process's own measurements are never overwritten). Restored
-    /// entries count as `inserts`, so `evictions ≤ inserts` still holds
-    /// after a restore-then-age cycle. A version-2 snapshot's `stats`
-    /// block is folded **additively** into the live counters (the restored
-    /// process keeps its lifetime amortization history; per-run reporting
-    /// goes through [`CacheStats::delta_since`] and is unaffected).
-    /// Version-1 snapshots carry no stats and fold zeros. A failed restore
-    /// is atomic: every check (field types included) runs before the first
-    /// mutation, so an `Err` leaves the live cache exactly as it was.
-    pub fn restore(&self, snap: &Json) -> Result<usize> {
+    /// Merge policy when the cache is not empty: generations merge to the
+    /// max of both sides, occupied buckets keep their live entry (the
+    /// process's own measurements are never overwritten), and a label
+    /// keeps its live model metadata over the snapshot's. Restored entries
+    /// count as `inserts`, so `evictions ≤ inserts` still holds after a
+    /// restore-then-age cycle. A v2+ snapshot's `stats` block is folded
+    /// **additively** into the live counters (the restored process keeps
+    /// its lifetime amortization history; per-run reporting goes through
+    /// [`CacheStats::delta_since`] and is unaffected). Version-1 snapshots
+    /// carry no stats and fold zeros. Structural corruption — wrong-typed
+    /// fields, entries missing from the header, unknown versions — still
+    /// fails the whole restore, and a failed restore is atomic: every such
+    /// check runs before the first mutation, so an `Err` leaves the live
+    /// cache exactly as it was.
+    pub fn restore(&self, snap: &Json) -> Result<RestoreOutcome> {
         let version = snap.get("version").and_then(Json::as_f64).unwrap_or(0.0);
         ensure!(
-            version == 1.0 || version == 2.0,
+            version == 1.0 || version == 2.0 || version == 3.0,
             "unsupported cache snapshot version {version}"
         );
         // Strict field readers: a wrong-typed field is a corrupt snapshot
@@ -470,10 +500,10 @@ impl MeasurementCache {
                 .as_arr()
                 .ok_or_else(|| anyhow::anyhow!("field '{key}' is not an array"))
         }
-        // A version-2 snapshot must carry a consistent stats block; the
+        // A v2+ snapshot must carry a consistent stats block; the
         // carried counters themselves must satisfy the invariants a live
         // cache maintains, or the merged aggregate would violate them.
-        let carried = if version == 2.0 {
+        let carried = if version >= 2.0 {
             let s = snap.req("stats").map_err(anyhow::Error::msg)?;
             let stats = CacheStats {
                 hits: uint(s, "hits")?,
@@ -505,7 +535,7 @@ impl MeasurementCache {
             CacheStats::default()
         };
         // Parse + validate the whole snapshot before touching any stripe.
-        let mut header: HashMap<String, (Option<f64>, u64)> = HashMap::new();
+        let mut header: HashMap<String, (Option<f64>, u64, Option<RuntimeModel>)> = HashMap::new();
         for l in list(snap, "labels")? {
             let label = text(l, "label")?;
             let generation = uint(l, "generation")?;
@@ -516,7 +546,13 @@ impl MeasurementCache {
             if let Some(d) = delta {
                 ensure!(d > 0.0 && d.is_finite(), "label '{label}': bad delta {d}");
             }
-            header.insert(label, (delta, generation));
+            let model = match l.get("model") {
+                None => None,
+                Some(doc) => Some(model_from_json(doc).ok_or_else(|| {
+                    anyhow::anyhow!("label '{label}': malformed model metadata")
+                })?),
+            };
+            header.insert(label, (delta, generation, model));
         }
         struct Restored {
             label: String,
@@ -525,58 +561,69 @@ impl MeasurementCache {
             m: Measurement,
         }
         let mut restored: Vec<Restored> = Vec::new();
+        let mut refused_newer = 0usize;
         for e in list(snap, "entries")? {
             let label = text(e, "label")?;
-            let Some(&(delta, declared)) = header.get(&label) else {
+            let Some((delta, declared, _)) = header.get(&label) else {
                 bail!("entry label '{label}' missing from the snapshot header");
             };
             ensure!(delta.is_some(), "label '{label}' has entries but no canonical delta");
             let generation = uint(e, "generation")?;
-            ensure!(
-                generation <= declared,
-                "entry '{label}' is stamped generation {generation} but the snapshot \
-                 header declares {declared} — refusing a snapshot newer than itself"
-            );
             let bucket = num(e, "bucket")?;
             ensure!(bucket.fract() == 0.0, "entry '{label}': bad bucket {bucket}");
-            restored.push(Restored {
-                bucket: bucket as i64,
-                generation,
-                m: Measurement {
-                    limit: num(e, "limit")?,
-                    mean_runtime: num(e, "mean_runtime")?,
-                    samples: uint(e, "samples")? as usize,
-                    wallclock: num(e, "wallclock")?,
-                },
-                label,
-            });
+            let m = Measurement {
+                limit: num(e, "limit")?,
+                mean_runtime: num(e, "mean_runtime")?,
+                samples: uint(e, "samples")? as usize,
+                wallclock: num(e, "wallclock")?,
+            };
+            if generation > *declared {
+                // Stamped newer than the snapshot's own header: the aging
+                // protocol says this measurement was never valid. Skip it
+                // and surface the count — a corrupt or hand-edited corpus
+                // must be visible, not silently trusted or silently fatal.
+                refused_newer += 1;
+                continue;
+            }
+            restored.push(Restored { bucket: bucket as i64, generation, m, label });
         }
 
-        // Validate the merge against the live store BEFORE mutating
-        // anything: a failed restore must leave the cache untouched. All
-        // stripes are held (in index order) for the whole merge, so the
-        // restore is atomic across shards too.
+        // Detect label width conflicts against the live store BEFORE
+        // mutating anything. All stripes are held (in index order) for the
+        // whole merge, so the restore is atomic across shards too.
         let mut guards = self.lock_all();
-        for (label, (delta, _)) in &header {
-            if let Some(st) = guards[Self::shard_index(label)].labels.get(label) {
-                if let (Some(live), Some(snap)) = (st.delta, *delta) {
-                    ensure!(
-                        live == snap,
-                        "label '{label}': snapshot delta {snap} conflicts with live {live}"
-                    );
-                }
+        let mut conflicted: std::collections::HashSet<String> = std::collections::HashSet::new();
+        for (label, (delta, _, _)) in &header {
+            let Some(snap_delta) = *delta else { continue };
+            let live =
+                guards[Self::shard_index(label)].labels.get(label).and_then(|st| st.delta);
+            // A conflicting probe grid would alias buckets: skip the whole
+            // label (header merge and entries) and count its entries.
+            if live.is_some_and(|d| d != snap_delta) {
+                conflicted.insert(label.clone());
             }
         }
-        for (label, (delta, generation)) in &header {
+        for (label, (delta, generation, model)) in &header {
+            if conflicted.contains(label) {
+                continue;
+            }
             let shard = &mut guards[Self::shard_index(label)];
             let st = shard.labels.entry(label.clone()).or_default();
             if st.delta.is_none() {
                 st.delta = *delta;
             }
+            if st.model.is_none() {
+                st.model = model.clone();
+            }
             st.generation = st.generation.max(*generation);
         }
         let mut count = 0usize;
+        let mut refused_width = 0usize;
         for r in restored {
+            if conflicted.contains(&r.label) {
+                refused_width += 1;
+                continue;
+            }
             let shard = &mut guards[Self::shard_index(&r.label)];
             if let std::collections::hash_map::Entry::Vacant(slot) =
                 shard.map.entry((r.label, r.bucket))
@@ -597,8 +644,57 @@ impl MeasurementCache {
         s.evictions += carried.evictions;
         s.inserts += carried.inserts + count as u64;
         s.saved_wallclock += carried.saved_wallclock;
-        Ok(count)
+        Ok(RestoreOutcome { restored: count, refused_newer, refused_width })
     }
+}
+
+/// What [`MeasurementCache::restore`] did: entries merged plus the counts
+/// it refused — surfaced (CLI log, daemon journal) so a corrupted corpus
+/// shrinks *visibly*.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RestoreOutcome {
+    /// Entries merged into the live cache.
+    pub restored: usize,
+    /// Entries refused because they were stamped with a generation newer
+    /// than their label's own snapshot header declares.
+    pub refused_newer: usize,
+    /// Entries refused because their label's canonical bucket width
+    /// conflicts with the live cache (the whole label is skipped).
+    pub refused_width: usize,
+}
+
+impl RestoreOutcome {
+    /// Total refused entries.
+    pub fn refused(&self) -> usize {
+        self.refused_newer + self.refused_width
+    }
+}
+
+/// Serialize a fitted model as a snapshot's per-label `model` block
+/// (`fit_cost` is a diagnostic and is not persisted).
+fn model_to_json(m: &RuntimeModel) -> Json {
+    Json::obj([
+        ("kind", Json::str(m.kind.name())),
+        ("a", Json::num(m.a)),
+        ("b", Json::num(m.b)),
+        ("c", Json::num(m.c)),
+        ("d", Json::num(m.d)),
+    ])
+}
+
+/// Parse a per-label `model` block back into a [`RuntimeModel`]
+/// (`fit_cost` restores as zero). `None` when any field is missing,
+/// mistyped, or names an unknown model kind.
+pub(crate) fn model_from_json(doc: &Json) -> Option<RuntimeModel> {
+    let kind = ModelKind::from_name(doc.get("kind")?.as_str()?)?;
+    Some(RuntimeModel {
+        kind,
+        a: doc.get("a")?.as_f64()?,
+        b: doc.get("b")?.as_f64()?,
+        c: doc.get("c")?.as_f64()?,
+        d: doc.get("d")?.as_f64()?,
+        fit_cost: 0.0,
+    })
 }
 
 /// Backend decorator that consults the shared cache before executing.
@@ -984,7 +1080,7 @@ mod tests {
         let fresh = MeasurementCache::new();
         let snap = crate::util::json::parse(&text).expect("snapshot parses");
         let n = fresh.restore(&snap).expect("restore");
-        assert_eq!(n, 4);
+        assert_eq!(n, RestoreOutcome { restored: 4, refused_newer: 0, refused_width: 0 });
         assert_eq!(fresh.len(), 4);
         assert_eq!(fresh.stats().inserts, 8, "4 carried in the stats block + 4 restored");
         // Bit-exact measurements at the canonical widths.
@@ -1018,7 +1114,8 @@ mod tests {
         let text = crate::util::json::to_string(&cache.snapshot());
         let next = MeasurementCache::new();
         let n = next.restore(&crate::util::json::parse(&text).unwrap()).unwrap();
-        assert_eq!(n, 2);
+        assert_eq!(n.restored, 2);
+        assert_eq!(n.refused(), 0);
         let s = next.stats();
         assert_eq!(s.hits, before.hits);
         assert_eq!(s.misses, before.misses);
@@ -1042,11 +1139,53 @@ mod tests {
         root.insert("version".into(), Json::num(1.0));
         root.remove("stats");
         let next = MeasurementCache::new();
-        assert_eq!(next.restore(&snap).unwrap(), 1);
+        assert_eq!(next.restore(&snap).unwrap().restored, 1);
         let s = next.stats();
         assert_eq!((s.hits, s.misses, s.inserts), (0, 0, 1));
         assert_eq!(s.saved_wallclock, 0.0);
         assert!(next.lookup("pi4/arima", 0.5, 0.1).is_some(), "entries restore without stats");
+    }
+
+    #[test]
+    fn snapshot_v3_roundtrips_fitted_model_metadata() {
+        // v3 snapshots carry the per-label fitted model so a restored
+        // corpus can seed transfer priors without re-fitting from points.
+        let cache = MeasurementCache::new();
+        cache.insert("cam", 0.1, meas(0.4, 0.44));
+        let model =
+            RuntimeModel { kind: ModelKind::Full, a: 1.2, b: 0.9, c: 0.05, d: 1.5, fit_cost: 0.0 };
+        cache.note_model("cam", &model);
+        assert!(cache.model_of("cam").is_some());
+
+        let text = crate::util::json::to_string(&cache.snapshot());
+        let next = MeasurementCache::new();
+        let out = next.restore(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(out.restored, 1);
+        let back = next.model_of("cam").expect("model rides the snapshot");
+        assert_eq!(back.kind, ModelKind::Full);
+        for r in [0.3, 0.7, 1.4] {
+            assert!((back.eval(r) - model.eval(r)).abs() < 1e-12);
+        }
+        // A live model is never clobbered by a restored one.
+        let other = RuntimeModel { a: 9.0, ..model.clone() };
+        next.note_model("cam", &other);
+        next.restore(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert!((next.model_of("cam").unwrap().a - 9.0).abs() < 1e-12, "live model wins");
+    }
+
+    #[test]
+    fn restore_reads_v2_snapshots_without_models() {
+        // Pre-v3 snapshots declare version 2 and carry no model metadata;
+        // they must still restore with empty model slots.
+        let cache = MeasurementCache::new();
+        cache.insert("cam", 0.1, meas(0.4, 0.44));
+        let mut snap = cache.snapshot();
+        let Json::Obj(root) = &mut snap else { panic!() };
+        root.insert("version".into(), Json::num(2.0));
+        let next = MeasurementCache::new();
+        assert_eq!(next.restore(&snap).unwrap().restored, 1);
+        assert!(next.model_of("cam").is_none());
+        assert!(next.lookup("cam", 0.4, 0.1).is_some());
     }
 
     #[test]
@@ -1088,33 +1227,33 @@ mod tests {
     }
 
     #[test]
-    fn restore_refuses_entries_newer_than_the_header_declares() {
+    fn restore_counts_entries_newer_than_the_header_declares() {
         let cache = MeasurementCache::new();
         cache.insert("cam", 0.1, meas(0.4, 0.44));
         let mut snap = cache.snapshot();
-        // Forge the entry one generation past the header's declaration.
+        // Forge the entry one generation past the header's declaration. A
+        // corrupted corpus must not poison the live cache — the entry is
+        // skipped, and the refusal is COUNTED so callers can surface it.
         if let Json::Obj(root) = &mut snap {
             let Some(Json::Arr(entries)) = root.get_mut("entries") else { panic!() };
             let Json::Obj(e) = &mut entries[0] else { panic!() };
             e.insert("generation".into(), Json::num(1.0));
         }
-        let err = MeasurementCache::new().restore(&snap).expect_err("must refuse");
-        assert!(err.to_string().contains("newer"), "{err:#}");
-        // Version and width conflicts are refused too.
-        let bad_version = crate::util::json::parse("{\"version\":3}").unwrap();
+        let fresh = MeasurementCache::new();
+        let out = fresh.restore(&snap).expect("forged entries skip, not abort");
+        assert_eq!(out, RestoreOutcome { restored: 0, refused_newer: 1, refused_width: 0 });
+        assert_eq!(out.refused(), 1);
+        assert_eq!(fresh.len(), 0, "the forged entry must not land");
+        // Unknown future versions still refuse the whole snapshot.
+        let bad_version = crate::util::json::parse("{\"version\":4}").unwrap();
         assert!(MeasurementCache::new().restore(&bad_version).is_err());
-        let live = MeasurementCache::new();
-        live.insert("cam", 0.2, meas(0.4, 1.0));
-        let err = live.restore(&cache.snapshot()).expect_err("width conflict");
-        assert!(err.to_string().contains("delta"), "{err:#}");
     }
 
     #[test]
-    fn failed_restore_leaves_the_live_cache_untouched() {
+    fn width_conflicts_skip_the_label_but_merge_the_rest() {
         // Snapshot with TWO labels: "aaa" merges cleanly, "cam" conflicts
-        // on the canonical width. Whatever order the merge visits them,
-        // the failed restore must not have bumped "aaa"'s generation, and
-        // no snapshot entry may have landed.
+        // on the canonical width. The conflicted label is skipped and
+        // counted; the clean label still merges in full.
         let old = MeasurementCache::new();
         old.insert("aaa", 0.1, meas(0.4, 0.44));
         old.bump_generation("aaa");
@@ -1125,11 +1264,14 @@ mod tests {
         let live = MeasurementCache::new();
         live.insert("aaa", 0.1, meas(0.2, 1.0)); // gen 0, clean merge target
         live.insert("cam", 0.2, meas(0.4, 1.0)); // conflicting width
-        let err = live.restore(&snap).expect_err("width conflict must refuse");
-        assert!(err.to_string().contains("delta"), "{err:#}");
-        assert_eq!(live.generation("aaa"), 0, "failed restore must not merge generations");
-        assert_eq!(live.len(), 2, "failed restore must not add entries");
-        assert!(live.lookup("aaa", 0.2, 0.1).is_some(), "live entry still serves");
+        let out = live.restore(&snap).expect("width conflict skips, not aborts");
+        assert_eq!(out.refused_width, 1, "cam's entry refused");
+        assert_eq!(out.restored, 2, "both aaa entries land");
+        assert_eq!(live.generation("aaa"), 1, "clean label merges generations");
+        assert_eq!(live.len(), 4, "live 2 + restored 2");
+        assert!(live.lookup("cam", 0.4, 0.2).is_some(), "live cam entry untouched");
+        assert!(live.lookup("cam", 0.4, 0.1).is_none(), "snapshot cam entry refused");
+        assert!(live.lookup("aaa", 0.6, 0.1).is_some(), "current-gen aaa entry serves");
     }
 
     #[test]
@@ -1177,7 +1319,7 @@ mod tests {
         live.insert("cam", 0.1, meas(0.4, 9.0)); // fresher local measurement
         live.bump_generation("cam"); // live is one generation ahead
         live.insert("cam", 0.1, meas(0.4, 9.5));
-        assert_eq!(live.restore(&snap).unwrap(), 1, "only the vacant 0.8 bucket restores");
+        assert_eq!(live.restore(&snap).unwrap().restored, 1, "only the vacant 0.8 bucket restores");
         assert_eq!(live.lookup("cam", 0.4, 0.1).unwrap().mean_runtime, 9.5, "live entry wins");
         assert_eq!(live.generation("cam"), 1, "generations merge to the max");
         // The restored gen-0 entry is stale under the live generation.

@@ -46,10 +46,11 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::PriorVerdict;
 use crate::fit::RuntimeModel;
 use crate::util::json::Json;
 
-use super::cache::{CacheStats, MeasurementCache};
+use super::cache::{CacheStats, MeasurementCache, RestoreOutcome};
 use super::drift::{AdaptiveConfig, AdaptiveLoop, AdaptiveSummary, DriftVerdict};
 use super::mesh::{Mesh, MeshConfig, MeshFault, MeshStats, MeshTopology};
 use super::migrate::rebalance;
@@ -57,6 +58,7 @@ use super::placement::FleetJob;
 use super::pool::ProbePool;
 use super::session::FleetReport;
 use super::telemetry::{TelemetryRecorder, TelemetryStore};
+use super::transfer::{PriorCorpus, TransferOutcome};
 use super::worker::{self, JobOutcome, ProfilePass};
 use super::{plan_capacity, run_sweep, FleetConfig, FleetJobSpec};
 
@@ -209,6 +211,10 @@ struct OutstandingProbe {
     name: String,
     /// Home-node name at dispatch time (telemetry key).
     node: &'static str,
+    /// Whether this was a fresh arrival (cold-start telemetry key): only
+    /// fresh arrivals consult the transfer corpus, so only they count
+    /// toward `cold_start_probes` / `prior_adoptions`.
+    fresh: bool,
 }
 
 /// Builder for a [`FleetDaemon`] — deliberately the same vocabulary as
@@ -320,6 +326,10 @@ impl FleetDaemonBuilder {
             n => n,
         };
         let pool = ProbePool::new(Arc::clone(&cache), pool_workers);
+        // With transfer enabled, the corpus boots from whatever curves a
+        // restored cache snapshot already carries — the cross-process
+        // path that kills cold starts after a daemon restart.
+        let corpus = self.cfg.transfer.then(|| PriorCorpus::from_cache(&cache));
         let mut daemon = FleetDaemon {
             cfg: self.cfg,
             rebalance: self.rebalance,
@@ -344,6 +354,7 @@ impl FleetDaemonBuilder {
             adaptive_loop: None,
             extras: Vec::new(),
             mesh: None,
+            corpus,
             journal: Vec::new(),
             metrics: DaemonMetrics::default(),
             telemetry,
@@ -425,6 +436,11 @@ pub struct FleetDaemon {
     /// Decentralized mesh scheduler, when configured. Gossip rounds and
     /// faults mutate it; `drain` reports its plan instead of `rebalance`.
     mesh: Option<Mesh>,
+    /// Cross-job runtime-prior corpus ([`FleetConfig::transfer`]): every
+    /// merged outcome feeds it, and fresh arrivals consult it for a
+    /// donor curve before their profile dispatches. `None` = transfer
+    /// learning off, every arrival profiles cold.
+    corpus: Option<PriorCorpus>,
     journal: Vec<JournalEntry>,
     metrics: DaemonMetrics,
     /// Telemetry hooks, when a store is attached. Emission points sit
@@ -457,6 +473,21 @@ impl FleetDaemon {
     /// The append-only journal of every handled event.
     pub fn journal(&self) -> &[JournalEntry] {
         &self.journal
+    }
+
+    /// Journal the outcome of a cache-snapshot restore performed by the
+    /// embedding process (the `--cache-file` path) so refused entries —
+    /// a corrupted or conflicting corpus — are visible on the daemon's
+    /// own timeline, not just on stdout.
+    pub fn note_cache_restore(&mut self, outcome: RestoreOutcome) {
+        let detail = format!(
+            "{} restored, {} refused ({} newer than header, {} width conflicts)",
+            outcome.restored,
+            outcome.refused(),
+            outcome.refused_newer,
+            outcome.refused_width
+        );
+        self.record("cache-restore", detail);
     }
 
     /// Counters over everything processed so far.
@@ -768,6 +799,11 @@ impl FleetDaemon {
                             t.outcome_runtimes(self.clock, o);
                         }
                     }
+                    if let Some(c) = self.corpus.as_mut() {
+                        for o in &al.initial_summary().outcomes {
+                            c.absorb(o);
+                        }
+                    }
                     self.adaptive_loop = Some(al);
                 }
                 None => {
@@ -777,6 +813,14 @@ impl FleetDaemon {
                     if let Some(t) = &self.telemetry {
                         for o in &sweep.outcomes {
                             t.outcome_runtimes(self.clock, o);
+                        }
+                    }
+                    if let Some(c) = self.corpus.as_mut() {
+                        // The bootstrap roster profiles cold by design —
+                        // its outcomes ARE the corpus later arrivals
+                        // draw donors from.
+                        for o in &sweep.outcomes {
+                            c.absorb(o);
                         }
                     }
                     self.sweep = Some(sweep);
@@ -827,7 +871,7 @@ impl FleetDaemon {
     fn replan_tail(&mut self) {
         let cache_now = if self.overlap() { self.virt } else { self.cache.stats() };
         if let Some(sweep) = &mut self.sweep {
-            sweep.plans = plan_capacity(&sweep.outcomes);
+            sweep.plans = plan_capacity(&sweep.outcomes, self.cfg.plan_quantile);
             sweep.cache = cache_now.delta_since(&self.sweep_base);
         }
         let now = self.clock;
@@ -862,8 +906,14 @@ impl FleetDaemon {
             self.cache.bump_generation(&spec.label());
             self.cache.evict_stale();
         }
+        let fresh = verdict.is_none();
         let pass = match verdict {
-            None => ProfilePass::default(),
+            // Fresh arrival: consult the transfer corpus for a donor
+            // curve before profiling cold.
+            None => ProfilePass {
+                transfer: self.corpus.as_ref().and_then(|c| c.donor_for(&spec)),
+                ..ProfilePass::default()
+            },
             Some(v) => ProfilePass {
                 runtime_scale: None,
                 prior: self.model_of(&spec.name),
@@ -873,6 +923,7 @@ impl FleetDaemon {
                     _ => None,
                 },
                 rounds: Some(1),
+                transfer: None,
             },
         };
         let outcome = worker::profile_job_with(&spec, &self.cfg, &self.cache, 0, &pass)?;
@@ -885,8 +936,47 @@ impl FleetDaemon {
             t.probes(self.clock, &spec.name, spec.node.name, executed);
             t.outcome_runtimes(self.clock, &outcome);
         }
+        self.record_transfer(&spec.name, spec.node.name, fresh, outcome.transfer.clone(), executed);
         self.merge_outcome(outcome);
         Ok(())
+    }
+
+    /// Journal and telemetry for one settled profile's transfer-prior
+    /// decision. Fresh arrivals (the only path that consults the corpus)
+    /// also land in the cold-start accounting: a primed profile counts
+    /// one `prior_adoptions` point, anything else counts its executed
+    /// probes as `cold_start_probes`.
+    fn record_transfer(
+        &mut self,
+        name: &str,
+        node: &'static str,
+        fresh: bool,
+        transfer: Option<TransferOutcome>,
+        executed: u64,
+    ) {
+        if let Some(tr) = &transfer {
+            let kind = match tr.verdict {
+                PriorVerdict::Adopted => "prior-adopted",
+                PriorVerdict::Tempered => "prior-tempered",
+                PriorVerdict::Rejected => "prior-rejected",
+            };
+            let how = if tr.translated { "translated donor" } else { "donor" };
+            self.record(kind, format!("{name}: {how} {}", tr.donor));
+        }
+        if !fresh {
+            return;
+        }
+        let primed = matches!(
+            transfer.map(|t| t.verdict),
+            Some(PriorVerdict::Adopted | PriorVerdict::Tempered)
+        );
+        if let Some(t) = &self.telemetry {
+            if primed {
+                t.prior_adoption(self.clock, name, node);
+            } else {
+                t.cold_start_probes(self.clock, name, node, executed);
+            }
+        }
     }
 
     /// Overlapped counterpart of [`FleetDaemon::apply_pending`]: the same
@@ -914,8 +1004,14 @@ impl FleetDaemon {
         // pair adjacent in dispatch order.
         let age_label =
             matches!(verdict, Some(DriftVerdict::ModelStale { .. })).then(|| spec.label());
+        let fresh = verdict.is_none();
         let pass = match verdict {
-            None => ProfilePass::default(),
+            // Fresh arrival: consult the transfer corpus for a donor
+            // curve before the probe ever reaches the pool.
+            None => ProfilePass {
+                transfer: self.corpus.as_ref().and_then(|c| c.donor_for(&spec)),
+                ..ProfilePass::default()
+            },
             Some(v) => ProfilePass {
                 runtime_scale: None,
                 prior: self.model_of(&spec.name),
@@ -925,13 +1021,14 @@ impl FleetDaemon {
                     _ => None,
                 },
                 rounds: Some(1),
+                transfer: None,
             },
         };
         let name = spec.name.clone();
         let node = spec.node.name;
         let seq = self.pool.dispatch(0, spec, &self.cfg, pass, age_label);
         self.record("probe-dispatched", format!("{name}: seq {seq}"));
-        self.outstanding.push_back(OutstandingProbe { seq, name: name.clone(), node });
+        self.outstanding.push_back(OutstandingProbe { seq, name: name.clone(), node, fresh });
         if let Some(t) = &self.telemetry {
             // Outstanding count, not the racy pool queue length: the
             // series must be a pure function of the event schedule.
@@ -963,6 +1060,7 @@ impl FleetDaemon {
             t.probes(self.clock, &o.name, o.node, executed);
             t.outcome_runtimes(self.clock, &outcome);
         }
+        self.record_transfer(&o.name, o.node, o.fresh, outcome.transfer.clone(), executed);
         self.merge_outcome(outcome);
         self.flush_drained_batches();
         Ok(())
@@ -1085,6 +1183,12 @@ impl FleetDaemon {
     /// name keeping the original submission index, or append with the
     /// next index so the outcome order stays the arrival order.
     fn merge_outcome(&mut self, mut outcome: JobOutcome) {
+        if let Some(c) = self.corpus.as_mut() {
+            // Every settled profile becomes donor material for later
+            // arrivals — including re-profiles, whose fresher curve
+            // replaces the label's previous record.
+            c.absorb(&outcome);
+        }
         if let Some(sweep) = &mut self.sweep {
             if let Some(old) = sweep.outcomes.iter_mut().find(|o| o.name == outcome.name) {
                 outcome.index = old.index;

@@ -37,7 +37,7 @@ use std::collections::{BTreeMap, VecDeque};
 use anyhow::{ensure, Result};
 
 use crate::coordinator::backend::ProfilingBackend;
-use crate::coordinator::{JobManager, ManagedJob};
+use crate::coordinator::{quantile_model, JobManager, ManagedJob};
 use crate::fit::RuntimeModel;
 use crate::stats::smape_guarded;
 
@@ -423,15 +423,20 @@ impl AdaptiveLoop {
                 .find(|s| s.name == o.name)
                 .expect("outcome names mirror submitted specs")
                 .clone();
+            let mut managed = ManagedJob {
+                name: o.name.clone(),
+                model: o.model.clone(),
+                rate_hz: o.rate_hz,
+                priority: o.priority,
+            };
+            if let Some(q) = cfg.plan_quantile {
+                // Quantile-aware admission: plan the tail, not the mean.
+                managed = managed.at_quantile(q, o.residual_spread());
+            }
             managers
                 .entry(o.node.name)
                 .or_insert_with(|| JobManager::new(o.node.cores))
-                .register(ManagedJob {
-                    name: o.name.clone(),
-                    model: o.model.clone(),
-                    rate_hz: o.rate_hz,
-                    priority: o.priority,
-                });
+                .register(managed);
             let limit = initial
                 .assignment(&o.name)
                 .map(|a| a.adjustment.limit)
@@ -533,6 +538,7 @@ impl AdaptiveLoop {
                 session_warm: matches!(verdict, DriftVerdict::ModelStale { .. }),
                 rate_hz: Some(observed_hz),
                 rounds: Some(1),
+                transfer: None,
             };
             let outcome =
                 worker::profile_job_with(&job.spec, &self.cfg, cache, 0, &pass)?;
@@ -540,11 +546,18 @@ impl AdaptiveLoop {
             // miss delta: exact even while pool workers probe the shared
             // cache concurrently.
             let executed_probes = outcome.cache_delta.misses;
+            let spread = outcome.residual_spread();
             job.model = outcome.model;
             job.rate_hz = observed_hz;
             job.reprofiles += 1;
+            // The manager keeps planning at the configured quantile even
+            // as re-profiles refresh the underlying mean curve.
+            let planned = match self.cfg.plan_quantile {
+                Some(q) => quantile_model(&job.model, q, spread),
+                None => job.model.clone(),
+            };
             let mgr = self.managers.get_mut(job.spec.node.name).expect("home manager exists");
-            mgr.update_model(&job.spec.name, job.model.clone());
+            mgr.update_model(&job.spec.name, planned);
             mgr.update_rate(&job.spec.name, job.rate_hz);
             reprofiled.push(ReprofiledJob {
                 name: job.spec.name.clone(),

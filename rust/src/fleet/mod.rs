@@ -68,13 +68,14 @@ pub mod pool;
 pub mod queue;
 pub mod session;
 pub mod telemetry;
+pub mod transfer;
 pub mod worker;
 
 // The factory abstraction lives with the backends (coordinator); it is
 // re-exported here because it is fleet vocabulary.
 pub use crate::coordinator::backend::{BackendFactory, EngineBackendFactory, SimBackendFactory};
 
-pub use cache::{CacheStats, CachedBackend, MeasurementCache};
+pub use cache::{CacheStats, CachedBackend, MeasurementCache, RestoreOutcome};
 pub use daemon::{
     journal_json, DaemonMetrics, FleetDaemon, FleetDaemonBuilder, FleetEvent, JournalEntry,
 };
@@ -97,6 +98,7 @@ pub use telemetry::{
     Agg, Query, QueryResult, SeriesKey, SeriesKind, TelemetryRecorder, TelemetryServer,
     TelemetryStore,
 };
+pub use transfer::{CurveRecord, PriorCorpus, TransferOutcome, TransferPrior, TransferSeed};
 pub use worker::{IncrementalModel, JobOutcome, ProfilePass, ScaledBackend, ScaledBackendFactory};
 
 use std::collections::BTreeMap;
@@ -203,6 +205,17 @@ pub struct FleetConfig {
     /// profiling overlap event processing across replans (capacity
     /// planning defers until the replan's batch drains).
     pub probe_workers: usize,
+    /// Consult the transfer-prior corpus before profiling fresh daemon
+    /// arrivals: donors seed a [`TransferPrior`] and probes are dispatched
+    /// only where the posterior stays uncertain (a rejected prior falls
+    /// back to the cold sweep). Bootstrap-roster jobs always profile cold
+    /// — they *build* the corpus.
+    pub transfer: bool,
+    /// Plan capacity against this runtime quantile instead of the mean
+    /// prediction (e.g. `Some(0.95)` provisions each job for its p95
+    /// runtime, inflated by the model's residual spread). `None` keeps
+    /// mean-based planning.
+    pub plan_quantile: Option<f64>,
 }
 
 impl Default for FleetConfig {
@@ -214,6 +227,8 @@ impl Default for FleetConfig {
             profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
             horizon: 1000,
             probe_workers: 0,
+            transfer: false,
+            plan_quantile: None,
         }
     }
 }
@@ -266,18 +281,30 @@ impl FleetSummary {
 /// derive the per-node capacity plans (sorted by node name) — the
 /// planning tail of [`run_sweep`], reused by [`FleetDaemon`] when a
 /// localized replan recomputes plans over a merged outcome set.
-pub(crate) fn plan_capacity(outcomes: &[JobOutcome]) -> Vec<(String, CapacityPlan)> {
+///
+/// `quantile`, when set, registers each job at that runtime quantile
+/// ([`ManagedJob::at_quantile`] under the outcome's residual spread)
+/// instead of the mean prediction — admission then reserves headroom for
+/// the runtime tail, not just the expectation.
+pub(crate) fn plan_capacity(
+    outcomes: &[JobOutcome],
+    quantile: Option<f64>,
+) -> Vec<(String, CapacityPlan)> {
     let mut managers: BTreeMap<&'static str, JobManager> = BTreeMap::new();
     for o in outcomes {
+        let mut job = ManagedJob {
+            name: o.name.clone(),
+            model: o.model.clone(),
+            rate_hz: o.rate_hz,
+            priority: o.priority,
+        };
+        if let Some(q) = quantile {
+            job = job.at_quantile(q, o.residual_spread());
+        }
         managers
             .entry(o.node.name)
             .or_insert_with(|| JobManager::new(o.node.cores))
-            .register(ManagedJob {
-                name: o.name.clone(),
-                model: o.model.clone(),
-                rate_hz: o.rate_hz,
-                priority: o.priority,
-            });
+            .register(job);
     }
     managers
         .into_iter()
@@ -300,6 +327,9 @@ pub(crate) fn run_sweep(
         cfg.strategy
     );
     ensure!(cfg.profiler.max_steps >= cfg.profiler.n_initial, "profiler max_steps < n_initial");
+    if let Some(q) = cfg.plan_quantile {
+        ensure!((0.0..1.0).contains(&q) && q > 0.0, "plan_quantile must be in (0, 1), got {q}");
+    }
     // Snapshot so the summary reports THIS run's cache behaviour even
     // when the cache is reused across runs.
     let cache_before = pool.cache().stats();
@@ -336,7 +366,7 @@ pub(crate) fn run_sweep(
 
     // Feed the fitted models into per-node managers: this is where the
     // fleet engine hands over to the adaptive-adjustment layer.
-    let plans = plan_capacity(&outcomes);
+    let plans = plan_capacity(&outcomes, cfg.plan_quantile);
     let cache = pool.cache().stats().delta_since(&cache_before);
     Ok(FleetSummary { outcomes, cache, plans })
 }

@@ -126,6 +126,17 @@ impl TelemetryRecorder {
         self.store.append(SeriesKind::ProbeQueueDepth, "", "", at, depth as f64);
     }
 
+    /// A fresh arrival profiled without an adopted transfer prior,
+    /// spending `executed` cold probes.
+    pub fn cold_start_probes(&self, at: u64, job: &str, node: &str, executed: u64) {
+        self.store.append(SeriesKind::ColdStartProbes, job, node, at, executed as f64);
+    }
+
+    /// A fresh arrival's profile adopted (or tempered) a transfer prior.
+    pub fn prior_adoption(&self, at: u64, job: &str, node: &str) {
+        self.store.append(SeriesKind::PriorAdoptions, job, node, at, 1.0);
+    }
+
     /// Cache hit/miss deltas since the previous flush, from the lifetime
     /// `hits` / `misses` counters (the caller reads them off the cache's
     /// wait-free fast accessors, or its deterministic virtual stats in

@@ -66,11 +66,18 @@ pub enum SeriesKind {
     /// merged) right after each dispatch — the overlapped daemon's
     /// backlog signal.
     ProbeQueueDepth,
+    /// Probes a fresh arrival executed *without* an adopted transfer
+    /// prior (value = executed probe count) — the cold-start cost the
+    /// transfer corpus exists to kill.
+    ColdStartProbes,
+    /// Fresh arrivals whose profile adopted (or tempered) a transfer
+    /// prior (value 1 per primed profile).
+    PriorAdoptions,
 }
 
 impl SeriesKind {
     /// Every kind, in serialization order.
-    pub const ALL: [SeriesKind; 14] = [
+    pub const ALL: [SeriesKind; 16] = [
         SeriesKind::Arrivals,
         SeriesKind::Departures,
         SeriesKind::Verdicts,
@@ -85,6 +92,8 @@ impl SeriesKind {
         SeriesKind::StalenessTicks,
         SeriesKind::ConflictRollbacks,
         SeriesKind::ProbeQueueDepth,
+        SeriesKind::ColdStartProbes,
+        SeriesKind::PriorAdoptions,
     ];
 
     /// Stable wire name used by queries, JSON output, and docs.
@@ -104,6 +113,8 @@ impl SeriesKind {
             SeriesKind::StalenessTicks => "staleness_ticks",
             SeriesKind::ConflictRollbacks => "conflict_rollbacks",
             SeriesKind::ProbeQueueDepth => "probe_queue_depth",
+            SeriesKind::ColdStartProbes => "cold_start_probes",
+            SeriesKind::PriorAdoptions => "prior_adoptions",
         }
     }
 

@@ -1,0 +1,621 @@
+//! Transfer-learning priors: kill cold-start profiling with cross-job
+//! runtime knowledge.
+//!
+//! Every fresh arrival used to pay a full cold profiling sweep even when
+//! the fleet had already profiled a near-identical job — the exact cost the
+//! paper's "short profiling phase" goal targets. This module closes that
+//! gap with three pieces:
+//!
+//! * [`PriorCorpus`] — per-label runtime curves (probe points + fitted
+//!   [`RuntimeModel`] + residual spread) assembled from the persisted
+//!   [`MeasurementCache`] snapshot and from finished [`JobOutcome`]s.
+//! * [`TransferSeed`] — the donor knowledge selected for one incoming
+//!   [`FleetJobSpec`]: an exact-label curve when one exists, otherwise the
+//!   best same-family curve translated across nodes via
+//!   [`translate_model`]. `Clone + Debug`, so it rides a
+//!   [`super::worker::ProfilePass`] into the probe pool.
+//! * [`TransferPrior`] — a [`SessionPrior`] over the [`Gp`] module, seeded
+//!   with the donor curve as pseudo-observations and recalibrated by the
+//!   session's real probes. [`Profiler::run_with_prior`] probes only where
+//!   its posterior stays uncertain, and its check probe turns the seed into
+//!   a [`PriorVerdict`] — a mismatched donor falls back to the cold sweep
+//!   at the cost of exactly the probes spent checking.
+//!
+//! [`Profiler::run_with_prior`]: crate::coordinator::Profiler::run_with_prior
+//! [`Gp`]: crate::gp::Gp
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::backend::Measurement;
+use crate::coordinator::{PriorVerdict, SessionPrior};
+use crate::fit::{ProfilePoint, RuntimeModel};
+use crate::gp::{Gp, Matern52};
+use crate::simulator::{node, NodeSpec};
+use crate::strategies::grid_bucket;
+use crate::util::json::Json;
+
+use super::cache::{model_from_json, MeasurementCache};
+use super::placement::translate_model;
+use super::worker::JobOutcome;
+use super::FleetJobSpec;
+
+/// Grid width donor curves are deduplicated at — one point per cache-style
+/// bucket, matching [`crate::coordinator::JobManager::DELTA`].
+const CORPUS_DELTA: f64 = 0.1;
+
+/// A donor curve must contribute at least this many pseudo-observations
+/// inside the recipient's limitation range to seed a useful GP.
+const MIN_DONOR_POINTS: usize = 2;
+
+/// Floor on a donor's residual spread: even a perfectly-fitting donor
+/// carries some cross-job uncertainty.
+const MIN_SPREAD: f64 = 0.02;
+
+/// The label family a donor must share with a recipient: the cache label
+/// with its node prefix and any `@x` runtime-scale suffix stripped
+/// (`"pi4/arima@x3"` → `"arima"`). Scaled variants stay in the family on
+/// purpose — they describe the same job class in a shifted regime, and the
+/// profiler's check probe is what decides whether the regime transfers.
+pub fn family(label: &str) -> &str {
+    let tail = label.split_once('/').map(|(_, t)| t).unwrap_or(label);
+    match tail.rfind("@x") {
+        Some(i) => &tail[..i],
+        None => tail,
+    }
+}
+
+/// Mean relative residual of `model` against `points` — the spread recorded
+/// alongside each corpus curve and reused by quantile-aware planning.
+fn residual_spread(model: &RuntimeModel, points: &[ProfilePoint]) -> f64 {
+    let mut sum = 0.0;
+    let mut n = 0usize;
+    for p in points {
+        if p.runtime.abs() > 1e-12 {
+            sum += ((model.eval(p.limit) - p.runtime) / p.runtime).abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
+    }
+}
+
+/// One per-label runtime curve held by the [`PriorCorpus`].
+#[derive(Clone, Debug)]
+pub struct CurveRecord {
+    /// The cache label the curve was measured under.
+    pub label: String,
+    /// Current-generation probe points, ascending by limitation.
+    pub points: Vec<ProfilePoint>,
+    /// Fitted runtime model for the curve.
+    pub model: RuntimeModel,
+    /// Mean relative residual of `model` against `points` (donor ranking
+    /// key and the uncertainty a seeded GP starts from).
+    pub spread: f64,
+    /// Home node, when the label's node prefix names a known
+    /// [`NodeSpec`] — required for cross-node donor translation.
+    pub node: Option<&'static NodeSpec>,
+}
+
+/// The fleet's transfer-learning knowledge base: one [`CurveRecord`] per
+/// cache label, assembled from persisted snapshots and finished job
+/// outcomes. Deterministically ordered (BTreeMap) so donor selection is
+/// reproducible across runs.
+#[derive(Default)]
+pub struct PriorCorpus {
+    records: BTreeMap<String, CurveRecord>,
+}
+
+impl PriorCorpus {
+    /// An empty corpus.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of labels with a usable curve.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// `true` when no curve is held.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// The curve recorded for `label`, if any.
+    pub fn record(&self, label: &str) -> Option<&CurveRecord> {
+        self.records.get(label)
+    }
+
+    /// Build a corpus from a [`MeasurementCache`] snapshot (any supported
+    /// snapshot version). Only current-generation entries contribute; a
+    /// label needs at least two points to yield a curve. A v3 snapshot's
+    /// per-label model metadata is used verbatim; older snapshots refit
+    /// from the restored points.
+    pub fn from_snapshot(snap: &Json) -> Result<Self> {
+        let labels = snap
+            .get("labels")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("corpus snapshot: no labels array"))?;
+        let entries = snap
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("corpus snapshot: no entries array"))?;
+        let mut gens: BTreeMap<String, u64> = BTreeMap::new();
+        let mut models: BTreeMap<String, RuntimeModel> = BTreeMap::new();
+        for doc in labels {
+            let Some(name) = doc.get("label").and_then(Json::as_str) else { continue };
+            let generation = doc.get("generation").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            gens.insert(name.to_string(), generation);
+            if let Some(m) = doc.get("model").and_then(model_from_json) {
+                models.insert(name.to_string(), m);
+            }
+        }
+        let mut points: BTreeMap<String, Vec<ProfilePoint>> = BTreeMap::new();
+        for doc in entries {
+            let Some(label) = doc.get("label").and_then(Json::as_str) else { continue };
+            let generation = doc.get("generation").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            if gens.get(label).copied() != Some(generation) {
+                continue; // stale generation: not current knowledge
+            }
+            let (Some(limit), Some(runtime)) = (
+                doc.get("limit").and_then(Json::as_f64),
+                doc.get("mean_runtime").and_then(Json::as_f64),
+            ) else {
+                continue;
+            };
+            if limit > 0.0 && runtime.is_finite() {
+                points
+                    .entry(label.to_string())
+                    .or_default()
+                    .push(ProfilePoint::new(limit, runtime));
+            }
+        }
+        let mut corpus = Self::new();
+        for (label, mut pts) in points {
+            pts.sort_by(|a, b| a.limit.partial_cmp(&b.limit).unwrap_or(std::cmp::Ordering::Equal));
+            if pts.len() < MIN_DONOR_POINTS {
+                continue;
+            }
+            let model = models.remove(&label).unwrap_or_else(|| RuntimeModel::fit(&pts));
+            corpus.insert_curve(label, pts, model, None);
+        }
+        Ok(corpus)
+    }
+
+    /// [`PriorCorpus::from_snapshot`] over a live cache's own snapshot —
+    /// how the daemon boots its corpus from a `--cache-file` restore.
+    pub fn from_cache(cache: &MeasurementCache) -> Self {
+        Self::from_snapshot(&cache.snapshot()).expect("a live cache snapshot is well-formed")
+    }
+
+    /// Fold a finished job into the corpus: the outcome's probe points
+    /// (deduplicated per grid bucket, last round wins) under its fitted
+    /// model replace any previous curve for the label. The outcome's node
+    /// is recorded as the curve's home, enabling cross-node donation.
+    pub fn absorb(&mut self, outcome: &JobOutcome) {
+        let mut by_bucket: BTreeMap<i64, ProfilePoint> = BTreeMap::new();
+        for session in &outcome.rounds {
+            for step in &session.steps {
+                if step.limit > 0.0 && step.mean_runtime.is_finite() {
+                    by_bucket.insert(
+                        grid_bucket(step.limit, CORPUS_DELTA),
+                        ProfilePoint::new(step.limit, step.mean_runtime),
+                    );
+                }
+            }
+        }
+        let pts: Vec<ProfilePoint> = by_bucket.into_values().collect();
+        if pts.len() < MIN_DONOR_POINTS {
+            return;
+        }
+        self.insert_curve(outcome.label.clone(), pts, outcome.model.clone(), Some(outcome.node));
+    }
+
+    fn insert_curve(
+        &mut self,
+        label: String,
+        points: Vec<ProfilePoint>,
+        model: RuntimeModel,
+        home: Option<&'static NodeSpec>,
+    ) {
+        let spread = residual_spread(&model, &points);
+        // Fall back to the label's node prefix when the caller has no
+        // authoritative home (snapshot-restored curves).
+        let node = home.or_else(|| label.split_once('/').and_then(|(head, _)| node(head)));
+        self.records.insert(label.clone(), CurveRecord { label, points, model, spread, node });
+    }
+
+    /// Select the donor curve for an incoming job, or `None` when the
+    /// corpus holds nothing transferable.
+    ///
+    /// Preference order: an exact-label curve (used untranslated — the
+    /// label *is* the behaviour key), else the same-[`family`] curve with
+    /// the smallest residual spread whose home node is known and whose
+    /// points overlap the shared limitation range, translated to the
+    /// recipient's node via [`translate_model`]. Pseudo-observations are
+    /// the donor's probe limits (clipped to the shared range) evaluated
+    /// under the translated model, so seed points and seed model agree.
+    pub fn donor_for(&self, spec: &FleetJobSpec) -> Option<TransferSeed> {
+        let label = spec.label();
+        let cap = spec.node.l_max();
+        if let Some(r) = self.records.get(&label) {
+            if let Some(seed) = seed_from(r, r.model.clone(), false, cap) {
+                return Some(seed);
+            }
+        }
+        let fam = family(&label).to_string();
+        let mut best: Option<(&CurveRecord, RuntimeModel, f64)> = None;
+        for r in self.records.values() {
+            if r.label == label || family(&r.label) != fam {
+                continue;
+            }
+            let Some(from) = r.node else { continue };
+            let shared = from.l_max().min(cap);
+            let usable = r.points.iter().filter(|p| p.limit <= shared + 1e-9).count();
+            if usable < MIN_DONOR_POINTS {
+                continue;
+            }
+            let keep = match &best {
+                None => true,
+                Some((b, _, _)) => (r.spread, r.label.as_str()) < (b.spread, b.label.as_str()),
+            };
+            if keep {
+                best = Some((r, translate_model(&r.model, from, spec.node), shared));
+            }
+        }
+        best.and_then(|(r, m, shared)| seed_from(r, m, true, shared))
+    }
+}
+
+fn seed_from(
+    record: &CurveRecord,
+    model: RuntimeModel,
+    translated: bool,
+    cap: f64,
+) -> Option<TransferSeed> {
+    let mut seen = BTreeSet::new();
+    let mut points = Vec::new();
+    for p in &record.points {
+        if p.limit > cap + 1e-9 || !seen.insert(grid_bucket(p.limit, CORPUS_DELTA)) {
+            continue;
+        }
+        let y = model.eval(p.limit);
+        if y.is_finite() && y > 0.0 {
+            points.push((p.limit, y));
+        }
+    }
+    (points.len() >= MIN_DONOR_POINTS).then(|| TransferSeed {
+        donor: record.label.clone(),
+        translated,
+        model,
+        points,
+        spread: record.spread.max(MIN_SPREAD),
+    })
+}
+
+/// The donor knowledge selected for one incoming job — everything a
+/// [`TransferPrior`] needs, in a `Clone + Debug` package that can ride a
+/// [`super::worker::ProfilePass`] into the probe pool (the GP itself is
+/// rebuilt per session).
+#[derive(Clone, Debug)]
+pub struct TransferSeed {
+    /// Label of the donor curve.
+    pub donor: String,
+    /// `true` when the donor lived on a different node and the model was
+    /// translated via [`translate_model`].
+    pub translated: bool,
+    /// Donor model on the recipient's node.
+    pub model: RuntimeModel,
+    /// Pseudo-observations `(limit, runtime)` on the recipient's node,
+    /// ascending by limit, one per grid bucket.
+    pub points: Vec<(f64, f64)>,
+    /// Donor residual spread (floored at the corpus minimum) — sets the GP
+    /// observation noise, so a sloppier donor starts less confident.
+    pub spread: f64,
+}
+
+/// A [`SessionPrior`] over the GP substrate, seeded from a donor curve.
+///
+/// The GP conditions on **log**-runtimes (noise = spread²), so its
+/// posterior sd is a *relative* spread — uniform across the curve's
+/// exponential head and flat tail — and the profiler's `sd / mean`
+/// confidence gate behaves the same at every limitation. Predictions are
+/// mapped back through `exp` (the posterior median of the implied
+/// lognormal). The session's first real probe sets a multiplicative
+/// calibration (observed / predicted at the check limit); every real probe
+/// then replaces the pseudo-observation in its grid bucket and the GP
+/// refits, so the posterior tightens exactly where the session has looked.
+pub struct TransferPrior {
+    seed: TransferSeed,
+    delta: f64,
+    calibration: f64,
+    observed: Vec<(f64, f64)>,
+    gp: Gp,
+}
+
+impl TransferPrior {
+    /// Build the prior for a session over `[0, l_max]` with probe grid
+    /// width `delta`. `l_max` is the recipient backend's limit ceiling;
+    /// seed points beyond it only widen the GP's input scaling.
+    pub fn new(seed: TransferSeed, l_max: f64, delta: f64) -> Self {
+        let hi = seed.points.iter().map(|&(x, _)| x).fold(l_max, f64::max).max(1e-6);
+        // spread² as Gaussian observation noise, floored so the kernel
+        // matrix stays strictly positive definite.
+        let noise = (seed.spread * seed.spread).clamp(1e-4, 0.25);
+        let gp = Gp::new(Matern52::default(), noise, 0.0, hi);
+        let mut prior =
+            Self { seed, delta: delta.max(1e-6), calibration: 1.0, observed: Vec::new(), gp };
+        prior.refit();
+        prior
+    }
+
+    /// The seed the prior was built from.
+    pub fn seed(&self) -> &TransferSeed {
+        &self.seed
+    }
+
+    /// Current multiplicative calibration (1.0 until the first real probe).
+    pub fn calibration(&self) -> f64 {
+        self.calibration
+    }
+
+    /// Posterior runtime quantile at limitation `x` — e.g. `q = 0.95` is
+    /// the p95 runtime that quantile-aware capacity planning provisions
+    /// for instead of the mean. Computed on the log-GP posterior and
+    /// mapped back (quantiles commute with monotone transforms).
+    pub fn predict_quantile(&self, x: f64, q: f64) -> f64 {
+        self.gp.predict_quantile(x, q).exp()
+    }
+
+    fn refit(&mut self) {
+        let taken: BTreeSet<i64> =
+            self.observed.iter().map(|&(x, _)| grid_bucket(x, self.delta)).collect();
+        let mut pts: Vec<(f64, f64)> = Vec::with_capacity(self.observed.len());
+        for &(x, y) in &self.observed {
+            if y > 0.0 {
+                pts.push((x, y.ln()));
+            }
+        }
+        for &(x, y) in &self.seed.points {
+            // Real probes displace the pseudo-observation in their bucket;
+            // the rest are carried at the current calibration.
+            if !taken.contains(&grid_bucket(x, self.delta)) {
+                pts.push((x, (y * self.calibration).ln()));
+            }
+        }
+        pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+        self.gp.fit(&pts);
+    }
+}
+
+impl SessionPrior for TransferPrior {
+    fn mean(&self, x: f64) -> f64 {
+        self.gp.predict(x).0.exp()
+    }
+
+    fn sd(&self, x: f64) -> f64 {
+        // Relative log-spread times the predicted magnitude: the profiler's
+        // `sd / mean` gate then reads the log-sd directly.
+        self.mean(x) * self.gp.predict_sd(x)
+    }
+
+    fn observe(&mut self, m: &Measurement) {
+        if self.observed.is_empty() {
+            let pred = self.seed.model.eval(m.limit);
+            if pred.is_finite() && pred > 1e-12 && m.mean_runtime.is_finite() && m.mean_runtime > 0.0
+            {
+                self.calibration = (m.mean_runtime / pred).clamp(0.25, 4.0);
+            }
+        }
+        let bucket = grid_bucket(m.limit, self.delta);
+        match self.observed.iter().position(|&(x, _)| grid_bucket(x, self.delta) == bucket) {
+            Some(i) => self.observed[i] = (m.limit, m.mean_runtime),
+            None => self.observed.push((m.limit, m.mean_runtime)),
+        }
+        self.refit();
+    }
+
+    fn model(&self) -> RuntimeModel {
+        self.seed.model.rescaled(self.calibration)
+    }
+}
+
+/// How a transfer-primed profile used its donor — recorded on the
+/// [`JobOutcome`] and journaled by the daemon.
+#[derive(Clone, Debug)]
+pub struct TransferOutcome {
+    /// Label of the donor curve the session was primed from.
+    pub donor: String,
+    /// Whether the donor was translated across nodes.
+    pub translated: bool,
+    /// The profiler's verdict on the prior.
+    pub verdict: PriorVerdict,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{PriorGate, Profiler, ProfilerConfig};
+    use crate::fleet::cache::MeasurementCache;
+    use crate::fleet::worker::profile_job;
+    use crate::fleet::{FleetConfig, FleetJobSpec};
+    use crate::simulator::Algo;
+    use crate::strategies;
+
+    fn one_cfg() -> FleetConfig {
+        FleetConfig { workers: 1, rounds: 1, ..FleetConfig::default() }
+    }
+
+    #[test]
+    fn family_strips_node_prefix_and_scale_suffix() {
+        assert_eq!(family("pi4/arima"), "arima");
+        assert_eq!(family("wally/arima"), "arima");
+        assert_eq!(family("pi4/arima@x3"), "arima");
+        assert_eq!(family("plain"), "plain");
+    }
+
+    #[test]
+    fn exact_donor_comes_back_untranslated() {
+        let cache = MeasurementCache::new();
+        let spec = FleetJobSpec::simulated("donor", node("pi4").unwrap(), Algo::Arima, 11);
+        let outcome = profile_job(&spec, &one_cfg(), &cache, 0).unwrap();
+        let mut corpus = PriorCorpus::new();
+        corpus.absorb(&outcome);
+        assert_eq!(corpus.len(), 1);
+        let seed = corpus.donor_for(&spec).expect("exact donor");
+        assert_eq!(seed.donor, spec.label());
+        assert!(!seed.translated);
+        assert!(seed.points.len() >= MIN_DONOR_POINTS);
+        for &(x, y) in &seed.points {
+            assert!((y - seed.model.eval(x)).abs() < 1e-9, "seed points track the seed model");
+        }
+    }
+
+    #[test]
+    fn family_donor_translates_across_nodes() {
+        let wally = node("wally").unwrap();
+        let pi4 = node("pi4").unwrap();
+        let cache = MeasurementCache::new();
+        let donor_spec = FleetJobSpec::simulated("donor", wally, Algo::Arima, 7);
+        let outcome = profile_job(&donor_spec, &one_cfg(), &cache, 0).unwrap();
+        let mut corpus = PriorCorpus::new();
+        corpus.absorb(&outcome);
+        let recipient = FleetJobSpec::simulated("recipient", pi4, Algo::Arima, 9);
+        let seed = corpus.donor_for(&recipient).expect("family donor");
+        assert_eq!(seed.donor, donor_spec.label());
+        assert!(seed.translated);
+        let expected = translate_model(&outcome.model, wally, pi4);
+        for &r in &[0.5f64, 1.0, 2.0] {
+            assert!((seed.model.eval(r) - expected.eval(r)).abs() < 1e-9, "at {r}");
+        }
+        for &(x, _) in &seed.points {
+            assert!(x <= pi4.l_max() + 1e-9, "pseudo points stay in the shared range");
+        }
+    }
+
+    #[test]
+    fn no_family_match_returns_none() {
+        let cache = MeasurementCache::new();
+        let donor = FleetJobSpec::simulated("donor", node("pi4").unwrap(), Algo::Arima, 3);
+        let outcome = profile_job(&donor, &one_cfg(), &cache, 0).unwrap();
+        let mut corpus = PriorCorpus::new();
+        corpus.absorb(&outcome);
+        let other = FleetJobSpec::simulated("other", node("pi4").unwrap(), Algo::Birch, 4);
+        assert!(corpus.donor_for(&other).is_none());
+    }
+
+    #[test]
+    fn corpus_from_cache_snapshot_uses_the_noted_model() {
+        let cache = MeasurementCache::new();
+        let spec = FleetJobSpec::simulated("snap", node("xeon").unwrap(), Algo::Arima, 5);
+        let outcome = profile_job(&spec, &one_cfg(), &cache, 0).unwrap();
+        cache.note_model(&spec.label(), &outcome.model);
+        let corpus = PriorCorpus::from_cache(&cache);
+        let record = corpus.record(&spec.label()).expect("label restored");
+        assert!(record.points.len() >= MIN_DONOR_POINTS);
+        for &r in &[0.5f64, 1.0, 2.0] {
+            assert!(
+                (record.model.eval(r) - outcome.model.eval(r)).abs() < 1e-12,
+                "v3 model metadata restores verbatim at {r}"
+            );
+        }
+        assert_eq!(record.node.map(|n| n.name), Some("xeon"));
+    }
+
+    #[test]
+    fn calibration_rescales_the_prior_model() {
+        let cache = MeasurementCache::new();
+        let spec = FleetJobSpec::simulated("cal", node("pi4").unwrap(), Algo::Arima, 13);
+        let outcome = profile_job(&spec, &one_cfg(), &cache, 0).unwrap();
+        let mut corpus = PriorCorpus::new();
+        corpus.absorb(&outcome);
+        let seed = corpus.donor_for(&spec).unwrap();
+        let mut prior = TransferPrior::new(seed.clone(), spec.node.l_max(), 0.1);
+        let m = Measurement {
+            limit: 0.5,
+            mean_runtime: seed.model.eval(0.5) * 1.3,
+            samples: 100,
+            wallclock: 1.0,
+        };
+        prior.observe(&m);
+        assert!((prior.calibration() - 1.3).abs() < 1e-9);
+        assert!((prior.model().eval(2.0) - 1.3 * seed.model.eval(2.0)).abs() < 1e-9);
+        let rel = (prior.mean(0.5) - m.mean_runtime).abs() / m.mean_runtime;
+        assert!(rel < 0.1, "posterior tracks the real probe: {rel}");
+    }
+
+    #[test]
+    fn quantiles_order_around_the_posterior_mean() {
+        let cache = MeasurementCache::new();
+        let spec = FleetJobSpec::simulated("q", node("pi4").unwrap(), Algo::Arima, 29);
+        let outcome = profile_job(&spec, &one_cfg(), &cache, 0).unwrap();
+        let mut corpus = PriorCorpus::new();
+        corpus.absorb(&outcome);
+        let seed = corpus.donor_for(&spec).unwrap();
+        let prior = TransferPrior::new(seed, spec.node.l_max(), 0.1);
+        for &x in &[0.5f64, 1.5, 3.0] {
+            let p05 = prior.predict_quantile(x, 0.05);
+            let p95 = prior.predict_quantile(x, 0.95);
+            let mu = prior.mean(x);
+            assert!(p05 < mu && mu < p95, "at {x}: {p05} {mu} {p95}");
+        }
+    }
+
+    #[test]
+    fn primed_session_spends_fewer_probes_and_mismatch_rejects() {
+        let spec = FleetJobSpec::simulated("prime", node("pi4").unwrap(), Algo::Arima, 21);
+        let cfg = ProfilerConfig { samples: 400, ..ProfilerConfig::default() };
+        let run_cold = || {
+            let mut backend = spec.backend.build().unwrap();
+            Profiler::new(cfg.clone(), strategies::by_name("nms", spec.seed).unwrap())
+                .run(&mut *backend)
+        };
+        let cold = run_cold();
+
+        // Donor = the cold session's own curve (the best possible prior).
+        let mut corpus = PriorCorpus::new();
+        let cache = MeasurementCache::new();
+        let outcome = profile_job(&spec, &one_cfg(), &cache, 0).unwrap();
+        corpus.absorb(&outcome);
+        let seed = corpus.donor_for(&spec).unwrap();
+
+        let mut backend = spec.backend.build().unwrap();
+        let mut prior = TransferPrior::new(seed.clone(), spec.node.l_max(), cfg.delta);
+        let mut profiler = Profiler::new(cfg.clone(), strategies::by_name("nms", spec.seed).unwrap());
+        let (primed, verdict) =
+            profiler.run_with_prior(&mut *backend, &mut |_| {}, &mut prior, &PriorGate::default());
+        assert!(
+            matches!(verdict, PriorVerdict::Adopted | PriorVerdict::Tempered),
+            "a same-label donor must not be rejected: {verdict:?}"
+        );
+        assert!(
+            primed.steps.len() < cold.steps.len(),
+            "primed {} probes vs cold {}",
+            primed.steps.len(),
+            cold.steps.len()
+        );
+
+        // Regime-shifted donor (3x runtimes): rejected, and the fallback is
+        // the cold sweep with the check probe reused — same probe count.
+        let mut wrong = seed.clone();
+        wrong.model = wrong.model.rescaled(3.0);
+        for p in &mut wrong.points {
+            p.1 *= 3.0;
+        }
+        let mut backend = spec.backend.build().unwrap();
+        let mut prior = TransferPrior::new(wrong, spec.node.l_max(), cfg.delta);
+        let mut profiler = Profiler::new(cfg.clone(), strategies::by_name("nms", spec.seed).unwrap());
+        let (fallback, verdict) =
+            profiler.run_with_prior(&mut *backend, &mut |_| {}, &mut prior, &PriorGate::default());
+        assert_eq!(verdict, PriorVerdict::Rejected);
+        assert_eq!(fallback.steps.len(), cold.steps.len(), "mismatch costs exactly cold");
+        for (f, c) in fallback.steps.iter().zip(&cold.steps) {
+            assert_eq!(f.limit.to_bits(), c.limit.to_bits(), "fallback replays the cold sweep");
+        }
+    }
+}

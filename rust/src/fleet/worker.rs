@@ -16,12 +16,13 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::backend::{BackendFactory, Measurement, ProfilingBackend};
-use crate::coordinator::{Profiler, SessionResult};
+use crate::coordinator::{PriorGate, PriorVerdict, Profiler, SessionPrior, SessionResult};
 use crate::earlystop::EarlyStopConfig;
 use crate::fit::{ProfilePoint, RuntimeModel};
 use crate::strategies::{self, grid_bucket};
 
 use super::cache::{CacheStats, CachedBackend, MeasurementCache};
+use super::transfer::{TransferOutcome, TransferPrior, TransferSeed};
 use super::{FleetConfig, FleetJobSpec};
 
 /// A runtime model maintained across measurements: each new observation
@@ -109,12 +110,41 @@ pub struct JobOutcome {
     /// so the daemon's overlapped completion path can account cache deltas
     /// deterministically without re-aggregating the shared cache.
     pub cache_delta: CacheStats,
+    /// How the transfer prior fared, when the profile was primed from a
+    /// donor curve (`None` for cold profiles). Not serialized into reports
+    /// — a rejected-prior report stays byte-identical to the cold path.
+    pub transfer: Option<TransferOutcome>,
 }
 
 impl JobOutcome {
     /// Profiling wallclock actually spent (cache hits cost zero).
     pub fn executed_wallclock(&self) -> f64 {
         self.rounds.iter().map(|s| s.total_time).sum()
+    }
+
+    /// Mean relative residual of the fitted model against every probed
+    /// step — the spread quantile-aware capacity planning inflates by
+    /// ([`ManagedJob::at_quantile`]).
+    ///
+    /// [`ManagedJob::at_quantile`]: crate::coordinator::ManagedJob::at_quantile
+    pub fn residual_spread(&self) -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for session in &self.rounds {
+            for step in &session.steps {
+                if step.mean_runtime.abs() > 1e-12 {
+                    sum += ((self.model.eval(step.limit) - step.mean_runtime)
+                        / step.mean_runtime)
+                        .abs();
+                    n += 1;
+                }
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
     }
 }
 
@@ -225,6 +255,12 @@ pub struct ProfilePass {
     /// Sessions to run (`None` = the engine's configured `rounds`); a
     /// drift-triggered re-profile runs exactly one.
     pub rounds: Option<usize>,
+    /// Prime the session from a transfer-learning donor curve: each round
+    /// rebuilds a [`TransferPrior`] from this seed (the GP itself is not
+    /// `Clone`) and profiles via `Profiler::run_with_prior` — probes only
+    /// where the posterior stays uncertain, with the cold sweep as the
+    /// rejected-prior fallback.
+    pub transfer: Option<TransferSeed>,
 }
 
 /// Profile one job: `rounds` sessions through the shared cache, feeding the
@@ -256,6 +292,8 @@ pub fn profile_job_with(
     };
     let mut rounds = Vec::with_capacity(n_rounds);
     let mut cache_delta = CacheStats::default();
+    let mut transfer_outcome: Option<TransferOutcome> = None;
+    let mut primed_model: Option<RuntimeModel> = None;
     for _round in 0..n_rounds {
         // A fresh factory build every round: the factory contract makes
         // builds deterministic replays, which is exactly what lets the
@@ -266,15 +304,50 @@ pub fn profile_job_with(
         let strategy = strategies::by_name(&cfg.strategy, spec.seed)
             .ok_or_else(|| anyhow!("unknown strategy '{}'", cfg.strategy))?;
         let mut profiler = Profiler::new(cfg.profiler.clone(), strategy);
-        let session_prior = if pass.session_warm { pass.prior.as_ref() } else { None };
-        let session = profiler.run_observed_from(
-            &mut cached,
-            &mut |m: &Measurement| incremental.observe(m),
-            session_prior,
-        );
+        let session = match &pass.transfer {
+            Some(seed) => {
+                // Rebuilt per round: the seed is cheap to clone, and later
+                // rounds replay the first round's probes through the cache
+                // either way.
+                let l_max = cached.l_max();
+                let mut prior = TransferPrior::new(seed.clone(), l_max, cfg.profiler.delta);
+                let (session, verdict) = profiler.run_with_prior(
+                    &mut cached,
+                    &mut |m: &Measurement| incremental.observe(m),
+                    &mut prior,
+                    &PriorGate::default(),
+                );
+                transfer_outcome.get_or_insert_with(|| TransferOutcome {
+                    donor: seed.donor.clone(),
+                    translated: seed.translated,
+                    verdict,
+                });
+                // An adopted/tempered prior probes too few points for a
+                // from-scratch refit to keep its model kind; the session's
+                // own fitted curve IS the calibrated prior (what its step
+                // records already carry). A rejected prior ran the cold
+                // sweep, so the incremental fit stands.
+                primed_model =
+                    (verdict != PriorVerdict::Rejected).then(|| SessionPrior::model(&prior));
+                session
+            }
+            None => {
+                let session_prior = if pass.session_warm { pass.prior.as_ref() } else { None };
+                profiler.run_observed_from(
+                    &mut cached,
+                    &mut |m: &Measurement| incremental.observe(m),
+                    session_prior,
+                )
+            }
+        };
         cache_delta.absorb(&cached.tally());
         rounds.push(session);
     }
+    let model = primed_model.unwrap_or_else(|| incremental.model().clone());
+    // Publish the fitted curve as the label's model metadata: a persisted
+    // snapshot then carries it (v3), and a restored corpus can donate it
+    // verbatim instead of refitting from the raw points.
+    cache.note_model(&label, &model);
     let rate_hz = pass
         .rate_hz
         .unwrap_or_else(|| spec.arrivals.max_rate(cfg.horizon))
@@ -284,7 +357,7 @@ pub fn profile_job_with(
         name: spec.name.clone(),
         label,
         node: spec.node,
-        model: incremental.model().clone(),
+        model,
         points: incremental.points().len(),
         refits: incremental.refits(),
         rounds,
@@ -292,6 +365,7 @@ pub fn profile_job_with(
         priority: spec.priority,
         worker,
         cache_delta,
+        transfer: transfer_outcome,
     })
 }
 
@@ -419,6 +493,7 @@ mod tests {
             session_warm: true,
             rate_hz: Some(6.0),
             rounds: Some(1),
+            transfer: None,
         };
         let hot = profile_job_with(&spec, &cfg, &cache, 0, &pass).unwrap();
         assert_eq!(hot.rounds.len(), 1, "a re-profile runs exactly one session");

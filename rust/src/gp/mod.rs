@@ -7,7 +7,7 @@
 //! scale (maximization).
 
 use crate::linalg::{Cholesky, Mat};
-use crate::stats::{normal_cdf, normal_pdf};
+use crate::stats::{normal_cdf, normal_pdf, normal_quantile};
 
 /// Matérn-5/2 kernel over scalar inputs.
 #[derive(Clone, Copy, Debug)]
@@ -101,6 +101,24 @@ impl Gp {
     pub fn predict(&self, x: f64) -> (f64, f64) {
         let (mu_std, var_std) = self.predict_std(x);
         (self.y_mean + self.y_scale * mu_std, var_std)
+    }
+
+    /// Posterior standard deviation at `x` on the **original** observation
+    /// scale — the spread a caller can compare directly against predicted
+    /// means (the transfer-prior confidence gate does exactly that).
+    pub fn predict_sd(&self, x: f64) -> f64 {
+        let (_, var_std) = self.predict_std(x);
+        self.y_scale * var_std.sqrt()
+    }
+
+    /// Posterior quantile at `x` on the original scale: the value `q`
+    /// (in (0, 1)) of the Gaussian posterior — e.g. `q = 0.95` is the p95
+    /// runtime prediction used by quantile-aware capacity planning, not
+    /// just the mean.
+    pub fn predict_quantile(&self, x: f64, q: f64) -> f64 {
+        let (mu_std, var_std) = self.predict_std(x);
+        let z = normal_quantile(q.clamp(1e-9, 1.0 - 1e-9));
+        self.y_mean + self.y_scale * (mu_std + z * var_std.sqrt())
     }
 
     fn predict_std(&self, x: f64) -> (f64, f64) {
@@ -199,6 +217,32 @@ mod tests {
         let (mu, var) = gp.predict(0.5);
         assert_eq!(mu, 0.0);
         assert!((var - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantiles_bracket_the_mean_and_track_sd() {
+        let mut gp = Gp::new(Matern52::default(), 1e-6, 0.0, 4.0);
+        gp.fit(&[(0.5, 2.0), (1.5, 1.0), (3.0, 0.5)]);
+        for &x in &[0.7f64, 1.0, 2.0, 3.5] {
+            let (mu, _) = gp.predict(x);
+            let p05 = gp.predict_quantile(x, 0.05);
+            let p50 = gp.predict_quantile(x, 0.5);
+            let p95 = gp.predict_quantile(x, 0.95);
+            assert!(p05 < p50 && p50 < p95, "at {x}: {p05} {p50} {p95}");
+            assert!((p50 - mu).abs() < 1e-9, "median == mean for a Gaussian");
+            // p95 - mean == z(0.95) * sd on the original scale.
+            let sd = gp.predict_sd(x);
+            assert!((p95 - mu - 1.6448536269514722 * sd).abs() < 1e-6, "at {x}");
+        }
+    }
+
+    #[test]
+    fn sd_is_original_scale() {
+        // Observations with a large spread: the standardized variance is
+        // O(1) but the original-scale sd must reflect the data magnitude.
+        let mut gp = Gp::new(Matern52::default(), 1e-6, 0.0, 10.0);
+        gp.fit(&[(2.0, 100.0), (3.0, 300.0)]);
+        assert!(gp.predict_sd(9.0) > 50.0, "far from data, sd ~ full spread");
     }
 
     #[test]

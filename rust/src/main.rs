@@ -26,7 +26,7 @@ use streamprof::fleet::telemetry::{Query, TelemetryServer, TelemetryStore};
 use streamprof::fleet::{
     journal_json, sim_fleet, AdaptiveConfig, DriftConfig, DriftVerdict, FleetConfig,
     FleetDaemon, FleetJobSpec, FleetReport, FleetSession, MeasurementCache, MeshConfig,
-    MeshFault, MeshTopology, RuntimeShift,
+    MeshFault, MeshTopology, RestoreOutcome, RuntimeShift,
 };
 use streamprof::repro;
 use streamprof::runtime::{artifacts_available, default_artifacts_dir, Engine};
@@ -82,6 +82,8 @@ fn print_help() {
          \u{20}           [--shift-at 1500] [--shift-rate 8.0] [--shift-jobs 2]\n\
          \u{20}           [--stale-jobs 1] [--stale-scale 3.0]\n\
          \u{20}           [--daemon] [--probe-workers 0]   async pool size (0 = sync)\n\
+         \u{20}           [--transfer]   prime fresh arrivals from the cross-job corpus\n\
+         \u{20}           [--plan-quantile 0.95]   provision for tail runtimes, not means\n\
          \u{20}           [--events \"@0 submit 12, @600 retire job-01\"]\n\
          \u{20}           [--journal-out journal.json] (--daemon only)\n\
          \u{20}           [--mesh full:8|ring:8|line:8|star:8|grid:3x3[@<latency>]]\n\
@@ -272,14 +274,21 @@ fn fleet_config(args: &Args) -> FleetConfig {
         },
         horizon: args.opt_usize("horizon", 1000),
         probe_workers: args.opt_usize("probe-workers", 0),
+        transfer: args.flag("transfer"),
+        plan_quantile: args.opt("plan-quantile").and_then(|s| s.parse().ok()),
     }
 }
 
 /// One shared cache for the session, optionally restored from (and later
-/// saved back to) `--cache-file`. Returns the cache plus the save path.
-fn open_cache(args: &Args) -> Result<(Arc<MeasurementCache>, Option<String>)> {
+/// saved back to) `--cache-file`. Returns the cache, the save path, and
+/// the restore outcome when a snapshot was actually read (so daemon call
+/// sites can journal refusals).
+fn open_cache(
+    args: &Args,
+) -> Result<(Arc<MeasurementCache>, Option<String>, Option<RestoreOutcome>)> {
     let cache = Arc::new(MeasurementCache::new());
     let cache_file = args.opt("cache-file").map(str::to_string);
+    let mut restore_outcome = None;
     if let Some(path) = &cache_file {
         if std::path::Path::new(path).exists() {
             let text = std::fs::read_to_string(path)
@@ -287,20 +296,28 @@ fn open_cache(args: &Args) -> Result<(Arc<MeasurementCache>, Option<String>)> {
             let snap = json::parse(&text)
                 .map_err(anyhow::Error::msg)
                 .with_context(|| format!("parsing cache file {path}"))?;
-            let n = cache
+            let out = cache
                 .restore(&snap)
                 .with_context(|| format!("restoring cache file {path}"))?;
             let s = cache.stats();
             println!(
-                "cache: restored {n} measurements from {path} \
+                "cache: restored {} measurements from {path} \
                  (lifetime: {} hits, {} misses, {:.2}s saved)",
-                s.hits,
-                s.misses,
-                s.saved_wallclock
+                out.restored, s.hits, s.misses, s.saved_wallclock
             );
+            if out.refused() > 0 {
+                println!(
+                    "cache: refused {} snapshot entries ({} newer than header, \
+                     {} width conflicts) — corpus may be corrupted",
+                    out.refused(),
+                    out.refused_newer,
+                    out.refused_width
+                );
+            }
+            restore_outcome = Some(out);
         }
     }
-    Ok((cache, cache_file))
+    Ok((cache, cache_file, restore_outcome))
 }
 
 fn cmd_fleet(args: &Args) -> Result<()> {
@@ -313,10 +330,10 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     if adaptive {
         inject_drift(args, &mut specs);
     }
-    let (cache, cache_file) = open_cache(args)?;
+    let (cache, cache_file, restored) = open_cache(args)?;
 
     if args.flag("daemon") {
-        return cmd_fleet_daemon(args, cfg, cache, cache_file.as_deref());
+        return cmd_fleet_daemon(args, cfg, cache, cache_file.as_deref(), restored);
     }
 
     let mut builder = FleetSession::builder()
@@ -377,6 +394,7 @@ fn cmd_fleet_daemon(
     cfg: FleetConfig,
     cache: Arc<MeasurementCache>,
     cache_file: Option<&str>,
+    restored: Option<RestoreOutcome>,
 ) -> Result<()> {
     if args.flag("adaptive") {
         bail!("--daemon replaces --adaptive: drive drift with `verdict` events instead");
@@ -395,6 +413,9 @@ fn cmd_fleet_daemon(
         }
     }
     let mut daemon = builder.build();
+    if let Some(out) = restored {
+        daemon.note_cache_restore(out);
+    }
     let last = schedule_events(&mut daemon, &spec, args.opt_u64("seed", 7))?;
 
     daemon.run_until(last)?;
@@ -545,7 +566,7 @@ fn schedule_events(daemon: &mut FleetDaemon, spec: &str, seed: u64) -> Result<u6
 /// `--events` timeline through a daemon with the given telemetry store
 /// attached, honour `--out`/`--cache-file`, and return the drained report.
 fn run_daemon_scenario(args: &Args, store: &Arc<TelemetryStore>) -> Result<FleetReport> {
-    let (cache, cache_file) = open_cache(args)?;
+    let (cache, cache_file, restored) = open_cache(args)?;
     let spec = args.opt_or("events", &format!("@0 submit {}", args.opt_usize("jobs", 12)));
     let mut daemon = FleetDaemon::builder()
         .config(fleet_config(args))
@@ -553,6 +574,9 @@ fn run_daemon_scenario(args: &Args, store: &Arc<TelemetryStore>) -> Result<Fleet
         .cache(cache.clone())
         .telemetry(store.clone())
         .build();
+    if let Some(out) = restored {
+        daemon.note_cache_restore(out);
+    }
     let last = schedule_events(&mut daemon, &spec, args.opt_u64("seed", 7))?;
     daemon.run_until(last)?;
     let report = daemon.drain()?;

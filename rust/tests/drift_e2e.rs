@@ -25,6 +25,7 @@ fn quiet_cfg() -> FleetConfig {
         profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
         horizon: 1000,
         probe_workers: 0,
+        ..FleetConfig::default()
     }
 }
 

@@ -27,6 +27,7 @@ fn quick_cfg(workers: usize, rounds: usize) -> FleetConfig {
         profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
         horizon: 500,
         probe_workers: 0,
+        ..FleetConfig::default()
     }
 }
 
@@ -385,7 +386,8 @@ fn report_out_and_cache_file_round_trip() {
     let n = restored
         .restore(&json::parse(&snapshot_text).expect("snapshot parses"))
         .expect("snapshot restores");
-    assert!(n > 0);
+    assert!(n.restored > 0);
+    assert_eq!(n.refused(), 0, "a live snapshot restores without refusals");
     let rerun = FleetSession::builder()
         .config(quick_cfg(2, 1))
         .jobs(sim_fleet(4, 13))

@@ -13,7 +13,8 @@ use streamprof::fit::{ModelKind, ProfilePoint, RuntimeModel};
 use streamprof::fleet::telemetry::{SeriesBuf, SeriesKind, TelemetryStore};
 use streamprof::fleet::{
     journal_json, mesh_rebalance, rebalance, rebalance_across, sim_fleet, DriftVerdict, FleetConfig,
-    FleetDaemon, FleetJob, MeasurementCache, MeshConfig, MeshFault, MeshTopology,
+    FleetDaemon, FleetJob, FleetJobSpec, MeasurementCache, MeshConfig, MeshFault, MeshTopology,
+    ScaledBackendFactory,
 };
 use streamprof::simulator::{Algo, SimulatedJob, NODES};
 use streamprof::strategies::{self, initial_limits};
@@ -899,5 +900,51 @@ fn prop_overlapped_drain_is_invariant_under_completion_order() {
     }
     for (run, j) in journals.iter().enumerate().skip(1) {
         assert_eq!(j, &journals[0], "run {run}: journal depends on thread interleaving");
+    }
+}
+
+/// Property: a rejected transfer prior costs nothing. For every fleet
+/// seed, a primed daemon whose arrivals are regime-shifted siblings (3x
+/// slower, so every donor consult fails its check probe) drains a report
+/// byte-identical to the same schedule with transfer off — with
+/// overlapped dispatch (`probe_workers: 1`), so the fallback holds on the
+/// async path too. The journal differs (it records the rejections); the
+/// report must not.
+#[test]
+fn prop_rejected_prior_report_is_byte_identical_to_cold() {
+    fn scenario(transfer: bool, fleet_seed: u64) -> FleetDaemon {
+        let cfg = FleetConfig {
+            workers: 2,
+            rounds: 1,
+            profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
+            horizon: 500,
+            probe_workers: 1,
+            transfer,
+            ..Default::default()
+        };
+        let donors = sim_fleet(3, fleet_seed);
+        let mut d = FleetDaemon::builder().config(cfg).jobs(donors.clone()).build();
+        for (i, base) in donors.into_iter().enumerate() {
+            let spec = FleetJobSpec {
+                name: format!("shift-{i:02}"),
+                backend: ScaledBackendFactory::shared(base.backend.clone(), 3.0),
+                ..base
+            };
+            d.submit_at(spec, 700);
+        }
+        d
+    }
+    for case in 0..3u64 {
+        let fleet_seed = 7 + case * 13;
+        let mut cold = scenario(false, fleet_seed);
+        cold.run_until(2_000).expect("cold run");
+        let cold_bytes = json::to_string(&cold.drain().expect("cold drain").to_json());
+
+        let mut primed = scenario(true, fleet_seed);
+        primed.run_until(2_000).expect("primed run");
+        let rejected = primed.journal().iter().filter(|e| e.kind == "prior-rejected").count();
+        assert_eq!(rejected, 3, "case {case}: every shifted arrival rejects its donor");
+        let primed_bytes = json::to_string(&primed.drain().expect("primed drain").to_json());
+        assert_eq!(primed_bytes, cold_bytes, "case {case}: a rejected prior must cost nothing");
     }
 }

@@ -28,6 +28,7 @@ fn quick_cfg(workers: usize, rounds: usize) -> FleetConfig {
         profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
         horizon: 500,
         probe_workers: 0,
+        ..FleetConfig::default()
     }
 }
 
@@ -301,6 +302,7 @@ fn adaptive_epochs_emit_drift_verdicts_and_smape_points() {
         profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
         horizon: 1000,
         probe_workers: 0,
+        ..FleetConfig::default()
     };
     let report = FleetSession::builder()
         .config(cfg)

@@ -1,0 +1,214 @@
+//! Transfer-prior end-to-end: cross-job runtime priors kill cold-start
+//! profiling for fresh arrivals, a mismatched donor falls back to the
+//! cold sweep with no accuracy regression, and the daemon journals /
+//! telemeters the whole lifecycle.
+//!
+//! The scenarios mirror the `fleet` CLI: a workload-zoo roster
+//! ([`sim_fleet`]) bootstraps the corpus, later arrivals of the same job
+//! classes profile primed, and a regime-shifted sibling (3× slower via
+//! [`ScaledBackendFactory`]) exercises the rejection path.
+
+use std::sync::Arc;
+
+use streamprof::coordinator::backend::ProfilingBackend;
+use streamprof::coordinator::{smape_vs_dataset, PriorVerdict, ProfilerConfig};
+use streamprof::fit::ProfilePoint;
+use streamprof::fleet::worker::profile_job_with;
+use streamprof::fleet::{
+    model_fingerprint, sim_fleet, FleetConfig, FleetDaemon, FleetJobSpec, FleetSession,
+    MeasurementCache, PriorCorpus, ProfilePass, Query, ScaledBackendFactory, TelemetryStore,
+};
+
+/// Accuracy bar a primed profile must still clear against ground truth.
+const TARGET_SMAPE: f64 = 0.15;
+
+fn quick_cfg() -> FleetConfig {
+    FleetConfig {
+        workers: 2,
+        rounds: 1,
+        profiler: ProfilerConfig { samples: 1000, max_steps: 6, ..Default::default() },
+        horizon: 500,
+        ..FleetConfig::default()
+    }
+}
+
+/// Ground truth for a spec: its own backend measured over an even grid.
+fn truth(spec: &FleetJobSpec) -> Vec<ProfilePoint> {
+    let mut backend = spec.backend.build().expect("backend builds");
+    let l_max = backend.l_max();
+    (1..=6)
+        .map(|i| {
+            let limit = l_max * i as f64 / 6.0;
+            let m = backend.measure(limit, 4000);
+            ProfilePoint::new(limit, m.mean_runtime)
+        })
+        .collect()
+}
+
+fn cold_outcome(spec: &FleetJobSpec, cfg: &FleetConfig) -> streamprof::fleet::JobOutcome {
+    let fresh = MeasurementCache::new();
+    profile_job_with(spec, cfg, &fresh, 0, &ProfilePass::default()).expect("cold profile")
+}
+
+/// A fleet of returning job classes profiles in measurably fewer probes
+/// when primed from the corpus, and still reaches the target SMAPE —
+/// the headline acceptance bar of the transfer subsystem.
+#[test]
+fn primed_arrivals_reach_target_smape_in_fewer_probes() {
+    let cfg = quick_cfg();
+    // Bootstrap: the full workload zoo (7 nodes x 3 algorithms) profiled
+    // cold builds the corpus — exactly what a daemon's first replan does.
+    let donor_cache = MeasurementCache::new();
+    let mut corpus = PriorCorpus::new();
+    for spec in sim_fleet(21, 7) {
+        let outcome = profile_job_with(&spec, &cfg, &donor_cache, 0, &ProfilePass::default())
+            .expect("donor profile");
+        corpus.absorb(&outcome);
+    }
+    // Recipients: the next 7 arrivals repeat the zoo's classes, so each
+    // has an exact-label donor. Every profile runs on a FRESH cache: only
+    // the transfer seed carries cross-job knowledge.
+    let recipients = sim_fleet(28, 7).split_off(21);
+    let (mut cold_probes, mut primed_probes) = (0u64, 0u64);
+    let (mut cold_err, mut primed_err) = (0.0f64, 0.0f64);
+    for spec in &recipients {
+        let cold = cold_outcome(spec, &cfg);
+        let seed = corpus.donor_for(spec).expect("the corpus covers every zoo class");
+        let pass = ProfilePass { transfer: Some(seed), ..ProfilePass::default() };
+        let fresh = MeasurementCache::new();
+        let primed = profile_job_with(spec, &cfg, &fresh, 0, &pass).expect("primed profile");
+        let tr = primed.transfer.as_ref().expect("primed outcome records its donor");
+        assert!(
+            matches!(tr.verdict, PriorVerdict::Adopted | PriorVerdict::Tempered),
+            "{}: same-class donor must not be rejected, got {:?}",
+            spec.name,
+            tr.verdict
+        );
+        cold_probes += cold.cache_delta.misses;
+        primed_probes += primed.cache_delta.misses;
+        let dataset = truth(spec);
+        cold_err += smape_vs_dataset(&cold.model, &dataset);
+        primed_err += smape_vs_dataset(&primed.model, &dataset);
+    }
+    assert!(
+        primed_probes < cold_probes,
+        "priming must save probes: primed {primed_probes} vs cold {cold_probes}"
+    );
+    let n = recipients.len() as f64;
+    let (cold_avg, primed_avg) = (cold_err / n, primed_err / n);
+    assert!(
+        primed_avg <= TARGET_SMAPE,
+        "primed fleet SMAPE {primed_avg:.4} misses the {TARGET_SMAPE} target"
+    );
+    assert!(
+        primed_avg <= cold_avg + 0.05,
+        "priming must not trade away accuracy: primed {primed_avg:.4} vs cold {cold_avg:.4}"
+    );
+}
+
+/// A regime-shifted sibling (same class, uniformly 3x slower) is rejected
+/// by the check probe, costs at most one probe more than the cold sweep,
+/// and ends with the cold sweep's exact model — prior mismatch is never
+/// worse than cold.
+#[test]
+fn mismatched_donor_rejects_within_one_probe_of_cold() {
+    let cfg = quick_cfg();
+    let base = sim_fleet(1, 7).remove(0);
+    let mut corpus = PriorCorpus::new();
+    corpus.absorb(&cold_outcome(&base, &cfg));
+
+    let shifted = FleetJobSpec {
+        name: "shifted".to_string(),
+        backend: ScaledBackendFactory::shared(base.backend.clone(), 3.0),
+        ..base
+    };
+    let cold = cold_outcome(&shifted, &cfg);
+    let seed = corpus.donor_for(&shifted).expect("the base class donates to its @x3 sibling");
+    let pass = ProfilePass { transfer: Some(seed), ..ProfilePass::default() };
+    let fresh = MeasurementCache::new();
+    let primed = profile_job_with(&shifted, &cfg, &fresh, 0, &pass).expect("primed profile");
+
+    let tr = primed.transfer.as_ref().expect("the donor attempt is recorded");
+    assert_eq!(tr.verdict, PriorVerdict::Rejected, "a 3x regime shift must reject the prior");
+    assert!(
+        primed.cache_delta.misses <= cold.cache_delta.misses + 1,
+        "rejection cost {} probes vs {} cold",
+        primed.cache_delta.misses,
+        cold.cache_delta.misses
+    );
+    assert_eq!(
+        model_fingerprint(&primed.model),
+        model_fingerprint(&cold.model),
+        "the rejected-prior fallback must end on the cold sweep's exact model"
+    );
+}
+
+/// The daemon wires the whole lifecycle: bootstrap builds the corpus,
+/// fresh arrivals consult it (journaled as `prior-adopted`), arrivals
+/// with no transferable donor profile cold (the `cold_start_probes`
+/// telemetry series), and adoptions land in `prior_adoptions`.
+#[test]
+fn daemon_journals_and_telemeters_the_corpus_lifecycle() {
+    let store = Arc::new(TelemetryStore::new());
+    let cfg = FleetConfig { transfer: true, ..quick_cfg() };
+    // Bootstrap with only the first two zoo classes: the third class has
+    // no donor, so its later arrival is a measurable cold start.
+    let mut daemon = FleetDaemon::builder()
+        .config(cfg)
+        .jobs(sim_fleet(2, 7))
+        .telemetry(store.clone())
+        .build();
+    let mut extras = sim_fleet(24, 7).split_off(21);
+    daemon.submit_at(extras.remove(0), 600); // job-21: exact donor (class 0)
+    daemon.submit_at(extras.remove(0), 650); // job-22: exact donor (class 1)
+    daemon.submit_at(extras.remove(0), 700); // job-23: class 2 — no donor
+    daemon.run_until(2_000).expect("daemon run");
+
+    let journal = daemon.journal();
+    let primed = journal
+        .iter()
+        .filter(|e| e.kind == "prior-adopted" || e.kind == "prior-tempered")
+        .count();
+    assert_eq!(primed, 2, "both exact-donor arrivals consult the corpus");
+    assert!(
+        !journal.iter().any(|e| e.kind == "prior-rejected"),
+        "nothing in this timeline should reject its donor"
+    );
+
+    let agg = |expr: &str| {
+        let result = Query::parse(expr).expect("query parses").run(&store);
+        result.series.iter().filter_map(|s| s.value).sum::<f64>()
+    };
+    assert_eq!(agg("select prior_adoptions | agg sum"), 2.0, "one point per adoption");
+    assert!(
+        agg("select cold_start_probes | agg sum") > 0.0,
+        "the donor-less arrival pays (and records) cold-start probes"
+    );
+    assert_eq!(
+        agg("select cold_start_probes | agg count"),
+        1.0,
+        "only the donor-less arrival is a cold start"
+    );
+}
+
+/// `FleetConfig::plan_quantile` flows through the sweep: provisioning for
+/// the p95 runtime reserves strictly more capacity than mean planning.
+#[test]
+fn quantile_planning_reserves_more_capacity_end_to_end() {
+    let mean = FleetSession::builder()
+        .config(quick_cfg())
+        .jobs(sim_fleet(6, 7))
+        .run()
+        .expect("mean-planned run");
+    let tail = FleetSession::builder()
+        .config(FleetConfig { plan_quantile: Some(0.95), ..quick_cfg() })
+        .jobs(sim_fleet(6, 7))
+        .run()
+        .expect("quantile-planned run");
+    let assigned = |r: &streamprof::fleet::FleetReport| {
+        let plans = &r.summary().plans;
+        plans.iter().map(|(_, p)| p.total_assigned).sum::<f64>()
+    };
+    let (m, t) = (assigned(&mean), assigned(&tail));
+    assert!(t > m, "p95 planning must reserve more capacity: {t:.4} vs mean {m:.4}");
+}
